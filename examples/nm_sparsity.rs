@@ -1,0 +1,68 @@
+//! N:M structured sparsity demo (paper Sec. 4.3 / Table 3): prune the
+//! trained alps-tiny model to 2:4 and 4:8 patterns with ALPS and the
+//! baselines, verify the hardware pattern holds, and report perplexity.
+//!
+//!     make artifacts && cargo run --release --example nm_sparsity
+
+use alps::config::SparsityTarget;
+use alps::coordinator::{PruneEngine, Scheduler};
+use alps::data::{sample_windows, Corpus};
+use alps::eval::perplexity;
+use alps::linalg::Csr;
+use alps::model::Model;
+use alps::util::table::{fmt_sig, Table};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    let corpus = Corpus::load(&dir.join("corpus.bin"))?;
+    let dense = Model::load(dir, "alps-tiny")?;
+    let calib = sample_windows(corpus.split("train")?, 16, dense.cfg.seq_len, 3);
+    let eval_ids = corpus.split("wikitext2-like")?;
+    let ppl_dense = perplexity(&dense, eval_ids)?;
+    println!("dense alps-tiny ppl: {ppl_dense:.3}\n");
+
+    let mut table = Table::new(&["pattern", "method", "wikitext2-like ppl", "mean layer err"]);
+    for pattern in ["2:4", "4:8"] {
+        let target = SparsityTarget::parse(pattern)?;
+        for method in ["mp", "wanda", "sparsegpt", "alps"] {
+            let mut model = Model::load(dir, "alps-tiny")?;
+            let sched = Scheduler::new(calib.clone());
+            let report = sched.prune_model(
+                &mut model,
+                target,
+                &PruneEngine::Native(method.into()),
+            )?;
+            // verify the hardware pattern on every pruned matrix
+            for name in model.prunable_names() {
+                let w = model.weights.matrix(&name)?;
+                assert!(
+                    alps::pruning::check_target(&w, target),
+                    "{method} violated {pattern} on {name}"
+                );
+            }
+            table.row(&[
+                pattern.to_string(),
+                method.to_string(),
+                fmt_sig(perplexity(&model, eval_ids)?),
+                fmt_sig(report.mean_rel_error()),
+            ]);
+        }
+    }
+    table.print();
+
+    // show the sparse-inference payoff: CSR matmul skips the zeros
+    let mut model = Model::load(dir, "alps-tiny")?;
+    let sched = Scheduler::new(calib);
+    sched.prune_model(&mut model, SparsityTarget::parse("2:4")?, &PruneEngine::Native("alps".into()))?;
+    let w = model.weights.matrix("blocks.0.mlp.w1")?;
+    let csr = Csr::from_dense(&w);
+    println!(
+        "\nblocks.0.mlp.w1 as CSR: {} non-zeros of {} ({:.0}% dense) — the
+2:4 pattern maps directly onto sparse-tensor-core hardware (paper Sec. 3.2).",
+        csr.nnz(),
+        w.rows * w.cols,
+        csr.density() * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Support-quality ablation (paper Table 1, left): fix the support chosen
+//! by each method, solve the restricted problem (6) to optimality with the
+//! exact backsolve, and compare — isolating *where* each method's mask is
+//! good from *what values* it assigns.
+//!
+//!     cargo run --release --example support_quality
+
+use alps::config::SparsityTarget;
+use alps::linalg::Matrix;
+use alps::pruning::{all_methods, backsolve, LayerProblem};
+use alps::util::table::{fmt_sig, Table};
+use alps::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let (n_in, n_out, rows) = (192, 96, 768);
+    let mut rng = Rng::new(7);
+    let mut x = Matrix::randn(rows, n_in, &mut rng);
+    for c in 0..n_in {
+        let s = 0.2 + 2.2 * ((c * 53 % n_in) as f32 / n_in as f32);
+        for r in 0..rows {
+            *x.at_mut(r, c) *= s;
+        }
+    }
+    let what = Matrix::randn(n_in, n_out, &mut rng);
+    let problem = LayerProblem::from_activations(&x, &what)?;
+
+    println!(
+        "support quality on a {n_in}x{n_out} layer: optimal weights on each\n\
+         method's support (paper Table 1 left)\n"
+    );
+    let mut table = Table::new(&["sparsity", "MP", "Wanda", "SparseGPT", "DSnoT", "ALPS"]);
+    for s in [0.5, 0.6, 0.7, 0.8, 0.9] {
+        let target = SparsityTarget::Unstructured(s);
+        let mut row = vec![format!("{s:.1}")];
+        for method in all_methods() {
+            let w = method.prune(&problem, target)?;
+            let optimal = backsolve::solve_on_support(&problem, &w.support_mask())?;
+            row.push(fmt_sig(problem.rel_error(&optimal)));
+        }
+        // reorder: methods come out mp, wanda, sparsegpt, dsnot, alps
+        table.row(&row);
+    }
+    table.print();
+    println!(
+        "\nexpect the ALPS column lowest at every sparsity (the paper reports\n\
+         20-40% lower error than the best heuristic support)."
+    );
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path for ALPS: pallas kernels, jax graphs, AOT export.
+
+Nothing in this package runs on the request path — ``make artifacts``
+invokes it once and the rust binary is self-contained afterwards.
+"""

@@ -1,0 +1,241 @@
+"""AOT export: lower every Layer-2 graph to HLO text for the rust runtime.
+
+Interchange format is HLO *text* (never ``.serialize()``): jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly (verified by ``alps smoke``).
+
+Exported artifacts (``artifacts/*.hlo.txt``) + a manifest
+(``artifacts/manifest.json``) describing each artifact's ordered inputs and
+outputs so the rust side can marshal literals without guessing.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+import argparse
+import sys
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+# calibration geometry (kept in sync with rust/src/config/presets.rs)
+CALIB_SEQS = 32
+SEQ_LEN = 128
+CALIB_ROWS = CALIB_SEQS * SEQ_LEN
+EVAL_BATCH = 8
+PCG_ITERS = 10
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape: Sequence[int], dtype=F32) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+class Exporter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest: List[Dict[str, Any]] = []
+
+    def export(self, name: str, fn, in_specs: List[Tuple[str, Sequence[int], str]],
+               outputs: List[Tuple[str, Sequence[int]]], kind: str) -> None:
+        """Lower ``fn`` with the given input specs and write HLO text."""
+        specs = []
+        for _, shp, dt in in_specs:
+            specs.append(spec(shp, I32 if dt == "i32" else F32))
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = f"{self.out_dir}/{name}.hlo.txt"
+        with open(path, "w") as f:
+            f.write(text)
+        self.manifest.append({
+            "name": name,
+            "file": f"{name}.hlo.txt",
+            "kind": kind,
+            "inputs": [{"name": n, "shape": list(s), "dtype": d}
+                       for n, s, d in in_specs],
+            "outputs": [{"name": n, "shape": list(s)} for n, s in outputs],
+        })
+        print(f"  exported {name} ({len(text)} chars)", flush=True)
+
+    def write_manifest(self) -> None:
+        # hand-rolled json (matches the rust config::json parser subset)
+        def jstr(s: str) -> str:
+            return '"' + s.replace("\\", "\\\\").replace('"', '\\"') + '"'
+
+        lines = ["["]
+        for i, ent in enumerate(self.manifest):
+            lines.append("  {")
+            lines.append(f'    "name": {jstr(ent["name"])},')
+            lines.append(f'    "file": {jstr(ent["file"])},')
+            lines.append(f'    "kind": {jstr(ent["kind"])},')
+            for key in ("inputs", "outputs"):
+                items = []
+                for io in ent[key]:
+                    shape = ",".join(str(x) for x in io["shape"])
+                    dt = io.get("dtype", "f32")
+                    items.append('{"name": %s, "shape": [%s], "dtype": %s}'
+                                 % (jstr(io["name"]), shape, jstr(dt)))
+                sep = "," if key == "inputs" else ""
+                lines.append(f'    "{key}": [' + ", ".join(items) + f"]{sep}")
+            lines.append("  }" + ("," if i + 1 < len(self.manifest) else ""))
+        lines.append("]")
+        with open(f"{self.out_dir}/manifest.json", "w") as f:
+            f.write("\n".join(lines) + "\n")
+        print(f"  wrote manifest.json ({len(self.manifest)} artifacts)", flush=True)
+
+
+def admm_shapes() -> List[Tuple[int, int]]:
+    shapes = []
+    for cfg in model_mod.PRESETS.values():
+        for s in model_mod.prunable_shapes(cfg):
+            if s not in shapes:
+                shapes.append(s)
+    # the Fig.2 / Table 1 single-layer experiment shape
+    if (512, 512) not in shapes:
+        shapes.append((512, 512))
+    return shapes
+
+
+def export_admm(ex: Exporter, use_pallas: bool = False) -> None:
+    for (n, m) in admm_shapes():
+        suffix = "_pallas" if use_pallas else ""
+        ex.export(
+            f"admm_iter{suffix}_{n}x{m}",
+            lambda q, me, g, d, v, rho, k, _up=use_pallas: model_mod.admm_iter(
+                q, me, g, d, v, rho, k, use_pallas=_up),
+            [("q", (n, n), "f32"), ("m_eig", (n,), "f32"), ("g", (n, m), "f32"),
+             ("d", (n, m), "f32"), ("v", (n, m), "f32"), ("rho", (), "f32"),
+             ("k", (), "i32")],
+            [("w", (n, m)), ("d_new", (n, m)), ("v_new", (n, m)),
+             ("delta", (1,)), ("nnz", (1,))],
+            "admm_iter",
+        )
+
+
+def export_admm_nm(ex: Exporter) -> None:
+    cfg = model_mod.PRESETS["alps-base"]
+    patterns = [(2, 4), (4, 8)]
+    for (n, m) in model_mod.prunable_shapes(cfg):
+        for (nk, grp) in patterns:
+            ex.export(
+                f"admm_iter_nm{nk}of{grp}_{n}x{m}",
+                lambda q, me, g, d, v, rho, _nk=nk, _g=grp: model_mod.admm_iter_nm(
+                    q, me, g, d, v, rho, n_keep=_nk, group=_g),
+                [("q", (n, n), "f32"), ("m_eig", (n,), "f32"),
+                 ("g", (n, m), "f32"), ("d", (n, m), "f32"),
+                 ("v", (n, m), "f32"), ("rho", (), "f32")],
+                [("w", (n, m)), ("d_new", (n, m)), ("v_new", (n, m)),
+                 ("delta", (1,)), ("nnz", (1,))],
+                "admm_iter_nm",
+            )
+
+
+def export_pcg(ex: Exporter) -> None:
+    for (n, m) in admm_shapes():
+        ex.export(
+            f"pcg_refine_{n}x{m}",
+            lambda h, g, w0, mask: model_mod.pcg_refine(
+                h, g, w0, mask, iters=PCG_ITERS),
+            [("h", (n, n), "f32"), ("g", (n, m), "f32"),
+             ("w0", (n, m), "f32"), ("mask", (n, m), "f32")],
+            [("w", (n, m)), ("res", (1,))],
+            "pcg_refine",
+        )
+
+
+def export_gram(ex: Exporter) -> None:
+    seen = set()
+    for cfg in model_mod.PRESETS.values():
+        for (n, m) in model_mod.prunable_shapes(cfg):
+            if (n, m) in seen:
+                continue
+            seen.add((n, m))
+            ex.export(
+                f"gram_{CALIB_ROWS}x{n}_{m}",
+                lambda x, w: model_mod.gram(x, w),
+                [("x", (CALIB_ROWS, n), "f32"), ("what", (n, m), "f32")],
+                [("h", (n, n)), ("g", (n, m))],
+                "gram",
+            )
+    # Fig.2 shape
+    n = m = 512
+    ex.export(
+        f"gram_{CALIB_ROWS}x{n}_{m}",
+        lambda x, w: model_mod.gram(x, w),
+        [("x", (CALIB_ROWS, n), "f32"), ("what", (n, m), "f32")],
+        [("h", (n, n)), ("g", (n, m))],
+        "gram",
+    )
+
+
+def export_model_fwd(ex: Exporter) -> None:
+    for name, cfg in model_mod.PRESETS.items():
+        pspec = model_mod.param_spec(cfg)
+
+        def fwd(ids, *flat, _cfg=cfg, _spec=pspec):
+            params = {n: t for (n, _), t in zip(_spec, flat)}
+            return (model_mod.nll_positions(params, ids, _cfg),)
+
+        in_specs: List[Tuple[str, Sequence[int], str]] = [
+            ("ids", (EVAL_BATCH, cfg["seq_len"]), "i32")]
+        for pname, shape in pspec:
+            in_specs.append((pname, shape, "f32"))
+        ex.export(
+            f"model_fwd_{name}",
+            fwd,
+            in_specs,
+            [("nll", (EVAL_BATCH, cfg["seq_len"] - 1))],
+            "model_fwd",
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--skip-pallas", action="store_true",
+                    help="skip the pallas-variant demo artifact")
+    args = ap.parse_args()
+    ex = Exporter(args.out_dir)
+    print("exporting ADMM iteration graphs ...", flush=True)
+    export_admm(ex)
+    print("exporting N:M ADMM graphs ...", flush=True)
+    export_admm_nm(ex)
+    print("exporting PCG refinement graphs ...", flush=True)
+    export_pcg(ex)
+    print("exporting gram graphs ...", flush=True)
+    export_gram(ex)
+    print("exporting model forward graphs ...", flush=True)
+    export_model_fwd(ex)
+    if not args.skip_pallas:
+        print("exporting pallas-variant demo artifact ...", flush=True)
+        n, m = 128, 128
+        ex.export(
+            f"admm_iter_pallas_{n}x{m}",
+            lambda q, me, g, d, v, rho, k: model_mod.admm_iter(
+                q, me, g, d, v, rho, k, use_pallas=True),
+            [("q", (n, n), "f32"), ("m_eig", (n,), "f32"), ("g", (n, m), "f32"),
+             ("d", (n, m), "f32"), ("v", (n, m), "f32"), ("rho", (), "f32"),
+             ("k", (), "i32")],
+            [("w", (n, m)), ("d_new", (n, m)), ("v_new", (n, m)),
+             ("delta", (1,)), ("nnz", (1,))],
+            "admm_iter",
+        )
+    ex.write_manifest()
+    print("AOT export complete.", flush=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,8 @@
+"""Layer-1 Pallas kernels for ALPS.
+
+All kernels are authored for TPU (VMEM tiling, MXU-shaped matmuls) but are
+lowered with ``interpret=True`` so the resulting HLO runs on the CPU PJRT
+client used by the rust runtime. Correctness is pinned against the pure-jnp
+oracles in :mod:`compile.kernels.ref` by the pytest/hypothesis suite.
+"""
+from . import matmul, nm_project, pcg_step, topk_mask, ref  # noqa: F401

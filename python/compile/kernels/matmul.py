@@ -1,0 +1,94 @@
+"""Tiled Pallas matmul — the ADMM/PCG hot-spot kernel.
+
+TPU mapping of the paper's cuBLAS GEMMs (Sec. 3.2/3.3): the HBM<->VMEM
+schedule the paper expressed with CUDA threadblocks is expressed here with a
+3-D grid and BlockSpecs. Block shapes target the MXU systolic array:
+
+  * bm = bn = 128 matches the 128x128 MXU tile;
+  * the K axis is the innermost grid dimension so each (i, j) output tile
+    stays resident in VMEM while partial products accumulate in f32;
+  * VMEM footprint per step = bm*bk + bk*bn + bm*bn f32 words
+    (3 * 128 * 128 * 4 B = 192 KiB << 16 MiB VMEM), leaving room for
+    double-buffering the A/B tiles.
+
+``interpret=True`` everywhere: on this testbed the kernel is executed by the
+Pallas interpreter (and lowers to plain HLO), which validates structure and
+numerics; real-TPU performance is estimated in DESIGN.md §Hardware-Adaptation.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, n_k: int):
+    """One (i, j, k) grid step: o[i, j] += a[i, k] @ b[k, j]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # f32 accumulation regardless of input dtype (MXU-style).
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= target (keeps grid exact)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul(a, b, bm: int = 128, bk: int = 128, bn: int = 128):
+    """C = A @ B with a tiled Pallas kernel (f32 accumulation).
+
+    Shapes: a [M, K], b [K, N] -> [M, N]. Block sizes are clamped to exact
+    divisors of each dimension so the grid covers the operands exactly
+    (production TPU kernels would pad instead; exact division keeps the
+    interpret-mode HLO small).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"matmul inner dims mismatch: {a.shape} @ {b.shape}"
+    bm = _pick_block(m, bm)
+    bk = _pick_block(k, bk)
+    bn = _pick_block(n, bn)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def vmem_footprint_bytes(bm: int, bk: int, bn: int, itemsize: int = 4) -> int:
+    """VMEM bytes resident per grid step (one A tile, one B tile, one C tile).
+
+    Used by DESIGN.md §Perf to justify block choices and by the pytest suite
+    as a budget guard (< 16 MiB with 2x double-buffering headroom).
+    """
+    return (bm * bk + bk * bn + bm * bn) * itemsize
+
+
+def mxu_utilization_estimate(bm: int, bk: int, bn: int) -> float:
+    """Crude MXU utilization proxy: useful MACs per operand word moved.
+
+    A 128x128x128 tile gives 2*128^3 flops over 3*128^2 words -> ratio ~85:1,
+    i.e. compute-bound on the MXU; ratios below ~8 indicate a memory-bound
+    schedule. Recorded (not measured) because interpret mode has no MXU.
+    """
+    flops = 2.0 * bm * bk * bn
+    words = float(bm * bk + bk * bn + bm * bn)
+    return flops / words

@@ -1,0 +1,67 @@
+"""Pallas kernel: N:M structured projection (Sec. 3.2, "Extension to N:M").
+
+The ADMM D-update for N:M sparsity replaces the global top-k projection with
+a per-group projection: within every group of M consecutive weights (along
+the input dimension), keep the N largest-magnitude entries.
+
+The kernel operates on a [G, M] view (G groups of M weights). M is tiny
+(4 or 8), so the per-row selection is done with an O(M^2) rank comparison —
+fully vectorized, no sort — which maps onto the TPU VPU as M broadcast
+compares per element. Rows are blocked so each step works on a
+[block_g, M] VMEM tile.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _nm_kernel(z_ref, o_ref, *, n_keep: int):
+    z = z_ref[...]
+    absz = jnp.abs(z)
+    m = z.shape[-1]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, m), 1)
+    # rank_i = #{j : |z_j| > |z_i| or (|z_j| == |z_i| and j < i)}
+    gt = absz[:, :, None] < absz[:, None, :]
+    eq = (absz[:, :, None] == absz[:, None, :]) & (idx[:, None, :] < idx[:, :, None])
+    rank = jnp.sum((gt | eq).astype(jnp.int32), axis=-1)
+    mask = (rank < n_keep).astype(z.dtype)
+    o_ref[...] = z * mask
+
+
+def _pick_block(dim: int, target: int) -> int:
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("n_keep", "block_g"))
+def nm_project(z, n_keep: int, block_g: int = 1024):
+    """Project z [G, M] onto rows with at most ``n_keep`` non-zeros."""
+    g, m = z.shape
+    bg = _pick_block(g, block_g)
+    return pl.pallas_call(
+        functools.partial(_nm_kernel, n_keep=n_keep),
+        grid=(g // bg,),
+        in_specs=[pl.BlockSpec((bg, m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bg, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, m), z.dtype),
+        interpret=True,
+    )(z)
+
+
+def nm_project_matrix(w, n_keep: int, group: int):
+    """Apply N:M projection to a weight matrix W [N_in, N_out].
+
+    Groups are M *consecutive weights along the input dimension* of each
+    output neuron (paper / NVIDIA 2:4 convention): column j of W is split
+    into N_in/group groups. Implemented by a transpose-reshape round-trip
+    around the [G, M] kernel.
+    """
+    n_in, n_out = w.shape
+    assert n_in % group == 0, f"N_in={n_in} not divisible by group={group}"
+    wt = w.T.reshape(n_out * (n_in // group), group)
+    pt = nm_project(wt, n_keep)
+    return pt.reshape(n_out, n_in).T

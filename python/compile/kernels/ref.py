@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: slow, obvious implementations with
+no tiling or fusion. The pytest suite sweeps shapes/dtypes with hypothesis
+and asserts ``assert_allclose(kernel(...), ref(...))``.
+"""
+import jax.numpy as jnp
+
+
+def matmul(a, b):
+    """Plain dense matmul in f32 accumulation."""
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def nm_project(z, n_keep: int):
+    """N:M projection oracle.
+
+    ``z`` has shape [G, M] (groups of M consecutive weights); keep the
+    ``n_keep`` largest-magnitude entries of each row, zero the rest.
+    Ties are broken toward the lower index (stable), matching the kernel.
+    """
+    absz = jnp.abs(z)
+    idx = jnp.arange(z.shape[1])
+    # rank_i = #{j : |z_j| > |z_i|  or (|z_j| == |z_i| and j < i)}  (stable)
+    gt_ji = absz[:, :, None] < absz[:, None, :]  # [G, i, j] -> |z_j| > |z_i|
+    eq_ji = (absz[:, :, None] == absz[:, None, :]) & (idx[None, None, :] < idx[None, :, None])
+    rank = jnp.sum(gt_ji | eq_ji, axis=-1)
+    mask = (rank < n_keep).astype(z.dtype)
+    return z * mask
+
+
+def topk_mask(x, thresh):
+    """Zero entries whose magnitude is below ``thresh`` (scalar)."""
+    return x * (jnp.abs(x) >= thresh).astype(x.dtype)
+
+
+def topk_project(x, k: int):
+    """Exact global top-k magnitude projection (rank-based, tie-stable)."""
+    flat = jnp.abs(x).reshape(-1)
+    order = jnp.argsort(-flat, stable=True)
+    ranks = jnp.zeros_like(order).at[order].set(jnp.arange(flat.shape[0]))
+    mask = (ranks < k).astype(x.dtype).reshape(x.shape)
+    return x * mask
+
+
+def pcg_elementwise(w, p, r, hp, mask, invdiag, alpha):
+    """Fused PCG inner-step elementwise oracle.
+
+    w   += alpha * p
+    r   -= alpha * hp          (then projected onto the support mask)
+    z    = invdiag * r
+    Returns (w_new, r_new, z_new).
+    """
+    w_new = w + alpha * p
+    r_new = (r - alpha * hp) * mask
+    z_new = invdiag * r_new
+    return w_new, r_new, z_new

@@ -1,0 +1,46 @@
+"""Pallas kernel: thresholded magnitude masking (ADMM D-update tail).
+
+The global top-k projection P_k splits into (1) finding the k-th largest
+magnitude (a global sort — done once in the surrounding jax graph) and
+(2) the embarrassingly-parallel mask application ``x * (|x| >= t)`` which is
+this kernel. Blocked elementwise over VMEM tiles; the threshold rides along
+as a (1, 1) operand in SMEM-style replication.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mask_kernel(x_ref, t_ref, o_ref):
+    x = x_ref[...]
+    t = t_ref[0, 0]
+    o_ref[...] = x * (jnp.abs(x) >= t).astype(x.dtype)
+
+
+def _pick_block(dim: int, target: int) -> int:
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def topk_mask(x, thresh, bm: int = 256, bn: int = 256):
+    """x * (|x| >= thresh) for x [M, N], thresh scalar (traced)."""
+    m, n = x.shape
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    t = jnp.asarray(thresh, dtype=x.dtype).reshape(1, 1)
+    return pl.pallas_call(
+        _mask_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, t)

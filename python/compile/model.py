@@ -1,0 +1,301 @@
+"""Layer-2 JAX compute graphs for ALPS (build-time only).
+
+Everything here is lowered once by :mod:`compile.aot` to HLO text and
+executed from the rust coordinator via PJRT. The graphs call the Layer-1
+Pallas kernels (``use_pallas=True``) or equivalent jnp ops; both lower into
+the same HLO artifact format and are cross-checked by the pytest suite.
+
+Graphs
+------
+admm_iter        one iteration of Algorithm 1 (eq. 4) with runtime rho and
+                 runtime sparsity-k (exact rank-based top-k projection)
+admm_iter_nm     same with the N:M projection D-update
+pcg_refine       T iterations of Algorithm 2 under a fori_loop
+gram             XtX and XtX @ What in one pass
+transformer      tiny decoder-only GPT: init / apply / per-position NLL
+"""
+import functools
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import matmul as kmatmul
+from .kernels import nm_project as knm
+from .kernels import pcg_step as kpcg
+from .kernels import topk_mask as ktopk
+
+
+# --------------------------------------------------------------------------
+# dispatch helpers: pallas kernel vs plain jnp (both paths exported/tested)
+# --------------------------------------------------------------------------
+
+def _dot(a, b, use_pallas: bool):
+    if use_pallas:
+        return kmatmul.matmul(a, b)
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def _apply_mask(x, thresh, use_pallas: bool):
+    if use_pallas:
+        return ktopk.topk_mask(x, thresh)
+    return x * (jnp.abs(x) >= thresh).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# projections
+# --------------------------------------------------------------------------
+
+def topk_project_exact(z, k):
+    """Exact top-k magnitude projection with a *runtime* k (i32 scalar).
+
+    Rank-based: argsort magnitudes descending (stable), scatter ranks back,
+    keep rank < k. Exactly k non-zeros for any tie pattern.
+    """
+    shape = z.shape
+    flat = jnp.abs(z).reshape(-1)
+    order = jnp.argsort(-flat, stable=True)
+    ranks = jnp.zeros_like(order).at[order].set(jnp.arange(flat.shape[0], dtype=order.dtype))
+    mask = (ranks < k).astype(z.dtype).reshape(shape)
+    return z * mask, mask
+
+
+def topk_threshold(z, k):
+    """k-th largest magnitude of z (runtime k) — used with the mask kernel."""
+    flat = jnp.sort(jnp.abs(z).reshape(-1))[::-1]
+    return lax.dynamic_slice(flat, (k - 1,), (1,))[0]
+
+
+def nm_project_matrix(w, n_keep: int, group: int, use_pallas: bool):
+    if use_pallas:
+        return knm.nm_project_matrix(w, n_keep, group)
+    n_in, n_out = w.shape
+    wt = w.T.reshape(n_out * (n_in // group), group)
+    absz = jnp.abs(wt)
+    idx = jnp.arange(group)
+    gt = absz[:, :, None] < absz[:, None, :]
+    eq = (absz[:, :, None] == absz[:, None, :]) & (idx[None, None, :] < idx[None, :, None])
+    rank = jnp.sum((gt | eq).astype(jnp.int32), axis=-1)
+    pt = wt * (rank < n_keep).astype(wt.dtype)
+    return pt.reshape(n_out, n_in).T
+
+
+# --------------------------------------------------------------------------
+# ADMM iteration (Algorithm 1, update rules (4))
+# --------------------------------------------------------------------------
+
+def admm_iter(q, m_eig, g, d, v, rho, k, *, use_pallas: bool = False):
+    """One ADMM iteration with runtime rho (f32) and k (i32).
+
+    Inputs
+      q      [n, n]  eigenvectors of H = XtX           (computed in rust)
+      m_eig  [n]     eigenvalues of H
+      g      [n, m]  XtX @ What (precomputed, constant across iterations)
+      d, v   [n, m]  current D and dual V
+      rho    []      penalty parameter
+      k      []      sparsity budget (number of non-zeros to keep)
+
+    Returns (w, d_new, v_new, delta_support, nnz):
+      w      the W-update  (H + rho I)^-1 (G - V + rho D)
+             computed as Q diag(1/(m+rho)) Q^T (G - V + rho D)
+      delta_support  #{ij : supp(D_new) != supp(D)}  (drives the rho scheme)
+      nnz    #non-zeros of D_new (sanity: == k)
+    """
+    invd = (1.0 / (m_eig + rho)).astype(jnp.float32)
+    b = g - v + rho * d
+    qtb = _dot(q.T, b, use_pallas)
+    w = _dot(q, invd[:, None] * qtb, use_pallas)
+    z = w + v / rho
+    d_new, mask_new = topk_project_exact(z, k)
+    v_new = v + rho * (w - d_new)
+    mask_old = (d != 0.0).astype(jnp.float32)
+    delta = jnp.sum(jnp.abs(mask_new - mask_old))
+    nnz = jnp.sum(mask_new)
+    return w, d_new, v_new, delta[None], nnz[None]
+
+
+def admm_iter_nm(q, m_eig, g, d, v, rho, *, n_keep: int, group: int,
+                 use_pallas: bool = False):
+    """ADMM iteration with the N:M projection D-update (static N, M)."""
+    invd = (1.0 / (m_eig + rho)).astype(jnp.float32)
+    b = g - v + rho * d
+    qtb = _dot(q.T, b, use_pallas)
+    w = _dot(q, invd[:, None] * qtb, use_pallas)
+    z = w + v / rho
+    d_new = nm_project_matrix(z, n_keep, group, use_pallas)
+    v_new = v + rho * (w - d_new)
+    mask_new = (d_new != 0.0).astype(jnp.float32)
+    mask_old = (d != 0.0).astype(jnp.float32)
+    delta = jnp.sum(jnp.abs(mask_new - mask_old))
+    nnz = jnp.sum(mask_new)
+    return w, d_new, v_new, delta[None], nnz[None]
+
+
+# --------------------------------------------------------------------------
+# PCG refinement (Algorithm 2)
+# --------------------------------------------------------------------------
+
+def pcg_refine(h, g, w0, mask, *, iters: int = 10, use_pallas: bool = False):
+    """Solve min ||X What - X W||_F^2 s.t. supp(W) in S, via PCG.
+
+    h    [n, n]  XtX
+    g    [n, m]  XtX @ What
+    w0   [n, m]  initial W (its entries outside the mask are zeroed)
+    mask [n, m]  support indicator (1.0 inside S)
+
+    Runs ``iters`` iterations of Algorithm 2 inside a fori_loop; returns
+    (w, final residual Frobenius norm [1]).
+    """
+    diag = jnp.clip(jnp.diagonal(h), 1e-12, None)
+    invdiag = (1.0 / diag).astype(jnp.float32)[:, None]
+
+    w0 = w0 * mask
+    r0 = (g - _dot(h, w0, use_pallas)) * mask
+    z0 = invdiag * r0
+    p0 = z0
+    rz0 = jnp.sum(r0 * z0)
+
+    def body(_, state):
+        w, r, p, rz = state
+        hp = _dot(h, p, use_pallas)
+        denom = jnp.sum(p * hp)
+        alpha = jnp.where(denom > 0.0, rz / jnp.maximum(denom, 1e-30), 0.0)
+        if use_pallas:
+            w_new, r_new, z_new = kpcg.pcg_elementwise(w, p, r, hp, mask, invdiag, alpha)
+        else:
+            w_new = w + alpha * p
+            r_new = (r - alpha * hp) * mask
+            z_new = invdiag * r_new
+        rz_new = jnp.sum(r_new * z_new)
+        beta = jnp.where(rz > 0.0, rz_new / jnp.maximum(rz, 1e-30), 0.0)
+        p_new = z_new + beta * p
+        return w_new, r_new, p_new, rz_new
+
+    w, r, _, _ = lax.fori_loop(0, iters, body, (w0, r0, p0, rz0))
+    res = jnp.sqrt(jnp.sum(r * r))
+    return w, res[None]
+
+
+# --------------------------------------------------------------------------
+# gram: XtX and XtX @ What in one pass
+# --------------------------------------------------------------------------
+
+def gram(x, what, *, use_pallas: bool = False):
+    """Return (H, G) = (XtX, XtX @ What) for x [rows, n], what [n, m]."""
+    h = _dot(x.T, x, use_pallas)
+    gmat = _dot(h, what, use_pallas)
+    return h, gmat
+
+
+# --------------------------------------------------------------------------
+# tiny decoder-only transformer (the pruning target + perplexity evaluator)
+# --------------------------------------------------------------------------
+
+# Parameter layout: a flat ordered list of (name, shape) — the exact order
+# used by aot.py when exporting model_fwd and by the rust weights loader.
+
+def param_spec(cfg: Dict[str, Any]) -> List[Any]:
+    d, ff, v, s = cfg["d_model"], cfg["d_ff"], cfg["vocab"], cfg["seq_len"]
+    spec = [("tok_emb", (v, d)), ("pos_emb", (s, d))]
+    for i in range(cfg["n_layers"]):
+        p = f"blocks.{i}."
+        spec += [
+            (p + "ln1.g", (d,)), (p + "ln1.b", (d,)),
+            (p + "attn.wq", (d, d)), (p + "attn.wk", (d, d)),
+            (p + "attn.wv", (d, d)), (p + "attn.wo", (d, d)),
+            (p + "ln2.g", (d,)), (p + "ln2.b", (d,)),
+            (p + "mlp.w1", (d, ff)), (p + "mlp.w2", (ff, d)),
+        ]
+    spec += [("ln_f.g", (d,)), ("ln_f.b", (d,))]
+    return spec
+
+
+def init_params(cfg: Dict[str, Any], key) -> Dict[str, jnp.ndarray]:
+    params = {}
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(".g"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(".b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif name == "pos_emb":
+            params[name] = 0.01 * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            scale = 1.0 / jnp.sqrt(jnp.asarray(shape[0], jnp.float32))
+            params[name] = scale * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _attention(x, wq, wk, wv, wo, n_heads: int):
+    b, s, d = x.shape
+    hd = d // n_heads
+
+    def split(t):
+        return t.reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+
+    q = split(x @ wq)
+    k = split(x @ wk)
+    v = split(x @ wv)
+    att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    causal = jnp.tril(jnp.ones((s, s), jnp.float32))
+    att = jnp.where(causal[None, None] > 0, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return out @ wo
+
+
+def forward(params: Dict[str, jnp.ndarray], ids, cfg: Dict[str, Any]):
+    """Logits [batch, seq, vocab] for token ids [batch, seq] (i32)."""
+    b, s = ids.shape
+    x = params["tok_emb"][ids] + params["pos_emb"][None, :s]
+    for i in range(cfg["n_layers"]):
+        p = f"blocks.{i}."
+        h = _layer_norm(x, params[p + "ln1.g"], params[p + "ln1.b"])
+        x = x + _attention(h, params[p + "attn.wq"], params[p + "attn.wk"],
+                           params[p + "attn.wv"], params[p + "attn.wo"],
+                           cfg["n_heads"])
+        h = _layer_norm(x, params[p + "ln2.g"], params[p + "ln2.b"])
+        x = x + jax.nn.gelu(h @ params[p + "mlp.w1"]) @ params[p + "mlp.w2"]
+    x = _layer_norm(x, params["ln_f.g"], params["ln_f.b"])
+    return x @ params["tok_emb"].T  # tied unembedding
+
+
+def nll_positions(params, ids, cfg):
+    """Per-position next-token NLL [batch, seq-1] (natural log)."""
+    logits = forward(params, ids, cfg)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = ids[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return nll
+
+
+def loss_fn(params, ids, cfg):
+    return jnp.mean(nll_positions(params, ids, cfg))
+
+
+# model presets (kept in sync with rust/src/config/presets.rs)
+PRESETS: Dict[str, Dict[str, Any]] = {
+    "alps-tiny": dict(d_model=128, d_ff=512, n_layers=2, n_heads=4,
+                      vocab=512, seq_len=128),
+    "alps-small": dict(d_model=192, d_ff=768, n_layers=4, n_heads=6,
+                       vocab=512, seq_len=128),
+    "alps-base": dict(d_model=256, d_ff=1024, n_layers=6, n_heads=8,
+                      vocab=512, seq_len=128),
+}
+
+
+def prunable_shapes(cfg: Dict[str, Any]) -> List[Any]:
+    """Distinct (n_in, n_out) shapes of prunable linear layers."""
+    d, ff = cfg["d_model"], cfg["d_ff"]
+    return [(d, d), (d, ff), (ff, d)]
+
+
+def n_params(cfg: Dict[str, Any]) -> int:
+    return sum(int(jnp.prod(jnp.asarray(s))) for _, s in param_spec(cfg))

@@ -1,0 +1,169 @@
+"""Build-time pretraining of the pruning-target models (tiny GPTs).
+
+Trains each preset on the synthetic corpus with a hand-rolled Adam (optax is
+not available offline), then serializes weights in the ALPS binary format
+consumed by ``rust/src/model/weights.rs``:
+
+    magic "ALPSMDL1" | u32 n_tensors |
+    per tensor: u32 name_len | name | u32 ndim | u32 dims... | f32 LE data
+
+Also writes the corpus artifacts (vocab + token id splits) as
+``artifacts/corpus.bin``:
+
+    magic "ALPSCRP1" | u32 vocab_size | per word: u32 len | bytes |
+    u32 n_splits | per split: u32 name_len | name | u32 n_tokens | u16 ids
+
+Run via ``make artifacts`` (cached: skipped when outputs are newer).
+"""
+import argparse
+import struct
+import sys
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus as corpus_mod
+from . import model as model_mod
+
+
+# --------------------------------------------------------------------------
+# serialization
+# --------------------------------------------------------------------------
+
+def write_model_bin(path: str, params: Dict[str, jnp.ndarray], spec) -> None:
+    with open(path, "wb") as f:
+        f.write(b"ALPSMDL1")
+        f.write(struct.pack("<I", len(spec)))
+        for name, _shape in spec:
+            t = np.asarray(params[name], dtype=np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", t.ndim))
+            for d in t.shape:
+                f.write(struct.pack("<I", d))
+            f.write(t.tobytes())
+
+
+def write_corpus_bin(path: str, built: Dict) -> None:
+    vocab: Dict[str, int] = built["vocab"]
+    inv = [None] * len(vocab)
+    for w, i in vocab.items():
+        inv[i] = w
+    with open(path, "wb") as f:
+        f.write(b"ALPSCRP1")
+        f.write(struct.pack("<I", len(inv)))
+        for w in inv:
+            wb = w.encode()
+            f.write(struct.pack("<I", len(wb)))
+            f.write(wb)
+        splits = built["splits"]
+        f.write(struct.pack("<I", len(splits)))
+        for name in sorted(splits.keys()):
+            ids = splits[name]
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", len(ids)))
+            f.write(np.asarray(ids, dtype=np.uint16).tobytes())
+
+
+def write_model_json(path: str, name: str, cfg: Dict) -> None:
+    with open(path, "w") as f:
+        f.write("{\n")
+        f.write(f'  "name": "{name}",\n')
+        keys = ["d_model", "d_ff", "n_layers", "n_heads", "vocab", "seq_len"]
+        parts = [f'  "{k}": {cfg[k]}' for k in keys]
+        f.write(",\n".join(parts))
+        f.write("\n}\n")
+
+
+# --------------------------------------------------------------------------
+# training (hand-rolled Adam)
+# --------------------------------------------------------------------------
+
+def batches(ids: np.ndarray, seq_len: int, batch: int, steps: int, seed: int):
+    rng = np.random.default_rng(seed)
+    n = len(ids) - seq_len - 1
+    for _ in range(steps):
+        starts = rng.integers(0, n, size=batch)
+        yield np.stack([ids[s: s + seq_len] for s in starts]).astype(np.int32)
+
+
+def train_model(name: str, cfg: Dict, train_ids: np.ndarray, steps: int,
+                batch: int, lr: float, seed: int):
+    key = jax.random.PRNGKey(seed)
+    params = model_mod.init_params(cfg, key)
+    spec = model_mod.param_spec(cfg)
+
+    loss_grad = jax.jit(jax.value_and_grad(
+        lambda p, ids: model_mod.loss_fn(p, ids, cfg)))
+
+    # Adam state
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(vv) for k, vv in params.items()}
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    @jax.jit
+    def step(params, m, v, ids, t):
+        loss, grads = loss_grad(params, ids)
+        new_p, new_m, new_v = {}, {}, {}
+        for k in params:
+            new_m[k] = b1 * m[k] + (1 - b1) * grads[k]
+            new_v[k] = b2 * v[k] + (1 - b2) * grads[k] ** 2
+            mhat = new_m[k] / (1 - b1 ** t)
+            vhat = new_v[k] / (1 - b2 ** t)
+            new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+        return new_p, new_m, new_v, loss
+
+    t0 = time.time()
+    losses = []
+    for i, ids in enumerate(batches(train_ids, cfg["seq_len"], batch, steps, seed)):
+        params, m, v, loss = step(params, m, v, jnp.asarray(ids),
+                                  jnp.asarray(i + 1, jnp.float32))
+        losses.append(float(loss))
+        if (i + 1) % 50 == 0:
+            print(f"  [{name}] step {i + 1}/{steps} loss={losses[-1]:.4f} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+    print(f"  [{name}] final loss {losses[-1]:.4f} "
+          f"(start {losses[0]:.4f}) in {time.time() - t0:.1f}s", flush=True)
+    return params, spec, losses
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="alps-tiny,alps-small,alps-base")
+    ap.add_argument("--steps", type=int, default=0, help="override steps for all")
+    args = ap.parse_args()
+
+    print("building corpus ...", flush=True)
+    built = corpus_mod.build_all()
+    write_corpus_bin(f"{args.out_dir}/corpus.bin", built)
+    train_ids = np.asarray(built["splits"]["train"], dtype=np.int64)
+    print(f"corpus: vocab={len(built['vocab'])} "
+          f"train={len(train_ids)} tokens", flush=True)
+
+    schedule = {
+        "alps-tiny": dict(steps=400, batch=16, lr=1e-3, seed=7),
+        "alps-small": dict(steps=300, batch=16, lr=8e-4, seed=11),
+        "alps-base": dict(steps=250, batch=12, lr=6e-4, seed=13),
+    }
+    for name in args.models.split(","):
+        cfg = model_mod.PRESETS[name]
+        sch = dict(schedule[name])
+        if args.steps:
+            sch["steps"] = args.steps
+        print(f"training {name}: {model_mod.n_params(cfg):,} params, "
+              f"{sch}", flush=True)
+        params, spec, _ = train_model(name, cfg, train_ids, **sch)
+        write_model_bin(f"{args.out_dir}/model_{name}.bin", params, spec)
+        write_model_json(f"{args.out_dir}/model_{name}.json", name, cfg)
+        print(f"wrote {args.out_dir}/model_{name}.bin", flush=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

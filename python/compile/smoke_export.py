@@ -1,0 +1,57 @@
+"""Smoke-test export: exercise the riskiest HLO constructs we rely on
+(sort/top_k for projection, dynamic_slice with a *runtime* scalar index for
+sparsity-k thresholding, fori_loop/while for PCG, pallas interpret kernels)
+through the stablehlo -> XlaComputation -> HLO-text path that the rust
+runtime consumes.
+
+Usage: python -m compile.smoke_export ../artifacts/smoke.hlo.txt
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax._src.lib import xla_client as xc
+
+
+def smoke_fn(a, b, k):
+    """a, b: f32[4,6]; k: i32 scalar (runtime).
+
+    Returns a tuple exercising: matmul, sort-descending, dynamic_slice with
+    runtime index, top-k-style mask via threshold, and a fori_loop.
+    """
+    # matmul
+    c = a @ b.T  # [4,4]
+    # global magnitude sort (descending) of |a|
+    flat = jnp.sort(jnp.abs(a).reshape(-1))[::-1]
+    # runtime-k threshold: value of the k-th largest entry
+    thresh = lax.dynamic_slice(flat, (k - 1,), (1,))[0]
+    mask = (jnp.abs(a) >= thresh).astype(jnp.float32)
+    proj = a * mask
+    # fori_loop: 5 steps of y <- 0.5*y + c
+    y0 = jnp.zeros_like(c)
+    y = lax.fori_loop(0, 5, lambda i, y: 0.5 * y + c, y0)
+    return c, proj, y, jnp.sum(mask)[None]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    out_path = sys.argv[1] if len(sys.argv) > 1 else "/tmp/smoke.hlo.txt"
+    spec = jax.ShapeDtypeStruct((4, 6), jnp.float32)
+    kspec = jax.ShapeDtypeStruct((), jnp.int32)
+    lowered = jax.jit(smoke_fn).lower(spec, spec, kspec)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text)} chars to {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Hypothesis property sweeps over the Layer-2 ADMM/PCG graphs — the
+python mirror of rust/tests/proptests.rs (same invariants, independent
+implementation, so a violation on either side flags a spec divergence)."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def layer(n, m, rows, seed):
+    rng = np.random.RandomState(seed)
+    x = rng.randn(rows, n).astype(np.float32)
+    what = rng.randn(n, m).astype(np.float32)
+    h = x.T @ x
+    return x, what, h, h @ what
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(4, 24), m=st.integers(2, 10), seed=st.integers(0, 10_000),
+       frac=st.floats(0.1, 0.9))
+def test_admm_projection_exact_k(n, m, seed, frac):
+    x, what, h, g = layer(n, m, n + 8, seed)
+    evals, q = np.linalg.eigh(h)
+    k = max(1, int(frac * n * m))
+    _, d, _, _, nnz = M.admm_iter(
+        jnp.asarray(q), jnp.asarray(evals), jnp.asarray(g),
+        jnp.asarray(what), jnp.asarray(np.zeros_like(what)),
+        jnp.float32(1.0), jnp.int32(k))
+    assert int(nnz[0]) == k
+    assert np.count_nonzero(np.asarray(d)) == k
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(4, 20), m=st.integers(2, 8), seed=st.integers(0, 10_000),
+       rho=st.floats(0.05, 20.0))
+def test_admm_w_update_solves_ridge(n, m, seed, rho):
+    x, what, h, g = layer(n, m, n + 8, seed)
+    evals, q = np.linalg.eigh(h)
+    rng = np.random.RandomState(seed + 1)
+    d = rng.randn(n, m).astype(np.float32)
+    v = rng.randn(n, m).astype(np.float32)
+    w, *_ = M.admm_iter(jnp.asarray(q), jnp.asarray(evals), jnp.asarray(g),
+                        jnp.asarray(d), jnp.asarray(v), jnp.float32(rho),
+                        jnp.int32(n * m // 2))
+    lhs = (h + rho * np.eye(n)) @ np.asarray(w)
+    rhs = g - v + rho * d
+    denom = np.linalg.norm(rhs) + 1e-6
+    assert np.linalg.norm(lhs - rhs) / denom < 5e-3
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(4, 16), m=st.integers(2, 6), seed=st.integers(0, 10_000))
+def test_pcg_never_worse_than_start(n, m, seed):
+    x, what, h, g = layer(n, m, n + 10, seed)
+    rng = np.random.RandomState(seed + 2)
+    mask = (rng.rand(n, m) > 0.5).astype(np.float32)
+    w0 = what * mask
+
+    def err(w):
+        return float(np.linalg.norm(x @ what - x @ w) ** 2)
+
+    w, _ = M.pcg_refine(jnp.asarray(h), jnp.asarray(g), jnp.asarray(w0),
+                        jnp.asarray(mask), iters=10)
+    assert err(np.asarray(w)) <= err(w0) + 1e-3
+
+
+@settings(**SETTINGS)
+@given(n=st.sampled_from([8, 16]), m=st.integers(2, 6),
+       seed=st.integers(0, 10_000), pattern=st.sampled_from([(2, 4), (4, 8)]))
+def test_admm_nm_group_budget(n, m, seed, pattern):
+    nk, grp = pattern
+    x, what, h, g = layer(n, m, n + 8, seed)
+    evals, q = np.linalg.eigh(h)
+    _, d, _, _, _ = M.admm_iter_nm(
+        jnp.asarray(q), jnp.asarray(evals), jnp.asarray(g),
+        jnp.asarray(what), jnp.asarray(np.zeros_like(what)),
+        jnp.float32(1.0), n_keep=nk, group=grp)
+    d = np.asarray(d)
+    for j in range(m):
+        col = d[:, j]
+        for g0 in range(0, n, grp):
+            assert np.count_nonzero(col[g0:g0 + grp]) <= nk
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10_000), n=st.integers(4, 16))
+def test_topk_threshold_consistent_with_exact(seed, n):
+    rng = np.random.RandomState(seed)
+    z = rng.randn(n, n).astype(np.float32)
+    k = max(1, n * n // 3)
+    thresh = float(M.topk_threshold(jnp.asarray(z), jnp.int32(k)))
+    exact, _ = M.topk_project_exact(jnp.asarray(z), jnp.int32(k))
+    kept = np.abs(np.asarray(exact)[np.asarray(exact) != 0])
+    if kept.size:
+        assert kept.min() >= thresh - 1e-6

@@ -1,0 +1,101 @@
+"""AOT export path: HLO text generation, manifest structure, binary formats."""
+import os
+import struct
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot
+from compile import model as M
+from compile import pretrain
+
+
+def test_to_hlo_text_basic():
+    lowered = jax.jit(lambda a, b: (a @ b,)).lower(
+        jax.ShapeDtypeStruct((4, 4), jnp.float32),
+        jax.ShapeDtypeStruct((4, 4), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[4,4]" in text
+
+
+def test_admm_shapes_cover_all_presets():
+    shapes = aot.admm_shapes()
+    for cfg in M.PRESETS.values():
+        for s in M.prunable_shapes(cfg):
+            assert s in shapes
+    assert (512, 512) in shapes
+
+
+def test_exporter_writes_artifact_and_manifest():
+    with tempfile.TemporaryDirectory() as td:
+        ex = aot.Exporter(td)
+        ex.export(
+            "admm_iter_16x8",
+            lambda q, me, g, d, v, rho, k: M.admm_iter(q, me, g, d, v, rho, k),
+            [("q", (16, 16), "f32"), ("m_eig", (16,), "f32"),
+             ("g", (16, 8), "f32"), ("d", (16, 8), "f32"),
+             ("v", (16, 8), "f32"), ("rho", (), "f32"), ("k", (), "i32")],
+            [("w", (16, 8)), ("d_new", (16, 8)), ("v_new", (16, 8)),
+             ("delta", (1,)), ("nnz", (1,))],
+            "admm_iter")
+        ex.write_manifest()
+        text = open(os.path.join(td, "admm_iter_16x8.hlo.txt")).read()
+        assert "HloModule" in text
+        man = open(os.path.join(td, "manifest.json")).read()
+        assert '"admm_iter_16x8"' in man
+        assert '"i32"' in man
+
+
+def test_model_bin_roundtrip():
+    cfg = dict(d_model=16, d_ff=32, n_layers=1, n_heads=2, vocab=32, seq_len=8)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    spec = M.param_spec(cfg)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "m.bin")
+        pretrain.write_model_bin(path, params, spec)
+        with open(path, "rb") as f:
+            assert f.read(8) == b"ALPSMDL1"
+            (n_tensors,) = struct.unpack("<I", f.read(4))
+            assert n_tensors == len(spec)
+            # read first tensor fully
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode()
+            assert name == "tok_emb"
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            assert dims == (32, 16)
+            data = np.frombuffer(f.read(4 * 32 * 16), dtype=np.float32)
+            np.testing.assert_allclose(
+                data.reshape(32, 16), np.asarray(params["tok_emb"]))
+
+
+def test_corpus_bin_roundtrip():
+    built = {"vocab": {"<pad>": 0, "<unk>": 1, "the": 2},
+             "splits": {"train": [2, 1, 2, 0], "valid": [2, 2]}}
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "c.bin")
+        pretrain.write_corpus_bin(path, built)
+        with open(path, "rb") as f:
+            assert f.read(8) == b"ALPSCRP1"
+            (vs,) = struct.unpack("<I", f.read(4))
+            assert vs == 3
+            words = []
+            for _ in range(vs):
+                (ln,) = struct.unpack("<I", f.read(4))
+                words.append(f.read(ln).decode())
+            assert words == ["<pad>", "<unk>", "the"]
+            (ns,) = struct.unpack("<I", f.read(4))
+            assert ns == 2
+
+
+def test_model_json(tmp_path=None):
+    import tempfile as tf
+    with tf.TemporaryDirectory() as td:
+        p = os.path.join(td, "m.json")
+        pretrain.write_model_json(p, "alps-tiny", M.PRESETS["alps-tiny"])
+        text = open(p).read()
+        assert '"d_model": 128' in text
+        assert '"name": "alps-tiny"' in text

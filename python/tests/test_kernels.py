@@ -1,0 +1,180 @@
+"""Kernel <-> oracle correctness: hypothesis sweeps over shapes/dtypes.
+
+This is the CORE Layer-1 correctness signal: every pallas kernel must agree
+with its pure-jnp oracle in compile.kernels.ref across randomized shapes.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as kmm
+from compile.kernels import nm_project as knm
+from compile.kernels import pcg_step as kpcg
+from compile.kernels import ref
+from compile.kernels import topk_mask as ktm
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(shape, seed, dtype=np.float32, scale=1.0):
+    return (np.random.RandomState(seed).randn(*shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- matmul
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 96), k=st.integers(1, 96), n=st.integers(1, 96),
+       seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, k, n, seed):
+    a = rand((m, k), seed)
+    b = rand((k, n), seed + 1)
+    np.testing.assert_allclose(
+        np.asarray(kmm.matmul(a, b)), np.asarray(ref.matmul(a, b)),
+        rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(m=st.sampled_from([32, 64, 128]), seed=st.integers(0, 1000))
+def test_matmul_bfloat16_inputs_accumulate_f32(m, seed):
+    import jax.numpy as jnp
+    a = rand((m, m), seed).astype(jnp.bfloat16)
+    b = rand((m, m), seed + 1).astype(jnp.bfloat16)
+    out = np.asarray(kmm.matmul(a, b))
+    assert out.dtype == np.float32
+    expect = np.asarray(ref.matmul(a, b))
+    np.testing.assert_allclose(out, expect, rtol=5e-2, atol=5e-2)
+
+
+def test_matmul_identity():
+    a = rand((16, 16), 0)
+    np.testing.assert_allclose(
+        np.asarray(kmm.matmul(a, np.eye(16, dtype=np.float32))), a, rtol=1e-6)
+
+
+def test_matmul_block_divisor_picker():
+    assert kmm._pick_block(128, 128) == 128
+    assert kmm._pick_block(100, 64) == 50
+    assert kmm._pick_block(7, 4) == 1
+    assert kmm._pick_block(96, 128) == 96
+
+
+def test_matmul_vmem_budget():
+    # default tiles must fit VMEM with double-buffering headroom
+    assert kmm.vmem_footprint_bytes(128, 128, 128) * 2 < 16 * 1024 * 1024
+
+
+def test_matmul_mxu_estimate_monotone():
+    assert kmm.mxu_utilization_estimate(128, 128, 128) > \
+        kmm.mxu_utilization_estimate(8, 8, 8)
+
+
+# ---------------------------------------------------------------- nm_project
+
+@settings(**SETTINGS)
+@given(g=st.integers(1, 64), pattern=st.sampled_from([(2, 4), (4, 8), (1, 4), (3, 8)]),
+       seed=st.integers(0, 2**31 - 1))
+def test_nm_project_matches_ref(g, pattern, seed):
+    n_keep, m = pattern
+    z = rand((g, m), seed)
+    np.testing.assert_allclose(
+        np.asarray(knm.nm_project(z, n_keep)),
+        np.asarray(ref.nm_project(z, n_keep)), rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(g=st.integers(1, 64), seed=st.integers(0, 2**31 - 1))
+def test_nm_project_row_budget(g, seed):
+    z = rand((g, 4), seed)
+    out = np.asarray(knm.nm_project(z, 2))
+    assert (np.count_nonzero(out, axis=1) <= 2).all()
+
+
+def test_nm_project_ties_stable():
+    z = np.array([[1.0, -1.0, 1.0, 1.0]], dtype=np.float32)
+    out = np.asarray(knm.nm_project(z, 2))
+    # stable: keeps the two lowest-index entries among equal magnitudes
+    np.testing.assert_array_equal(out, [[1.0, -1.0, 0.0, 0.0]])
+
+
+def test_nm_project_matrix_columns_grouped_along_input_dim():
+    w = rand((8, 3), 0)
+    out = np.asarray(knm.nm_project_matrix(w, 2, 4))
+    # each column has 8/4 = 2 groups of 4, each keeping <= 2
+    for j in range(3):
+        col = out[:, j]
+        assert np.count_nonzero(col[:4]) <= 2
+        assert np.count_nonzero(col[4:]) <= 2
+
+
+def test_nm_project_preserves_values():
+    z = rand((32, 4), 1)
+    out = np.asarray(knm.nm_project(z, 2))
+    nz = out != 0
+    np.testing.assert_array_equal(out[nz], z[nz])
+
+
+# ---------------------------------------------------------------- topk_mask
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 80), n=st.integers(1, 80),
+       t=st.floats(0.0, 3.0), seed=st.integers(0, 2**31 - 1))
+def test_topk_mask_matches_ref(m, n, t, seed):
+    x = rand((m, n), seed)
+    np.testing.assert_allclose(
+        np.asarray(ktm.topk_mask(x, t)), np.asarray(ref.topk_mask(x, t)))
+
+
+def test_topk_mask_zero_threshold_keeps_all():
+    x = rand((16, 16), 0)
+    np.testing.assert_array_equal(np.asarray(ktm.topk_mask(x, 0.0)), x)
+
+
+def test_topk_mask_huge_threshold_zeroes_all():
+    x = rand((16, 16), 0)
+    assert np.count_nonzero(np.asarray(ktm.topk_mask(x, 1e9))) == 0
+
+
+# ---------------------------------------------------------------- pcg_step
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 64), n=st.integers(1, 64),
+       alpha=st.floats(-2.0, 2.0), seed=st.integers(0, 2**31 - 1))
+def test_pcg_elementwise_matches_ref(m, n, alpha, seed):
+    w, p, r, hp = (rand((m, n), seed + i) for i in range(4))
+    mask = (rand((m, n), seed + 4) > 0).astype(np.float32)
+    invd = np.abs(rand((m, 1), seed + 5)) + 0.1
+    out = kpcg.pcg_elementwise(w, p, r, hp, mask, invd, alpha)
+    expect = ref.pcg_elementwise(w, p, r, hp, mask, invd, alpha)
+    for o, e in zip(out, expect):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(e),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_pcg_elementwise_respects_mask():
+    m, n = 16, 8
+    w, p, r, hp = (rand((m, n), i) for i in range(4))
+    mask = np.zeros((m, n), np.float32)
+    mask[:4] = 1.0
+    invd = np.ones((m, 1), np.float32)
+    _, r_new, z_new = kpcg.pcg_elementwise(w, p, r, hp, mask, invd, 0.5)
+    assert np.count_nonzero(np.asarray(r_new)[4:]) == 0
+    assert np.count_nonzero(np.asarray(z_new)[4:]) == 0
+
+
+# -------------------------------------------------------- topk (oracle only)
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 32), n=st.integers(1, 32), seed=st.integers(0, 2**31 - 1),
+       frac=st.floats(0.05, 0.95))
+def test_topk_project_exact_count(m, n, seed, frac):
+    x = rand((m, n), seed)
+    k = max(1, int(frac * m * n))
+    out = np.asarray(ref.topk_project(x, k))
+    assert np.count_nonzero(out) == k
+
+
+def test_topk_project_is_euclidean_projection():
+    # brute force on a small matrix: top-k keeps the k largest magnitudes
+    x = np.array([[3.0, -1.0], [0.5, -2.0]], dtype=np.float32)
+    out = np.asarray(ref.topk_project(x, 2))
+    np.testing.assert_array_equal(out, [[3.0, 0.0], [0.0, -2.0]])

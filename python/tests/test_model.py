@@ -1,0 +1,275 @@
+"""Layer-2 graph tests: ADMM iteration semantics, PCG refinement, the
+transformer forward, and the Theorem-1 convergence bound."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def layer_problem(n=24, m=12, rows=80, seed=0):
+    rng = np.random.RandomState(seed)
+    x = rng.randn(rows, n).astype(np.float32)
+    what = rng.randn(n, m).astype(np.float32)
+    h = x.T @ x
+    return x, what, h, h @ what
+
+
+def scaled(h, g, what):
+    """Paper B.1 preprocessing: unit-diagonal gram."""
+    e = 1.0 / np.sqrt(np.diag(h))
+    hs = (h * e[:, None]) * e[None, :]
+    gs = g * e[:, None]
+    whats = what / e[:, None]
+    return hs, gs, whats, e
+
+
+def run_alps(x, what, h, g, sparsity, max_iters=600, pcg_iters=10):
+    hs, gs, whats, e = scaled(h, g, what)
+    evals, q = np.linalg.eigh(hs)
+    n, m = what.shape
+    k = int((1.0 - sparsity) * n * m)
+    d, v = whats.copy(), np.zeros_like(what)
+    rho, t = 0.1, 0
+    prev = d != 0
+    while t < max_iters:
+        for _ in range(3):
+            w, d, v, delta, nnz = M.admm_iter(
+                jnp.asarray(q), jnp.asarray(evals), jnp.asarray(gs),
+                jnp.asarray(d), jnp.asarray(v), jnp.float32(rho), jnp.int32(k))
+            w, d, v = map(np.asarray, (w, d, v))
+            t += 1
+        supp = d != 0
+        s_t = np.sum(supp != prev)
+        prev = supp
+        if s_t >= 0.1 * k:
+            rho *= 1.3
+        elif s_t >= 0.005 * k:
+            rho *= 1.2
+        elif s_t >= 1:
+            rho *= 1.1
+        else:
+            break
+    mask = (d != 0).astype(np.float32)
+    wr, _ = M.pcg_refine(jnp.asarray(hs), jnp.asarray(gs), jnp.asarray(d),
+                         jnp.asarray(mask), iters=pcg_iters)
+    return np.asarray(wr) * e[:, None], k
+
+
+def rel_err(x, what, w):
+    return (np.linalg.norm(x @ what - x @ w) ** 2
+            / np.linalg.norm(x @ what) ** 2)
+
+
+# ------------------------------------------------------------------ ADMM
+
+def test_admm_iter_nnz_exact():
+    x, what, h, g = layer_problem()
+    evals, q = np.linalg.eigh(h)
+    k = 100
+    w, d, v, delta, nnz = M.admm_iter(
+        jnp.asarray(q), jnp.asarray(evals), jnp.asarray(g),
+        jnp.asarray(what), jnp.asarray(np.zeros_like(what)),
+        jnp.float32(1.0), jnp.int32(k))
+    assert int(nnz[0]) == k
+    assert np.count_nonzero(np.asarray(d)) == k
+
+
+def test_admm_w_update_solves_ridge():
+    """W-update must equal (H + rho I)^-1 (G - V + rho D)."""
+    x, what, h, g = layer_problem(n=16, m=8)
+    evals, q = np.linalg.eigh(h)
+    rng = np.random.RandomState(3)
+    d = rng.randn(16, 8).astype(np.float32)
+    v = rng.randn(16, 8).astype(np.float32)
+    rho = 2.5
+    w, *_ = M.admm_iter(jnp.asarray(q), jnp.asarray(evals), jnp.asarray(g),
+                        jnp.asarray(d), jnp.asarray(v), jnp.float32(rho),
+                        jnp.int32(64))
+    expect = np.linalg.solve(h + rho * np.eye(16), g - v + rho * d)
+    np.testing.assert_allclose(np.asarray(w), expect, rtol=2e-3, atol=2e-3)
+
+
+def test_admm_delta_support_counts_changes():
+    x, what, h, g = layer_problem(n=16, m=8)
+    evals, q = np.linalg.eigh(h)
+    z = np.zeros_like(what)
+    # starting from D=0 (empty support), delta = k new entries
+    _, d, _, delta, _ = M.admm_iter(
+        jnp.asarray(q), jnp.asarray(evals), jnp.asarray(g),
+        jnp.asarray(z), jnp.asarray(z), jnp.float32(1.0), jnp.int32(40))
+    assert int(delta[0]) == 40
+
+
+def test_admm_beats_magnitude_pruning():
+    x, what, h, g = layer_problem(n=32, m=16, rows=100)
+    w_alps, k = run_alps(x, what, h, g, sparsity=0.7)
+    flat = np.sort(np.abs(what).ravel())[::-1]
+    wmp = what * (np.abs(what) >= flat[k - 1])
+    assert rel_err(x, what, w_alps) < rel_err(x, what, wmp)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 100), sparsity=st.sampled_from([0.5, 0.7, 0.8]))
+def test_admm_sparsity_respected(seed, sparsity):
+    x, what, h, g = layer_problem(n=16, m=8, rows=60, seed=seed)
+    w, k = run_alps(x, what, h, g, sparsity, max_iters=120)
+    assert np.count_nonzero(w) <= k
+
+
+def test_theorem1_residual_bound():
+    """Theorem 1: ||W(t+1) - D(t+1)||_F <= C / rho_t for geometric rho."""
+    x, what, h, g = layer_problem(n=20, m=10)
+    hs, gs, whats, e = scaled(h, g, what)
+    evals, q = np.linalg.eigh(hs)
+    k = 60
+    d, v = whats.copy(), np.zeros_like(what)
+    rho = 1.0
+    gaps, rhos = [], []
+    for t in range(40):
+        w, d, v, *_ = M.admm_iter(
+            jnp.asarray(q), jnp.asarray(evals), jnp.asarray(gs),
+            jnp.asarray(d), jnp.asarray(v), jnp.float32(rho), jnp.int32(k))
+        w, d, v = map(np.asarray, (w, d, v))
+        gaps.append(np.linalg.norm(w - d))
+        rhos.append(rho)
+        rho *= 1.25  # geometric => sum 1/rho_t < inf
+    # gap * rho must stay bounded (C exists)
+    prods = [gap * r for gap, r in zip(gaps[5:], rhos[5:])]
+    assert max(prods) < 50 * np.median(prods) + 1e3
+    # and the primal gap itself must vanish
+    assert gaps[-1] < 1e-2 * (gaps[0] + 1e-9) + 1e-4
+
+
+# ------------------------------------------------------------------ N:M
+
+def test_admm_nm_respects_pattern():
+    x, what, h, g = layer_problem(n=16, m=8)
+    evals, q = np.linalg.eigh(h)
+    z = np.zeros_like(what)
+    _, d, _, _, nnz = M.admm_iter_nm(
+        jnp.asarray(q), jnp.asarray(evals), jnp.asarray(g),
+        jnp.asarray(what), jnp.asarray(z), jnp.float32(1.0),
+        n_keep=2, group=4)
+    d = np.asarray(d)
+    assert int(nnz[0]) <= 16 * 8 // 2
+    # check the pattern: along each column, groups of 4 have <= 2 nz
+    for j in range(8):
+        col = d[:, j]
+        for gstart in range(0, 16, 4):
+            assert np.count_nonzero(col[gstart:gstart + 4]) <= 2
+
+
+# ------------------------------------------------------------------ PCG
+
+def test_pcg_refine_matches_dense_solve():
+    """On a full support, PCG must approach the unconstrained solution."""
+    x, what, h, g = layer_problem(n=16, m=8)
+    hs, gs, whats, e = scaled(h, g, what)
+    mask = np.ones_like(what)
+    w, res = M.pcg_refine(jnp.asarray(hs), jnp.asarray(gs),
+                          jnp.asarray(np.zeros_like(what)),
+                          jnp.asarray(mask), iters=60)
+    w = np.asarray(w) * e[:, None]
+    np.testing.assert_allclose(x @ w, x @ what, rtol=1e-2, atol=1e-2)
+
+
+def test_pcg_refine_reduces_error_on_mp_support():
+    x, what, h, g = layer_problem(n=32, m=16, rows=100)
+    hs, gs, whats, e = scaled(h, g, what)
+    k = 150
+    flat = np.sort(np.abs(whats).ravel())[::-1]
+    mask = (np.abs(whats) >= flat[k - 1]).astype(np.float32)
+    w0 = whats * mask
+    before = rel_err(x, what, w0 * e[:, None])
+    w, _ = M.pcg_refine(jnp.asarray(hs), jnp.asarray(gs), jnp.asarray(w0),
+                        jnp.asarray(mask), iters=10)
+    after = rel_err(x, what, np.asarray(w) * e[:, None])
+    assert after < before
+
+
+def test_pcg_refine_preserves_support():
+    x, what, h, g = layer_problem(n=16, m=8)
+    mask = (np.random.RandomState(0).rand(16, 8) > 0.6).astype(np.float32)
+    w, _ = M.pcg_refine(jnp.asarray(h), jnp.asarray(g),
+                        jnp.asarray(what * mask), jnp.asarray(mask), iters=10)
+    w = np.asarray(w)
+    assert np.count_nonzero(w * (1 - mask)) == 0
+
+
+def test_pcg_zero_mask_returns_zero():
+    x, what, h, g = layer_problem(n=8, m=4)
+    mask = np.zeros_like(what)
+    w, res = M.pcg_refine(jnp.asarray(h), jnp.asarray(g),
+                          jnp.asarray(what), jnp.asarray(mask), iters=5)
+    assert np.count_nonzero(np.asarray(w)) == 0
+
+
+# ------------------------------------------------------------------ gram
+
+def test_gram_matches_numpy():
+    x, what, h, g = layer_problem(n=16, m=8)
+    hh, gg = M.gram(jnp.asarray(x), jnp.asarray(what))
+    np.testing.assert_allclose(np.asarray(hh), h, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(gg), g, rtol=1e-4)
+
+
+# ------------------------------------------------------------ transformer
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return dict(d_model=32, d_ff=64, n_layers=2, n_heads=4, vocab=64,
+                seq_len=16)
+
+
+def test_forward_shapes(tiny_cfg):
+    params = M.init_params(tiny_cfg, jax.random.PRNGKey(0))
+    ids = jnp.zeros((2, 16), jnp.int32)
+    logits = M.forward(params, ids, tiny_cfg)
+    assert logits.shape == (2, 16, 64)
+
+
+def test_nll_positions_shape_and_positive(tiny_cfg):
+    params = M.init_params(tiny_cfg, jax.random.PRNGKey(0))
+    ids = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 64)
+    nll = M.nll_positions(params, ids, tiny_cfg)
+    assert nll.shape == (2, 15)
+    assert (np.asarray(nll) > 0).all()
+
+
+def test_forward_is_causal(tiny_cfg):
+    """Changing a future token must not change past logits."""
+    params = M.init_params(tiny_cfg, jax.random.PRNGKey(0))
+    ids1 = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0, 64)
+    ids2 = ids1.at[0, 10].set((ids1[0, 10] + 1) % 64)
+    l1 = np.asarray(M.forward(params, ids1, tiny_cfg))
+    l2 = np.asarray(M.forward(params, ids2, tiny_cfg))
+    np.testing.assert_allclose(l1[0, :10], l2[0, :10], rtol=1e-5, atol=1e-5)
+
+
+def test_init_loss_near_uniform(tiny_cfg):
+    params = M.init_params(tiny_cfg, jax.random.PRNGKey(0))
+    ids = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, 64)
+    loss = float(M.loss_fn(params, ids, tiny_cfg))
+    assert abs(loss - np.log(64)) < 1.0
+
+
+def test_param_spec_counts(tiny_cfg):
+    spec = M.param_spec(tiny_cfg)
+    assert len(spec) == 2 + 2 * 10 + 2
+    names = [n for n, _ in spec]
+    assert len(set(names)) == len(names)
+
+
+def test_prunable_shapes(tiny_cfg):
+    assert M.prunable_shapes(tiny_cfg) == [(32, 32), (32, 64), (64, 32)]
+
+
+def test_presets_heads_divide_dmodel():
+    for cfg in M.PRESETS.values():
+        assert cfg["d_model"] % cfg["n_heads"] == 0
+        assert cfg["vocab"] == 512 and cfg["seq_len"] == 128

@@ -1,0 +1,158 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!   A1 — the eq.-28 rho-update scheme vs fixed rho (the paper's Sec. 3.2
+//!        motivation: small rho explores, schedule converges)
+//!   A2 — PCG refinement iterations (0/5/10/20) vs error
+//!   A3 — B.1 diagonal scaling on vs off
+//!   A4 — calibration-set size vs downstream layer error
+//!   A5 — sparse CSR inference vs dense at several sparsities
+//!
+//!     cargo bench --bench bench_ablations
+
+use alps::bench::{bench, paper_layer_problem, synthetic_problem};
+use alps::config::{AlpsConfig, SparsityTarget};
+use alps::linalg::solve::pcg_support;
+use alps::model::sparse_infer::SparseModel;
+use alps::model::Model;
+use alps::pruning::alps::Alps;
+use alps::pruning::magnitude::MagnitudePruning;
+use alps::pruning::{LayerProblem, PruneMethod};
+use alps::util::table::{fmt_sig, Table};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let p = paper_layer_problem()?;
+    let target = SparsityTarget::Unstructured(0.7);
+
+    // ---------------- A1: rho schedule
+    println!("== A1: rho-update scheme (eq. 28) vs fixed rho, s=0.7 ==\n");
+    let mut t = Table::new(&["variant", "rel-error", "admm iters"]);
+    for (label, cfg) in [
+        ("eq-28 schedule (paper)", AlpsConfig::default()),
+        (
+            "fixed rho=0.1",
+            AlpsConfig { rho_factors: (1.0, 1.0, 1.0), max_iters: 120, ..Default::default() },
+        ),
+        (
+            "fixed rho=10",
+            AlpsConfig {
+                rho0: 10.0,
+                rho_factors: (1.0, 1.0, 1.0),
+                max_iters: 120,
+                ..Default::default()
+            },
+        ),
+        (
+            "aggressive x2.0",
+            AlpsConfig { rho_factors: (2.0, 2.0, 2.0), ..Default::default() },
+        ),
+    ] {
+        let alps = Alps::with_config(cfg);
+        let (w, trace) = alps.prune_traced(&p, target)?;
+        t.row(&[
+            label.to_string(),
+            fmt_sig(p.rel_error(&w)),
+            trace.admm_iters.to_string(),
+        ]);
+    }
+    t.print();
+    println!("expect: schedule matches-or-beats fixed-rho at far fewer iterations.\n");
+
+    // ---------------- A2: PCG iterations
+    println!("== A2: PCG refinement iterations (MP support, s=0.7) ==\n");
+    let w_mp = MagnitudePruning.prune(&p, target)?;
+    let mask = w_mp.support_mask();
+    let mut t = Table::new(&["pcg iters", "rel-error", "secs"]);
+    for iters in [0usize, 5, 10, 20, 40] {
+        let stats = bench(0, 3, || pcg_support(&p.h, &p.g, &w_mp, &mask, iters, 1e-14));
+        let (w, _) = pcg_support(&p.h, &p.g, &w_mp, &mask, iters, 1e-14);
+        t.row(&[
+            iters.to_string(),
+            fmt_sig(p.rel_error(&w)),
+            format!("{:.4}", stats.median()),
+        ]);
+    }
+    t.print();
+    println!("expect: monotone error decrease, diminishing after ~10 (the paper's pick).\n");
+
+    // ---------------- A3: diagonal scaling
+    println!("== A3: B.1 diagonal scaling ==\n");
+    let mut t = Table::new(&["scaling", "rel-error", "admm iters"]);
+    for (label, on) in [("on (paper)", true), ("off", false)] {
+        let alps = Alps::with_config(AlpsConfig { diag_scaling: on, ..Default::default() });
+        let (w, trace) = alps.prune_traced(&p, target)?;
+        t.row(&[
+            label.to_string(),
+            fmt_sig(p.rel_error(&w)),
+            trace.admm_iters.to_string(),
+        ]);
+    }
+    t.print();
+    println!("expect: scaling improves error and/or convergence on anisotropic X.\n");
+
+    // ---------------- A4: calibration size
+    println!("== A4: calibration rows vs layer error (synthetic 256x128) ==\n");
+    let mut t = Table::new(&["calib rows", "ALPS rel-error", "MP rel-error"]);
+    for rows in [64usize, 256, 1024, 4096] {
+        let p = synthetic_problem(256, 128, rows, 9);
+        let w_alps = Alps::default().prune(&p, target)?;
+        let w_mp = MagnitudePruning.prune(&p, target)?;
+        t.row(&[
+            rows.to_string(),
+            fmt_sig(p.rel_error(&w_alps)),
+            fmt_sig(p.rel_error(&w_mp)),
+        ]);
+    }
+    t.print();
+    println!(
+        "note: below rows=n_in the gram is rank-deficient and ALPS can fit the\n\
+         calibration outputs almost exactly; as rows grow the problem becomes\n\
+         overdetermined and the error saturates. MP is calibration-blind at\n\
+         every size — the gap is the value of the calibration data.\n"
+    );
+
+    // ---------------- A5: sparse inference
+    if Path::new("artifacts/model_alps-tiny.bin").exists() {
+        println!("== A5: CSR sparse inference vs dense (alps-tiny) ==\n");
+        let dir = Path::new("artifacts");
+        let corpus = alps::data::Corpus::load(&dir.join("corpus.bin"))?;
+        let calib = alps::data::sample_windows(corpus.split("train")?, 8, 128, 5);
+        let ids: Vec<u16> = corpus.split("wikitext2-like")?[..128].to_vec();
+        let mut t = Table::new(&[
+            "sparsity", "density", "dense s/seq", "csr s/seq", "ratio", "mem ratio",
+        ]);
+        for s in [0.5f64, 0.7, 0.9] {
+            let mut model = Model::load(dir, "alps-tiny")?;
+            let sched = alps::coordinator::Scheduler::new(calib.clone());
+            sched.prune_model(
+                &mut model,
+                SparsityTarget::Unstructured(s),
+                &alps::coordinator::PruneEngine::Native("alps".into()),
+            )?;
+            let sm = SparseModel::from_model(&model)?;
+            let dense_s = bench(1, 3, || model.nll(&ids).unwrap()).median();
+            let csr_s = bench(1, 3, || sm.nll(&ids).unwrap()).median();
+            let (sb, db) = sm.bytes_sparse_vs_dense();
+            t.row(&[
+                format!("{s:.1}"),
+                format!("{:.2}", sm.density()),
+                format!("{dense_s:.3}"),
+                format!("{csr_s:.3}"),
+                format!("{:.2}x", dense_s / csr_s),
+                format!("{:.2}x", db as f64 / sb as f64),
+            ]);
+        }
+        t.print();
+        println!(
+            "note: memory shrinks ~1/density as expected; on this CPU the\n\
+             vectorized dense micro-kernel outruns scalar CSR until density\n\
+             ~0.1 (time ratio -> 1 at s=0.9) — the paper's inference-speed\n\
+             claim needs sparse-tensor hardware (2:4 units), which is why it\n\
+             targets the N:M format."
+        );
+    } else {
+        println!("== A5 skipped: artifacts not built ==");
+    }
+
+    let _ = LayerProblem::from_gram; // keep import shape stable
+    Ok(())
+}

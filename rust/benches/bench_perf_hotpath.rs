@@ -1,0 +1,173 @@
+//! §Perf: hot-path microbenchmarks across the three layers —
+//! (L3) native matmul / eigh / ADMM-iteration throughput,
+//! (L2/L1) HLO artifact execution latency per ADMM iteration and per
+//! 10-iteration PCG refine, plus the end-to-end per-layer ALPS cost on
+//! real shapes. Results feed EXPERIMENTS.md §Perf.
+//!
+//!     cargo bench --bench bench_perf_hotpath
+
+use alps::bench::{bench, synthetic_problem};
+use alps::config::{AlpsConfig, SparsityTarget};
+use alps::linalg::matmul::matmul;
+use alps::linalg::{Matrix, SymEig};
+use alps::pruning::alps::{Alps, DiagScaling};
+use alps::pruning::projection::topk_project;
+use alps::runtime::client::Value;
+use alps::runtime::executor::AlpsHlo;
+use alps::runtime::{Manifest, Runtime};
+use alps::util::table::Table;
+use alps::util::Rng;
+use std::path::Path;
+
+fn gflops(flops: f64, secs: f64) -> String {
+    format!("{:.2}", flops / secs / 1e9)
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== §Perf: hot-path benchmarks ==\n");
+    let mut rng = Rng::new(0);
+
+    // ---------- L3 native matmul
+    println!("L3 native matmul (threaded, blocked):");
+    let mut t = Table::new(&["shape", "median s", "GFLOP/s"]);
+    for &(m, k, n) in &[(512usize, 512usize, 512usize), (1024, 1024, 256), (4096, 256, 1024)] {
+        let a = Matrix::randn(m, k, &mut rng);
+        let b = Matrix::randn(k, n, &mut rng);
+        let stats = bench(1, 5, || matmul(&a, &b));
+        let flops = 2.0 * (m * k * n) as f64;
+        t.row(&[
+            format!("{m}x{k}x{n}"),
+            format!("{:.4}", stats.median()),
+            gflops(flops, stats.median()),
+        ]);
+    }
+    t.print();
+
+    // ---------- L3 eigh (the once-per-layer factorization)
+    println!("\nL3 eigh (tred2+tql2, f64):");
+    let mut t = Table::new(&["n", "median s"]);
+    for &n in &[128usize, 256, 512] {
+        let x = Matrix::randn(n + 32, n, &mut rng);
+        let h = alps::linalg::matmul::gram(&x);
+        let stats = bench(0, 3, || SymEig::new(&h).unwrap());
+        t.row(&[n.to_string(), format!("{:.3}", stats.median())]);
+    }
+    t.print();
+
+    // ---------- L3 ADMM iteration (native) vs L2/L1 (HLO artifact)
+    println!("\nADMM iteration: native vs HLO artifact (128x128, 256x1024):");
+    let mut t = Table::new(&["shape", "native s/iter", "hlo s/iter", "hlo/native"]);
+    let rt = if Path::new("artifacts/manifest.json").exists() {
+        Some(Runtime::new(Path::new("artifacts"))?)
+    } else {
+        None
+    };
+    for &(n_in, n_out) in &[(128usize, 128usize), (256, 1024)] {
+        let p = synthetic_problem(n_in, n_out, 2 * n_in, 1);
+        let (scaling, hs) = DiagScaling::from_gram(&p.h, 1e-2);
+        let gs = scaling.scale_g(&p.g);
+        let eig = SymEig::new(&hs)?;
+        let k = (0.3 * (n_in * n_out) as f64) as usize;
+        let d0 = scaling.to_scaled(&p.what);
+        let v0 = Matrix::zeros(n_in, n_out);
+
+        // native: ridge solve + projection + dual update
+        let native = bench(1, 5, || {
+            let mut b = gs.sub(&v0);
+            b.axpy(1.0, &d0);
+            let w = eig.ridge_solve(1.0, &b);
+            let mut z = w.clone();
+            z.axpy(1.0, &v0);
+            let d = topk_project(&z, k);
+            let mut wd = w.sub(&d);
+            wd = wd.scale(1.0);
+            std::hint::black_box(v0.add(&wd))
+        });
+
+        let hlo_cell = if let Some(rt) = &rt {
+            let name = Manifest::admm_iter_name(n_in, n_out);
+            if rt.has(&name) {
+                let inputs = vec![
+                    Value::matrix(&eig.q),
+                    Value::vector(&eig.vals),
+                    Value::matrix(&gs),
+                    Value::matrix(&d0),
+                    Value::matrix(&v0),
+                    Value::scalar(1.0),
+                    Value::I32(k as i32),
+                ];
+                let stats = bench(2, 5, || rt.run(&name, &inputs).unwrap());
+                Some(stats.median())
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+        let (hlo_s, ratio) = match hlo_cell {
+            Some(s) => (format!("{s:.4}"), format!("{:.2}x", s / native.median())),
+            None => ("n/a".into(), "n/a".into()),
+        };
+        t.row(&[
+            format!("{n_in}x{n_out}"),
+            format!("{:.4}", native.median()),
+            hlo_s,
+            ratio,
+        ]);
+    }
+    t.print();
+
+    // ---------- PCG refinement hot path (Table 1 right's engine)
+    println!("\nPCG refine (10 iters) — the Alg. 2 hot path:");
+    let mut t = Table::new(&["shape", "median s", "GFLOP/s (matmul bound)"]);
+    for &(n_in, n_out) in &[(512usize, 512usize), (1024, 512)] {
+        let p = synthetic_problem(n_in, n_out, 2 * n_in, 3);
+        let w0 = topk_project(&p.what, n_in * n_out / 2);
+        let mask = w0.support_mask();
+        let stats = bench(1, 3, || {
+            alps::linalg::solve::pcg_support(&p.h, &p.g, &w0, &mask, 10, 1e-12)
+        });
+        let flops = 10.0 * 2.0 * (n_in * n_in * n_out) as f64;
+        t.row(&[
+            format!("{n_in}x{n_out}"),
+            format!("{:.4}", stats.median()),
+            gflops(flops, stats.median()),
+        ]);
+    }
+    t.print();
+
+    // ---------- full per-layer ALPS cost (native vs hlo)
+    println!("\nend-to-end ALPS per layer (0.7 sparsity):");
+    let mut t = Table::new(&["shape", "engine", "s/layer", "admm iters"]);
+    for &(n_in, n_out) in &[(128usize, 512usize), (256, 1024)] {
+        let p = synthetic_problem(n_in, n_out, 2 * n_in, 2);
+        let target = SparsityTarget::Unstructured(0.7);
+        let stats = bench(0, 2, || Alps::default().prune_traced(&p, target).unwrap());
+        let (_, trace) = Alps::default().prune_traced(&p, target)?;
+        t.row(&[
+            format!("{n_in}x{n_out}"),
+            "native".into(),
+            format!("{:.3}", stats.median()),
+            trace.admm_iters.to_string(),
+        ]);
+        if let Some(rt) = &rt {
+            let hlo = AlpsHlo { rt, cfg: AlpsConfig::default() };
+            if hlo.supports(n_in, n_out, target) {
+                let stats = bench(0, 2, || hlo.prune_traced(&p, target).unwrap());
+                let (_, trace) = hlo.prune_traced(&p, target)?;
+                t.row(&[
+                    format!("{n_in}x{n_out}"),
+                    "hlo".into(),
+                    format!("{:.3}", stats.median()),
+                    trace.admm_iters.to_string(),
+                ]);
+            }
+        }
+    }
+    t.print();
+
+    if let Some(rt) = &rt {
+        println!("\ntotal artifact executions this run: {}", rt.total_execs());
+    }
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! Table 1 (left): support quality — optimal weights constrained to each
+//! method's support, via exact backsolve.
+//!
+//!     cargo bench --bench bench_table1_support
+
+use alps::bench::paper_layer_problem;
+use alps::config::SparsityTarget;
+use alps::pruning::{all_methods, backsolve};
+use alps::util::table::{fmt_sig, Table};
+
+fn main() -> anyhow::Result<()> {
+    let p = paper_layer_problem()?;
+    println!(
+        "== Table 1 (left): error of the OPTIMAL weights on each method's support ==\n"
+    );
+    let mut table = Table::new(&["sparsity", "MP", "Wanda", "SparseGPT", "DSnoT", "ALPS", "ALPS gain vs best"]);
+    for s in [0.5f64, 0.6, 0.7, 0.8, 0.9] {
+        let target = SparsityTarget::Unstructured(s);
+        let mut errs = Vec::new();
+        for method in all_methods() {
+            let w = method.prune(&p, target)?;
+            let opt = backsolve::solve_on_support(&p, &w.support_mask())?;
+            errs.push(p.rel_error(&opt));
+        }
+        let best_heuristic = errs[..4].iter().cloned().fold(f64::INFINITY, f64::min);
+        let gain = 100.0 * (1.0 - errs[4] / best_heuristic.max(1e-12));
+        let mut row = vec![format!("{s:.1}")];
+        row.extend(errs.iter().map(|e| fmt_sig(*e)));
+        row.push(format!("{gain:+.1}%"));
+        table.row(&row);
+    }
+    table.print();
+    println!("\npaper shape: ALPS support 20-40% lower error than other supports.");
+    Ok(())
+}

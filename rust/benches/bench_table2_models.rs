@@ -1,0 +1,77 @@
+//! Table 2 (+ appendix Tables 4-9): end-to-end pruning of the model family
+//! at 70% sparsity (override with ALPS_SPARSITY) — perplexity on the three
+//! eval sets and accuracy on the four zero-shot tasks, for every method.
+//!
+//!     cargo bench --bench bench_table2_models
+//!     ALPS_SPARSITY=0.5 ALPS_MODELS=alps-tiny cargo bench --bench bench_table2_models
+
+use alps::bench::artifacts_ready;
+use alps::config::SparsityTarget;
+use alps::coordinator::{PruneEngine, Scheduler};
+use alps::data::{sample_windows, tasks, Corpus};
+use alps::eval::{perplexity, zero_shot_accuracy};
+use alps::model::Model;
+use alps::util::table::{fmt_sig, Table};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    if !artifacts_ready() {
+        println!("SKIP: artifacts not built (run `make artifacts`)");
+        return Ok(());
+    }
+    let sparsity = std::env::var("ALPS_SPARSITY").unwrap_or_else(|_| "0.7".into());
+    let models_env = std::env::var("ALPS_MODELS")
+        .unwrap_or_else(|_| "alps-tiny,alps-small".into());
+    let target = SparsityTarget::parse(&sparsity)?;
+    let dir = Path::new("artifacts");
+    let corpus = Corpus::load(&dir.join("corpus.bin"))?;
+
+    println!(
+        "== Table 2: one-shot unstructured pruning at {} sparsity ==\n",
+        target.label()
+    );
+    let mut table = Table::new(&[
+        "model", "method", "wikitext2↓", "ptb↓", "c4↓",
+        "lambada↑", "piqa↑", "arc-e↑", "arc-c↑",
+    ]);
+    for model_name in models_env.split(',') {
+        let dense = Model::load(dir, model_name)?;
+        let calib = sample_windows(corpus.split("train")?, 16, dense.cfg.seq_len, 0xCA11B);
+        let eval_ids = corpus.split("wikitext2-like")?;
+        let zs_tasks =
+            tasks::standard_tasks(eval_ids, 30, dense.cfg.seq_len, dense.cfg.vocab, 7);
+
+        let mut rows: Vec<(String, Vec<String>)> = Vec::new();
+        rows.push(("dense".into(), eval_row(&dense, &corpus, &zs_tasks)?));
+        for method in ["mp", "wanda", "sparsegpt", "dsnot", "alps"] {
+            let mut model = Model::load(dir, model_name)?;
+            let sched = Scheduler::new(calib.clone());
+            sched.prune_model(&mut model, target, &PruneEngine::Native(method.into()))?;
+            rows.push((method.into(), eval_row(&model, &corpus, &zs_tasks)?));
+            eprintln!("  done {model_name}/{method}");
+        }
+        for (method, vals) in rows {
+            let mut row = vec![model_name.to_string(), method];
+            row.extend(vals);
+            table.row(&row);
+        }
+    }
+    table.print();
+    println!("\npaper shape: ALPS best (lowest ppl, highest acc) on nearly every cell at ≥0.7 sparsity.");
+    Ok(())
+}
+
+fn eval_row(
+    model: &Model,
+    corpus: &Corpus,
+    zs_tasks: &[tasks::Task],
+) -> anyhow::Result<Vec<String>> {
+    let mut out = Vec::new();
+    for split in Corpus::eval_split_names() {
+        out.push(fmt_sig(perplexity(model, corpus.split(split)?)?));
+    }
+    for task in zs_tasks {
+        out.push(format!("{:.1}", zero_shot_accuracy(model, task)? * 100.0));
+    }
+    Ok(out)
+}

@@ -1,0 +1,292 @@
+//! Typed configuration: model presets, pruning hyperparameters, run setup.
+
+pub mod json;
+
+use anyhow::{bail, Context, Result};
+use json::Json;
+use std::path::Path;
+
+/// Transformer architecture config (mirrors python/compile/model.py PRESETS).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+}
+
+impl ModelConfig {
+    pub fn preset(name: &str) -> Result<ModelConfig> {
+        let c = match name {
+            "alps-tiny" => ModelConfig {
+                name: name.into(), d_model: 128, d_ff: 512, n_layers: 2,
+                n_heads: 4, vocab: 512, seq_len: 128,
+            },
+            "alps-small" => ModelConfig {
+                name: name.into(), d_model: 192, d_ff: 768, n_layers: 4,
+                n_heads: 6, vocab: 512, seq_len: 128,
+            },
+            "alps-base" => ModelConfig {
+                name: name.into(), d_model: 256, d_ff: 1024, n_layers: 6,
+                n_heads: 8, vocab: 512, seq_len: 128,
+            },
+            _ => bail!("unknown model preset '{name}' (alps-tiny/small/base)"),
+        };
+        Ok(c)
+    }
+
+    pub fn from_json_file(path: &Path) -> Result<ModelConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading model config {path:?}"))?;
+        let v = Json::parse(&text)?;
+        let cfg = ModelConfig {
+            name: v.get("name")?.as_str()?.to_string(),
+            d_model: v.get("d_model")?.as_usize()?,
+            d_ff: v.get("d_ff")?.as_usize()?,
+            n_layers: v.get("n_layers")?.as_usize()?,
+            n_heads: v.get("n_heads")?.as_usize()?,
+            vocab: v.get("vocab")?.as_usize()?,
+            seq_len: v.get("seq_len")?.as_usize()?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.d_model == 0 || self.n_layers == 0 || self.vocab == 0 {
+            bail!("model config has zero-sized field: {self:?}");
+        }
+        if self.d_model % self.n_heads != 0 {
+            bail!("d_model {} not divisible by n_heads {}", self.d_model, self.n_heads);
+        }
+        Ok(())
+    }
+
+    /// Distinct prunable (n_in, n_out) shapes.
+    pub fn prunable_shapes(&self) -> Vec<(usize, usize)> {
+        vec![
+            (self.d_model, self.d_model),
+            (self.d_model, self.d_ff),
+            (self.d_ff, self.d_model),
+        ]
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn n_params(&self) -> usize {
+        let d = self.d_model;
+        let ff = self.d_ff;
+        self.vocab * d
+            + self.seq_len * d
+            + self.n_layers * (4 * d * d + 2 * d * ff + 4 * d)
+            + 2 * d
+    }
+}
+
+/// Sparsity target: unstructured fraction or an N:M pattern.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SparsityTarget {
+    /// Fraction of weights to REMOVE (0.7 => keep 30%).
+    Unstructured(f64),
+    /// Keep n of every m consecutive weights (2:4 => NM { n: 2, m: 4 }).
+    NM { n: usize, m: usize },
+}
+
+impl SparsityTarget {
+    /// Parse "0.7" or "2:4".
+    pub fn parse(s: &str) -> Result<SparsityTarget> {
+        if let Some((a, b)) = s.split_once(':') {
+            let n: usize = a.trim().parse().context("N in N:M")?;
+            let m: usize = b.trim().parse().context("M in N:M")?;
+            if n == 0 || m == 0 || n > m {
+                bail!("invalid N:M pattern {s}");
+            }
+            Ok(SparsityTarget::NM { n, m })
+        } else {
+            let f: f64 = s.trim().parse().context("sparsity fraction")?;
+            if !(0.0..1.0).contains(&f) {
+                bail!("sparsity must be in [0, 1), got {f}");
+            }
+            Ok(SparsityTarget::Unstructured(f))
+        }
+    }
+
+    /// Number of weights kept for a (n_in x n_out) layer.
+    pub fn keep_count(&self, n_in: usize, n_out: usize) -> usize {
+        match self {
+            SparsityTarget::Unstructured(s) => {
+                (((1.0 - s) * (n_in * n_out) as f64).floor() as usize).max(1)
+            }
+            SparsityTarget::NM { n, m } => n_in * n_out * n / m,
+        }
+    }
+
+    /// The removed fraction this target corresponds to.
+    pub fn sparsity_fraction(&self) -> f64 {
+        match self {
+            SparsityTarget::Unstructured(s) => *s,
+            SparsityTarget::NM { n, m } => 1.0 - (*n as f64) / (*m as f64),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            SparsityTarget::Unstructured(s) => format!("{s:.2}"),
+            SparsityTarget::NM { n, m } => format!("{n}:{m}"),
+        }
+    }
+}
+
+/// ALPS (ADMM + PCG) hyperparameters — defaults are the paper's B.1 values.
+#[derive(Clone, Debug)]
+pub struct AlpsConfig {
+    /// Initial penalty rho_0 (paper: 0.1).
+    pub rho0: f32,
+    /// Update rho every `update_every` iterations (paper: 3).
+    pub update_every: usize,
+    /// rho multipliers for the three support-change bands (eq. 28).
+    pub rho_factors: (f32, f32, f32),
+    /// Support-change thresholds relative to k (eq. 28: 0.1k, 0.005k, 1).
+    pub support_bands: (f64, f64),
+    /// Hard cap on ADMM iterations.
+    pub max_iters: usize,
+    /// PCG refinement iterations after support stabilization (paper: 10).
+    pub pcg_iters: usize,
+    /// Apply the B.1 diagonal (Jacobi) scaling preprocessing.
+    pub diag_scaling: bool,
+    /// Ridge damping added to diag(H) as a fraction of mean diag (like
+    /// SparseGPT's percdamp) to keep degenerate grams invertible.
+    pub damp: f32,
+}
+
+impl Default for AlpsConfig {
+    fn default() -> Self {
+        AlpsConfig {
+            rho0: 0.1,
+            update_every: 3,
+            rho_factors: (1.3, 1.2, 1.1),
+            support_bands: (0.1, 0.005),
+            max_iters: 600,
+            pcg_iters: 10,
+            diag_scaling: true,
+            damp: 1e-2,
+        }
+    }
+}
+
+/// Calibration setup (mirrors python/compile/aot.py CALIB_* constants).
+#[derive(Clone, Debug)]
+pub struct CalibConfig {
+    pub n_seqs: usize,
+    pub seq_len: usize,
+    pub seed: u64,
+}
+
+impl Default for CalibConfig {
+    fn default() -> Self {
+        CalibConfig { n_seqs: 32, seq_len: 128, seed: 0xCA11B }
+    }
+}
+
+impl CalibConfig {
+    pub fn rows(&self) -> usize {
+        self.n_seqs * self.seq_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_valid() {
+        for name in ["alps-tiny", "alps-small", "alps-base"] {
+            let c = ModelConfig::preset(name).unwrap();
+            c.validate().unwrap();
+            assert_eq!(c.vocab, 512);
+        }
+        assert!(ModelConfig::preset("nope").is_err());
+    }
+
+    #[test]
+    fn preset_param_counts_reasonable() {
+        let tiny = ModelConfig::preset("alps-tiny").unwrap();
+        let base = ModelConfig::preset("alps-base").unwrap();
+        assert!(tiny.n_params() < base.n_params());
+        assert!(base.n_params() > 4_000_000);
+    }
+
+    #[test]
+    fn sparsity_parse_unstructured() {
+        let t = SparsityTarget::parse("0.7").unwrap();
+        assert_eq!(t, SparsityTarget::Unstructured(0.7));
+        assert_eq!(t.keep_count(10, 10), 30);
+        assert_eq!(t.label(), "0.70");
+    }
+
+    #[test]
+    fn sparsity_parse_nm() {
+        let t = SparsityTarget::parse("2:4").unwrap();
+        assert_eq!(t, SparsityTarget::NM { n: 2, m: 4 });
+        assert_eq!(t.keep_count(8, 4), 16);
+        assert!((t.sparsity_fraction() - 0.5).abs() < 1e-12);
+        assert_eq!(t.label(), "2:4");
+    }
+
+    #[test]
+    fn sparsity_parse_rejects_bad() {
+        assert!(SparsityTarget::parse("1.5").is_err());
+        assert!(SparsityTarget::parse("-0.1").is_err());
+        assert!(SparsityTarget::parse("4:2").is_err());
+        assert!(SparsityTarget::parse("0:4").is_err());
+        assert!(SparsityTarget::parse("abc").is_err());
+    }
+
+    #[test]
+    fn keep_count_at_least_one() {
+        let t = SparsityTarget::Unstructured(0.999);
+        assert!(t.keep_count(10, 10) >= 1);
+    }
+
+    #[test]
+    fn model_json_roundtrip() {
+        let dir = std::env::temp_dir().join("alps_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.json");
+        std::fs::write(
+            &p,
+            r#"{"name": "x", "d_model": 64, "d_ff": 128, "n_layers": 2,
+               "n_heads": 4, "vocab": 100, "seq_len": 32}"#,
+        )
+        .unwrap();
+        let c = ModelConfig::from_json_file(&p).unwrap();
+        assert_eq!(c.d_model, 64);
+        assert_eq!(c.prunable_shapes(), vec![(64, 64), (64, 128), (128, 64)]);
+    }
+
+    #[test]
+    fn validate_rejects_bad_heads() {
+        let mut c = ModelConfig::preset("alps-tiny").unwrap();
+        c.n_heads = 5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn alps_defaults_match_paper() {
+        let a = AlpsConfig::default();
+        assert_eq!(a.rho0, 0.1);
+        assert_eq!(a.update_every, 3);
+        assert_eq!(a.rho_factors, (1.3, 1.2, 1.1));
+        assert_eq!(a.pcg_iters, 10);
+    }
+
+    #[test]
+    fn calib_rows() {
+        assert_eq!(CalibConfig::default().rows(), 32 * 128);
+    }
+}

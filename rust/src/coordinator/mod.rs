@@ -1,0 +1,16 @@
+//! The layer-wise pruning coordinator: the paper's sequential pipeline
+//! (Appendix B.1 — "solve the LLM pruning problem sequentially, layer by
+//! layer; the input activation matrix X is the output of the previous
+//! pruned layers on the calibration samples").
+//!
+//! For each transformer block, the coordinator (1) re-runs the partially
+//! pruned model over the calibration set to capture the block's layer
+//! inputs, (2) builds one gram matrix per activation tap (wq/wk/wv share
+//! one — the gram cache), (3) prunes the six matrices, and (4) writes the
+//! sparse weights back before moving to the next block.
+
+pub mod report;
+pub mod scheduler;
+
+pub use report::{LayerReport, RunReport};
+pub use scheduler::{PruneEngine, Scheduler};

@@ -1,0 +1,99 @@
+//! Run reports: per-layer and whole-run pruning records.
+
+/// One pruned matrix.
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    pub name: String,
+    pub n_in: usize,
+    pub n_out: usize,
+    pub kept: usize,
+    pub total: usize,
+    /// Relative reconstruction error on this layer's calibration inputs.
+    pub rel_error: f64,
+    /// Seconds spent pruning this matrix.
+    pub secs: f64,
+    /// ADMM iterations (ALPS only, 0 otherwise).
+    pub admm_iters: usize,
+}
+
+impl LayerReport {
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.kept as f64 / self.total.max(1) as f64
+    }
+}
+
+/// Whole-run record.
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    pub method: String,
+    pub target: String,
+    pub model: String,
+    pub layers: Vec<LayerReport>,
+    pub total_secs: f64,
+}
+
+impl RunReport {
+    pub fn overall_sparsity(&self) -> f64 {
+        let kept: usize = self.layers.iter().map(|l| l.kept).sum();
+        let total: usize = self.layers.iter().map(|l| l.total).sum();
+        1.0 - kept as f64 / total.max(1) as f64
+    }
+
+    pub fn mean_rel_error(&self) -> f64 {
+        if self.layers.is_empty() {
+            return f64::NAN;
+        }
+        self.layers.iter().map(|l| l.rel_error).sum::<f64>() / self.layers.len() as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} {} on {}: {} layers, sparsity {:.3}, mean layer rel-err {:.4}, {:.1}s",
+            self.method,
+            self.target,
+            self.model,
+            self.layers.len(),
+            self.overall_sparsity(),
+            self.mean_rel_error(),
+            self.total_secs
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(kept: usize, total: usize, err: f64) -> LayerReport {
+        LayerReport {
+            name: "l".into(),
+            n_in: 4,
+            n_out: 4,
+            kept,
+            total,
+            rel_error: err,
+            secs: 0.1,
+            admm_iters: 10,
+        }
+    }
+
+    #[test]
+    fn sparsity_math() {
+        assert!((layer(30, 100, 0.0).sparsity() - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn run_aggregates() {
+        let mut r = RunReport {
+            method: "alps".into(),
+            target: "0.70".into(),
+            model: "alps-tiny".into(),
+            ..Default::default()
+        };
+        r.layers.push(layer(30, 100, 0.1));
+        r.layers.push(layer(10, 100, 0.3));
+        assert!((r.overall_sparsity() - 0.8).abs() < 1e-12);
+        assert!((r.mean_rel_error() - 0.2).abs() < 1e-12);
+        assert!(r.summary().contains("alps"));
+    }
+}

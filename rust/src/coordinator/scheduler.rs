@@ -1,0 +1,273 @@
+//! Layer-wise pruning scheduler with activation propagation and gram
+//! caching; native methods fan the per-tap work across a thread pool, the
+//! PJRT path stays on the coordinator thread (PJRT handles are !Send).
+
+use super::report::{LayerReport, RunReport};
+use crate::config::{AlpsConfig, SparsityTarget};
+use crate::linalg::matmul::{gram, matmul};
+use crate::linalg::Matrix;
+use crate::model::{prunable_layers, ActivationTap, Model};
+use crate::pruning::{method_by_name, LayerProblem};
+use crate::runtime::executor::AlpsHlo;
+use crate::runtime::Runtime;
+use crate::util::Timer;
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Which engine executes the per-layer optimization.
+pub enum PruneEngine<'rt> {
+    /// Pure-rust implementation of the named method.
+    Native(String),
+    /// ALPS via the AOT HLO artifacts (falls back to native for shapes
+    /// without artifacts).
+    Hlo(&'rt Runtime, AlpsConfig),
+}
+
+/// The sequential block-by-block pruning pipeline.
+pub struct Scheduler {
+    /// Calibration sequences (token ids, each seq_len long).
+    pub calib: Vec<Vec<u16>>,
+    /// Print progress lines.
+    pub verbose: bool,
+}
+
+impl Scheduler {
+    pub fn new(calib: Vec<Vec<u16>>) -> Self {
+        Scheduler { calib, verbose: false }
+    }
+
+    /// Prune `model` in place to `target` using `engine`.
+    pub fn prune_model(
+        &self,
+        model: &mut Model,
+        target: SparsityTarget,
+        engine: &PruneEngine,
+    ) -> Result<RunReport> {
+        let total_timer = Timer::start();
+        let mut report = RunReport {
+            method: match engine {
+                PruneEngine::Native(name) => name.clone(),
+                PruneEngine::Hlo(..) => "alps(hlo)".into(),
+            },
+            target: target.label(),
+            model: model.cfg.name.clone(),
+            ..Default::default()
+        };
+
+        for block in 0..model.cfg.n_layers {
+            // (1) capture this block's layer inputs under current weights
+            let inputs = model.forward_collect(&self.calib, block)?;
+
+            // (2) gram per activation tap (wq/wk/wv share AttnIn)
+            let mut grams: HashMap<ActivationTap, Matrix> = HashMap::new();
+            for (tap, x) in &inputs.taps {
+                grams.insert(*tap, gram(x));
+            }
+
+            // (3) prune the six matrices
+            let layers = prunable_layers(block);
+            let mut results: Vec<(String, Matrix, LayerReport)> = Vec::new();
+            match engine {
+                PruneEngine::Native(name) => {
+                    // native methods are Send-free of PJRT: parallelize
+                    // across matrices with scoped threads
+                    let jobs: Vec<(String, ActivationTap)> = layers;
+                    let problems: Vec<(String, LayerProblem)> = jobs
+                        .iter()
+                        .map(|(lname, tap)| {
+                            let h = grams[tap].clone();
+                            let what = model.weights.matrix(lname)?;
+                            Ok((lname.clone(), LayerProblem::from_gram(h, what)?))
+                        })
+                        .collect::<Result<Vec<_>>>()?;
+                    let outs = std::thread::scope(|s| {
+                        let handles: Vec<_> = problems
+                            .iter()
+                            .map(|(lname, p)| {
+                                let method_name = name.clone();
+                                s.spawn(move || -> Result<(String, Matrix, f64, usize)> {
+                                    let t = Timer::start();
+                                    let method = method_by_name(&method_name)?;
+                                    let w = method.prune(p, target)?;
+                                    Ok((lname.clone(), w, t.elapsed_secs(), 0))
+                                })
+                            })
+                            .collect();
+                        handles
+                            .into_iter()
+                            .map(|h| h.join().expect("prune worker panicked"))
+                            .collect::<Result<Vec<_>>>()
+                    })?;
+                    for ((lname, p), (lname2, w, secs, iters)) in
+                        problems.iter().zip(outs)
+                    {
+                        debug_assert_eq!(lname, &lname2);
+                        results.push((
+                            lname.clone(),
+                            w.clone(),
+                            LayerReport {
+                                name: lname.clone(),
+                                n_in: p.n_in(),
+                                n_out: p.n_out(),
+                                kept: w.nnz(),
+                                total: p.n_in() * p.n_out(),
+                                rel_error: p.rel_error(&w),
+                                secs,
+                                admm_iters: iters,
+                            },
+                        ));
+                    }
+                }
+                PruneEngine::Hlo(rt, cfg) => {
+                    for (lname, tap) in &layers {
+                        let t = Timer::start();
+                        let h = grams[tap].clone();
+                        let what = model.weights.matrix(lname)?;
+                        let p = LayerProblem::from_gram(h, what)?;
+                        let hlo = AlpsHlo { rt, cfg: cfg.clone() };
+                        let (w, trace) = if hlo.supports(p.n_in(), p.n_out(), target) {
+                            hlo.prune_traced(&p, target)?
+                        } else {
+                            crate::pruning::alps::Alps::with_config(cfg.clone())
+                                .prune_traced(&p, target)?
+                        };
+                        results.push((
+                            lname.clone(),
+                            w.clone(),
+                            LayerReport {
+                                name: lname.clone(),
+                                n_in: p.n_in(),
+                                n_out: p.n_out(),
+                                kept: w.nnz(),
+                                total: p.n_in() * p.n_out(),
+                                rel_error: p.rel_error(&w),
+                                secs: t.elapsed_secs(),
+                                admm_iters: trace.admm_iters,
+                            },
+                        ));
+                    }
+                }
+            }
+
+            // (4) write back
+            for (lname, w, rep) in results {
+                model.weights.set_matrix(&lname, &w)?;
+                if self.verbose {
+                    println!(
+                        "  [{}] {} {}x{} kept={} err={:.4} ({:.2}s)",
+                        block, rep.name, rep.n_in, rep.n_out, rep.kept,
+                        rep.rel_error, rep.secs
+                    );
+                }
+                report.layers.push(rep);
+            }
+        }
+        report.total_secs = total_timer.elapsed_secs();
+        Ok(report)
+    }
+}
+
+/// Build a single-layer problem from a model layer + calibration data
+/// (used by the Fig.2 / Table 1 single-layer experiments).
+pub fn single_layer_problem(
+    model: &Model,
+    calib: &[Vec<u16>],
+    block: usize,
+    layer: &str,
+) -> Result<LayerProblem> {
+    let inputs = model.forward_collect(calib, block)?;
+    let tap = prunable_layers(block)
+        .into_iter()
+        .find(|(n, _)| n.ends_with(layer))
+        .map(|(_, t)| t)
+        .ok_or_else(|| anyhow::anyhow!("no layer '{layer}' in block {block}"))?;
+    let x = &inputs.taps[&tap];
+    let h = gram(x);
+    let what = model.weights.matrix(&format!("blocks.{block}.{layer}"))?;
+    LayerProblem::from_gram(h, what)
+}
+
+/// Dense output of a layer on its calibration inputs — used by tests to
+/// cross-check the gram-based error against the direct definition.
+pub fn direct_rel_error(x: &Matrix, what: &Matrix, w: &Matrix) -> f64 {
+    let dense = matmul(x, what);
+    let pruned = matmul(x, w);
+    let diff = dense.sub(&pruned);
+    diff.fro_norm_sq() / dense.fro_norm_sq().max(1e-30)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::transformer::testutil::random_model;
+    use crate::util::Rng;
+
+    fn calib_seqs(n: usize, len: usize, vocab: usize, seed: u64) -> Vec<Vec<u16>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..len).map(|_| rng.below(vocab) as u16).collect())
+            .collect()
+    }
+
+    #[test]
+    fn prunes_whole_model_native() {
+        let mut model = random_model(0);
+        let calib = calib_seqs(4, 8, 24, 1);
+        let sched = Scheduler::new(calib);
+        let target = SparsityTarget::Unstructured(0.5);
+        let report = sched
+            .prune_model(&mut model, target, &PruneEngine::Native("mp".into()))
+            .unwrap();
+        assert_eq!(report.layers.len(), 2 * 6);
+        let s = report.overall_sparsity();
+        assert!((s - 0.5).abs() < 0.02, "sparsity {s}");
+        // weights actually written back
+        let names = model.prunable_names();
+        assert!(model.weights.sparsity_of(&names) > 0.45);
+    }
+
+    #[test]
+    fn alps_native_beats_mp_through_pipeline() {
+        let calib = calib_seqs(4, 8, 24, 2);
+        let target = SparsityTarget::Unstructured(0.7);
+        let mut m_alps = random_model(3);
+        let mut m_mp = random_model(3);
+        let sched = Scheduler::new(calib);
+        let r_alps = sched
+            .prune_model(&mut m_alps, target, &PruneEngine::Native("alps".into()))
+            .unwrap();
+        let r_mp = sched
+            .prune_model(&mut m_mp, target, &PruneEngine::Native("mp".into()))
+            .unwrap();
+        assert!(
+            r_alps.mean_rel_error() < r_mp.mean_rel_error(),
+            "alps {} !< mp {}",
+            r_alps.mean_rel_error(),
+            r_mp.mean_rel_error()
+        );
+    }
+
+    #[test]
+    fn single_layer_problem_builds() {
+        let model = random_model(4);
+        let calib = calib_seqs(3, 8, 24, 5);
+        let p = single_layer_problem(&model, &calib, 0, "attn.wq").unwrap();
+        assert_eq!(p.n_in(), 16);
+        assert_eq!(p.n_out(), 16);
+        assert!(single_layer_problem(&model, &calib, 0, "nope").is_err());
+    }
+
+    #[test]
+    fn gram_error_matches_direct_error() {
+        let model = random_model(5);
+        let calib = calib_seqs(3, 8, 24, 6);
+        let inputs = model.forward_collect(&calib, 0).unwrap();
+        let x = &inputs.taps[&ActivationTap::AttnIn];
+        let what = model.weights.matrix("blocks.0.attn.wq").unwrap();
+        let p = LayerProblem::from_activations(x, &what).unwrap();
+        let w = crate::pruning::projection::topk_project(&what, 100);
+        let e1 = p.rel_error(&w);
+        let e2 = direct_rel_error(x, &what, &w);
+        assert!((e1 - e2).abs() < 1e-3, "{e1} vs {e2}");
+    }
+}

@@ -1,0 +1,125 @@
+//! ALPSCRP1 corpus artifact loader (vocab + named token-id splits), written
+//! by `python/compile/pretrain.py`.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+/// Loaded corpus: vocabulary and token-id splits.
+pub struct Corpus {
+    pub vocab: Vec<String>,
+    pub splits: BTreeMap<String, Vec<u16>>,
+}
+
+impl Corpus {
+    pub fn load(path: &Path) -> Result<Corpus> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening corpus {path:?}"))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != b"ALPSCRP1" {
+            bail!("bad corpus magic: {magic:?}");
+        }
+        let vocab_size = read_u32(&mut f)? as usize;
+        if vocab_size > 1 << 20 {
+            bail!("suspicious vocab size {vocab_size}");
+        }
+        let mut vocab = Vec::with_capacity(vocab_size);
+        for _ in 0..vocab_size {
+            vocab.push(read_string(&mut f)?);
+        }
+        let n_splits = read_u32(&mut f)? as usize;
+        let mut splits = BTreeMap::new();
+        for _ in 0..n_splits {
+            let name = read_string(&mut f)?;
+            let n_tokens = read_u32(&mut f)? as usize;
+            let mut buf = vec![0u8; n_tokens * 2];
+            f.read_exact(&mut buf)?;
+            let ids: Vec<u16> = buf
+                .chunks_exact(2)
+                .map(|b| u16::from_le_bytes([b[0], b[1]]))
+                .collect();
+            splits.insert(name, ids);
+        }
+        Ok(Corpus { vocab, splits })
+    }
+
+    pub fn split(&self, name: &str) -> Result<&[u16]> {
+        self.splits
+            .get(name)
+            .map(|v| v.as_slice())
+            .with_context(|| {
+                format!(
+                    "missing split '{name}' (have: {:?})",
+                    self.splits.keys().collect::<Vec<_>>()
+                )
+            })
+    }
+
+    /// The eval split names in paper order (WikiText2, PTB, C4 analogues).
+    pub fn eval_split_names() -> [&'static str; 3] {
+        ["wikitext2-like", "ptb-like", "c4-like"]
+    }
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_string(f: &mut impl Read) -> Result<String> {
+    let len = read_u32(f)? as usize;
+    if len > 4096 {
+        bail!("suspicious string length {len}");
+    }
+    let mut b = vec![0u8; len];
+    f.read_exact(&mut b)?;
+    Ok(String::from_utf8(b)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_sample(path: &Path) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(b"ALPSCRP1").unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        for w in ["<pad>", "the"] {
+            f.write_all(&(w.len() as u32).to_le_bytes()).unwrap();
+            f.write_all(w.as_bytes()).unwrap();
+        }
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        let name = "train";
+        f.write_all(&(name.len() as u32).to_le_bytes()).unwrap();
+        f.write_all(name.as_bytes()).unwrap();
+        f.write_all(&3u32.to_le_bytes()).unwrap();
+        for id in [1u16, 0, 1] {
+            f.write_all(&id.to_le_bytes()).unwrap();
+        }
+    }
+
+    #[test]
+    fn loads_sample() {
+        let dir = std::env::temp_dir().join("alps_corpus_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.bin");
+        write_sample(&p);
+        let c = Corpus::load(&p).unwrap();
+        assert_eq!(c.vocab, vec!["<pad>", "the"]);
+        assert_eq!(c.split("train").unwrap(), &[1, 0, 1]);
+        assert!(c.split("missing").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("alps_corpus_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, b"WRONG!!!xxxx").unwrap();
+        assert!(Corpus::load(&p).is_err());
+    }
+}

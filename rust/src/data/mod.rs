@@ -1,0 +1,62 @@
+//! Data pipeline: corpus loading (build-time artifact), calibration
+//! sampling, eval-window construction, and synthetic zero-shot tasks.
+
+pub mod corpus;
+pub mod tasks;
+
+pub use corpus::Corpus;
+
+use crate::util::Rng;
+
+/// Sample `n` random windows of `len` tokens from a token stream (the
+/// paper's "128 segments of 2048 tokens randomly selected from C4").
+pub fn sample_windows(ids: &[u16], n: usize, len: usize, seed: u64) -> Vec<Vec<u16>> {
+    assert!(ids.len() > len, "stream shorter than window");
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let start = rng.below(ids.len() - len);
+            ids[start..start + len].to_vec()
+        })
+        .collect()
+}
+
+/// Non-overlapping full-stride eval windows (HuggingFace full-stride
+/// perplexity convention).
+pub fn eval_windows(ids: &[u16], len: usize) -> Vec<Vec<u16>> {
+    ids.chunks_exact(len).map(|c| c.to_vec()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_windows_shape_and_bounds() {
+        let ids: Vec<u16> = (0..1000u16).collect();
+        let w = sample_windows(&ids, 10, 50, 0);
+        assert_eq!(w.len(), 10);
+        for win in &w {
+            assert_eq!(win.len(), 50);
+            // window must be contiguous
+            for i in 1..win.len() {
+                assert_eq!(win[i], win[i - 1] + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn sample_windows_deterministic() {
+        let ids: Vec<u16> = (0..500u16).collect();
+        assert_eq!(sample_windows(&ids, 5, 20, 7), sample_windows(&ids, 5, 20, 7));
+        assert_ne!(sample_windows(&ids, 5, 20, 7), sample_windows(&ids, 5, 20, 8));
+    }
+
+    #[test]
+    fn eval_windows_full_stride() {
+        let ids: Vec<u16> = (0..105u16).collect();
+        let w = eval_windows(&ids, 25);
+        assert_eq!(w.len(), 4); // 105 / 25 = 4 full windows, tail dropped
+        assert_eq!(w[1][0], 25);
+    }
+}

@@ -1,0 +1,220 @@
+//! Synthetic zero-shot benchmark tasks (stand-ins for LAMBADA / PIQA /
+//! ARC-Easy / ARC-Challenge; see DESIGN.md §Substitutions).
+//!
+//! All tasks score candidate continuations by length-normalized sequence
+//! log-likelihood — the same decision rule lm-eval-harness uses — so the
+//! eval code path matches the paper's; only the item *construction* is
+//! synthetic (windows of the held-out corpus with controlled corruptions).
+
+use crate::util::Rng;
+
+/// One multiple-choice item: a shared prefix and candidate continuations.
+/// `correct` indexes the true continuation.
+#[derive(Clone, Debug)]
+pub struct TaskItem {
+    pub prefix: Vec<u16>,
+    pub choices: Vec<Vec<u16>>,
+    pub correct: usize,
+}
+
+/// A named task: a set of items.
+pub struct Task {
+    pub name: &'static str,
+    pub items: Vec<TaskItem>,
+}
+
+/// LAMBADA-like: predict the final token of a window. Choices are the true
+/// token vs. 3 random vocabulary tokens (final-word prediction as 4-way LL
+/// comparison — equivalent to greedy-match on these small vocabs).
+pub fn lambada_like(ids: &[u16], n_items: usize, seq: usize, vocab: usize, seed: u64) -> Task {
+    let mut rng = Rng::new(seed);
+    let mut items = Vec::with_capacity(n_items);
+    while items.len() < n_items {
+        let start = rng.below(ids.len() - seq - 1);
+        let window = &ids[start..start + seq];
+        let prefix = window[..seq - 1].to_vec();
+        let truth = vec![window[seq - 1]];
+        let mut choices = vec![truth.clone()];
+        while choices.len() < 4 {
+            let tok = rng.below(vocab) as u16;
+            if tok != window[seq - 1] {
+                choices.push(vec![tok]);
+            }
+        }
+        let correct = shuffle_choices(&mut choices, 0, &mut rng);
+        items.push(TaskItem { prefix, choices, correct });
+    }
+    Task { name: "lambada-like", items }
+}
+
+/// PIQA-like: 2-way choice between the true continuation and a window
+/// sampled from elsewhere in the corpus (plausible but wrong).
+pub fn piqa_like(ids: &[u16], n_items: usize, prefix_len: usize, cont_len: usize, seed: u64) -> Task {
+    let mut rng = Rng::new(seed);
+    let total = prefix_len + cont_len;
+    let mut items = Vec::with_capacity(n_items);
+    while items.len() < n_items {
+        let start = rng.below(ids.len() - total);
+        let prefix = ids[start..start + prefix_len].to_vec();
+        let truth = ids[start + prefix_len..start + total].to_vec();
+        let alt_start = rng.below(ids.len() - cont_len);
+        let alt = ids[alt_start..alt_start + cont_len].to_vec();
+        if alt == truth {
+            continue;
+        }
+        let mut choices = vec![truth, alt];
+        let correct = shuffle_choices(&mut choices, 0, &mut rng);
+        items.push(TaskItem { prefix, choices, correct });
+    }
+    Task { name: "piqa-like", items }
+}
+
+/// ARC-Easy-like: 4-way choice, distractors from distant corpus windows.
+pub fn arc_easy_like(ids: &[u16], n_items: usize, prefix_len: usize, cont_len: usize, seed: u64) -> Task {
+    let mut rng = Rng::new(seed);
+    let total = prefix_len + cont_len;
+    let mut items = Vec::with_capacity(n_items);
+    while items.len() < n_items {
+        let start = rng.below(ids.len() - total);
+        let prefix = ids[start..start + prefix_len].to_vec();
+        let truth = ids[start + prefix_len..start + total].to_vec();
+        let mut choices = vec![truth.clone()];
+        while choices.len() < 4 {
+            let alt_start = rng.below(ids.len() - cont_len);
+            let alt = ids[alt_start..alt_start + cont_len].to_vec();
+            if alt != truth {
+                choices.push(alt);
+            }
+        }
+        let correct = shuffle_choices(&mut choices, 0, &mut rng);
+        items.push(TaskItem { prefix, choices, correct });
+    }
+    Task { name: "arc-easy-like", items }
+}
+
+/// ARC-Challenge-like: 4-way choice with *hard* distractors — local
+/// shuffles of the true continuation (same unigram content, wrong order),
+/// which only a model with real sequential structure can reject.
+pub fn arc_challenge_like(ids: &[u16], n_items: usize, prefix_len: usize, cont_len: usize, seed: u64) -> Task {
+    let mut rng = Rng::new(seed);
+    let total = prefix_len + cont_len;
+    let mut items = Vec::with_capacity(n_items);
+    while items.len() < n_items {
+        let start = rng.below(ids.len() - total);
+        let prefix = ids[start..start + prefix_len].to_vec();
+        let truth = ids[start + prefix_len..start + total].to_vec();
+        let mut choices = vec![truth.clone()];
+        let mut attempts = 0;
+        while choices.len() < 4 && attempts < 50 {
+            attempts += 1;
+            let mut alt = truth.clone();
+            rng.shuffle(&mut alt);
+            if alt != truth && !choices.contains(&alt) {
+                choices.push(alt);
+            }
+        }
+        if choices.len() < 4 {
+            continue; // degenerate window (all-equal tokens); resample
+        }
+        let correct = shuffle_choices(&mut choices, 0, &mut rng);
+        items.push(TaskItem { prefix, choices, correct });
+    }
+    Task { name: "arc-challenge-like", items }
+}
+
+/// All four tasks with the paper's eval sizes.
+pub fn standard_tasks(ids: &[u16], n_items: usize, seq: usize, vocab: usize, seed: u64) -> Vec<Task> {
+    let prefix = seq / 2;
+    let cont = 8.min(seq / 4).max(2);
+    vec![
+        lambada_like(ids, n_items, seq.min(64), vocab, seed),
+        piqa_like(ids, n_items, prefix.min(32), cont, seed + 1),
+        arc_easy_like(ids, n_items, prefix.min(32), cont, seed + 2),
+        arc_challenge_like(ids, n_items, prefix.min(32), cont, seed + 3),
+    ]
+}
+
+/// Shuffle choices, returning the new index of the previously-`correct` one.
+fn shuffle_choices(choices: &mut [Vec<u16>], correct: usize, rng: &mut Rng) -> usize {
+    let marker = choices[correct].clone();
+    rng.shuffle(choices);
+    choices.iter().position(|c| *c == marker).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream() -> Vec<u16> {
+        (0..5000).map(|i| ((i * 7 + i / 13) % 200) as u16).collect()
+    }
+
+    #[test]
+    fn lambada_structure() {
+        let t = lambada_like(&stream(), 20, 32, 200, 0);
+        assert_eq!(t.items.len(), 20);
+        for item in &t.items {
+            assert_eq!(item.prefix.len(), 31);
+            assert_eq!(item.choices.len(), 4);
+            assert!(item.correct < 4);
+            for c in &item.choices {
+                assert_eq!(c.len(), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn piqa_structure() {
+        let t = piqa_like(&stream(), 15, 16, 4, 1);
+        for item in &t.items {
+            assert_eq!(item.choices.len(), 2);
+            assert_eq!(item.choices[item.correct].len(), 4);
+        }
+    }
+
+    #[test]
+    fn arc_choices_distinct() {
+        let t = arc_easy_like(&stream(), 10, 16, 4, 2);
+        for item in &t.items {
+            for i in 0..4 {
+                for j in (i + 1)..4 {
+                    assert_ne!(item.choices[i], item.choices[j]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn challenge_distractors_are_permutations() {
+        let t = arc_challenge_like(&stream(), 10, 16, 6, 3);
+        for item in &t.items {
+            let mut truth = item.choices[item.correct].clone();
+            truth.sort_unstable();
+            for c in &item.choices {
+                let mut s = c.clone();
+                s.sort_unstable();
+                assert_eq!(s, truth, "distractor must be a permutation");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = lambada_like(&stream(), 5, 32, 200, 9);
+        let b = lambada_like(&stream(), 5, 32, 200, 9);
+        for (x, y) in a.items.iter().zip(&b.items) {
+            assert_eq!(x.prefix, y.prefix);
+            assert_eq!(x.correct, y.correct);
+        }
+    }
+
+    #[test]
+    fn standard_tasks_four() {
+        let ts = standard_tasks(&stream(), 5, 64, 200, 0);
+        let names: Vec<&str> = ts.iter().map(|t| t.name).collect();
+        assert_eq!(
+            names,
+            vec!["lambada-like", "piqa-like", "arc-easy-like", "arc-challenge-like"]
+        );
+    }
+}

@@ -1,0 +1,108 @@
+//! Evaluation: perplexity (HF full-stride convention) and zero-shot
+//! accuracy by length-normalized log-likelihood.
+
+use crate::data::tasks::Task;
+use crate::data::eval_windows;
+use crate::model::Model;
+use anyhow::Result;
+
+/// Perplexity of a model over a token stream, full stride: exp(mean NLL)
+/// over non-overlapping seq_len windows.
+pub fn perplexity(model: &Model, ids: &[u16]) -> Result<f64> {
+    perplexity_windows(model, &eval_windows(ids, model.cfg.seq_len))
+}
+
+/// Perplexity over explicit windows (shared by the native and artifact
+/// eval paths).
+pub fn perplexity_windows(model: &Model, windows: &[Vec<u16>]) -> Result<f64> {
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for w in windows {
+        let nll = model.nll(w)?;
+        total += nll.iter().sum::<f64>();
+        count += nll.len();
+    }
+    if count == 0 {
+        anyhow::bail!("no eval windows");
+    }
+    Ok((total / count as f64).exp())
+}
+
+/// Perplexity computed from precomputed per-window NLL sums (artifact path).
+pub fn perplexity_from_nll(total_nll: f64, n_positions: usize) -> f64 {
+    (total_nll / n_positions.max(1) as f64).exp()
+}
+
+/// Zero-shot accuracy on one task: pick the continuation with the highest
+/// length-normalized log-likelihood given the prefix.
+pub fn zero_shot_accuracy(model: &Model, task: &Task) -> Result<f64> {
+    let mut correct = 0usize;
+    for item in &task.items {
+        let mut best = (f64::NEG_INFINITY, 0usize);
+        for (ci, choice) in item.choices.iter().enumerate() {
+            let mut ids = item.prefix.clone();
+            ids.extend_from_slice(choice);
+            let nll = model.nll(&ids)?;
+            // score only the continuation positions
+            let cont = &nll[nll.len() - choice.len()..];
+            let ll = -cont.iter().sum::<f64>() / choice.len() as f64;
+            if ll > best.0 {
+                best = (ll, ci);
+            }
+        }
+        if best.1 == item.correct {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / task.items.len().max(1) as f64)
+}
+
+/// A (metric name, value) result row.
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    pub metric: String,
+    pub value: f64,
+    /// Higher is better (accuracy) vs lower is better (perplexity).
+    pub higher_better: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::lambada_like;
+    use crate::model::transformer::testutil::random_model;
+
+    fn stream(n: usize) -> Vec<u16> {
+        (0..n).map(|i| ((i * 3 + 1) % 24) as u16).collect()
+    }
+
+    #[test]
+    fn perplexity_near_vocab_for_random_model() {
+        let m = random_model(0);
+        let ppl = perplexity(&m, &stream(120)).unwrap();
+        // untrained model ~ uniform: ppl within a factor of vocab size
+        assert!(ppl > 3.0 && ppl < 120.0, "ppl {ppl}");
+    }
+
+    #[test]
+    fn perplexity_errors_on_empty() {
+        let m = random_model(1);
+        assert!(perplexity(&m, &stream(5)).is_err()); // < seq_len
+    }
+
+    #[test]
+    fn zero_shot_random_model_near_chance() {
+        let m = random_model(2);
+        let task = lambada_like(&stream(600), 40, 10, 24, 0);
+        let acc = zero_shot_accuracy(&m, &task).unwrap();
+        assert!((0.0..=1.0).contains(&acc));
+        // chance is 0.25; random model should not be (near-)perfect
+        assert!(acc < 0.8, "acc {acc}");
+    }
+
+    #[test]
+    fn perplexity_from_nll_math() {
+        assert!((perplexity_from_nll(0.0, 10) - 1.0).abs() < 1e-12);
+        assert!((perplexity_from_nll(10.0 * (2.0f64).ln(), 10) - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,20 @@
+//! ALPS — ADMM-based one-shot LLM pruning (NeurIPS 2024 reproduction).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * Layer 3 (this crate): coordinator — config, data pipeline, layer-wise
+//!   pruning scheduler, all pruning methods, transformer inference, eval.
+//! * Layer 2: JAX graphs AOT-compiled to `artifacts/*.hlo.txt`.
+//! * Layer 1: Pallas kernels inside those graphs.
+//!
+//! The `runtime` module executes the AOT artifacts via PJRT; every pruning
+//! method also has a pure-rust native path used for tests and baselines.
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod linalg;
+pub mod model;
+pub mod pruning;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,162 @@
+//! Cholesky factorization + solves — the backsolve baseline of Table 1 and
+//! the inner solver of the SparseGPT reimplementation.
+
+use super::matrix::Matrix;
+use anyhow::{bail, Result};
+
+/// Lower-triangular Cholesky factor L with A = L L^T.
+pub struct Cholesky {
+    pub l: Matrix,
+}
+
+impl Cholesky {
+    /// Factor a symmetric positive-definite matrix (f64 accumulation).
+    pub fn new(a: &Matrix) -> Result<Self> {
+        if a.rows != a.cols {
+            bail!("cholesky: non-square {}x{}", a.rows, a.cols);
+        }
+        let n = a.rows;
+        let mut l = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = a.at(i, j) as f64;
+                for k in 0..j {
+                    sum -= l[i * n + k] * l[j * n + k];
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        bail!("cholesky: matrix not positive definite at pivot {i} (sum={sum})");
+                    }
+                    l[i * n + i] = sum.sqrt();
+                } else {
+                    l[i * n + j] = sum / l[j * n + j];
+                }
+            }
+        }
+        Ok(Cholesky {
+            l: Matrix::from_vec(n, n, l.iter().map(|x| *x as f32).collect()),
+        })
+    }
+
+    /// Solve A x = b (via L y = b then L^T x = y).
+    pub fn solve_vec(&self, b: &[f32]) -> Vec<f32> {
+        let n = self.l.rows;
+        assert_eq!(b.len(), n);
+        let mut y = vec![0.0f64; n];
+        for i in 0..n {
+            let mut sum = b[i] as f64;
+            for k in 0..i {
+                sum -= self.l.at(i, k) as f64 * y[k];
+            }
+            y[i] = sum / self.l.at(i, i) as f64;
+        }
+        let mut x = vec![0.0f64; n];
+        for i in (0..n).rev() {
+            let mut sum = y[i];
+            for k in (i + 1)..n {
+                sum -= self.l.at(k, i) as f64 * x[k];
+            }
+            x[i] = sum / self.l.at(i, i) as f64;
+        }
+        x.iter().map(|v| *v as f32).collect()
+    }
+
+    /// Solve A X = B column-by-column.
+    pub fn solve(&self, b: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(b.rows, b.cols);
+        for c in 0..b.cols {
+            let col = b.col(c);
+            out.set_col(c, &self.solve_vec(&col));
+        }
+        out
+    }
+
+    /// Inverse via n unit-vector solves (used by SparseGPT's H^-1).
+    pub fn inverse(&self) -> Matrix {
+        let n = self.l.rows;
+        let mut inv = Matrix::zeros(n, n);
+        let mut e = vec![0.0f32; n];
+        for i in 0..n {
+            e[i] = 1.0;
+            inv.set_col(i, &self.solve_vec(&e));
+            e[i] = 0.0;
+        }
+        inv
+    }
+}
+
+/// Solve the SPD system A x = b directly (factor + solve).
+pub fn spd_solve(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    Ok(Cholesky::new(a)?.solve(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::{gram, matmul};
+    use crate::util::Rng;
+
+    fn spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let x = Matrix::randn(n + 8, n, &mut rng);
+        let mut h = gram(&x);
+        for i in 0..n {
+            *h.at_mut(i, i) += 0.1; // well-conditioned
+        }
+        h
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = spd(12, 0);
+        let ch = Cholesky::new(&a).unwrap();
+        let llt = matmul(&ch.l, &ch.l.transpose());
+        assert!(llt.sub(&a).fro_norm() / a.fro_norm() < 1e-4);
+    }
+
+    #[test]
+    fn solve_vec_residual() {
+        let a = spd(10, 1);
+        let mut rng = Rng::new(2);
+        let b: Vec<f32> = rng.gaussian_vec(10);
+        let x = Cholesky::new(&a).unwrap().solve_vec(&b);
+        let ax = crate::linalg::matmul::matvec(&a, &x);
+        for i in 0..10 {
+            assert!((ax[i] - b[i]).abs() < 1e-3, "{} vs {}", ax[i], b[i]);
+        }
+    }
+
+    #[test]
+    fn solve_matrix_residual() {
+        let a = spd(8, 3);
+        let mut rng = Rng::new(4);
+        let b = Matrix::randn(8, 5, &mut rng);
+        let x = spd_solve(&a, &b).unwrap();
+        assert!(matmul(&a, &x).max_abs_diff(&b) < 1e-3);
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let a = spd(6, 5);
+        let inv = Cholesky::new(&a).unwrap().inverse();
+        let prod = matmul(&a, &inv);
+        assert!(prod.max_abs_diff(&Matrix::identity(6)) < 1e-3);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Matrix::from_vec(2, 2, vec![1., 2., 2., 1.]); // eigenvalues 3, -1
+        assert!(Cholesky::new(&a).is_err());
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        assert!(Cholesky::new(&Matrix::zeros(2, 3)).is_err());
+    }
+
+    #[test]
+    fn identity_factor() {
+        let ch = Cholesky::new(&Matrix::identity(5)).unwrap();
+        assert!(ch.l.max_abs_diff(&Matrix::identity(5)) < 1e-6);
+    }
+}

@@ -1,0 +1,335 @@
+//! Symmetric eigendecomposition: Householder tridiagonalization (tred2)
+//! followed by the implicit-shift QL iteration (tql2) — the classic
+//! EISPACK pair, in f64 internally for stability.
+//!
+//! This is the factorization ALPS caches so the ADMM W-update
+//! (H + rho I)^-1 B can be applied for *any* rho with two matmuls
+//! (paper Sec. 3.2 "Computational cost").
+
+use super::matrix::Matrix;
+use anyhow::{bail, Result};
+
+/// Eigendecomposition H = Q diag(vals) Q^T of a symmetric matrix.
+pub struct SymEig {
+    /// Eigenvalues in ascending order.
+    pub vals: Vec<f32>,
+    /// Orthonormal eigenvectors as *columns* of Q (row-major storage).
+    pub q: Matrix,
+}
+
+impl SymEig {
+    /// Compute the decomposition. `h` must be symmetric (checked loosely).
+    pub fn new(h: &Matrix) -> Result<Self> {
+        if h.rows != h.cols {
+            bail!("eigh: matrix must be square, got {}x{}", h.rows, h.cols);
+        }
+        let n = h.rows;
+        if n == 0 {
+            bail!("eigh: empty matrix");
+        }
+        // f64 working copy (column storage irrelevant: symmetric input)
+        let mut a: Vec<f64> = h.data.iter().map(|x| *x as f64).collect();
+        let mut d = vec![0.0f64; n];
+        let mut e = vec![0.0f64; n];
+        tred2(&mut a, n, &mut d, &mut e);
+        tql2(&mut a, n, &mut d, &mut e)?;
+        // `a` now holds eigenvectors in columns; d the ascending eigenvalues.
+        let q = Matrix::from_vec(n, n, a.iter().map(|x| *x as f32).collect());
+        let vals = d.iter().map(|x| *x as f32).collect();
+        Ok(SymEig { vals, q })
+    }
+
+    /// Reconstruct Q diag(f(vals)) Q^T B  — the ridge-solve primitive:
+    /// with f = 1/(vals + rho) this applies (H + rho I)^-1.
+    pub fn apply_fn(&self, f: impl Fn(f32) -> f32, b: &Matrix) -> Matrix {
+        use super::matmul::{matmul, matmul_tn};
+        let mut qtb = matmul_tn(&self.q, b); // Q^T B
+        for (i, lam) in self.vals.iter().enumerate() {
+            let s = f(*lam);
+            qtb.scale_row(i, s);
+        }
+        matmul(&self.q, &qtb)
+    }
+
+    /// Apply (H + rho I)^{-1} to B.
+    pub fn ridge_solve(&self, rho: f32, b: &Matrix) -> Matrix {
+        self.apply_fn(|lam| 1.0 / (lam + rho), b)
+    }
+}
+
+/// Householder reduction to tridiagonal form (EISPACK tred2).
+/// On exit `a` holds the orthogonal transform Q (columns), `d` the diagonal,
+/// `e` the off-diagonal (e[0] = 0).
+fn tred2(a: &mut [f64], n: usize, d: &mut [f64], e: &mut [f64]) {
+    let at = |a: &[f64], i: usize, j: usize| a[i * n + j];
+
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0f64;
+        let mut scale = 0.0f64;
+        if l > 0 {
+            for k in 0..=l {
+                scale += at(a, i, k).abs();
+            }
+            if scale == 0.0 {
+                e[i] = at(a, i, l);
+            } else {
+                for k in 0..=l {
+                    a[i * n + k] /= scale;
+                    h += at(a, i, k) * at(a, i, k);
+                }
+                let mut f = at(a, i, l);
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                a[i * n + l] = f - g;
+                f = 0.0;
+                for j in 0..=l {
+                    a[j * n + i] = at(a, i, j) / h;
+                    let mut g = 0.0f64;
+                    for k in 0..=j {
+                        g += at(a, j, k) * at(a, i, k);
+                    }
+                    for k in (j + 1)..=l {
+                        g += at(a, k, j) * at(a, i, k);
+                    }
+                    e[j] = g / h;
+                    f += e[j] * at(a, i, j);
+                }
+                let hh = f / (h + h);
+                for j in 0..=l {
+                    let fj = at(a, i, j);
+                    let gj = e[j] - hh * fj;
+                    e[j] = gj;
+                    for k in 0..=j {
+                        a[j * n + k] -= fj * e[k] + gj * at(a, i, k);
+                    }
+                }
+            }
+        } else {
+            e[i] = at(a, i, l);
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        let l = i;
+        if d[i] != 0.0 {
+            for j in 0..l {
+                let mut g = 0.0f64;
+                for k in 0..l {
+                    g += at(a, i, k) * at(a, k, j);
+                }
+                for k in 0..l {
+                    a[k * n + j] -= g * at(a, k, i);
+                }
+            }
+        }
+        d[i] = at(a, i, i);
+        a[i * n + i] = 1.0;
+        for j in 0..l {
+            a[j * n + i] = 0.0;
+            a[i * n + j] = 0.0;
+        }
+    }
+}
+
+/// Implicit-shift QL iteration on the tridiagonal form (EISPACK tql2),
+/// accumulating the transform into `a`. Eigenvalues sorted ascending.
+fn tql2(a: &mut [f64], n: usize, d: &mut [f64], e: &mut [f64]) -> Result<()> {
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // find small off-diagonal to split
+            let mut m = l;
+            while m < n - 1 {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter > 50 {
+                bail!("eigh: QL failed to converge at index {l}");
+            }
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            g = d[m] - d[l] + e[l] / (g + if g >= 0.0 { r.abs() } else { -r.abs() });
+            let mut s = 1.0f64;
+            let mut c = 1.0f64;
+            let mut p = 0.0f64;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // accumulate eigenvectors
+                for k in 0..n {
+                    f = a[k * n + i + 1];
+                    a[k * n + i + 1] = s * a[k * n + i] + c * f;
+                    a[k * n + i] = c * a[k * n + i] - s * f;
+                }
+            }
+            if r == 0.0 && m > l {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+
+    // sort ascending, permuting eigenvector columns
+    for i in 0..n.saturating_sub(1) {
+        let mut k = i;
+        let mut p = d[i];
+        for j in (i + 1)..n {
+            if d[j] < p {
+                k = j;
+                p = d[j];
+            }
+        }
+        if k != i {
+            d[k] = d[i];
+            d[i] = p;
+            for r in 0..n {
+                a.swap(r * n + i, r * n + k);
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::{gram, matmul};
+    use crate::util::Rng;
+
+    fn reconstruct(eig: &SymEig) -> Matrix {
+        let n = eig.vals.len();
+        let mut lam_qt = eig.q.transpose();
+        for i in 0..n {
+            lam_qt.scale_row(i, eig.vals[i]);
+        }
+        matmul(&eig.q, &lam_qt)
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let h = Matrix::from_vec(3, 3, vec![3., 0., 0., 0., 1., 0., 0., 0., 2.]);
+        let e = SymEig::new(&h).unwrap();
+        assert!((e.vals[0] - 1.0).abs() < 1e-5);
+        assert!((e.vals[1] - 2.0).abs() < 1e-5);
+        assert!((e.vals[2] - 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] -> eigenvalues 1, 3
+        let h = Matrix::from_vec(2, 2, vec![2., 1., 1., 2.]);
+        let e = SymEig::new(&h).unwrap();
+        assert!((e.vals[0] - 1.0).abs() < 1e-5);
+        assert!((e.vals[1] - 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn reconstruction_random_gram() {
+        let mut rng = Rng::new(11);
+        for &n in &[2usize, 5, 16, 40] {
+            let x = Matrix::randn(n + 10, n, &mut rng);
+            let h = gram(&x);
+            let e = SymEig::new(&h).unwrap();
+            let r = reconstruct(&e);
+            let scale = h.fro_norm().max(1.0);
+            assert!(
+                r.sub(&h).fro_norm() / scale < 1e-4,
+                "n={n} err={}",
+                r.sub(&h).fro_norm() / scale
+            );
+        }
+    }
+
+    #[test]
+    fn orthonormal_eigenvectors() {
+        let mut rng = Rng::new(12);
+        let x = Matrix::randn(30, 12, &mut rng);
+        let h = gram(&x);
+        let e = SymEig::new(&h).unwrap();
+        let qtq = matmul(&e.q.transpose(), &e.q);
+        assert!(qtq.max_abs_diff(&Matrix::identity(12)) < 1e-4);
+    }
+
+    #[test]
+    fn eigenvalues_ascending_nonnegative_for_gram() {
+        let mut rng = Rng::new(13);
+        let x = Matrix::randn(25, 10, &mut rng);
+        let e = SymEig::new(&gram(&x)).unwrap();
+        for w in e.vals.windows(2) {
+            assert!(w[0] <= w[1] + 1e-6);
+        }
+        assert!(e.vals[0] > -1e-3); // PSD up to rounding
+    }
+
+    #[test]
+    fn ridge_solve_matches_direct() {
+        let mut rng = Rng::new(14);
+        let x = Matrix::randn(30, 8, &mut rng);
+        let h = gram(&x);
+        let e = SymEig::new(&h).unwrap();
+        let b = Matrix::randn(8, 3, &mut rng);
+        let rho = 0.7f32;
+        let w = e.ridge_solve(rho, &b);
+        // check (H + rho I) w == b
+        let mut hr = h.clone();
+        for i in 0..8 {
+            *hr.at_mut(i, i) += rho;
+        }
+        let back = matmul(&hr, &w);
+        assert!(back.max_abs_diff(&b) < 1e-3);
+    }
+
+    #[test]
+    fn rank_deficient_ok() {
+        // gram of a rank-1 X: one positive eigenvalue, rest ~0
+        let x = Matrix::from_vec(4, 3, vec![1., 2., 3., 2., 4., 6., 3., 6., 9., 4., 8., 12.]);
+        let e = SymEig::new(&gram(&x)).unwrap();
+        assert!(e.vals[2] > 1.0);
+        assert!(e.vals[0].abs() < 1e-3 && e.vals[1].abs() < 1e-3);
+    }
+
+    #[test]
+    fn non_square_rejected() {
+        assert!(SymEig::new(&Matrix::zeros(2, 3)).is_err());
+    }
+
+    #[test]
+    fn size_one() {
+        let h = Matrix::from_vec(1, 1, vec![5.0]);
+        let e = SymEig::new(&h).unwrap();
+        assert!((e.vals[0] - 5.0).abs() < 1e-6);
+        assert!((e.q.at(0, 0).abs() - 1.0).abs() < 1e-6);
+    }
+}

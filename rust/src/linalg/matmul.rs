@@ -1,0 +1,288 @@
+//! Blocked, multi-threaded matmul — the L3 hot path when the PJRT runtime
+//! is not in play (native baselines, tests, small shapes).
+//!
+//! Kernel structure mirrors the Pallas kernel (DESIGN.md §Hardware-
+//! Adaptation): an MR x NR register-blocked micro-kernel keeps the C
+//! accumulators in SIMD registers across the whole K loop (f32
+//! accumulation), and rows of C are partitioned across threads (each
+//! thread owns disjoint output strips, so no synchronization). See
+//! EXPERIMENTS.md §Perf for the optimization log.
+
+use super::matrix::Matrix;
+
+/// C = A @ B.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul inner dim: {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// C = A^T @ B without materializing A^T.
+pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows, b.rows, "matmul_tn dims");
+    // For the gram-sized problems here an explicit transpose + matmul is
+    // faster than a strided kernel (A^T reuse across the whole product).
+    let at = a.transpose();
+    matmul(&at, b)
+}
+
+/// Gram matrix H = X^T X (symmetric; computes upper triangle and mirrors).
+pub fn gram(x: &Matrix) -> Matrix {
+    let n = x.cols;
+    let xt = x.transpose();
+    let mut h = matmul(&xt, x);
+    // enforce exact symmetry (floating point drift breaks eigh otherwise)
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let v = 0.5 * (h.at(i, j) + h.at(j, i));
+            *h.at_mut(i, j) = v;
+            *h.at_mut(j, i) = v;
+        }
+    }
+    h
+}
+
+/// y = A @ x for a vector x.
+pub fn matvec(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.cols, x.len());
+    let mut y = vec![0.0f32; a.rows];
+    for r in 0..a.rows {
+        let row = a.row(r);
+        let mut acc = 0.0f64;
+        for (av, xv) in row.iter().zip(x) {
+            acc += (*av as f64) * (*xv as f64);
+        }
+        y[r] = acc as f32;
+    }
+    y
+}
+
+/// Number of worker threads (cores - 1, at least 1).
+pub fn num_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).saturating_sub(1).max(1)
+}
+
+/// Micro-kernel geometry: MR rows of A against an NR-wide strip of B, with
+/// the C accumulators living in SIMD registers across the whole K loop —
+/// one B load is reused MR times, so the kernel is compute-bound instead
+/// of L1-bound (§Perf: 7 -> ~20 GFLOP/s on one AVX-512 core).
+const MR: usize = 4;
+const NR: usize = 64;
+
+/// C += A @ B restricted to C rows [r0, r1).
+fn matmul_rows(a: &Matrix, b: &Matrix, c: &mut [f32], r0: usize, r1: usize) {
+    let k_dim = a.cols;
+    let n_dim = b.cols;
+    let mut r = r0;
+    // full MR-row blocks through the register-blocked micro-kernel
+    while r + MR <= r1 {
+        let mut nb = 0;
+        while nb + NR <= n_dim {
+            microkernel::<MR, NR>(a, b, c, r, r0, nb, k_dim, n_dim);
+            nb += NR;
+        }
+        if nb < n_dim {
+            scalar_tail(a, b, c, r, (r + MR).min(r1), r0, nb, n_dim, k_dim, n_dim);
+        }
+        r += MR;
+    }
+    // remainder rows
+    if r < r1 {
+        scalar_tail(a, b, c, r, r1, r0, 0, n_dim, k_dim, n_dim);
+    }
+}
+
+/// MR x NR register-blocked kernel over the full K dimension.
+#[inline(always)]
+fn microkernel<const MRC: usize, const NRC: usize>(
+    a: &Matrix,
+    b: &Matrix,
+    c: &mut [f32],
+    r: usize,
+    r0: usize,
+    nb: usize,
+    k_dim: usize,
+    n_dim: usize,
+) {
+    let mut acc = [[0.0f32; NRC]; MRC];
+    for k in 0..k_dim {
+        let brow = &b.data[k * n_dim + nb..k * n_dim + nb + NRC];
+        for i in 0..MRC {
+            let av = a.data[(r + i) * k_dim + k];
+            let accr = &mut acc[i];
+            for j in 0..NRC {
+                accr[j] += av * brow[j];
+            }
+        }
+    }
+    for i in 0..MRC {
+        let dst = &mut c[(r + i - r0) * n_dim + nb..(r + i - r0) * n_dim + nb + NRC];
+        for j in 0..NRC {
+            dst[j] += acc[i][j];
+        }
+    }
+}
+
+/// Scalar fallback for row/column tails.
+#[allow(clippy::too_many_arguments)]
+fn scalar_tail(
+    a: &Matrix,
+    b: &Matrix,
+    c: &mut [f32],
+    r_start: usize,
+    r_end: usize,
+    r0: usize,
+    n_start: usize,
+    n_end: usize,
+    k_dim: usize,
+    n_dim: usize,
+) {
+    for r in r_start..r_end {
+        let arow = &a.data[r * k_dim..(r + 1) * k_dim];
+        let crow = &mut c[(r - r0) * n_dim..(r - r0 + 1) * n_dim];
+        for (k, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[k * n_dim..k * n_dim + n_dim];
+            for j in n_start..n_end {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// C = A @ B into a preallocated C (zeroed here).
+pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols));
+    c.data.iter_mut().for_each(|v| *v = 0.0);
+    let nt = num_threads().min(a.rows.max(1));
+    if nt <= 1 || a.rows * a.cols * b.cols < 64 * 64 * 64 {
+        let (r0, r1) = (0, a.rows);
+        let n_dim = b.cols;
+        let mut strip = vec![0.0f32; (r1 - r0) * n_dim];
+        matmul_rows(a, b, &mut strip, r0, r1);
+        c.data.copy_from_slice(&strip);
+        return;
+    }
+    let rows_per = (a.rows + nt - 1) / nt;
+    let n_dim = b.cols;
+    let chunks: Vec<(usize, usize)> = (0..nt)
+        .map(|t| (t * rows_per, ((t + 1) * rows_per).min(a.rows)))
+        .filter(|(r0, r1)| r1 > r0)
+        .collect();
+    let mut out: Vec<Vec<f32>> = Vec::with_capacity(chunks.len());
+    std::thread::scope(|s| {
+        let handles: Vec<_> = chunks
+            .iter()
+            .map(|&(r0, r1)| {
+                s.spawn(move || {
+                    let mut strip = vec![0.0f32; (r1 - r0) * n_dim];
+                    matmul_rows(a, b, &mut strip, r0, r1);
+                    strip
+                })
+            })
+            .collect();
+        for h in handles {
+            out.push(h.join().expect("matmul worker panicked"));
+        }
+    });
+    let mut offset = 0;
+    for strip in out {
+        c.data[offset..offset + strip.len()].copy_from_slice(&strip);
+        offset += strip.len();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for k in 0..a.cols {
+                for j in 0..b.cols {
+                    c.data[i * b.cols + j] += a.at(i, k) * b.at(k, j);
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matches_naive_small() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(3, 4, 5), (1, 1, 1), (7, 13, 2), (16, 16, 16)] {
+            let a = Matrix::randn(m, k, &mut rng);
+            let b = Matrix::randn(k, n, &mut rng);
+            assert!(matmul(&a, &b).max_abs_diff(&naive(&a, &b)) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matches_naive_threaded_sizes() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(130, 70, &mut rng);
+        let b = Matrix::randn(70, 90, &mut rng);
+        assert!(matmul(&a, &b).max_abs_diff(&naive(&a, &b)) < 1e-3);
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(20, 20, &mut rng);
+        assert!(matmul(&a, &Matrix::identity(20)).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn gram_symmetric_psd_diag() {
+        let mut rng = Rng::new(4);
+        let x = Matrix::randn(50, 12, &mut rng);
+        let h = gram(&x);
+        for i in 0..12 {
+            assert!(h.at(i, i) > 0.0);
+            for j in 0..12 {
+                assert_eq!(h.at(i, j), h.at(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_tn_matches_transpose() {
+        let mut rng = Rng::new(5);
+        let a = Matrix::randn(40, 12, &mut rng);
+        let b = Matrix::randn(40, 9, &mut rng);
+        let direct = matmul(&a.transpose(), &b);
+        assert!(matmul_tn(&a, &b).max_abs_diff(&direct) < 1e-6);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::new(6);
+        let a = Matrix::randn(15, 8, &mut rng);
+        let x: Vec<f32> = rng.gaussian_vec(8);
+        let xm = Matrix::from_vec(8, 1, x.clone());
+        let expect = matmul(&a, &xm);
+        let got = matvec(&a, &x);
+        for i in 0..15 {
+            assert!((got[i] - expect.at(i, 0)).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn sparse_a_short_circuit_correct() {
+        let mut rng = Rng::new(7);
+        let mut a = Matrix::randn(30, 30, &mut rng);
+        for (i, v) in a.data.iter_mut().enumerate() {
+            if i % 3 != 0 {
+                *v = 0.0;
+            }
+        }
+        let b = Matrix::randn(30, 30, &mut rng);
+        assert!(matmul(&a, &b).max_abs_diff(&naive(&a, &b)) < 1e-4);
+    }
+}

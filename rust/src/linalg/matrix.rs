@@ -1,0 +1,263 @@
+//! Row-major f32 matrix with the small set of ops the pruning stack needs.
+
+use crate::util::Rng;
+
+/// Dense row-major f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        Matrix { rows, cols, data: rng.gaussian_vec(rows * cols) }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self.at(r, c)).collect()
+    }
+
+    pub fn set_col(&mut self, c: usize, v: &[f32]) {
+        assert_eq!(v.len(), self.rows);
+        for r in 0..self.rows {
+            *self.at_mut(r, c) = v[r];
+        }
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        // blocked transpose for cache friendliness on big matrices
+        const B: usize = 32;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        t.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    pub fn diag(&self) -> Vec<f32> {
+        let n = self.rows.min(self.cols);
+        (0..n).map(|i| self.at(i, i)).collect()
+    }
+
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    pub fn fro_norm_sq(&self) -> f64 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|x| **x != 0.0).count()
+    }
+
+    pub fn scale(&self, s: f32) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| x * s).collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect(),
+        }
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    /// Hadamard (elementwise) product.
+    pub fn hadamard(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a * b).collect(),
+        }
+    }
+
+    /// axpy in place: self += alpha * other.
+    pub fn axpy(&mut self, alpha: f32, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Scale row r by s (used by the B.1 diagonal preconditioning).
+    pub fn scale_row(&mut self, r: usize, s: f32) {
+        for v in self.row_mut(r) {
+            *v *= s;
+        }
+    }
+
+    /// Frobenius inner product <A, B>.
+    pub fn dot(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (*a as f64) * (*b as f64))
+            .sum()
+    }
+
+    /// 0/1 support mask of the non-zero entries.
+    pub fn support_mask(&self) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| if *x != 0.0 { 1.0 } else { 0.0 }).collect(),
+        }
+    }
+
+    /// Max |a - b| over entries.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.at(0, 2), 3.0);
+        assert_eq!(m.at(1, 0), 4.0);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+        assert_eq!(m.col(1), vec![2., 5.]);
+    }
+
+    #[test]
+    fn identity_diag() {
+        let i = Matrix::identity(4);
+        assert_eq!(i.diag(), vec![1.0; 4]);
+        assert_eq!(i.nnz(), 4);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(0);
+        let m = Matrix::randn(37, 53, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn transpose_values() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let t = m.transpose();
+        assert_eq!(t.rows, 3);
+        assert_eq!(t.at(2, 1), 6.0);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Matrix::from_vec(2, 2, vec![4., 3., 2., 1.]);
+        assert_eq!(a.add(&b).data, vec![5., 5., 5., 5.]);
+        assert_eq!(a.sub(&b).data, vec![-3., -1., 1., 3.]);
+        assert_eq!(a.hadamard(&b).data, vec![4., 6., 6., 4.]);
+        assert_eq!(a.scale(2.0).data, vec![2., 4., 6., 8.]);
+    }
+
+    #[test]
+    fn axpy_in_place() {
+        let mut a = Matrix::from_vec(1, 3, vec![1., 1., 1.]);
+        let b = Matrix::from_vec(1, 3, vec![1., 2., 3.]);
+        a.axpy(0.5, &b);
+        assert_eq!(a.data, vec![1.5, 2.0, 2.5]);
+    }
+
+    #[test]
+    fn norms() {
+        let a = Matrix::from_vec(1, 2, vec![3., 4.]);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-6);
+        assert!((a.fro_norm_sq() - 25.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn support_mask_and_nnz() {
+        let a = Matrix::from_vec(2, 2, vec![0., 2., 0., -4.]);
+        assert_eq!(a.nnz(), 2);
+        assert_eq!(a.support_mask().data, vec![0., 1., 0., 1.]);
+    }
+
+    #[test]
+    fn dot_product() {
+        let a = Matrix::from_vec(1, 3, vec![1., 2., 3.]);
+        let b = Matrix::from_vec(1, 3, vec![4., 5., 6.]);
+        assert!((a.dot(&b) - 32.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_add_panics() {
+        let a = Matrix::zeros(2, 2);
+        let b = Matrix::zeros(2, 3);
+        let _ = a.add(&b);
+    }
+}

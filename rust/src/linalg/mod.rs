@@ -1,0 +1,19 @@
+//! Dense + sparse linear algebra substrate (no external BLAS/LAPACK).
+//!
+//! Everything ALPS needs that the paper got from PyTorch/CUDA:
+//! row-major f32 matrices, blocked multi-threaded matmul, symmetric
+//! eigendecomposition (Householder tridiagonalization + implicit-QL),
+//! Cholesky factorization and solves, (preconditioned) conjugate gradient,
+//! and CSR sparse kernels for pruned-weight inference.
+
+pub mod cholesky;
+pub mod eigh;
+pub mod matmul;
+pub mod matrix;
+pub mod solve;
+pub mod sparse;
+
+pub use cholesky::Cholesky;
+pub use eigh::SymEig;
+pub use matrix::Matrix;
+pub use sparse::Csr;

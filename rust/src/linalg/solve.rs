@@ -1,0 +1,259 @@
+//! Iterative solvers: CG and the support-projected, Jacobi-preconditioned
+//! CG of Algorithm 2 (native path; the artifact path runs the same math
+//! inside one HLO while-loop).
+
+use super::matmul::{matmul, matmul_into, matvec};
+use super::matrix::Matrix;
+
+/// Result of an iterative solve.
+#[derive(Debug, Clone)]
+pub struct SolveInfo {
+    pub iters: usize,
+    pub residual: f64,
+}
+
+/// Plain conjugate gradient on A x = b (A SPD). Returns (x, info).
+pub fn cg(a: &Matrix, b: &[f32], max_iters: usize, tol: f64) -> (Vec<f32>, SolveInfo) {
+    let n = b.len();
+    let mut x = vec![0.0f32; n];
+    let mut r: Vec<f32> = b.to_vec();
+    let mut p = r.clone();
+    let mut rs: f64 = r.iter().map(|v| (*v as f64) * (*v as f64)).sum();
+    let b_norm = rs.sqrt().max(1e-30);
+    let mut iters = 0;
+    for _ in 0..max_iters {
+        if rs.sqrt() / b_norm < tol {
+            break;
+        }
+        let ap = matvec(a, &p);
+        let pap: f64 = p.iter().zip(&ap).map(|(x, y)| (*x as f64) * (*y as f64)).sum();
+        if pap <= 0.0 {
+            break;
+        }
+        let alpha = rs / pap;
+        for i in 0..n {
+            x[i] += (alpha * p[i] as f64) as f32;
+            r[i] -= (alpha * ap[i] as f64) as f32;
+        }
+        let rs_new: f64 = r.iter().map(|v| (*v as f64) * (*v as f64)).sum();
+        let beta = rs_new / rs;
+        for i in 0..n {
+            p[i] = r[i] + (beta * p[i] as f64) as f32;
+        }
+        rs = rs_new;
+        iters += 1;
+    }
+    (x, SolveInfo { iters, residual: rs.sqrt() })
+}
+
+/// Algorithm 2: vectorized PCG over all columns simultaneously, with the
+/// residual re-projected onto the support mask every iteration and a
+/// Jacobi (diagonal) preconditioner.
+///
+/// Solves  min ||X What - X W||_F^2  s.t. supp(W) in S, given
+/// h = X^T X, g = X^T X What, an initial W0 and the 0/1 mask of S.
+pub fn pcg_support(
+    h: &Matrix,
+    g: &Matrix,
+    w0: &Matrix,
+    mask: &Matrix,
+    max_iters: usize,
+    tol: f64,
+) -> (Matrix, SolveInfo) {
+    let n = h.rows;
+    assert_eq!(h.cols, n);
+    assert_eq!((g.rows, g.cols), (w0.rows, w0.cols));
+    assert_eq!((mask.rows, mask.cols), (w0.rows, w0.cols));
+
+    let invdiag: Vec<f32> = (0..n).map(|i| 1.0 / h.at(i, i).max(1e-12)).collect();
+    let cols = w0.cols;
+
+    let mut w = w0.hadamard(mask);
+    // R0 = (G - H W0) projected on S
+    let mut r = g.sub(&matmul(h, &w)).hadamard(mask);
+    let mut z = r.clone();
+    for i in 0..n {
+        z.scale_row(i, invdiag[i]);
+    }
+    let mut p = z.clone();
+    // preallocated H@P buffer — the loop below is allocation-free (§Perf)
+    let mut hp = Matrix::zeros(r.rows, r.cols);
+    let mut rz = r.dot(&z);
+    let g_norm = g.fro_norm_sq().sqrt().max(1e-30);
+    let mut iters = 0;
+
+    for _ in 0..max_iters {
+        let res = r.fro_norm_sq().sqrt();
+        if res / g_norm < tol {
+            break;
+        }
+        matmul_into(h, &p, &mut hp);
+        let php = p.dot(&hp);
+        if php <= 0.0 {
+            break;
+        }
+        let alpha = (rz / php) as f32;
+        // fused elementwise pass (the rust mirror of kernels/pcg_step.py):
+        //   w += alpha p;  r = (r - alpha hp) * mask;  z = invdiag * r
+        let mut rz_new = 0.0f64;
+        for row in 0..n {
+            let base = row * cols;
+            let inv = invdiag[row];
+            let wr = &mut w.data[base..base + cols];
+            let rr = &mut r.data[base..base + cols];
+            let zr = &mut z.data[base..base + cols];
+            let pr = &p.data[base..base + cols];
+            let hpr = &hp.data[base..base + cols];
+            let mr = &mask.data[base..base + cols];
+            for j in 0..cols {
+                wr[j] += alpha * pr[j];
+                let rv = (rr[j] - alpha * hpr[j]) * mr[j];
+                rr[j] = rv;
+                let zv = inv * rv;
+                zr[j] = zv;
+                rz_new += (rv as f64) * (zv as f64);
+            }
+        }
+        let beta = if rz > 0.0 { (rz_new / rz) as f32 } else { 0.0 };
+        // p = z + beta p
+        for (pv, zv) in p.data.iter_mut().zip(&z.data) {
+            *pv = zv + beta * *pv;
+        }
+        rz = rz_new;
+        iters += 1;
+    }
+    let residual = r.fro_norm_sq().sqrt();
+    (w, SolveInfo { iters, residual })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::cholesky::spd_solve;
+    use crate::linalg::matmul::gram;
+    use crate::util::Rng;
+
+    fn spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let x = Matrix::randn(n + 6, n, &mut rng);
+        let mut h = gram(&x);
+        for i in 0..n {
+            *h.at_mut(i, i) += 0.5;
+        }
+        h
+    }
+
+    #[test]
+    fn cg_matches_cholesky() {
+        let a = spd(12, 0);
+        let mut rng = Rng::new(1);
+        let b: Vec<f32> = rng.gaussian_vec(12);
+        let (x, info) = cg(&a, &b, 200, 1e-10);
+        let bm = Matrix::from_vec(12, 1, b.clone());
+        let expect = spd_solve(&a, &bm).unwrap();
+        for i in 0..12 {
+            assert!((x[i] - expect.at(i, 0)).abs() < 1e-3);
+        }
+        assert!(info.iters <= 200);
+    }
+
+    #[test]
+    fn cg_zero_rhs() {
+        let a = spd(6, 2);
+        let (x, info) = cg(&a, &[0.0; 6], 50, 1e-10);
+        assert!(x.iter().all(|v| v.abs() < 1e-6));
+        assert_eq!(info.iters, 0);
+    }
+
+    #[test]
+    fn pcg_full_mask_matches_dense() {
+        // with mask all-ones, PCG solves H W = G exactly
+        let mut rng = Rng::new(3);
+        let x = Matrix::randn(30, 10, &mut rng);
+        let h = gram(&x);
+        let what = Matrix::randn(10, 4, &mut rng);
+        let g = matmul(&h, &what);
+        let mask = Matrix::from_vec(10, 4, vec![1.0; 40]);
+        let (w, _) = pcg_support(&h, &g, &Matrix::zeros(10, 4), &mask, 300, 1e-10);
+        assert!(w.max_abs_diff(&what) < 1e-2);
+    }
+
+    #[test]
+    fn pcg_respects_support() {
+        let mut rng = Rng::new(4);
+        let x = Matrix::randn(30, 8, &mut rng);
+        let h = gram(&x);
+        let what = Matrix::randn(8, 4, &mut rng);
+        let g = matmul(&h, &what);
+        let mask_data: Vec<f32> = (0..32).map(|i| if i % 3 == 0 { 1.0 } else { 0.0 }).collect();
+        let mask = Matrix::from_vec(8, 4, mask_data);
+        let (w, _) = pcg_support(&h, &g, &Matrix::zeros(8, 4), &mask, 50, 1e-10);
+        for i in 0..32 {
+            if mask.data[i] == 0.0 {
+                assert_eq!(w.data[i], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn pcg_monotone_objective() {
+        // objective ||X What - X W||^2 must not increase across iterations
+        let mut rng = Rng::new(5);
+        let x = Matrix::randn(40, 12, &mut rng);
+        let h = gram(&x);
+        let what = Matrix::randn(12, 6, &mut rng);
+        let g = matmul(&h, &what);
+        let mask_data: Vec<f32> = (0..72).map(|i| if i % 2 == 0 { 1.0 } else { 0.0 }).collect();
+        let mask = Matrix::from_vec(12, 6, mask_data);
+        let obj = |w: &Matrix| {
+            let xw = matmul(&x, w);
+            let xwhat = matmul(&x, &what);
+            xw.sub(&xwhat).fro_norm_sq()
+        };
+        let mut prev = f64::INFINITY;
+        for iters in [1usize, 2, 4, 8, 16] {
+            let (w, _) = pcg_support(&h, &g, &Matrix::zeros(12, 6), &mask, iters, 1e-14);
+            let o = obj(&w);
+            assert!(o <= prev + 1e-6, "iters={iters}: {o} > {prev}");
+            prev = o;
+        }
+    }
+
+    #[test]
+    fn pcg_matches_backsolve_on_support() {
+        // per-column restricted least squares vs PCG
+        let mut rng = Rng::new(6);
+        let x = Matrix::randn(50, 10, &mut rng);
+        let h = gram(&x);
+        let what = Matrix::randn(10, 3, &mut rng);
+        let g = matmul(&h, &what);
+        let mask_data: Vec<f32> = (0..30).map(|i| if (i * 7) % 3 != 0 { 1.0 } else { 0.0 }).collect();
+        let mask = Matrix::from_vec(10, 3, mask_data);
+        let (w, _) = pcg_support(&h, &g, &Matrix::zeros(10, 3), &mask, 400, 1e-12);
+
+        // backsolve: for each column, solve H_SS w_S = g_S
+        for c in 0..3 {
+            let support: Vec<usize> = (0..10).filter(|&i| mask.at(i, c) != 0.0).collect();
+            let s = support.len();
+            let mut hs = Matrix::zeros(s, s);
+            for (ii, &i) in support.iter().enumerate() {
+                for (jj, &j) in support.iter().enumerate() {
+                    *hs.at_mut(ii, jj) = h.at(i, j);
+                }
+            }
+            let mut gs = Matrix::zeros(s, 1);
+            for (ii, &i) in support.iter().enumerate() {
+                *gs.at_mut(ii, 0) = g.at(i, c);
+            }
+            let ws = spd_solve(&hs, &gs).unwrap();
+            for (ii, &i) in support.iter().enumerate() {
+                assert!(
+                    (w.at(i, c) - ws.at(ii, 0)).abs() < 5e-2,
+                    "col {c} idx {i}: {} vs {}",
+                    w.at(i, c),
+                    ws.at(ii, 0)
+                );
+            }
+        }
+    }
+}

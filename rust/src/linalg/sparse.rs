@@ -1,0 +1,157 @@
+//! CSR sparse matrix — pruned-weight inference kernels (the payoff side of
+//! pruning: sparse matmul skips the zeros the pruner created).
+
+use super::matrix::Matrix;
+
+/// Compressed sparse row matrix.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    /// Convert from dense, dropping exact zeros.
+    pub fn from_dense(m: &Matrix) -> Self {
+        let mut indptr = Vec::with_capacity(m.rows + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for r in 0..m.rows {
+            for (c, &v) in m.row(r).iter().enumerate() {
+                if v != 0.0 {
+                    indices.push(c as u32);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Csr { rows: m.rows, cols: m.cols, indptr, indices, values }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.rows * self.cols).max(1) as f64
+    }
+
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for i in self.indptr[r]..self.indptr[r + 1] {
+                *m.at_mut(r, self.indices[i] as usize) = self.values[i];
+            }
+        }
+        m
+    }
+
+    /// y = A x.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0f32; self.rows];
+        for r in 0..self.rows {
+            let mut acc = 0.0f32;
+            for i in self.indptr[r]..self.indptr[r + 1] {
+                acc += self.values[i] * x[self.indices[i] as usize];
+            }
+            y[r] = acc;
+        }
+        y
+    }
+
+    /// Dense @ sparse: Y = X A where A is this CSR (shape cols of X == A.rows).
+    /// This is the inference shape: activations [tokens, n_in] times pruned
+    /// weights [n_in, n_out].
+    pub fn left_matmul(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.rows);
+        let mut y = Matrix::zeros(x.rows, self.cols);
+        for t in 0..x.rows {
+            let xrow = x.row(t);
+            let yrow = y.row_mut(t);
+            for r in 0..self.rows {
+                let xv = xrow[r];
+                if xv == 0.0 {
+                    continue;
+                }
+                for i in self.indptr[r]..self.indptr[r + 1] {
+                    yrow[self.indices[i] as usize] += xv * self.values[i];
+                }
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::matmul;
+    use crate::util::Rng;
+
+    fn sparse_random(rows: usize, cols: usize, density: f64, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut m = Matrix::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            if rng.uniform() < density {
+                *v = rng.gaussian();
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let m = sparse_random(20, 15, 0.3, 0);
+        let csr = Csr::from_dense(&m);
+        assert_eq!(csr.to_dense(), m);
+        assert_eq!(csr.nnz(), m.nnz());
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = Matrix::zeros(5, 5);
+        let csr = Csr::from_dense(&m);
+        assert_eq!(csr.nnz(), 0);
+        assert_eq!(csr.density(), 0.0);
+        assert_eq!(csr.matvec(&[1.0; 5]), vec![0.0; 5]);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let m = sparse_random(12, 9, 0.4, 1);
+        let csr = Csr::from_dense(&m);
+        let mut rng = Rng::new(2);
+        let x = rng.gaussian_vec(9);
+        let expect = crate::linalg::matmul::matvec(&m, &x);
+        let got = csr.matvec(&x);
+        for (g, e) in got.iter().zip(&expect) {
+            assert!((g - e).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn left_matmul_matches_dense() {
+        let w = sparse_random(16, 10, 0.25, 3);
+        let csr = Csr::from_dense(&w);
+        let mut rng = Rng::new(4);
+        let x = Matrix::randn(7, 16, &mut rng);
+        let expect = matmul(&x, &w);
+        let got = csr.left_matmul(&x);
+        assert!(got.max_abs_diff(&expect) < 1e-4);
+    }
+
+    #[test]
+    fn density_computation() {
+        let mut m = Matrix::zeros(10, 10);
+        for i in 0..30 {
+            m.data[i * 3 % 100] = 1.0;
+        }
+        let csr = Csr::from_dense(&m);
+        assert!((csr.density() - csr.nnz() as f64 / 100.0).abs() < 1e-12);
+    }
+}

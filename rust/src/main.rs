@@ -1,0 +1,278 @@
+//! `alps` — CLI for the ALPS one-shot pruning system.
+//!
+//! Subcommands:
+//!   prune  --model alps-base --sparsity 0.7 --method alps [--engine hlo]
+//!          [--out pruned.bin]                prune a model end-to-end
+//!   eval   --model alps-base [--weights pruned.bin]
+//!          perplexity on the three eval splits + 4 zero-shot tasks
+//!   layer  --model alps-base --layer mlp.w2 --sparsity 0.7 [--methods all]
+//!          single-layer reconstruction-error comparison (Fig. 2 row)
+//!   info                                      artifact + model inventory
+//!   smoke  <file.hlo.txt>                     runtime smoke test
+
+use alps::config::{AlpsConfig, SparsityTarget};
+use alps::coordinator::{PruneEngine, Scheduler};
+use alps::data::{sample_windows, tasks, Corpus};
+use alps::eval::{perplexity, zero_shot_accuracy};
+use alps::model::{Model, Weights};
+use alps::pruning::{all_methods, method_by_name};
+use alps::runtime::{artifact, Runtime};
+use alps::util::table::{fmt_sig, Table};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Minimal flag parser: --key value pairs plus positional args.
+struct Args {
+    flags: HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut flags = HashMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(argv[i].clone());
+                i += 1;
+            }
+        }
+        Args { flags, positional }
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn artifacts_dir() -> PathBuf {
+    artifact::default_dir()
+}
+
+fn load_model(args: &Args) -> Result<Model> {
+    let name = args.get("model", "alps-tiny");
+    let dir = artifacts_dir();
+    let mut model = Model::load(&dir, &name)
+        .with_context(|| format!("loading model '{name}' from {dir:?}"))?;
+    if args.has("weights") {
+        let w = Weights::load(&PathBuf::from(args.get("weights", "")))?;
+        model.weights = w;
+    }
+    Ok(model)
+}
+
+fn load_calib(model: &Model, n: usize) -> Result<Vec<Vec<u16>>> {
+    let corpus = Corpus::load(&artifacts_dir().join("corpus.bin"))?;
+    let train = corpus.split("train")?;
+    Ok(sample_windows(train, n, model.cfg.seq_len, 0xCA11B))
+}
+
+fn cmd_prune(args: &Args) -> Result<()> {
+    let mut model = load_model(args)?;
+    let target = SparsityTarget::parse(&args.get("sparsity", "0.7"))?;
+    let method = args.get("method", "alps");
+    let n_calib = args.get("calib", "32").parse::<usize>()?;
+    let calib = load_calib(&model, n_calib)?;
+    let mut sched = Scheduler::new(calib);
+    sched.verbose = !args.has("quiet");
+
+    println!(
+        "pruning {} ({} params) to {} with {}",
+        model.cfg.name,
+        model.weights.total_params(),
+        target.label(),
+        method
+    );
+    let report = if args.get("engine", "native") == "hlo" {
+        if method != "alps" {
+            bail!("--engine hlo only supports --method alps");
+        }
+        let rt = Runtime::new(&artifacts_dir())?;
+        let r = sched.prune_model(&mut model, target, &PruneEngine::Hlo(&rt, AlpsConfig::default()))?;
+        println!("(hlo engine: {} artifact executions)", rt.total_execs());
+        r
+    } else {
+        method_by_name(&method)?; // validate early
+        sched.prune_model(&mut model, target, &PruneEngine::Native(method.clone()))?
+    };
+    println!("{}", report.summary());
+
+    let out = args.get("out", "");
+    if !out.is_empty() {
+        model.weights.save(&PathBuf::from(&out))?;
+        println!("wrote pruned weights to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model = load_model(args)?;
+    let corpus = Corpus::load(&artifacts_dir().join("corpus.bin"))?;
+    let n_items = args.get("items", "50").parse::<usize>()?;
+
+    let mut t = Table::new(&["dataset", "metric", "value"]);
+    for split in Corpus::eval_split_names() {
+        let ids = corpus.split(split)?;
+        let ppl = perplexity(&model, ids)?;
+        t.row(&[split.to_string(), "ppl".into(), fmt_sig(ppl)]);
+    }
+    let test_ids = corpus.split("wikitext2-like")?;
+    for task in tasks::standard_tasks(test_ids, n_items, model.cfg.seq_len, model.cfg.vocab, 7) {
+        let acc = zero_shot_accuracy(&model, &task)?;
+        t.row(&[task.name.to_string(), "acc%".into(), format!("{:.2}", acc * 100.0)]);
+    }
+    let names = model.prunable_names();
+    println!(
+        "model {} — prunable sparsity {:.3}",
+        model.cfg.name,
+        model.weights.sparsity_of(&names)
+    );
+    t.print();
+    Ok(())
+}
+
+fn cmd_layer(args: &Args) -> Result<()> {
+    let model = load_model(args)?;
+    let layer = args.get("layer", "mlp.w2");
+    let block = args.get("block", "0").parse::<usize>()?;
+    let calib = load_calib(&model, args.get("calib", "32").parse()?)?;
+    let p = alps::coordinator::scheduler::single_layer_problem(&model, &calib, block, &layer)?;
+    let target = SparsityTarget::parse(&args.get("sparsity", "0.7"))?;
+
+    println!(
+        "layer blocks.{block}.{layer} ({}x{}), target {}",
+        p.n_in(),
+        p.n_out(),
+        target.label()
+    );
+    let mut t = Table::new(&["method", "rel-error", "nnz", "secs"]);
+    let methods = if args.get("methods", "all") == "all" {
+        all_methods()
+    } else {
+        args.get("methods", "alps")
+            .split(',')
+            .map(method_by_name)
+            .collect::<Result<Vec<_>>>()?
+    };
+    for m in methods {
+        let timer = alps::util::Timer::start();
+        let w = m.prune(&p, target)?;
+        let secs = timer.elapsed_secs();
+        t.row(&[
+            m.name().to_string(),
+            fmt_sig(p.rel_error(&w)),
+            w.nnz().to_string(),
+            format!("{secs:.2}"),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = artifacts_dir();
+    println!("artifacts dir: {dir:?}");
+    match alps::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            let mut kinds: HashMap<String, usize> = HashMap::new();
+            for a in m.artifacts.values() {
+                *kinds.entry(a.kind.clone()).or_insert(0) += 1;
+            }
+            println!("{} artifacts:", m.artifacts.len());
+            let mut ks: Vec<_> = kinds.into_iter().collect();
+            ks.sort();
+            for (k, n) in ks {
+                println!("  {k}: {n}");
+            }
+        }
+        Err(e) => println!("no manifest: {e}"),
+    }
+    for preset in ["alps-tiny", "alps-small", "alps-base"] {
+        match Model::load(&dir, preset) {
+            Ok(m) => println!(
+                "model {preset}: {} params, {} blocks",
+                m.weights.total_params(),
+                m.cfg.n_layers
+            ),
+            Err(_) => println!("model {preset}: not built (run `make artifacts`)"),
+        }
+    }
+    match Corpus::load(&dir.join("corpus.bin")) {
+        Ok(c) => println!(
+            "corpus: vocab {}, splits {:?}",
+            c.vocab.len(),
+            c.splits.iter().map(|(k, v)| format!("{k}:{}", v.len())).collect::<Vec<_>>()
+        ),
+        Err(_) => println!("corpus: not built"),
+    }
+    Ok(())
+}
+
+fn cmd_smoke(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "artifacts/smoke.hlo.txt".to_string());
+    let out = alps::runtime::smoke::run_hlo_f32(
+        &path,
+        &[
+            ((0..24).map(|i| i as f32).collect(), vec![4, 6]),
+            ((0..24).map(|i| (23 - i) as f32 * 0.5).collect(), vec![4, 6]),
+        ],
+        Some(7),
+    )?;
+    for (i, v) in out.iter().enumerate() {
+        let head: Vec<f32> = v.iter().take(8).cloned().collect();
+        println!("out[{i}] len={} head={head:?}", v.len());
+    }
+    println!("smoke OK");
+    Ok(())
+}
+
+fn usage() {
+    println!(
+        "alps — ADMM-based one-shot LLM pruning (NeurIPS 2024 reproduction)\n\
+         usage: alps <prune|eval|layer|info|smoke> [flags]\n\
+           prune --model alps-base --sparsity 0.7|2:4 --method alps|mp|wanda|sparsegpt|dsnot\n\
+                 [--engine native|hlo] [--calib 32] [--out pruned.bin] [--quiet]\n\
+           eval  --model alps-base [--weights pruned.bin] [--items 50]\n\
+           layer --model alps-base --block 0 --layer mlp.w2 --sparsity 0.7 [--methods all]\n\
+           info\n\
+           smoke [file.hlo.txt]"
+    );
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        usage();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "prune" => cmd_prune(&args),
+        "eval" => cmd_eval(&args),
+        "layer" => cmd_layer(&args),
+        "info" => cmd_info(),
+        "smoke" => cmd_smoke(&args),
+        _ => {
+            usage();
+            bail!("unknown command '{cmd}'");
+        }
+    }
+}

@@ -1,0 +1,55 @@
+//! The pruning target: a decoder-only transformer with rust-native
+//! inference (perplexity/zero-shot eval) and binary weight IO shared with
+//! the build-time python trainer.
+
+pub mod sparse_infer;
+pub mod transformer;
+pub mod weights;
+
+pub use transformer::{BlockInputs, Model};
+pub use weights::Weights;
+
+/// Names of the prunable matrices of block `i`, with their activation
+/// group (matrices in the same group consume identical inputs X, so the
+/// coordinator computes one gram matrix per group).
+pub fn prunable_layers(i: usize) -> Vec<(String, ActivationTap)> {
+    let p = format!("blocks.{i}.");
+    vec![
+        (format!("{p}attn.wq"), ActivationTap::AttnIn),
+        (format!("{p}attn.wk"), ActivationTap::AttnIn),
+        (format!("{p}attn.wv"), ActivationTap::AttnIn),
+        (format!("{p}attn.wo"), ActivationTap::AttnOut),
+        (format!("{p}mlp.w1"), ActivationTap::MlpIn),
+        (format!("{p}mlp.w2"), ActivationTap::MlpHidden),
+    ]
+}
+
+/// Which intermediate activation feeds a prunable matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ActivationTap {
+    /// Post-LN1 input (feeds wq / wk / wv — one shared gram).
+    AttnIn,
+    /// Attention mix output (feeds wo).
+    AttnOut,
+    /// Post-LN2 input (feeds mlp.w1).
+    MlpIn,
+    /// GELU hidden activations (feeds mlp.w2).
+    MlpHidden,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn six_prunable_layers_per_block() {
+        let layers = prunable_layers(3);
+        assert_eq!(layers.len(), 6);
+        assert!(layers[0].0.starts_with("blocks.3."));
+        // wq/wk/wv share the AttnIn tap
+        assert_eq!(layers[0].1, ActivationTap::AttnIn);
+        assert_eq!(layers[1].1, ActivationTap::AttnIn);
+        assert_eq!(layers[2].1, ActivationTap::AttnIn);
+        assert_eq!(layers[3].1, ActivationTap::AttnOut);
+    }
+}

@@ -1,0 +1,251 @@
+//! Sparse inference: run the transformer forward with the pruned weight
+//! matrices held in CSR form, skipping the zeros the pruner created —
+//! the deployment payoff the paper's intro motivates ("sparsity reduces
+//! the storage and can accelerate the inference").
+//!
+//! Numerically identical to the dense path (tests pin exactness); speed
+//! crosses over once prunable-matrix density drops below the CSR
+//! bookkeeping overhead (~50% on this CPU; see bench_perf_hotpath).
+
+use super::transformer::Model;
+use crate::linalg::{Csr, Matrix};
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// A model with CSR-converted prunable matrices.
+pub struct SparseModel<'m> {
+    pub model: &'m Model,
+    csr: HashMap<String, Csr>,
+}
+
+impl<'m> SparseModel<'m> {
+    /// Convert every prunable matrix to CSR (dense tensors untouched).
+    pub fn from_model(model: &'m Model) -> Result<Self> {
+        let mut csr = HashMap::new();
+        for name in model.prunable_names() {
+            let w = model.weights.matrix(&name)?;
+            csr.insert(name, Csr::from_dense(&w));
+        }
+        Ok(SparseModel { model, csr })
+    }
+
+    /// Weighted mean density over the prunable matrices.
+    pub fn density(&self) -> f64 {
+        let (mut nnz, mut total) = (0usize, 0usize);
+        for c in self.csr.values() {
+            nnz += c.nnz();
+            total += c.rows * c.cols;
+        }
+        nnz as f64 / total.max(1) as f64
+    }
+
+    /// Memory footprint of the sparse prunable weights in bytes (values +
+    /// u32 col indices + row pointers), vs dense f32.
+    pub fn bytes_sparse_vs_dense(&self) -> (usize, usize) {
+        let mut sparse = 0usize;
+        let mut dense = 0usize;
+        for c in self.csr.values() {
+            sparse += c.nnz() * (4 + 4) + (c.rows + 1) * 8;
+            dense += c.rows * c.cols * 4;
+        }
+        (sparse, dense)
+    }
+
+    fn mm(&self, name: &str, x: &Matrix) -> Result<Matrix> {
+        Ok(self
+            .csr
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no CSR for '{name}'"))?
+            .left_matmul(x))
+    }
+
+    /// Per-position next-token NLL — sparse mirror of `Model::nll`.
+    pub fn nll(&self, ids: &[u16]) -> Result<Vec<f64>> {
+        let m = self.model;
+        let cfg = &m.cfg;
+        let s = ids.len();
+        anyhow::ensure!(s <= cfg.seq_len, "sequence too long");
+        let emb = m.weights.matrix("tok_emb")?;
+        let pos = m.weights.matrix("pos_emb")?;
+        let d = cfg.d_model;
+        let mut x = Matrix::zeros(s, d);
+        for (t, &id) in ids.iter().enumerate() {
+            anyhow::ensure!((id as usize) < cfg.vocab, "token out of vocab");
+            let erow = emb.row(id as usize);
+            let prow = pos.row(t);
+            let xrow = x.row_mut(t);
+            for c in 0..d {
+                xrow[c] = erow[c] + prow[c];
+            }
+        }
+        for b in 0..cfg.n_layers {
+            let p = format!("blocks.{b}.");
+            let h = layer_norm(
+                &x,
+                m.weights.vector(&format!("{p}ln1.g"))?,
+                m.weights.vector(&format!("{p}ln1.b"))?,
+            );
+            let attn_out = self.attention(&h, b)?;
+            x = x.add(&attn_out);
+            let h2 = layer_norm(
+                &x,
+                m.weights.vector(&format!("{p}ln2.g"))?,
+                m.weights.vector(&format!("{p}ln2.b"))?,
+            );
+            let mut hidden = self.mm(&format!("{p}mlp.w1"), &h2)?;
+            hidden.data.iter_mut().for_each(|v| *v = gelu(*v));
+            x = x.add(&self.mm(&format!("{p}mlp.w2"), &hidden)?);
+        }
+        let hfinal = layer_norm(&x, m.weights.vector("ln_f.g")?, m.weights.vector("ln_f.b")?);
+        let logits = crate::linalg::matmul::matmul(&hfinal, &emb.transpose());
+        let mut out = Vec::with_capacity(s - 1);
+        for t in 0..s - 1 {
+            let row = logits.row(t);
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+            let lse: f64 =
+                row.iter().map(|v| ((*v as f64) - max).exp()).sum::<f64>().ln() + max;
+            out.push(lse - row[ids[t + 1] as usize] as f64);
+        }
+        Ok(out)
+    }
+
+    fn attention(&self, x: &Matrix, block: usize) -> Result<Matrix> {
+        let m = self.model;
+        let p = format!("blocks.{block}.attn.");
+        let q = self.mm(&format!("{p}wq"), x)?;
+        let k = self.mm(&format!("{p}wk"), x)?;
+        let v = self.mm(&format!("{p}wv"), x)?;
+        let (s, d) = (x.rows, x.cols);
+        let heads = m.cfg.n_heads;
+        let hd = m.cfg.head_dim();
+        let mut mix = Matrix::zeros(s, d);
+        let scale = 1.0 / (hd as f32).sqrt();
+        for head in 0..heads {
+            let off = head * hd;
+            let mut scores = Matrix::zeros(s, s);
+            for i in 0..s {
+                let qi = &q.row(i)[off..off + hd];
+                for j in 0..=i {
+                    let kj = &k.row(j)[off..off + hd];
+                    let dot: f32 = qi.iter().zip(kj).map(|(a, b)| a * b).sum();
+                    *scores.at_mut(i, j) = dot * scale;
+                }
+                for j in (i + 1)..s {
+                    *scores.at_mut(i, j) = -1e30;
+                }
+            }
+            softmax_rows(&mut scores);
+            for i in 0..s {
+                let srow = scores.row(i);
+                let orow = mix.row_mut(i);
+                for j in 0..=i {
+                    let sv = srow[j];
+                    if sv == 0.0 {
+                        continue;
+                    }
+                    let vrow = &v.row(j)[off..off + hd];
+                    for (t, vv) in vrow.iter().enumerate() {
+                        orow[off + t] += sv * vv;
+                    }
+                }
+            }
+        }
+        self.mm(&format!("{p}wo"), &mix)
+    }
+}
+
+// local mirrors of the dense helpers (kept private in transformer.rs)
+fn layer_norm(x: &Matrix, g: &[f32], b: &[f32]) -> Matrix {
+    let eps = 1e-5f32;
+    let mut out = Matrix::zeros(x.rows, x.cols);
+    for r in 0..x.rows {
+        let row = x.row(r);
+        let mean: f32 = row.iter().sum::<f32>() / x.cols as f32;
+        let var: f32 =
+            row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / x.cols as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        let orow = out.row_mut(r);
+        for c in 0..x.cols {
+            orow[c] = (row[c] - mean) * inv * g[c] + b[c];
+        }
+    }
+    out
+}
+
+fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6;
+    0.5 * x * (1.0 + (C * (x + 0.044_715 * x * x * x)).tanh())
+}
+
+fn softmax_rows(m: &mut Matrix) {
+    for r in 0..m.rows {
+        let row = m.row_mut(r);
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::model::transformer::testutil::random_model;
+
+    #[test]
+    fn sparse_matches_dense_exactly_on_dense_model() {
+        let m = random_model(0);
+        let sm = SparseModel::from_model(&m).unwrap();
+        let ids = vec![1u16, 5, 9, 3, 7];
+        let dense = m.nll(&ids).unwrap();
+        let sparse = sm.nll(&ids).unwrap();
+        for (a, b) in dense.iter().zip(&sparse) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sparse_matches_dense_on_pruned_model() {
+        let mut m = random_model(1);
+        // zero out 70% of one matrix
+        let name = "blocks.0.mlp.w1";
+        let w = m.weights.matrix(name).unwrap();
+        let pruned = crate::pruning::projection::topk_project(&w, w.data.len() * 3 / 10);
+        m.weights.set_matrix(name, &pruned).unwrap();
+        let sm = SparseModel::from_model(&m).unwrap();
+        let ids = vec![2u16, 4, 6, 8];
+        let dense = m.nll(&ids).unwrap();
+        let sparse = sm.nll(&ids).unwrap();
+        for (a, b) in dense.iter().zip(&sparse) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        assert!(sm.density() < 1.0);
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let mut m = random_model(2);
+        for name in m.prunable_names() {
+            let w = m.weights.matrix(&name).unwrap();
+            let pruned = crate::pruning::projection::topk_project(&w, w.data.len() / 10);
+            m.weights.set_matrix(&name, &pruned).unwrap();
+        }
+        let sm = SparseModel::from_model(&m).unwrap();
+        let (sparse, dense) = sm.bytes_sparse_vs_dense();
+        assert!(sparse < dense, "sparse {sparse} !< dense {dense}");
+        assert!((sm.density() - 0.1).abs() < 0.01);
+    }
+
+    #[test]
+    fn missing_csr_rejected() {
+        let m = random_model(3);
+        let sm = SparseModel::from_model(&m).unwrap();
+        assert!(sm.mm("nope", &Matrix::zeros(2, 16)).is_err());
+    }
+}

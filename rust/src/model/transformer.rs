@@ -1,0 +1,398 @@
+//! Rust-native decoder-only transformer forward — numerically mirrors
+//! `python/compile/model.py::forward` (same LN eps, tanh-GELU, causal mask,
+//! tied unembedding) so the trained weights evaluate identically on both
+//! sides. Integration tests pin this against the `model_fwd_*` artifact.
+
+use super::weights::Weights;
+use super::ActivationTap;
+use crate::config::ModelConfig;
+use crate::linalg::matmul::matmul;
+use crate::linalg::Matrix;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Captured inputs to the prunable matrices of one block, stacked over the
+/// sequences fed to [`Model::forward_collect`].
+#[derive(Default)]
+pub struct BlockInputs {
+    /// Rows of activations per tap (each [n_tokens, dim]).
+    pub taps: HashMap<ActivationTap, Matrix>,
+}
+
+/// A transformer model: config + weights.
+pub struct Model {
+    pub cfg: ModelConfig,
+    pub weights: Weights,
+}
+
+fn layer_norm(x: &Matrix, g: &[f32], b: &[f32]) -> Matrix {
+    let eps = 1e-5f32;
+    let mut out = Matrix::zeros(x.rows, x.cols);
+    for r in 0..x.rows {
+        let row = x.row(r);
+        let mean: f32 = row.iter().sum::<f32>() / x.cols as f32;
+        let var: f32 =
+            row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / x.cols as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        let orow = out.row_mut(r);
+        for c in 0..x.cols {
+            orow[c] = (row[c] - mean) * inv * g[c] + b[c];
+        }
+    }
+    out
+}
+
+/// tanh-approximate GELU (matches jax.nn.gelu default).
+fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044_715 * x * x * x)).tanh())
+}
+
+fn softmax_rows(m: &mut Matrix) {
+    for r in 0..m.rows {
+        let row = m.row_mut(r);
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+impl Model {
+    pub fn new(cfg: ModelConfig, weights: Weights) -> Result<Self> {
+        cfg.validate()?;
+        // sanity: required tensors present with the right shapes
+        let emb = weights.matrix("tok_emb")?;
+        if emb.rows != cfg.vocab || emb.cols != cfg.d_model {
+            bail!("tok_emb shape {}x{} != vocab x d_model", emb.rows, emb.cols);
+        }
+        for i in 0..cfg.n_layers {
+            weights.matrix(&format!("blocks.{i}.attn.wq"))?;
+            weights.matrix(&format!("blocks.{i}.mlp.w1"))?;
+        }
+        Ok(Model { cfg, weights })
+    }
+
+    /// Load a model from `artifacts/model_{name}.{bin,json}`.
+    pub fn load(dir: &std::path::Path, name: &str) -> Result<Self> {
+        let cfg = ModelConfig::from_json_file(&dir.join(format!("model_{name}.json")))?;
+        let weights = Weights::load(&dir.join(format!("model_{name}.bin")))?;
+        Model::new(cfg, weights)
+    }
+
+    /// Causal multi-head attention over x [seq, d]. Returns
+    /// (output [seq, d], mix [seq, d] — the wo input tap).
+    fn attention(&self, x: &Matrix, block: usize) -> Result<(Matrix, Matrix)> {
+        let p = format!("blocks.{block}.attn.");
+        let wq = self.weights.matrix(&format!("{p}wq"))?;
+        let wk = self.weights.matrix(&format!("{p}wk"))?;
+        let wv = self.weights.matrix(&format!("{p}wv"))?;
+        let wo = self.weights.matrix(&format!("{p}wo"))?;
+        let (s, d) = (x.rows, x.cols);
+        let h = self.cfg.n_heads;
+        let hd = self.cfg.head_dim();
+        let q = matmul(x, &wq);
+        let k = matmul(x, &wk);
+        let v = matmul(x, &wv);
+
+        let mut mix = Matrix::zeros(s, d);
+        let scale = 1.0 / (hd as f32).sqrt();
+        for head in 0..h {
+            let off = head * hd;
+            // scores [s, s] for this head
+            let mut scores = Matrix::zeros(s, s);
+            for i in 0..s {
+                let qi = &q.row(i)[off..off + hd];
+                for j in 0..=i {
+                    let kj = &k.row(j)[off..off + hd];
+                    let dot: f32 = qi.iter().zip(kj).map(|(a, b)| a * b).sum();
+                    *scores.at_mut(i, j) = dot * scale;
+                }
+                for j in (i + 1)..s {
+                    *scores.at_mut(i, j) = -1e30; // causal mask
+                }
+            }
+            softmax_rows(&mut scores);
+            // mix[:, head] = scores @ v[:, head]
+            for i in 0..s {
+                let srow = scores.row(i);
+                let orow = mix.row_mut(i);
+                for j in 0..=i {
+                    let sv = srow[j];
+                    if sv == 0.0 {
+                        continue;
+                    }
+                    let vrow = &v.row(j)[off..off + hd];
+                    for (t, vv) in vrow.iter().enumerate() {
+                        orow[off + t] += sv * vv;
+                    }
+                }
+            }
+        }
+        Ok((matmul(&mix, &wo), mix))
+    }
+
+    /// Full forward over one sequence of token ids; returns the final
+    /// hidden states [seq, d]. If `collect` is Some((block, sink)),
+    /// the prunable-layer inputs of that block are appended to the sink.
+    fn forward_hidden(
+        &self,
+        ids: &[u16],
+        mut collect: Option<(usize, &mut BlockInputs)>,
+    ) -> Result<Matrix> {
+        let s = ids.len();
+        if s > self.cfg.seq_len {
+            bail!("sequence length {s} exceeds model seq_len {}", self.cfg.seq_len);
+        }
+        let emb = self.weights.matrix("tok_emb")?;
+        let pos = self.weights.matrix("pos_emb")?;
+        let d = self.cfg.d_model;
+        let mut x = Matrix::zeros(s, d);
+        for (t, &id) in ids.iter().enumerate() {
+            if (id as usize) >= self.cfg.vocab {
+                bail!("token id {id} out of vocab {}", self.cfg.vocab);
+            }
+            let erow = emb.row(id as usize);
+            let prow = pos.row(t);
+            let xrow = x.row_mut(t);
+            for c in 0..d {
+                xrow[c] = erow[c] + prow[c];
+            }
+        }
+        for b in 0..self.cfg.n_layers {
+            let p = format!("blocks.{b}.");
+            let h = layer_norm(
+                &x,
+                self.weights.vector(&format!("{p}ln1.g"))?,
+                self.weights.vector(&format!("{p}ln1.b"))?,
+            );
+            if let Some((cb, sink)) = collect.as_mut() {
+                if *cb == b {
+                    append_rows(sink, ActivationTap::AttnIn, &h);
+                }
+            }
+            let (attn_out, mix) = self.attention(&h, b)?;
+            if let Some((cb, sink)) = collect.as_mut() {
+                if *cb == b {
+                    append_rows(sink, ActivationTap::AttnOut, &mix);
+                }
+            }
+            x = x.add(&attn_out);
+            let h2 = layer_norm(
+                &x,
+                self.weights.vector(&format!("{p}ln2.g"))?,
+                self.weights.vector(&format!("{p}ln2.b"))?,
+            );
+            if let Some((cb, sink)) = collect.as_mut() {
+                if *cb == b {
+                    append_rows(sink, ActivationTap::MlpIn, &h2);
+                }
+            }
+            let w1 = self.weights.matrix(&format!("{p}mlp.w1"))?;
+            let mut hidden = matmul(&h2, &w1);
+            hidden.data.iter_mut().for_each(|v| *v = gelu(*v));
+            if let Some((cb, sink)) = collect.as_mut() {
+                if *cb == b {
+                    append_rows(sink, ActivationTap::MlpHidden, &hidden);
+                }
+            }
+            let w2 = self.weights.matrix(&format!("{p}mlp.w2"))?;
+            x = x.add(&matmul(&hidden, &w2));
+        }
+        Ok(layer_norm(
+            &x,
+            self.weights.vector("ln_f.g")?,
+            self.weights.vector("ln_f.b")?,
+        ))
+    }
+
+    /// Logits [seq, vocab] (tied unembedding).
+    pub fn logits(&self, ids: &[u16]) -> Result<Matrix> {
+        let hidden = self.forward_hidden(ids, None)?;
+        let emb = self.weights.matrix("tok_emb")?;
+        Ok(matmul(&hidden, &emb.transpose()))
+    }
+
+    /// Per-position next-token NLL (natural log), length ids.len()-1.
+    pub fn nll(&self, ids: &[u16]) -> Result<Vec<f64>> {
+        let logits = self.logits(ids)?;
+        let mut out = Vec::with_capacity(ids.len() - 1);
+        for t in 0..ids.len() - 1 {
+            let row = logits.row(t);
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+            let lse: f64 =
+                row.iter().map(|v| ((*v as f64) - max).exp()).sum::<f64>().ln() + max;
+            let tgt = row[ids[t + 1] as usize] as f64;
+            out.push(lse - tgt);
+        }
+        Ok(out)
+    }
+
+    /// Run sequences collecting the prunable-layer inputs of `block`.
+    pub fn forward_collect(&self, seqs: &[Vec<u16>], block: usize) -> Result<BlockInputs> {
+        let mut sink = BlockInputs::default();
+        for ids in seqs {
+            self.forward_hidden(ids, Some((block, &mut sink)))?;
+        }
+        Ok(sink)
+    }
+
+    /// Names of all prunable matrices.
+    pub fn prunable_names(&self) -> Vec<String> {
+        (0..self.cfg.n_layers)
+            .flat_map(|i| super::prunable_layers(i).into_iter().map(|(n, _)| n))
+            .collect()
+    }
+}
+
+fn append_rows(sink: &mut BlockInputs, tap: ActivationTap, m: &Matrix) {
+    let entry = sink
+        .taps
+        .entry(tap)
+        .or_insert_with(|| Matrix::zeros(0, m.cols));
+    debug_assert_eq!(entry.cols, m.cols);
+    entry.data.extend_from_slice(&m.data);
+    entry.rows += m.rows;
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::model::weights::Tensor;
+    use crate::util::Rng;
+
+    /// Tiny random model for unit tests.
+    pub fn random_model(seed: u64) -> Model {
+        let cfg = ModelConfig {
+            name: "test".into(),
+            d_model: 16,
+            d_ff: 32,
+            n_layers: 2,
+            n_heads: 4,
+            vocab: 24,
+            seq_len: 12,
+        };
+        let mut rng = Rng::new(seed);
+        let mut w = Weights::default();
+        let mut add2 = |w: &mut Weights, name: &str, r: usize, c: usize, rng: &mut Rng| {
+            let scale = 1.0 / (r as f32).sqrt();
+            let data: Vec<f32> = rng.gaussian_vec(r * c).iter().map(|v| v * scale).collect();
+            w.order.push(name.to_string());
+            w.tensors.insert(name.to_string(), Tensor { shape: vec![r, c], data });
+        };
+        let add1 = |w: &mut Weights, name: &str, n: usize, val: f32| {
+            w.order.push(name.to_string());
+            w.tensors.insert(name.to_string(), Tensor { shape: vec![n], data: vec![val; n] });
+        };
+        add2(&mut w, "tok_emb", cfg.vocab, cfg.d_model, &mut rng);
+        add2(&mut w, "pos_emb", cfg.seq_len, cfg.d_model, &mut rng);
+        for i in 0..cfg.n_layers {
+            let p = format!("blocks.{i}.");
+            add1(&mut w, &format!("{p}ln1.g"), cfg.d_model, 1.0);
+            add1(&mut w, &format!("{p}ln1.b"), cfg.d_model, 0.0);
+            add2(&mut w, &format!("{p}attn.wq"), cfg.d_model, cfg.d_model, &mut rng);
+            add2(&mut w, &format!("{p}attn.wk"), cfg.d_model, cfg.d_model, &mut rng);
+            add2(&mut w, &format!("{p}attn.wv"), cfg.d_model, cfg.d_model, &mut rng);
+            add2(&mut w, &format!("{p}attn.wo"), cfg.d_model, cfg.d_model, &mut rng);
+            add1(&mut w, &format!("{p}ln2.g"), cfg.d_model, 1.0);
+            add1(&mut w, &format!("{p}ln2.b"), cfg.d_model, 0.0);
+            add2(&mut w, &format!("{p}mlp.w1"), cfg.d_model, cfg.d_ff, &mut rng);
+            add2(&mut w, &format!("{p}mlp.w2"), cfg.d_ff, cfg.d_model, &mut rng);
+        }
+        add1(&mut w, "ln_f.g", cfg.d_model, 1.0);
+        add1(&mut w, "ln_f.b", cfg.d_model, 0.0);
+        Model::new(cfg, w).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::random_model;
+    use super::*;
+
+    #[test]
+    fn logits_shape() {
+        let m = random_model(0);
+        let logits = m.logits(&[1, 2, 3, 4]).unwrap();
+        assert_eq!((logits.rows, logits.cols), (4, 24));
+    }
+
+    #[test]
+    fn nll_positive_and_near_uniform_for_random_weights() {
+        let m = random_model(1);
+        let nll = m.nll(&[0, 5, 9, 3, 7, 2]).unwrap();
+        assert_eq!(nll.len(), 5);
+        let mean: f64 = nll.iter().sum::<f64>() / nll.len() as f64;
+        assert!(mean > 0.0);
+        assert!((mean - (24f64).ln()).abs() < 1.5, "mean nll {mean}");
+    }
+
+    #[test]
+    fn causality() {
+        // changing a later token must not affect earlier logits
+        let m = random_model(2);
+        let a = m.logits(&[1, 2, 3, 4, 5]).unwrap();
+        let b = m.logits(&[1, 2, 3, 9, 9]).unwrap();
+        for t in 0..3 {
+            for c in 0..24 {
+                assert!((a.at(t, c) - b.at(t, c)).abs() < 1e-4, "t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn collect_taps_shapes() {
+        let m = random_model(3);
+        let seqs = vec![vec![1u16, 2, 3, 4], vec![5, 6, 7, 8]];
+        let s = m.forward_collect(&seqs, 1).unwrap();
+        let attn = &s.taps[&ActivationTap::AttnIn];
+        assert_eq!((attn.rows, attn.cols), (8, 16));
+        let hid = &s.taps[&ActivationTap::MlpHidden];
+        assert_eq!((hid.rows, hid.cols), (8, 32));
+        assert_eq!(s.taps.len(), 4);
+    }
+
+    #[test]
+    fn rejects_oversized_sequence() {
+        let m = random_model(4);
+        let ids: Vec<u16> = (0..13).map(|i| i as u16).collect();
+        assert!(m.logits(&ids).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_vocab() {
+        let m = random_model(5);
+        assert!(m.logits(&[0, 200]).is_err());
+    }
+
+    #[test]
+    fn zeroing_weights_changes_output() {
+        let mut m = random_model(6);
+        let before = m.nll(&[1, 2, 3, 4, 5, 6]).unwrap();
+        let name = "blocks.0.mlp.w1";
+        let z = Matrix::zeros(16, 32);
+        m.weights.set_matrix(name, &z).unwrap();
+        let after = m.nll(&[1, 2, 3, 4, 5, 6]).unwrap();
+        assert!(before.iter().zip(&after).any(|(a, b)| (a - b).abs() > 1e-6));
+    }
+
+    #[test]
+    fn prunable_names_count() {
+        let m = random_model(7);
+        assert_eq!(m.prunable_names().len(), 2 * 6);
+    }
+
+    #[test]
+    fn gelu_matches_reference_points() {
+        // values from jax.nn.gelu (tanh approximation)
+        assert!((gelu(0.0) - 0.0).abs() < 1e-6);
+        assert!((gelu(1.0) - 0.841_192).abs() < 1e-4);
+        assert!((gelu(-1.0) - (-0.158_808)).abs() < 1e-4);
+        assert!((gelu(3.0) - 2.995_9).abs() < 1e-3);
+    }
+}

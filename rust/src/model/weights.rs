@@ -1,0 +1,235 @@
+//! ALPSMDL1 binary weight IO — the format written by
+//! `python/compile/pretrain.py` (see its docstring for the layout).
+
+use crate::linalg::Matrix;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// A named tensor (1-D or 2-D).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// View as a matrix (2-D tensors only).
+    pub fn as_matrix(&self) -> Result<Matrix> {
+        if self.shape.len() != 2 {
+            bail!("tensor is {}-D, expected 2-D", self.shape.len());
+        }
+        Ok(Matrix::from_vec(self.shape[0], self.shape[1], self.data.clone()))
+    }
+
+    pub fn from_matrix(m: &Matrix) -> Tensor {
+        Tensor { shape: vec![m.rows, m.cols], data: m.data.clone() }
+    }
+}
+
+/// Ordered named tensors (order preserved for the model_fwd artifact's
+/// positional parameters).
+#[derive(Clone, Debug, Default)]
+pub struct Weights {
+    pub order: Vec<String>,
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Weights {
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("missing tensor '{name}'"))
+    }
+
+    pub fn matrix(&self, name: &str) -> Result<Matrix> {
+        self.get(name)?.as_matrix()
+    }
+
+    pub fn vector(&self, name: &str) -> Result<&[f32]> {
+        let t = self.get(name)?;
+        if t.shape.len() != 1 {
+            bail!("tensor '{name}' is {}-D, expected 1-D", t.shape.len());
+        }
+        Ok(&t.data)
+    }
+
+    pub fn set_matrix(&mut self, name: &str, m: &Matrix) -> Result<()> {
+        let t = self
+            .tensors
+            .get_mut(name)
+            .with_context(|| format!("missing tensor '{name}'"))?;
+        if t.shape != [m.rows, m.cols] {
+            bail!("shape mismatch for '{name}': {:?} vs {}x{}", t.shape, m.rows, m.cols);
+        }
+        t.data = m.data.clone();
+        Ok(())
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.values().map(Tensor::numel).sum()
+    }
+
+    /// Overall fraction of exactly-zero weights in the named matrices.
+    pub fn sparsity_of(&self, names: &[String]) -> f64 {
+        let mut zeros = 0usize;
+        let mut total = 0usize;
+        for n in names {
+            if let Some(t) = self.tensors.get(n) {
+                zeros += t.data.iter().filter(|v| **v == 0.0).count();
+                total += t.data.len();
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            zeros as f64 / total as f64
+        }
+    }
+
+    /// Load from the ALPSMDL1 binary format.
+    pub fn load(path: &Path) -> Result<Weights> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening weights {path:?}"))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != b"ALPSMDL1" {
+            bail!("bad magic in {path:?}: {magic:?}");
+        }
+        let n_tensors = read_u32(&mut f)? as usize;
+        let mut w = Weights::default();
+        for _ in 0..n_tensors {
+            let name = read_string(&mut f)?;
+            let ndim = read_u32(&mut f)? as usize;
+            if ndim > 4 {
+                bail!("tensor '{name}' has suspicious ndim {ndim}");
+            }
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u32(&mut f)? as usize);
+            }
+            let numel: usize = shape.iter().product();
+            let mut buf = vec![0u8; numel * 4];
+            f.read_exact(&mut buf)?;
+            let data: Vec<f32> = buf
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            w.order.push(name.clone());
+            w.tensors.insert(name, Tensor { shape, data });
+        }
+        Ok(w)
+    }
+
+    /// Save in the same format (pruned-model checkpoints).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {path:?}"))?;
+        f.write_all(b"ALPSMDL1")?;
+        f.write_all(&(self.order.len() as u32).to_le_bytes())?;
+        for name in &self.order {
+            let t = self.get(name)?;
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for &d in &t.shape {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            let mut buf = Vec::with_capacity(t.data.len() * 4);
+            for v in &t.data {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            f.write_all(&buf)?;
+        }
+        Ok(())
+    }
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_string(f: &mut impl Read) -> Result<String> {
+    let len = read_u32(f)? as usize;
+    if len > 4096 {
+        bail!("suspicious string length {len}");
+    }
+    let mut b = vec![0u8; len];
+    f.read_exact(&mut b)?;
+    Ok(String::from_utf8(b)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_weights() -> Weights {
+        let mut w = Weights::default();
+        w.order.push("a".into());
+        w.tensors.insert(
+            "a".into(),
+            Tensor { shape: vec![2, 3], data: vec![1., 2., 3., 4., 5., 0.] },
+        );
+        w.order.push("b.g".into());
+        w.tensors.insert("b.g".into(), Tensor { shape: vec![4], data: vec![1.; 4] });
+        w
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("alps_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("w.bin");
+        let w = sample_weights();
+        w.save(&p).unwrap();
+        let r = Weights::load(&p).unwrap();
+        assert_eq!(r.order, w.order);
+        assert_eq!(r.tensors, w.tensors);
+    }
+
+    #[test]
+    fn matrix_and_vector_accessors() {
+        let w = sample_weights();
+        let m = w.matrix("a").unwrap();
+        assert_eq!((m.rows, m.cols), (2, 3));
+        assert_eq!(w.vector("b.g").unwrap(), &[1.0; 4]);
+        assert!(w.matrix("b.g").is_err());
+        assert!(w.vector("a").is_err());
+        assert!(w.get("missing").is_err());
+    }
+
+    #[test]
+    fn set_matrix_validates_shape() {
+        let mut w = sample_weights();
+        assert!(w.set_matrix("a", &Matrix::zeros(2, 3)).is_ok());
+        assert!(w.set_matrix("a", &Matrix::zeros(3, 2)).is_err());
+    }
+
+    #[test]
+    fn sparsity_computation() {
+        let w = sample_weights();
+        let s = w.sparsity_of(&["a".to_string()]);
+        assert!((s - 1.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("alps_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, b"NOTMAGIC____").unwrap();
+        assert!(Weights::load(&p).is_err());
+    }
+
+    #[test]
+    fn total_params() {
+        assert_eq!(sample_weights().total_params(), 10);
+    }
+}

@@ -1,0 +1,315 @@
+//! ALPS — the paper's contribution: ADMM (Algorithm 1) with the eq.-28
+//! rho-update scheme, followed by PCG refinement (Algorithm 2) on the
+//! stabilized support. This module is the *native* path (pure rust); the
+//! runtime path executes the identical math from AOT HLO artifacts
+//! (`runtime::executor`) — integration tests pin the two against each other.
+
+use super::projection;
+use super::{LayerProblem, PruneMethod};
+use crate::config::{AlpsConfig, SparsityTarget};
+use crate::linalg::solve::pcg_support;
+use crate::linalg::{Matrix, SymEig};
+use anyhow::Result;
+
+/// ALPS pruner (ADMM + rho scheme + PCG post-processing).
+#[derive(Default)]
+pub struct Alps {
+    pub cfg: AlpsConfig,
+}
+
+/// Diagnostics from one ALPS solve.
+#[derive(Debug, Clone)]
+pub struct AlpsTrace {
+    pub admm_iters: usize,
+    pub final_rho: f32,
+    pub support_changes: Vec<usize>,
+    /// ||W - D||_F per rho-update checkpoint (Theorem 1 residual).
+    pub primal_gaps: Vec<f64>,
+    pub pcg_iters: usize,
+}
+
+/// B.1 preprocessing: E = diag(H)^{-1/2}; work in W' = E^{-1} W where the
+/// scaled gram E H E has unit diagonal.
+pub struct DiagScaling {
+    pub e: Vec<f32>, // E diagonal entries
+}
+
+impl DiagScaling {
+    pub fn from_gram(h: &Matrix, damp: f32) -> (Self, Matrix) {
+        let n = h.rows;
+        let mean_diag: f32 = h.diag().iter().sum::<f32>() / n as f32;
+        let floor = (damp * mean_diag).max(1e-12);
+        let e: Vec<f32> = (0..n)
+            .map(|i| 1.0 / (h.at(i, i) + floor).sqrt())
+            .collect();
+        let mut hs = h.clone();
+        for r in 0..n {
+            for c in 0..n {
+                *hs.at_mut(r, c) *= e[r] * e[c];
+            }
+            // damping keeps degenerate grams positive definite
+            *hs.at_mut(r, r) += damp;
+        }
+        (DiagScaling { e }, hs)
+    }
+
+    /// W' = E^{-1} W (scale rows by 1/e).
+    pub fn to_scaled(&self, w: &Matrix) -> Matrix {
+        let mut out = w.clone();
+        for (r, &er) in self.e.iter().enumerate() {
+            out.scale_row(r, 1.0 / er);
+        }
+        out
+    }
+
+    /// W = E W' (scale rows by e).
+    pub fn to_unscaled(&self, w: &Matrix) -> Matrix {
+        let mut out = w.clone();
+        for (r, &er) in self.e.iter().enumerate() {
+            out.scale_row(r, er);
+        }
+        out
+    }
+
+    /// G' = E (H What)   (the scaled-problem right-hand side).
+    pub fn scale_g(&self, g: &Matrix) -> Matrix {
+        self.to_unscaled(g) // same operation: multiply rows by e
+    }
+}
+
+/// Eq. 28 rho update given the support change s_t and budget k.
+pub fn rho_update(rho: f32, s_t: usize, k: usize, cfg: &AlpsConfig) -> f32 {
+    let (f_big, f_mid, f_small) = cfg.rho_factors;
+    let (band_big, band_mid) = cfg.support_bands;
+    if (s_t as f64) >= band_big * k as f64 {
+        rho * f_big
+    } else if (s_t as f64) >= band_mid * k as f64 {
+        rho * f_mid
+    } else if s_t >= 1 {
+        rho * f_small
+    } else {
+        rho
+    }
+}
+
+impl Alps {
+    pub fn with_config(cfg: AlpsConfig) -> Self {
+        Alps { cfg }
+    }
+
+    /// Run ALPS, returning the pruned weights and diagnostics.
+    pub fn prune_traced(
+        &self,
+        problem: &LayerProblem,
+        target: SparsityTarget,
+    ) -> Result<(Matrix, AlpsTrace)> {
+        let cfg = &self.cfg;
+        let n_in = problem.n_in();
+        let n_out = problem.n_out();
+        let k = target.keep_count(n_in, n_out);
+
+        // ---- B.1 preprocessing
+        let (scaling, hs) = if cfg.diag_scaling {
+            DiagScaling::from_gram(&problem.h, cfg.damp)
+        } else {
+            (
+                DiagScaling { e: vec![1.0; n_in] },
+                {
+                    let mut h = problem.h.clone();
+                    let mean_diag: f32 = h.diag().iter().sum::<f32>() / n_in as f32;
+                    for i in 0..n_in {
+                        *h.at_mut(i, i) += cfg.damp * mean_diag;
+                    }
+                    h
+                },
+            )
+        };
+        let gs = scaling.scale_g(&problem.g);
+        let whats = scaling.to_scaled(&problem.what);
+
+        // ---- cached eigendecomposition of the scaled gram
+        let eig = SymEig::new(&hs)?;
+
+        // ---- ADMM loop (Algorithm 1)
+        let mut d = whats.clone();
+        let mut v = Matrix::zeros(n_in, n_out);
+        let mut rho = cfg.rho0;
+        let mut t = 0usize;
+        let mut prev_supp = d.support_mask();
+        let mut trace = AlpsTrace {
+            admm_iters: 0,
+            final_rho: rho,
+            support_changes: Vec::new(),
+            primal_gaps: Vec::new(),
+            pcg_iters: 0,
+        };
+        let mut w = whats.clone();
+
+        while t < cfg.max_iters {
+            for _ in 0..cfg.update_every {
+                // W-update: (H + rho I)^{-1} (G - V + rho D)
+                let mut b = gs.sub(&v);
+                b.axpy(rho, &d);
+                w = eig.ridge_solve(rho, &b);
+                // D-update: project W + V/rho
+                let mut z = w.clone();
+                z.axpy(1.0 / rho, &v);
+                d = match target {
+                    SparsityTarget::Unstructured(_) => projection::topk_project(&z, k),
+                    SparsityTarget::NM { n, m } => projection::nm_project(&z, n, m),
+                };
+                // V-update
+                let mut wd = w.sub(&d);
+                wd = wd.scale(rho);
+                v = v.add(&wd);
+                t += 1;
+            }
+            let supp = d.support_mask();
+            let s_t = supp
+                .data
+                .iter()
+                .zip(&prev_supp.data)
+                .filter(|(a, b)| a != b)
+                .count();
+            prev_supp = supp;
+            trace.support_changes.push(s_t);
+            trace.primal_gaps.push(w.sub(&d).fro_norm() as f64);
+            if s_t == 0 {
+                break;
+            }
+            rho = rho_update(rho, s_t, k, cfg);
+        }
+        trace.admm_iters = t;
+        trace.final_rho = rho;
+
+        // ---- PCG refinement (Algorithm 2) on the frozen support
+        let mask = d.support_mask();
+        let (w_refined, info) =
+            pcg_support(&hs, &gs, &d, &mask, cfg.pcg_iters, 1e-12);
+        trace.pcg_iters = info.iters;
+
+        Ok((scaling.to_unscaled(&w_refined), trace))
+    }
+}
+
+impl PruneMethod for Alps {
+    fn name(&self) -> &'static str {
+        "alps"
+    }
+
+    fn prune(&self, problem: &LayerProblem, target: SparsityTarget) -> Result<Matrix> {
+        Ok(self.prune_traced(problem, target)?.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::magnitude::MagnitudePruning;
+    use crate::pruning::sparsegpt::SparseGpt;
+    use crate::pruning::testutil::random_problem;
+    use crate::pruning::{check_target, wanda::Wanda};
+
+    #[test]
+    fn respects_budget() {
+        let p = random_problem(24, 12, 90, 0);
+        let t = SparsityTarget::Unstructured(0.7);
+        let w = Alps::default().prune(&p, t).unwrap();
+        assert!(w.nnz() <= t.keep_count(24, 12));
+    }
+
+    #[test]
+    fn respects_nm_pattern() {
+        let p = random_problem(16, 8, 64, 1);
+        let t = SparsityTarget::NM { n: 2, m: 4 };
+        let w = Alps::default().prune(&p, t).unwrap();
+        assert!(check_target(&w, t));
+    }
+
+    #[test]
+    fn beats_all_baselines_at_high_sparsity() {
+        // the paper's headline: ALPS wins, gap widens at high sparsity
+        let p = random_problem(32, 16, 128, 2);
+        let t = SparsityTarget::Unstructured(0.7);
+        let e_alps = p.rel_error(&Alps::default().prune(&p, t).unwrap());
+        let e_mp = p.rel_error(&MagnitudePruning.prune(&p, t).unwrap());
+        let e_wanda = p.rel_error(&Wanda.prune(&p, t).unwrap());
+        let e_sg = p.rel_error(&SparseGpt::default().prune(&p, t).unwrap());
+        assert!(e_alps < e_mp, "alps {e_alps} !< mp {e_mp}");
+        assert!(e_alps < e_wanda, "alps {e_alps} !< wanda {e_wanda}");
+        assert!(e_alps < e_sg * 1.05, "alps {e_alps} !< sparsegpt {e_sg}");
+    }
+
+    #[test]
+    fn rho_update_bands() {
+        let cfg = AlpsConfig::default();
+        let k = 1000;
+        assert!((rho_update(1.0, 200, k, &cfg) - 1.3).abs() < 1e-6);
+        assert!((rho_update(1.0, 50, k, &cfg) - 1.2).abs() < 1e-6);
+        assert!((rho_update(1.0, 2, k, &cfg) - 1.1).abs() < 1e-6);
+        assert!((rho_update(1.0, 0, k, &cfg) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn terminates_with_stable_support() {
+        let p = random_problem(20, 10, 70, 3);
+        let (_, trace) = Alps::default()
+            .prune_traced(&p, SparsityTarget::Unstructured(0.6))
+            .unwrap();
+        assert!(trace.admm_iters < AlpsConfig::default().max_iters);
+        assert_eq!(*trace.support_changes.last().unwrap(), 0);
+    }
+
+    #[test]
+    fn theorem1_primal_gap_shrinks() {
+        let p = random_problem(20, 10, 70, 4);
+        let (_, trace) = Alps::default()
+            .prune_traced(&p, SparsityTarget::Unstructured(0.5))
+            .unwrap();
+        let gaps = &trace.primal_gaps;
+        assert!(gaps.len() >= 2);
+        // final gap well below the initial gap (W(t) -> D(t))
+        assert!(
+            gaps.last().unwrap() < &(0.5 * gaps[0] + 1e-6),
+            "gaps: {gaps:?}"
+        );
+    }
+
+    #[test]
+    fn scaling_roundtrip() {
+        let p = random_problem(10, 5, 40, 5);
+        let (s, _) = DiagScaling::from_gram(&p.h, 0.01);
+        let w = p.what.clone();
+        let back = s.to_unscaled(&s.to_scaled(&w));
+        assert!(back.max_abs_diff(&w) < 1e-4);
+    }
+
+    #[test]
+    fn scaled_gram_unit_diagonal() {
+        let p = random_problem(10, 5, 40, 6);
+        let (_, hs) = DiagScaling::from_gram(&p.h, 0.0);
+        for i in 0..10 {
+            assert!((hs.at(i, i) - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn no_scaling_variant_still_works() {
+        let p = random_problem(16, 8, 60, 7);
+        let alps = Alps::with_config(AlpsConfig { diag_scaling: false, ..Default::default() });
+        let t = SparsityTarget::Unstructured(0.5);
+        let w = alps.prune(&p, t).unwrap();
+        assert!(w.nnz() <= t.keep_count(16, 8));
+        assert!(p.rel_error(&w) < 1.0);
+    }
+
+    #[test]
+    fn extreme_sparsity_ok() {
+        let p = random_problem(16, 8, 60, 8);
+        let w = Alps::default()
+            .prune(&p, SparsityTarget::Unstructured(0.95))
+            .unwrap();
+        assert!(w.nnz() >= 1);
+        assert!(w.nnz() <= SparsityTarget::Unstructured(0.95).keep_count(16, 8));
+    }
+}

@@ -1,0 +1,115 @@
+//! Backsolve: exact support-restricted least squares (problem (6)) via
+//! per-column dense Cholesky solves — the slow-but-optimal baseline of
+//! Table 1 (right) that PCG is benchmarked against.
+
+use super::LayerProblem;
+use crate::linalg::cholesky::Cholesky;
+use crate::linalg::Matrix;
+use anyhow::Result;
+
+/// Solve min ||X What - X W||_F^2 s.t. supp(W) ⊆ supp(mask), exactly:
+/// for every column j, invert the support submatrix H_SS and solve
+/// H_SS w_S = g_S. This is the "direct matrix inversion (backsolve)"
+/// approach of Sec. 3.3 — O(N_out) solves of size O(N_in).
+pub fn solve_on_support(problem: &LayerProblem, mask: &Matrix) -> Result<Matrix> {
+    solve_on_support_damped(problem, mask, 1e-6)
+}
+
+/// Backsolve with explicit diagonal damping (relative to mean diag).
+pub fn solve_on_support_damped(
+    problem: &LayerProblem,
+    mask: &Matrix,
+    damp_frac: f32,
+) -> Result<Matrix> {
+    let h = &problem.h;
+    let g = &problem.g;
+    let n_in = problem.n_in();
+    let n_out = problem.n_out();
+    assert_eq!((mask.rows, mask.cols), (n_in, n_out));
+
+    let mean_diag: f32 = h.diag().iter().sum::<f32>() / n_in as f32;
+    let damp = damp_frac * mean_diag;
+
+    let mut w = Matrix::zeros(n_in, n_out);
+    for j in 0..n_out {
+        let support: Vec<usize> = (0..n_in).filter(|&i| mask.at(i, j) != 0.0).collect();
+        let s = support.len();
+        if s == 0 {
+            continue;
+        }
+        let mut hs = Matrix::zeros(s, s);
+        for (a, &i) in support.iter().enumerate() {
+            for (b, &k) in support.iter().enumerate() {
+                *hs.at_mut(a, b) = h.at(i, k);
+            }
+            *hs.at_mut(a, a) += damp;
+        }
+        let gs: Vec<f32> = support.iter().map(|&i| g.at(i, j)).collect();
+        let ws = Cholesky::new(&hs)?.solve_vec(&gs);
+        for (a, &i) in support.iter().enumerate() {
+            *w.at_mut(i, j) = ws[a];
+        }
+    }
+    Ok(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SparsityTarget;
+    use crate::linalg::solve::pcg_support;
+    use crate::pruning::magnitude::MagnitudePruning;
+    use crate::pruning::testutil::random_problem;
+    use crate::pruning::PruneMethod;
+
+    #[test]
+    fn optimal_on_full_support_recovers_dense() {
+        let p = random_problem(12, 6, 50, 0);
+        let mask = Matrix::from_vec(12, 6, vec![1.0; 72]);
+        let w = solve_on_support(&p, &mask).unwrap();
+        assert!(p.rel_error(&w) < 1e-6);
+    }
+
+    #[test]
+    fn empty_support_gives_zero() {
+        let p = random_problem(8, 4, 40, 1);
+        let mask = Matrix::zeros(8, 4);
+        let w = solve_on_support(&p, &mask).unwrap();
+        assert_eq!(w.nnz(), 0);
+    }
+
+    #[test]
+    fn improves_masked_magnitude_weights() {
+        let p = random_problem(20, 10, 80, 2);
+        let t = SparsityTarget::Unstructured(0.6);
+        let w_mp = MagnitudePruning.prune(&p, t).unwrap();
+        let w_opt = solve_on_support(&p, &w_mp.support_mask()).unwrap();
+        assert!(p.rel_error(&w_opt) <= p.rel_error(&w_mp) + 1e-9);
+    }
+
+    #[test]
+    fn is_optimal_among_same_support() {
+        // PCG run to convergence must not beat the backsolve solution
+        let p = random_problem(16, 8, 64, 3);
+        let t = SparsityTarget::Unstructured(0.5);
+        let mask = MagnitudePruning.prune(&p, t).unwrap().support_mask();
+        let w_bs = solve_on_support_damped(&p, &mask, 0.0).unwrap();
+        let (w_pcg, _) = pcg_support(&p.h, &p.g, &Matrix::zeros(16, 8), &mask, 500, 1e-12);
+        assert!(p.rel_error(&w_bs) <= p.rel_error(&w_pcg) + 1e-6);
+        // ... and PCG must come close
+        assert!((p.rel_error(&w_pcg) - p.rel_error(&w_bs)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn support_respected() {
+        let p = random_problem(10, 5, 40, 4);
+        let t = SparsityTarget::Unstructured(0.7);
+        let mask = MagnitudePruning.prune(&p, t).unwrap().support_mask();
+        let w = solve_on_support(&p, &mask).unwrap();
+        for i in 0..w.data.len() {
+            if mask.data[i] == 0.0 {
+                assert_eq!(w.data[i], 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,71 @@
+//! Magnitude Pruning (MP, Han et al. 2015): keep the k largest |W| entries.
+
+use super::projection;
+use super::{LayerProblem, PruneMethod};
+use crate::config::SparsityTarget;
+use crate::linalg::Matrix;
+use anyhow::Result;
+
+/// Global magnitude pruning — the classic baseline.
+pub struct MagnitudePruning;
+
+impl PruneMethod for MagnitudePruning {
+    fn name(&self) -> &'static str {
+        "mp"
+    }
+
+    fn prune(&self, problem: &LayerProblem, target: SparsityTarget) -> Result<Matrix> {
+        Ok(projection::project(&problem.what, target))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::testutil::random_problem;
+    use crate::pruning::check_target;
+
+    #[test]
+    fn respects_unstructured_budget() {
+        let p = random_problem(16, 8, 64, 0);
+        let t = SparsityTarget::Unstructured(0.7);
+        let w = MagnitudePruning.prune(&p, t).unwrap();
+        assert_eq!(w.nnz(), t.keep_count(16, 8));
+        assert!(check_target(&w, t));
+    }
+
+    #[test]
+    fn respects_nm_budget() {
+        let p = random_problem(16, 8, 64, 1);
+        let t = SparsityTarget::NM { n: 2, m: 4 };
+        let w = MagnitudePruning.prune(&p, t).unwrap();
+        assert!(check_target(&w, t));
+    }
+
+    #[test]
+    fn kept_values_unchanged() {
+        let p = random_problem(12, 6, 50, 2);
+        let w = MagnitudePruning
+            .prune(&p, SparsityTarget::Unstructured(0.5))
+            .unwrap();
+        for i in 0..w.data.len() {
+            if w.data[i] != 0.0 {
+                assert_eq!(w.data[i], p.what.data[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn error_increases_with_sparsity() {
+        let p = random_problem(20, 10, 80, 3);
+        let mut prev = 0.0;
+        for s in [0.3, 0.5, 0.7, 0.9] {
+            let w = MagnitudePruning
+                .prune(&p, SparsityTarget::Unstructured(s))
+                .unwrap();
+            let e = p.rel_error(&w);
+            assert!(e >= prev - 1e-9, "sparsity {s}: {e} < {prev}");
+            prev = e;
+        }
+    }
+}

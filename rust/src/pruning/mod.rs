@@ -1,0 +1,225 @@
+//! One-shot layer-wise pruning methods.
+//!
+//! Every method consumes a [`LayerProblem`] (the dense weights plus the
+//! calibration gram matrix) and a [`SparsityTarget`], and returns a sparse
+//! weight matrix. ALPS is the paper's contribution; MP / Wanda / SparseGPT /
+//! DSnoT are the competing baselines reimplemented from their papers;
+//! `backsolve` is the exact support-restricted solver used by Table 1.
+
+pub mod alps;
+pub mod backsolve;
+pub mod dsnot;
+pub mod magnitude;
+pub mod projection;
+pub mod quantize;
+pub mod sparsegpt;
+pub mod structured;
+pub mod wanda;
+
+use crate::config::SparsityTarget;
+use crate::linalg::matmul::{gram, matmul};
+use crate::linalg::Matrix;
+use anyhow::{bail, Result};
+
+/// The layer-wise pruning problem (1): weights + calibration statistics.
+///
+/// Stores H = X^T X and G = H What rather than X itself — the
+/// reconstruction objective depends on X only through H:
+///   ||X What - X W||_F^2 = tr((What - W)^T H (What - W)).
+#[derive(Clone)]
+pub struct LayerProblem {
+    /// Dense weights What, [n_in, n_out].
+    pub what: Matrix,
+    /// Gram matrix H = X^T X, [n_in, n_in].
+    pub h: Matrix,
+    /// G = H @ What, [n_in, n_out] (cached).
+    pub g: Matrix,
+    /// tr(What^T H What) = ||X What||_F^2 (cached normalizer).
+    pub denom: f64,
+}
+
+impl LayerProblem {
+    /// Build from explicit activations X and dense weights.
+    pub fn from_activations(x: &Matrix, what: &Matrix) -> Result<Self> {
+        if x.cols != what.rows {
+            bail!("activation dim {} != weight n_in {}", x.cols, what.rows);
+        }
+        let h = gram(x);
+        Self::from_gram(h, what.clone())
+    }
+
+    /// Build from a precomputed gram matrix (the runtime path computes H on
+    /// the PJRT device and hands it over here).
+    pub fn from_gram(h: Matrix, what: Matrix) -> Result<Self> {
+        if h.rows != h.cols || h.rows != what.rows {
+            bail!("gram {}x{} incompatible with weights {}x{}", h.rows, h.cols, what.rows, what.cols);
+        }
+        let g = matmul(&h, &what);
+        let denom = what.dot(&g).max(1e-30);
+        Ok(LayerProblem { what, h, g, denom })
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.what.rows
+    }
+
+    pub fn n_out(&self) -> usize {
+        self.what.cols
+    }
+
+    /// Relative reconstruction error ||X What - X W||^2 / ||X What||^2,
+    /// computed from H (no X needed).
+    pub fn rel_error(&self, w: &Matrix) -> f64 {
+        let delta = self.what.sub(w);
+        let hd = matmul(&self.h, &delta);
+        (delta.dot(&hd) / self.denom).max(0.0)
+    }
+
+    /// Column norms of X (sqrt of diag(H)) — the Wanda activation statistic.
+    pub fn x_col_norms(&self) -> Vec<f32> {
+        self.h.diag().iter().map(|d| d.max(0.0).sqrt()).collect()
+    }
+}
+
+/// A one-shot pruning method.
+pub trait PruneMethod {
+    /// Short identifier used by the CLI and bench tables.
+    fn name(&self) -> &'static str;
+    /// Prune the layer to the target sparsity.
+    fn prune(&self, problem: &LayerProblem, target: SparsityTarget) -> Result<Matrix>;
+}
+
+/// All registered methods in paper order (MP, Wanda, SparseGPT, DSnoT, ALPS).
+pub fn all_methods() -> Vec<Box<dyn PruneMethod>> {
+    vec![
+        Box::new(magnitude::MagnitudePruning),
+        Box::new(wanda::Wanda),
+        Box::new(sparsegpt::SparseGpt::default()),
+        Box::new(dsnot::DsNoT::default()),
+        Box::new(alps::Alps::default()),
+    ]
+}
+
+/// Look up a method by CLI name.
+pub fn method_by_name(name: &str) -> Result<Box<dyn PruneMethod>> {
+    let m: Box<dyn PruneMethod> = match name {
+        "mp" | "magnitude" => Box::new(magnitude::MagnitudePruning),
+        "wanda" => Box::new(wanda::Wanda),
+        "sparsegpt" => Box::new(sparsegpt::SparseGpt::default()),
+        "dsnot" => Box::new(dsnot::DsNoT::default()),
+        "alps" => Box::new(alps::Alps::default()),
+        "alps-struct" => Box::new(structured::StructuredAlpsMethod(
+            structured::StructuredAlps::default(),
+        )),
+        _ => bail!("unknown method '{name}' (mp|wanda|sparsegpt|dsnot|alps|alps-struct)"),
+    };
+    Ok(m)
+}
+
+/// Check a weight matrix satisfies the sparsity target.
+pub fn check_target(w: &Matrix, target: SparsityTarget) -> bool {
+    match target {
+        SparsityTarget::Unstructured(_) => {
+            w.nnz() <= target.keep_count(w.rows, w.cols)
+        }
+        SparsityTarget::NM { n, m } => {
+            for c in 0..w.cols {
+                for g0 in (0..w.rows).step_by(m) {
+                    let nnz = (g0..(g0 + m).min(w.rows))
+                        .filter(|&r| w.at(r, c) != 0.0)
+                        .count();
+                    if nnz > n {
+                        return false;
+                    }
+                }
+            }
+            true
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Random layer problem with a mildly anisotropic X (so methods differ).
+    pub fn random_problem(n_in: usize, n_out: usize, rows: usize, seed: u64) -> LayerProblem {
+        let mut rng = Rng::new(seed);
+        let mut x = Matrix::randn(rows, n_in, &mut rng);
+        // anisotropy: scale feature columns by varying factors
+        for c in 0..n_in {
+            let s = 0.3 + 1.7 * ((c * 37 % n_in) as f32 / n_in as f32);
+            for r in 0..rows {
+                *x.at_mut(r, c) *= s;
+            }
+        }
+        let what = Matrix::randn(n_in, n_out, &mut rng);
+        LayerProblem::from_activations(&x, &what).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use testutil::random_problem;
+
+    #[test]
+    fn rel_error_zero_for_dense() {
+        let p = random_problem(16, 8, 60, 0);
+        assert!(p.rel_error(&p.what) < 1e-9);
+    }
+
+    #[test]
+    fn rel_error_one_for_zero() {
+        let p = random_problem(16, 8, 60, 1);
+        let z = Matrix::zeros(16, 8);
+        assert!((p.rel_error(&z) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn from_activations_validates_dims() {
+        let x = Matrix::zeros(10, 4);
+        let w = Matrix::zeros(5, 3);
+        assert!(LayerProblem::from_activations(&x, &w).is_err());
+    }
+
+    #[test]
+    fn registry_has_five_methods() {
+        let ms = all_methods();
+        let names: Vec<&str> = ms.iter().map(|m| m.name()).collect();
+        assert_eq!(names, vec!["mp", "wanda", "sparsegpt", "dsnot", "alps"]);
+    }
+
+    #[test]
+    fn method_lookup() {
+        assert!(method_by_name("alps").is_ok());
+        assert!(method_by_name("magnitude").is_ok());
+        assert!(method_by_name("???").is_err());
+    }
+
+    #[test]
+    fn check_target_unstructured() {
+        let mut w = Matrix::zeros(4, 4);
+        w.data[0] = 1.0;
+        w.data[5] = 1.0;
+        assert!(check_target(&w, SparsityTarget::Unstructured(0.8)));
+        assert!(!check_target(&w, SparsityTarget::Unstructured(0.95)));
+    }
+
+    #[test]
+    fn check_target_nm() {
+        let mut w = Matrix::zeros(4, 1);
+        w.data[0] = 1.0;
+        w.data[1] = 1.0;
+        assert!(check_target(&w, SparsityTarget::NM { n: 2, m: 4 }));
+        w.data[2] = 1.0;
+        assert!(!check_target(&w, SparsityTarget::NM { n: 2, m: 4 }));
+    }
+
+    #[test]
+    fn x_col_norms_positive() {
+        let p = random_problem(12, 4, 50, 2);
+        assert!(p.x_col_norms().iter().all(|&v| v > 0.0));
+    }
+}

@@ -1,0 +1,265 @@
+//! Projection operators: exact global top-k (P_k of eq. 4) and the N:M
+//! group projection — the rust mirrors of the Layer-1 kernels.
+
+use crate::config::SparsityTarget;
+use crate::linalg::Matrix;
+
+/// Exact Euclidean projection onto {||W||_0 <= k}: keep the k
+/// largest-magnitude entries (ties broken toward lower flat index, matching
+/// the stable argsort in the HLO graph).
+pub fn topk_project(w: &Matrix, k: usize) -> Matrix {
+    let total = w.data.len();
+    if k >= total {
+        return w.clone();
+    }
+    let mut out = Matrix::zeros(w.rows, w.cols);
+    if k == 0 {
+        return out;
+    }
+    // threshold = k-th largest |value| via quickselect
+    let mut mags: Vec<f32> = w.data.iter().map(|v| v.abs()).collect();
+    let idx = total - k; // after ascending partition, elements [idx..] are top-k
+    let (_, thresh, _) = mags.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
+    let thresh = *thresh;
+    // keep strictly-above first, then fill remaining budget with ties in
+    // flat-index order (stable tie-break)
+    let mut kept = 0usize;
+    for (i, &v) in w.data.iter().enumerate() {
+        if v.abs() > thresh {
+            out.data[i] = v;
+            kept += 1;
+        }
+    }
+    debug_assert!(kept <= k);
+    if kept < k {
+        for (i, &v) in w.data.iter().enumerate() {
+            if kept == k {
+                break;
+            }
+            if v.abs() == thresh && out.data[i] == 0.0 {
+                // note: a genuine stored 0.0 with |0|==thresh only happens
+                // when thresh==0, where keeping zeros is harmless
+                out.data[i] = v;
+                kept += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Support mask (0/1) of the top-k projection.
+pub fn topk_mask(w: &Matrix, k: usize) -> Matrix {
+    topk_project(w, k).support_mask()
+}
+
+/// N:M projection: within every group of `m` consecutive weights along the
+/// *input* dimension of each output column, keep the `n` largest magnitudes.
+pub fn nm_project(w: &Matrix, n: usize, m: usize) -> Matrix {
+    assert!(n <= m && m > 0, "bad N:M {n}:{m}");
+    assert_eq!(w.rows % m, 0, "n_in {} not divisible by M {}", w.rows, m);
+    let mut out = Matrix::zeros(w.rows, w.cols);
+    let mut order: Vec<usize> = Vec::with_capacity(m);
+    for c in 0..w.cols {
+        for g0 in (0..w.rows).step_by(m) {
+            order.clear();
+            order.extend(0..m);
+            // stable sort by descending magnitude, lower index wins ties
+            order.sort_by(|&a, &b| {
+                let ma = w.at(g0 + a, c).abs();
+                let mb = w.at(g0 + b, c).abs();
+                mb.partial_cmp(&ma).unwrap().then(a.cmp(&b))
+            });
+            for &o in order.iter().take(n) {
+                *out.at_mut(g0 + o, c) = w.at(g0 + o, c);
+            }
+        }
+    }
+    out
+}
+
+/// Project according to a [`SparsityTarget`].
+pub fn project(w: &Matrix, target: SparsityTarget) -> Matrix {
+    match target {
+        SparsityTarget::Unstructured(_) => {
+            topk_project(w, target.keep_count(w.rows, w.cols))
+        }
+        SparsityTarget::NM { n, m } => nm_project(w, n, m),
+    }
+}
+
+/// Project with per-entry scores instead of |value| (used by Wanda: the
+/// kept entries are the top-scoring, but the *values* come from `w`).
+/// `per_column`: selection group is each output column (Wanda's comparison
+/// group); otherwise global.
+pub fn project_by_score(
+    w: &Matrix,
+    scores: &Matrix,
+    target: SparsityTarget,
+    per_column: bool,
+) -> Matrix {
+    assert_eq!((w.rows, w.cols), (scores.rows, scores.cols));
+    match target {
+        SparsityTarget::NM { n, m } => {
+            // N:M by score
+            let mut out = Matrix::zeros(w.rows, w.cols);
+            for c in 0..w.cols {
+                for g0 in (0..w.rows).step_by(m) {
+                    let mut order: Vec<usize> = (0..m).collect();
+                    order.sort_by(|&a, &b| {
+                        scores
+                            .at(g0 + b, c)
+                            .partial_cmp(&scores.at(g0 + a, c))
+                            .unwrap()
+                            .then(a.cmp(&b))
+                    });
+                    for &o in order.iter().take(n) {
+                        *out.at_mut(g0 + o, c) = w.at(g0 + o, c);
+                    }
+                }
+            }
+            out
+        }
+        SparsityTarget::Unstructured(_) => {
+            let mut out = Matrix::zeros(w.rows, w.cols);
+            if per_column {
+                let keep_per_col =
+                    (target.keep_count(w.rows, w.cols) + w.cols - 1) / w.cols;
+                let keep_per_col = keep_per_col.min(w.rows);
+                for c in 0..w.cols {
+                    let mut order: Vec<usize> = (0..w.rows).collect();
+                    order.sort_by(|&a, &b| {
+                        scores.at(b, c).partial_cmp(&scores.at(a, c)).unwrap().then(a.cmp(&b))
+                    });
+                    for &r in order.iter().take(keep_per_col) {
+                        *out.at_mut(r, c) = w.at(r, c);
+                    }
+                }
+            } else {
+                let k = target.keep_count(w.rows, w.cols);
+                let mut order: Vec<usize> = (0..w.data.len()).collect();
+                order.sort_by(|&a, &b| {
+                    scores.data[b].partial_cmp(&scores.data[a]).unwrap().then(a.cmp(&b))
+                });
+                for &i in order.iter().take(k) {
+                    out.data[i] = w.data[i];
+                }
+            }
+            out
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn topk_exact_count() {
+        let mut rng = Rng::new(0);
+        let w = Matrix::randn(13, 7, &mut rng);
+        for k in [0usize, 1, 10, 45, 91] {
+            assert_eq!(topk_project(&w, k).nnz(), k);
+        }
+    }
+
+    #[test]
+    fn topk_keeps_largest() {
+        let w = Matrix::from_vec(2, 2, vec![3.0, -1.0, 0.5, -2.0]);
+        let p = topk_project(&w, 2);
+        assert_eq!(p.data, vec![3.0, 0.0, 0.0, -2.0]);
+    }
+
+    #[test]
+    fn topk_is_euclidean_projection_bruteforce() {
+        // property: among all k-sparse matrices, projection minimizes
+        // ||W - P||_F — verified by brute force over supports on 2x2
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let w = Matrix::randn(2, 2, &mut rng);
+            let p = topk_project(&w, 2);
+            let err_p = w.sub(&p).fro_norm_sq();
+            for s0 in 0..4 {
+                for s1 in (s0 + 1)..4 {
+                    let mut cand = Matrix::zeros(2, 2);
+                    cand.data[s0] = w.data[s0];
+                    cand.data[s1] = w.data[s1];
+                    assert!(w.sub(&cand).fro_norm_sq() >= err_p - 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn topk_ties_stable() {
+        let w = Matrix::from_vec(1, 4, vec![1.0, -1.0, 1.0, 1.0]);
+        let p = topk_project(&w, 2);
+        assert_eq!(p.data, vec![1.0, -1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn topk_k_geq_total_is_identity() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::randn(3, 3, &mut rng);
+        assert_eq!(topk_project(&w, 9), w);
+        assert_eq!(topk_project(&w, 100), w);
+    }
+
+    #[test]
+    fn nm_group_budget() {
+        let mut rng = Rng::new(3);
+        let w = Matrix::randn(16, 5, &mut rng);
+        let p = nm_project(&w, 2, 4);
+        for c in 0..5 {
+            for g0 in (0..16).step_by(4) {
+                let nnz = (g0..g0 + 4).filter(|&r| p.at(r, c) != 0.0).count();
+                assert!(nnz <= 2);
+            }
+        }
+        assert_eq!(p.nnz(), 16 * 5 / 2);
+    }
+
+    #[test]
+    fn nm_keeps_largest_in_group() {
+        let w = Matrix::from_vec(4, 1, vec![0.1, -5.0, 3.0, 0.2]);
+        let p = nm_project(&w, 2, 4);
+        assert_eq!(p.data, vec![0.0, -5.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn project_dispatches() {
+        let mut rng = Rng::new(4);
+        let w = Matrix::randn(8, 4, &mut rng);
+        let u = project(&w, SparsityTarget::Unstructured(0.75));
+        assert_eq!(u.nnz(), 8);
+        let nm = project(&w, SparsityTarget::NM { n: 1, m: 4 });
+        assert_eq!(nm.nnz(), 8);
+    }
+
+    #[test]
+    fn project_by_score_values_from_w() {
+        let w = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        // scores invert the magnitude ordering
+        let s = Matrix::from_vec(2, 2, vec![4.0, 3.0, 2.0, 1.0]);
+        let p = project_by_score(&w, &s, SparsityTarget::Unstructured(0.5), false);
+        assert_eq!(p.data, vec![1.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn project_by_score_per_column() {
+        let w = Matrix::from_vec(4, 2, vec![1., 10., 2., 20., 3., 30., 4., 40.]);
+        let s = w.clone();
+        let p = project_by_score(&w, &s, SparsityTarget::Unstructured(0.5), true);
+        // each column keeps its top 2
+        assert_eq!(p.col(0), vec![0.0, 0.0, 3.0, 4.0]);
+        assert_eq!(p.col(1), vec![0.0, 0.0, 30.0, 40.0]);
+    }
+
+    #[test]
+    fn project_by_score_nm() {
+        let w = Matrix::from_vec(4, 1, vec![1., 2., 3., 4.]);
+        let s = Matrix::from_vec(4, 1, vec![9., 1., 1., 8.]);
+        let p = project_by_score(&w, &s, SparsityTarget::NM { n: 2, m: 4 }, true);
+        assert_eq!(p.data, vec![1.0, 0.0, 0.0, 4.0]);
+    }
+}

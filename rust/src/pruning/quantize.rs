@@ -1,0 +1,168 @@
+//! Post-pruning quantization — the second future-work axis the paper's
+//! conclusion names ("extending ALPS to incorporate ... quantization").
+//!
+//! Symmetric per-output-channel int8 quantization of the *surviving*
+//! weights, with an optional PCG-style re-fit: after rounding, the scales
+//! are re-chosen to minimize the layer-wise reconstruction objective on
+//! the frozen support + codes (a 1-D least squares per column, exact).
+
+use super::LayerProblem;
+use crate::linalg::Matrix;
+
+/// A quantized sparse matrix: int8 codes + per-column scales + support.
+#[derive(Clone, Debug)]
+pub struct QuantizedWeights {
+    pub rows: usize,
+    pub cols: usize,
+    pub codes: Vec<i8>,
+    pub scales: Vec<f32>,
+}
+
+impl QuantizedWeights {
+    /// Symmetric per-column int8 quantization (scale = max|w| / 127).
+    pub fn quantize(w: &Matrix) -> QuantizedWeights {
+        let mut scales = vec![0.0f32; w.cols];
+        for c in 0..w.cols {
+            let maxabs = (0..w.rows)
+                .map(|r| w.at(r, c).abs())
+                .fold(0.0f32, f32::max);
+            scales[c] = if maxabs > 0.0 { maxabs / 127.0 } else { 1.0 };
+        }
+        let mut codes = vec![0i8; w.rows * w.cols];
+        for r in 0..w.rows {
+            for c in 0..w.cols {
+                let q = (w.at(r, c) / scales[c]).round();
+                codes[r * w.cols + c] = q.clamp(-127.0, 127.0) as i8;
+            }
+        }
+        QuantizedWeights { rows: w.rows, cols: w.cols, codes, scales }
+    }
+
+    pub fn dequantize(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                m.data[r * self.cols + c] =
+                    self.codes[r * self.cols + c] as f32 * self.scales[c];
+            }
+        }
+        m
+    }
+
+    /// Re-fit the per-column scales against the layer objective: for fixed
+    /// codes q_c, the optimal scale is argmin_s ||X what_c - s X q_c||^2
+    /// = (q_c^T g_c) / (q_c^T H q_c) — exact 1-D least squares using the
+    /// calibration gram (an ALPS-flavored touch no naive RTN quantizer has).
+    pub fn refit_scales(&mut self, problem: &LayerProblem) {
+        let h = &problem.h;
+        let g = &problem.g;
+        for c in 0..self.cols {
+            let q: Vec<f32> = (0..self.rows)
+                .map(|r| self.codes[r * self.cols + c] as f32)
+                .collect();
+            // qHq and qg
+            let hq = crate::linalg::matmul::matvec(h, &q);
+            let qhq: f64 = q.iter().zip(&hq).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+            let qg: f64 = (0..self.rows)
+                .map(|r| q[r] as f64 * g.at(r, c) as f64)
+                .sum();
+            if qhq > 1e-12 {
+                self.scales[c] = (qg / qhq) as f32;
+            }
+        }
+    }
+
+    /// Bits per weight counting only stored values (codes of the support
+    /// + one f32 scale per column), the usual compression accounting.
+    pub fn bits_per_weight(&self) -> f64 {
+        let nnz = self.codes.iter().filter(|c| **c != 0).count();
+        let bits = 8.0 * nnz as f64 + 32.0 * self.cols as f64;
+        bits / (self.rows * self.cols) as f64
+    }
+}
+
+/// Prune-then-quantize: quantize a pruned matrix and report the combined
+/// reconstruction error before/after scale re-fitting.
+pub fn prune_quantize_error(
+    problem: &LayerProblem,
+    pruned: &Matrix,
+) -> (f64, f64, QuantizedWeights) {
+    let mut q = QuantizedWeights::quantize(pruned);
+    let err_rtn = problem.rel_error(&q.dequantize());
+    q.refit_scales(problem);
+    let err_refit = problem.rel_error(&q.dequantize());
+    (err_rtn, err_refit, q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SparsityTarget;
+    use crate::pruning::alps::Alps;
+    use crate::pruning::testutil::random_problem;
+    use crate::pruning::PruneMethod;
+
+    #[test]
+    fn roundtrip_small_error() {
+        let p = random_problem(16, 8, 60, 0);
+        let q = QuantizedWeights::quantize(&p.what);
+        let deq = q.dequantize();
+        // int8 symmetric: max relative error per entry ~ 1/254 of col max
+        let err = deq.sub(&p.what).fro_norm() / p.what.fro_norm();
+        assert!(err < 0.01, "quant err {err}");
+    }
+
+    #[test]
+    fn zeros_stay_zero() {
+        let p = random_problem(16, 8, 60, 1);
+        let pruned = Alps::default()
+            .prune(&p, SparsityTarget::Unstructured(0.7))
+            .unwrap();
+        let q = QuantizedWeights::quantize(&pruned);
+        let deq = q.dequantize();
+        for i in 0..pruned.data.len() {
+            if pruned.data[i] == 0.0 {
+                assert_eq!(deq.data[i], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn refit_never_hurts() {
+        let p = random_problem(20, 10, 80, 2);
+        let pruned = Alps::default()
+            .prune(&p, SparsityTarget::Unstructured(0.6))
+            .unwrap();
+        let (err_rtn, err_refit, _) = prune_quantize_error(&p, &pruned);
+        assert!(err_refit <= err_rtn + 1e-9, "{err_refit} > {err_rtn}");
+    }
+
+    #[test]
+    fn codes_in_range() {
+        let p = random_problem(12, 6, 50, 3);
+        let q = QuantizedWeights::quantize(&p.what);
+        assert!(q.codes.iter().all(|c| (-127..=127).contains(&(*c as i32))));
+    }
+
+    #[test]
+    fn bits_per_weight_drops_with_sparsity() {
+        let p = random_problem(16, 8, 60, 4);
+        let dense_q = QuantizedWeights::quantize(&p.what);
+        let pruned = Alps::default()
+            .prune(&p, SparsityTarget::Unstructured(0.8))
+            .unwrap();
+        let sparse_q = QuantizedWeights::quantize(&pruned);
+        assert!(sparse_q.bits_per_weight() < dense_q.bits_per_weight());
+        assert!(sparse_q.bits_per_weight() < 8.0);
+    }
+
+    #[test]
+    fn scale_refit_uses_calibration() {
+        // on an anisotropic problem, refit scales differ from RTN scales
+        let p = random_problem(16, 4, 60, 5);
+        let mut q = QuantizedWeights::quantize(&p.what);
+        let before = q.scales.clone();
+        q.refit_scales(&p);
+        assert!(q.scales.iter().zip(&before).any(|(a, b)| (a - b).abs() > 1e-6));
+    }
+}

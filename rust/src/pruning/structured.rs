@@ -1,0 +1,212 @@
+//! Structured (input-neuron) pruning — the paper's stated future-work
+//! extension ("Future work will consider extending ALPS to incorporate
+//! structured pruning constraints").
+//!
+//! Here the ℓ0 constraint acts on *rows* of W (input neurons): at most
+//! `k_rows` rows may be non-zero, which removes entire input channels and
+//! needs no sparse hardware at all. The same operator-splitting template
+//! applies — only the projection changes: P_k projects onto the best
+//! `k_rows` rows by Euclidean row-norm of Z (the exact row-sparse
+//! projection), and the PCG refinement runs on the row-support.
+
+use super::{LayerProblem, PruneMethod};
+use crate::config::{AlpsConfig, SparsityTarget};
+use crate::linalg::solve::pcg_support;
+use crate::linalg::{Matrix, SymEig};
+use crate::pruning::alps::{rho_update, DiagScaling};
+use anyhow::Result;
+
+/// Project onto matrices with at most `k_rows` non-zero rows (exact:
+/// keep the rows with the largest L2 norms; ties to the lower index).
+pub fn row_project(z: &Matrix, k_rows: usize) -> Matrix {
+    let mut norms: Vec<(usize, f64)> = (0..z.rows)
+        .map(|r| {
+            let s: f64 = z.row(r).iter().map(|v| (*v as f64) * (*v as f64)).sum();
+            (r, s)
+        })
+        .collect();
+    norms.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    let mut out = Matrix::zeros(z.rows, z.cols);
+    for &(r, _) in norms.iter().take(k_rows) {
+        out.row_mut(r).copy_from_slice(z.row(r));
+    }
+    out
+}
+
+/// Row-structured magnitude baseline: keep the k_rows largest-norm rows
+/// of What, scored by ||w_r|| * ||x_r|| (Wanda-style activation weighting).
+pub fn structured_magnitude(problem: &LayerProblem, k_rows: usize) -> Matrix {
+    let norms = problem.x_col_norms();
+    let w = &problem.what;
+    let mut scored: Vec<(usize, f64)> = (0..w.rows)
+        .map(|r| {
+            let s: f64 = w.row(r).iter().map(|v| (*v as f64) * (*v as f64)).sum();
+            (r, s.sqrt() * norms[r] as f64)
+        })
+        .collect();
+    scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    let mut out = Matrix::zeros(w.rows, w.cols);
+    for &(r, _) in scored.iter().take(k_rows) {
+        out.row_mut(r).copy_from_slice(w.row(r));
+    }
+    out
+}
+
+/// ALPS with a row-structured constraint.
+pub struct StructuredAlps {
+    pub cfg: AlpsConfig,
+}
+
+impl Default for StructuredAlps {
+    fn default() -> Self {
+        StructuredAlps { cfg: AlpsConfig::default() }
+    }
+}
+
+impl StructuredAlps {
+    /// Prune so that at most `(1 - sparsity) * n_in` input rows survive.
+    pub fn prune_rows(&self, problem: &LayerProblem, sparsity: f64) -> Result<Matrix> {
+        let cfg = &self.cfg;
+        let n_in = problem.n_in();
+        let n_out = problem.n_out();
+        let k_rows = (((1.0 - sparsity) * n_in as f64).floor() as usize).max(1);
+
+        let (scaling, hs) = DiagScaling::from_gram(&problem.h, cfg.damp);
+        let gs = scaling.scale_g(&problem.g);
+        let whats = scaling.to_scaled(&problem.what);
+        let eig = SymEig::new(&hs)?;
+
+        let mut d = whats.clone();
+        let mut v = Matrix::zeros(n_in, n_out);
+        let mut rho = cfg.rho0;
+        let mut t = 0usize;
+        let mut prev_supp = d.support_mask();
+        // row-count budget expressed in weight units for the rho bands
+        let k_weights = k_rows * n_out;
+        while t < cfg.max_iters {
+            for _ in 0..cfg.update_every {
+                let mut b = gs.sub(&v);
+                b.axpy(rho, &d);
+                let w = eig.ridge_solve(rho, &b);
+                let mut z = w.clone();
+                z.axpy(1.0 / rho, &v);
+                d = row_project(&z, k_rows);
+                let mut wd = w.sub(&d);
+                wd = wd.scale(rho);
+                v = v.add(&wd);
+                t += 1;
+            }
+            let supp = d.support_mask();
+            let s_t = supp
+                .data
+                .iter()
+                .zip(&prev_supp.data)
+                .filter(|(a, b)| a != b)
+                .count();
+            prev_supp = supp;
+            if s_t == 0 {
+                break;
+            }
+            rho = rho_update(rho, s_t, k_weights, cfg);
+        }
+
+        let mask = d.support_mask();
+        let (w_refined, _) = pcg_support(&hs, &gs, &d, &mask, cfg.pcg_iters, 1e-12);
+        Ok(scaling.to_unscaled(&w_refined))
+    }
+}
+
+/// Adapter so structured ALPS can ride the PruneMethod registry: the
+/// SparsityTarget fraction is interpreted as a *row* fraction.
+pub struct StructuredAlpsMethod(pub StructuredAlps);
+
+impl PruneMethod for StructuredAlpsMethod {
+    fn name(&self) -> &'static str {
+        "alps-struct"
+    }
+
+    fn prune(&self, problem: &LayerProblem, target: SparsityTarget) -> Result<Matrix> {
+        match target {
+            SparsityTarget::Unstructured(s) => self.0.prune_rows(problem, s),
+            SparsityTarget::NM { .. } => {
+                anyhow::bail!("structured ALPS does not support N:M targets")
+            }
+        }
+    }
+}
+
+/// Count rows with any non-zero entry.
+pub fn nonzero_rows(w: &Matrix) -> usize {
+    (0..w.rows)
+        .filter(|&r| w.row(r).iter().any(|v| *v != 0.0))
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::testutil::random_problem;
+
+    #[test]
+    fn row_project_exact_row_count() {
+        let p = random_problem(12, 6, 50, 0);
+        for k in [1usize, 4, 8, 12] {
+            let out = row_project(&p.what, k);
+            assert_eq!(nonzero_rows(&out), k);
+        }
+    }
+
+    #[test]
+    fn row_project_keeps_largest_rows() {
+        let mut w = Matrix::zeros(3, 2);
+        w.row_mut(0).copy_from_slice(&[0.1, 0.1]);
+        w.row_mut(1).copy_from_slice(&[5.0, 5.0]);
+        w.row_mut(2).copy_from_slice(&[1.0, 1.0]);
+        let out = row_project(&w, 2);
+        assert_eq!(out.row(0), &[0.0, 0.0]);
+        assert_eq!(out.row(1), &[5.0, 5.0]);
+        assert_eq!(out.row(2), &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn structured_alps_respects_row_budget() {
+        let p = random_problem(20, 8, 80, 1);
+        let w = StructuredAlps::default().prune_rows(&p, 0.5).unwrap();
+        assert!(nonzero_rows(&w) <= 10);
+    }
+
+    #[test]
+    fn structured_alps_beats_structured_magnitude() {
+        let p = random_problem(24, 12, 100, 2);
+        let sparsity = 0.5;
+        let k_rows = 12;
+        let w_alps = StructuredAlps::default().prune_rows(&p, sparsity).unwrap();
+        let w_mag = structured_magnitude(&p, k_rows);
+        assert!(
+            p.rel_error(&w_alps) < p.rel_error(&w_mag),
+            "alps-struct {} !< struct-mp {}",
+            p.rel_error(&w_alps),
+            p.rel_error(&w_mag)
+        );
+    }
+
+    #[test]
+    fn structured_is_harder_than_unstructured() {
+        // at equal weight budget, a row constraint cannot do better
+        let p = random_problem(20, 10, 80, 3);
+        let s = 0.5;
+        let w_struct = StructuredAlps::default().prune_rows(&p, s).unwrap();
+        let w_free = crate::pruning::alps::Alps::default()
+            .prune(&p, SparsityTarget::Unstructured(s))
+            .unwrap();
+        assert!(p.rel_error(&w_struct) >= p.rel_error(&w_free) * 0.99);
+    }
+
+    #[test]
+    fn method_adapter_rejects_nm() {
+        let p = random_problem(8, 4, 40, 4);
+        let m = StructuredAlpsMethod(StructuredAlps::default());
+        assert!(m.prune(&p, SparsityTarget::NM { n: 2, m: 4 }).is_err());
+        assert!(m.prune(&p, SparsityTarget::Unstructured(0.5)).is_ok());
+    }
+}

@@ -1,0 +1,103 @@
+//! Wanda (Sun et al. 2023): prune by |W_ij| * ||X_:,i||_2 with per-output
+//! comparison groups — no weight update, just a better importance score.
+
+use super::projection;
+use super::{LayerProblem, PruneMethod};
+use crate::config::SparsityTarget;
+use crate::linalg::Matrix;
+use anyhow::Result;
+
+/// Wanda: weights AND activations.
+pub struct Wanda;
+
+impl Wanda {
+    /// Score matrix S_ij = |W_ij| * ||X_:,i||_2.
+    pub fn scores(problem: &LayerProblem) -> Matrix {
+        let norms = problem.x_col_norms();
+        let w = &problem.what;
+        let mut s = Matrix::zeros(w.rows, w.cols);
+        for r in 0..w.rows {
+            let nr = norms[r];
+            for c in 0..w.cols {
+                *s.at_mut(r, c) = w.at(r, c).abs() * nr;
+            }
+        }
+        s
+    }
+}
+
+impl PruneMethod for Wanda {
+    fn name(&self) -> &'static str {
+        "wanda"
+    }
+
+    fn prune(&self, problem: &LayerProblem, target: SparsityTarget) -> Result<Matrix> {
+        let scores = Self::scores(problem);
+        // Wanda's comparison group: weights feeding the same output
+        Ok(projection::project_by_score(&problem.what, &scores, target, true))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::pruning::check_target;
+    use crate::pruning::testutil::random_problem;
+    use crate::pruning::LayerProblem;
+    use crate::util::Rng;
+
+    #[test]
+    fn respects_budget() {
+        let p = random_problem(16, 8, 64, 0);
+        let t = SparsityTarget::Unstructured(0.6);
+        let w = Wanda.prune(&p, t).unwrap();
+        assert!(w.nnz() <= t.keep_count(16, 8) + 8); // per-column rounding
+        assert!(check_target(&w, SparsityTarget::Unstructured(0.5)));
+    }
+
+    #[test]
+    fn equals_mp_when_x_isotropic() {
+        // if all feature norms are equal, Wanda's score reduces to |W| and
+        // per-column selection matches per-column MP
+        let mut rng = Rng::new(1);
+        let n = 8;
+        let x = Matrix::identity(n).scale(2.0); // all col norms = 2
+        let what = Matrix::randn(n, 4, &mut rng);
+        let p = LayerProblem::from_activations(&x, &what).unwrap();
+        let ww = Wanda.prune(&p, SparsityTarget::Unstructured(0.5)).unwrap();
+        // per column, kept entries must be that column's top-|w| half
+        for c in 0..4 {
+            let col = what.col(c);
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&a, &b| col[b].abs().partial_cmp(&col[a].abs()).unwrap());
+            for &r in order.iter().take(n / 2) {
+                assert_ne!(ww.at(r, c), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn downweights_weak_features() {
+        // a large weight on a near-dead input must be pruned before a
+        // smaller weight on a strong input
+        let mut x = Matrix::zeros(10, 2);
+        for r in 0..10 {
+            *x.at_mut(r, 0) = 5.0; // strong feature
+            *x.at_mut(r, 1) = 0.01; // dead feature
+        }
+        let what = Matrix::from_vec(2, 1, vec![0.5, 3.0]);
+        let p = LayerProblem::from_activations(&x, &what).unwrap();
+        let w = Wanda.prune(&p, SparsityTarget::Unstructured(0.5)).unwrap();
+        assert_ne!(w.at(0, 0), 0.0, "strong-feature weight kept");
+        assert_eq!(w.at(1, 0), 0.0, "dead-feature weight pruned");
+    }
+
+    #[test]
+    fn nm_pattern() {
+        let p = random_problem(16, 4, 64, 2);
+        let t = SparsityTarget::NM { n: 2, m: 4 };
+        let w = Wanda.prune(&p, t).unwrap();
+        assert!(check_target(&w, t));
+    }
+}

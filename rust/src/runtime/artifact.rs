@@ -1,0 +1,186 @@
+//! Artifact manifest: the typed index of every AOT-exported HLO program
+//! (written by `python/compile/aot.py` as `artifacts/manifest.json`).
+
+use crate::config::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Declared dtype of an artifact input.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+/// One declared input or output.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One exported artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// Parsed manifest + artifact directory.
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn parse_io(v: &Json, default_dtype: Dtype) -> Result<IoSpec> {
+    let name = v.get("name")?.as_str()?.to_string();
+    let shape = v
+        .get("shape")?
+        .as_arr()?
+        .iter()
+        .map(|s| s.as_usize())
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = match v.get("dtype") {
+        Ok(d) => match d.as_str()? {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            other => bail!("unknown dtype '{other}'"),
+        },
+        Err(_) => default_dtype,
+    };
+    Ok(IoSpec { name, shape, dtype })
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {path:?} (run `make artifacts`)"))?;
+        let v = Json::parse(&text)?;
+        let mut artifacts = BTreeMap::new();
+        for ent in v.as_arr()? {
+            let spec = ArtifactSpec {
+                name: ent.get("name")?.as_str()?.to_string(),
+                file: ent.get("file")?.as_str()?.to_string(),
+                kind: ent.get("kind")?.as_str()?.to_string(),
+                inputs: ent
+                    .get("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(|io| parse_io(io, Dtype::F32))
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: ent
+                    .get("outputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(|io| parse_io(io, Dtype::F32))
+                    .collect::<Result<Vec<_>>>()?,
+            };
+            artifacts.insert(spec.name.clone(), spec);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).with_context(|| {
+            format!("artifact '{name}' not in manifest (run `make artifacts`?)")
+        })
+    }
+
+    pub fn path_of(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.get(name)?.file))
+    }
+
+    /// Artifact name for one ADMM iteration at the given shape.
+    pub fn admm_iter_name(n_in: usize, n_out: usize) -> String {
+        format!("admm_iter_{n_in}x{n_out}")
+    }
+
+    pub fn admm_iter_nm_name(n_in: usize, n_out: usize, n: usize, m: usize) -> String {
+        format!("admm_iter_nm{n}of{m}_{n_in}x{n_out}")
+    }
+
+    pub fn pcg_refine_name(n_in: usize, n_out: usize) -> String {
+        format!("pcg_refine_{n_in}x{n_out}")
+    }
+
+    pub fn gram_name(rows: usize, n_in: usize, n_out: usize) -> String {
+        format!("gram_{rows}x{n_in}_{n_out}")
+    }
+
+    pub fn model_fwd_name(model: &str) -> String {
+        format!("model_fwd_{model}")
+    }
+}
+
+/// Default artifacts directory: $ALPS_ARTIFACTS or ./artifacts.
+pub fn default_dir() -> PathBuf {
+    std::env::var("ALPS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"[
+  {
+    "name": "admm_iter_16x8",
+    "file": "admm_iter_16x8.hlo.txt",
+    "kind": "admm_iter",
+    "inputs": [{"name": "q", "shape": [16,16], "dtype": "f32"},
+               {"name": "k", "shape": [], "dtype": "i32"}],
+    "outputs": [{"name": "w", "shape": [16,8], "dtype": "f32"}]
+  }
+]"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let dir = std::env::temp_dir().join("alps_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let spec = m.get("admm_iter_16x8").unwrap();
+        assert_eq!(spec.kind, "admm_iter");
+        assert_eq!(spec.inputs.len(), 2);
+        assert_eq!(spec.inputs[1].dtype, Dtype::I32);
+        assert_eq!(spec.inputs[0].numel(), 256);
+        assert_eq!(spec.outputs[0].shape, vec![16, 8]);
+        assert!(m.get("nope").is_err());
+        assert!(m.path_of("admm_iter_16x8").unwrap().ends_with("admm_iter_16x8.hlo.txt"));
+    }
+
+    #[test]
+    fn name_helpers() {
+        assert_eq!(Manifest::admm_iter_name(128, 512), "admm_iter_128x512");
+        assert_eq!(Manifest::admm_iter_nm_name(256, 256, 2, 4), "admm_iter_nm2of4_256x256");
+        assert_eq!(Manifest::pcg_refine_name(1024, 256), "pcg_refine_1024x256");
+        assert_eq!(Manifest::gram_name(4096, 256, 1024), "gram_4096x256_1024");
+        assert_eq!(Manifest::model_fwd_name("alps-base"), "model_fwd_alps-base");
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make() {
+        let dir = std::env::temp_dir().join("alps_manifest_missing");
+        std::fs::create_dir_all(&dir).unwrap();
+        let _ = std::fs::remove_file(dir.join("manifest.json"));
+        let err = match Manifest::load(&dir) {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,231 @@
+//! PJRT client wrapper with a compiled-executable cache: each artifact is
+//! compiled once per process and reused across every layer/iteration.
+
+use super::artifact::{ArtifactSpec, Dtype, Manifest};
+use crate::linalg::Matrix;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A runtime value passed to / returned from an artifact.
+#[derive(Clone, Debug)]
+pub enum Value {
+    /// f32 tensor with shape.
+    F32(Vec<f32>, Vec<usize>),
+    /// i32 scalar.
+    I32(i32),
+}
+
+impl Value {
+    pub fn matrix(m: &Matrix) -> Value {
+        Value::F32(m.data.clone(), vec![m.rows, m.cols])
+    }
+
+    pub fn vector(v: &[f32]) -> Value {
+        Value::F32(v.to_vec(), vec![v.len()])
+    }
+
+    pub fn scalar(x: f32) -> Value {
+        Value::F32(vec![x], vec![])
+    }
+
+    pub fn numel(&self) -> usize {
+        match self {
+            Value::F32(d, _) => d.len(),
+            Value::I32(_) => 1,
+        }
+    }
+
+    pub fn into_matrix(self, rows: usize, cols: usize) -> Result<Matrix> {
+        match self {
+            Value::F32(d, _) => {
+                if d.len() != rows * cols {
+                    bail!("value has {} elems, expected {rows}x{cols}", d.len());
+                }
+                Ok(Matrix::from_vec(rows, cols, d))
+            }
+            Value::I32(_) => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn into_vec(self) -> Result<Vec<f32>> {
+        match self {
+            Value::F32(d, _) => Ok(d),
+            Value::I32(_) => bail!("expected f32 tensor"),
+        }
+    }
+}
+
+/// PJRT runtime with executable cache. Not Sync — PJRT handles are raw
+/// pointers; the coordinator keeps runtime work on one thread.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// executions per artifact (perf accounting)
+    pub exec_counts: RefCell<HashMap<String, usize>>,
+}
+
+impl Runtime {
+    /// Create a runtime over the given artifacts directory.
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            manifest,
+            client,
+            cache: RefCell::new(HashMap::new()),
+            exec_counts: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn with_default_dir() -> Result<Runtime> {
+        Runtime::new(&super::artifact::default_dir())
+    }
+
+    /// True if the manifest declares this artifact.
+    pub fn has(&self, name: &str) -> bool {
+        self.manifest.artifacts.contains_key(name)
+    }
+
+    /// Compile (and cache) an artifact if not already compiled.
+    pub fn ensure_compiled(&self, name: &str) -> Result<()> {
+        self.compile(name)
+    }
+
+    /// Execute a compiled artifact with prepared literals; returns the raw
+    /// f32 data of each tuple output.
+    pub fn execute_lits(&self, name: &str, lits: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        self.compile(name)?;
+        *self.exec_counts.borrow_mut().entry(name.to_string()).or_insert(0) += 1;
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).expect("compiled above");
+        let result = exe.execute::<xla::Literal>(lits)?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            out.push(lit.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+
+    fn compile(&self, name: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let path = self.manifest.path_of(name)?;
+        let path_str = path
+            .to_str()
+            .with_context(|| format!("non-utf8 path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact by name with typed inputs; returns one Value per
+    /// declared output. Inputs are validated against the manifest.
+    pub fn run(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        let spec: ArtifactSpec = self.manifest.get(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact '{name}' takes {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (v, io) in inputs.iter().zip(&spec.inputs) {
+            let ok = match (v, io.dtype) {
+                (Value::F32(d, _), Dtype::F32) => d.len() == io.numel(),
+                (Value::I32(_), Dtype::I32) => true,
+                _ => false,
+            };
+            if !ok {
+                bail!(
+                    "artifact '{name}' input '{}' expects {:?} {:?}, got {} elems",
+                    io.name,
+                    io.dtype,
+                    io.shape,
+                    v.numel()
+                );
+            }
+        }
+        self.compile(name)?;
+        *self.exec_counts.borrow_mut().entry(name.to_string()).or_insert(0) += 1;
+
+        let mut lits: Vec<xla::Literal> = Vec::with_capacity(inputs.len());
+        for (v, io) in inputs.iter().zip(&spec.inputs) {
+            match v {
+                Value::F32(d, _) => {
+                    let l = xla::Literal::vec1(d);
+                    let dims: Vec<i64> = io.shape.iter().map(|&x| x as i64).collect();
+                    lits.push(if dims.is_empty() {
+                        // scalar: reshape to rank-0
+                        l.reshape(&[])?
+                    } else {
+                        l.reshape(&dims)?
+                    });
+                }
+                Value::I32(x) => lits.push(xla::Literal::from(*x)),
+            }
+        }
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).expect("compiled above");
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        if tuple.len() != spec.outputs.len() {
+            bail!(
+                "artifact '{name}' returned {} outputs, manifest says {}",
+                tuple.len(),
+                spec.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(tuple.len());
+        for (lit, io) in tuple.into_iter().zip(&spec.outputs) {
+            out.push(Value::F32(lit.to_vec::<f32>()?, io.shape.clone()));
+        }
+        Ok(out)
+    }
+
+    /// Total artifact executions so far (all names).
+    pub fn total_execs(&self) -> usize {
+        self.exec_counts.borrow().values().sum()
+    }
+
+    /// Upload an f32 tensor to the device (§Perf: constants like Q / m_eig
+    /// / G are uploaded once per layer instead of once per iteration).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<f32>(data, dims, None)?)
+    }
+
+    /// Upload an i32 tensor/scalar to the device.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<i32>(data, dims, None)?)
+    }
+
+    /// Execute with device-resident input buffers (zero host->device copies
+    /// for the arguments); returns the raw f32 data per tuple output.
+    pub fn execute_buffers(
+        &self,
+        name: &str,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.compile(name)?;
+        *self.exec_counts.borrow_mut().entry(name.to_string()).or_insert(0) += 1;
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).expect("compiled above");
+        let result = exe.execute_b::<&xla::PjRtBuffer>(args)?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            out.push(lit.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}

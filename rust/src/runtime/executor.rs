@@ -1,0 +1,296 @@
+//! High-level executors over the AOT artifacts: the ALPS hot path (ADMM
+//! iterations + PCG refinement as single HLO calls per step) and the
+//! model-forward evaluator.
+//!
+//! The math here is identical to `pruning::alps` (native path); the
+//! integration tests pin the two against each other. What moves to the
+//! device: the two ridge-solve matmuls, the top-k projection (sort +
+//! runtime-k threshold), the dual update, and the entire 10-iteration PCG
+//! loop (one HLO while-loop, zero host round-trips inside).
+
+use super::artifact::Manifest;
+use super::client::{Runtime, Value};
+use crate::config::{AlpsConfig, SparsityTarget};
+use crate::linalg::{Matrix, SymEig};
+use crate::model::Model;
+use crate::pruning::alps::{rho_update, AlpsTrace, DiagScaling};
+use crate::pruning::LayerProblem;
+use anyhow::{bail, Result};
+
+/// ALPS executed through the AOT artifacts.
+pub struct AlpsHlo<'rt> {
+    pub rt: &'rt Runtime,
+    pub cfg: AlpsConfig,
+}
+
+impl<'rt> AlpsHlo<'rt> {
+    pub fn new(rt: &'rt Runtime) -> Self {
+        AlpsHlo { rt, cfg: AlpsConfig::default() }
+    }
+
+    /// Does the runtime have artifacts for this layer shape + target?
+    pub fn supports(&self, n_in: usize, n_out: usize, target: SparsityTarget) -> bool {
+        let iter_name = match target {
+            SparsityTarget::Unstructured(_) => Manifest::admm_iter_name(n_in, n_out),
+            SparsityTarget::NM { n, m } => Manifest::admm_iter_nm_name(n_in, n_out, n, m),
+        };
+        self.rt.has(&iter_name) && self.rt.has(&Manifest::pcg_refine_name(n_in, n_out))
+    }
+
+    /// Run ALPS on a layer problem via the artifacts.
+    pub fn prune_traced(
+        &self,
+        problem: &LayerProblem,
+        target: SparsityTarget,
+    ) -> Result<(Matrix, AlpsTrace)> {
+        let cfg = &self.cfg;
+        let n_in = problem.n_in();
+        let n_out = problem.n_out();
+        let k = target.keep_count(n_in, n_out);
+        let iter_name = match target {
+            SparsityTarget::Unstructured(_) => Manifest::admm_iter_name(n_in, n_out),
+            SparsityTarget::NM { n, m } => Manifest::admm_iter_nm_name(n_in, n_out, n, m),
+        };
+        if !self.rt.has(&iter_name) {
+            bail!("no artifact '{iter_name}' for shape {n_in}x{n_out}");
+        }
+
+        // host-side prep: B.1 scaling + eigendecomposition (once per layer)
+        let (scaling, hs) = DiagScaling::from_gram(&problem.h, cfg.damp);
+        let gs = scaling.scale_g(&problem.g);
+        let whats = scaling.to_scaled(&problem.what);
+        let eig = SymEig::new(&hs)?;
+
+        // §Perf: constants (Q, m_eig, G, k) are uploaded to the device once
+        // per layer; only D, V (and rho when it changes) move per iteration.
+        let q_buf = self.rt.upload_f32(&eig.q.data, &[n_in, n_in])?;
+        let m_buf = self.rt.upload_f32(&eig.vals, &[n_in])?;
+        let g_buf = self.rt.upload_f32(&gs.data, &[n_in, n_out])?;
+        let k_buf = self.rt.upload_i32(&[k as i32], &[])?;
+        let unstructured = matches!(target, SparsityTarget::Unstructured(_));
+
+        let mut d = whats.clone();
+        let mut v = Matrix::zeros(n_in, n_out);
+        let mut rho = cfg.rho0;
+        let mut rho_buf = self.rt.upload_f32(&[rho], &[])?;
+        let mut t = 0usize;
+        let mut trace = AlpsTrace {
+            admm_iters: 0,
+            final_rho: rho,
+            support_changes: Vec::new(),
+            primal_gaps: Vec::new(),
+            pcg_iters: 0,
+        };
+        // the artifact reports |supp(D_new) Δ supp(D_old)| per iteration;
+        // accumulate over each update_every window for the rho scheme.
+        while t < cfg.max_iters {
+            let mut window_delta = 0usize;
+            let mut last_gap = 0.0f64;
+            for _ in 0..cfg.update_every {
+                let d_buf = self.rt.upload_f32(&d.data, &[n_in, n_out])?;
+                let v_buf = self.rt.upload_f32(&v.data, &[n_in, n_out])?;
+                let mut args: Vec<&xla::PjRtBuffer> =
+                    vec![&q_buf, &m_buf, &g_buf, &d_buf, &v_buf, &rho_buf];
+                if unstructured {
+                    args.push(&k_buf);
+                }
+                let out = self.rt.execute_buffers(&iter_name, &args)?;
+                let [w_o, d_o, v_o, delta_o, _nnz_o]: [Vec<f32>; 5] =
+                    out.try_into().map_err(|_| anyhow::anyhow!("bad output arity"))?;
+                let w = Matrix::from_vec(n_in, n_out, w_o);
+                d = Matrix::from_vec(n_in, n_out, d_o);
+                v = Matrix::from_vec(n_in, n_out, v_o);
+                window_delta = delta_o[0] as usize;
+                last_gap = w.sub(&d).fro_norm() as f64;
+                t += 1;
+            }
+            trace.support_changes.push(window_delta);
+            trace.primal_gaps.push(last_gap);
+            if window_delta == 0 {
+                break;
+            }
+            let new_rho = rho_update(rho, window_delta, k, cfg);
+            if new_rho != rho {
+                rho = new_rho;
+                rho_buf = self.rt.upload_f32(&[rho], &[])?;
+            }
+        }
+        trace.admm_iters = t;
+        trace.final_rho = rho;
+
+        // PCG refinement: one artifact call (10 iterations inside HLO)
+        let mask = d.support_mask();
+        let pcg_name = Manifest::pcg_refine_name(n_in, n_out);
+        let out = self.rt.run(
+            &pcg_name,
+            &[
+                Value::matrix(&hs),
+                Value::matrix(&gs),
+                Value::matrix(&d),
+                Value::matrix(&mask),
+            ],
+        )?;
+        let w_refined = out[0].clone().into_matrix(n_in, n_out)?;
+        trace.pcg_iters = 10;
+        Ok((scaling.to_unscaled(&w_refined), trace))
+    }
+}
+
+/// Compute (H, G) on the device when a gram artifact matches the shape;
+/// falls back to the native gram otherwise.
+pub fn gram_via_runtime(
+    rt: &Runtime,
+    x: &Matrix,
+    what: &Matrix,
+) -> Result<(Matrix, Matrix)> {
+    let name = Manifest::gram_name(x.rows, x.cols, what.cols);
+    if rt.has(&name) {
+        let out = rt.run(&name, &[Value::matrix(x), Value::matrix(what)])?;
+        let h = out[0].clone().into_matrix(x.cols, x.cols)?;
+        let g = out[1].clone().into_matrix(x.cols, what.cols)?;
+        Ok((h, g))
+    } else {
+        let h = crate::linalg::matmul::gram(x);
+        let g = crate::linalg::matmul::matmul(&h, what);
+        Ok((h, g))
+    }
+}
+
+/// Model-forward evaluator over the `model_fwd_{name}` artifact:
+/// batch of token ids -> per-position NLL.
+pub struct ModelFwdHlo<'rt> {
+    rt: &'rt Runtime,
+    artifact: String,
+    batch: usize,
+    seq_len: usize,
+    /// Flattened weights in param_spec order (converted once).
+    weight_values: Vec<Value>,
+}
+
+impl<'rt> ModelFwdHlo<'rt> {
+    pub fn new(rt: &'rt Runtime, model: &Model) -> Result<Self> {
+        let artifact = Manifest::model_fwd_name(&model.cfg.name);
+        let spec = rt.manifest.get(&artifact)?;
+        // inputs: ids, then weights in order
+        let ids_spec = &spec.inputs[0];
+        if ids_spec.shape.len() != 2 {
+            bail!("model_fwd ids input must be 2-D");
+        }
+        let (batch, seq_len) = (ids_spec.shape[0], ids_spec.shape[1]);
+        let mut weight_values = Vec::new();
+        for io in &spec.inputs[1..] {
+            let t = model.weights.get(&io.name)?;
+            if t.numel() != io.numel() {
+                bail!(
+                    "weight '{}' numel {} != artifact {}",
+                    io.name,
+                    t.numel(),
+                    io.numel()
+                );
+            }
+            weight_values.push(Value::F32(t.data.clone(), io.shape.clone()));
+        }
+        Ok(ModelFwdHlo { rt, artifact, batch, seq_len, weight_values })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Refresh one weight tensor after pruning (cheap: no recompilation).
+    pub fn update_weight(&mut self, model: &Model, name: &str) -> Result<()> {
+        let spec = self.rt.manifest.get(&self.artifact)?;
+        for (i, io) in spec.inputs[1..].iter().enumerate() {
+            if io.name == name {
+                let t = model.weights.get(name)?;
+                self.weight_values[i] = Value::F32(t.data.clone(), io.shape.clone());
+                return Ok(());
+            }
+        }
+        bail!("weight '{name}' not an input of {}", self.artifact)
+    }
+
+    /// Per-position NLL for a batch of sequences (each exactly seq_len
+    /// long; the batch is padded by repeating the last sequence and the
+    /// padding rows are discarded).
+    pub fn nll_batch(&self, seqs: &[Vec<u16>]) -> Result<Vec<Vec<f64>>> {
+        if seqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut out = Vec::with_capacity(seqs.len());
+        for chunk in seqs.chunks(self.batch) {
+            let mut ids = Vec::with_capacity(self.batch * self.seq_len);
+            for i in 0..self.batch {
+                let s = chunk.get(i).unwrap_or_else(|| chunk.last().unwrap());
+                if s.len() != self.seq_len {
+                    bail!("sequence length {} != artifact seq_len {}", s.len(), self.seq_len);
+                }
+                ids.extend(s.iter().map(|&x| x as f32));
+            }
+            // ids input is i32 in the artifact: Value::F32 would mismatch.
+            // Build a dedicated literal path: encode as i32 via Value::I32?
+            // The runtime Value enum supports i32 scalars only, so we pass
+            // through a raw execution instead.
+            let nll = self.run_raw(&ids, chunk.len())?;
+            out.extend(nll);
+        }
+        Ok(out)
+    }
+
+    fn run_raw(&self, ids_f32: &[f32], n_valid: usize) -> Result<Vec<Vec<f64>>> {
+        // Execute with a hand-built literal list: i32 ids + f32 weights.
+        let ids_i32: Vec<i32> = ids_f32.iter().map(|&x| x as i32).collect();
+        let spec = self.rt.manifest.get(&self.artifact)?.clone();
+        let mut values = Vec::with_capacity(1 + self.weight_values.len());
+        values.push(RawInput::I32Tensor(ids_i32, vec![self.batch, self.seq_len]));
+        for v in &self.weight_values {
+            match v {
+                Value::F32(d, s) => values.push(RawInput::F32Tensor(d.clone(), s.clone())),
+                Value::I32(_) => bail!("unexpected scalar weight"),
+            }
+        }
+        let out = self.rt.run_raw(&self.artifact, &values)?;
+        let nll_flat = &out[0];
+        let per = self.seq_len - 1;
+        if nll_flat.len() != self.batch * per {
+            bail!("nll output len {} != {}", nll_flat.len(), self.batch * per);
+        }
+        let _ = spec;
+        Ok((0..n_valid)
+            .map(|b| nll_flat[b * per..(b + 1) * per].iter().map(|&x| x as f64).collect())
+            .collect())
+    }
+}
+
+/// Raw (dtype-explicit) input for executions that mix i32 tensors.
+pub enum RawInput {
+    F32Tensor(Vec<f32>, Vec<usize>),
+    I32Tensor(Vec<i32>, Vec<usize>),
+}
+
+impl Runtime {
+    /// Execute with explicit raw inputs (used by the model-forward path
+    /// whose ids input is an i32 *tensor*, which `Value` doesn't model).
+    pub fn run_raw(&self, name: &str, inputs: &[RawInput]) -> Result<Vec<Vec<f32>>> {
+        self.ensure_compiled(name)?;
+        let mut lits: Vec<xla::Literal> = Vec::with_capacity(inputs.len());
+        for inp in inputs {
+            match inp {
+                RawInput::F32Tensor(d, shape) => {
+                    let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+                    lits.push(xla::Literal::vec1(d).reshape(&dims)?);
+                }
+                RawInput::I32Tensor(d, shape) => {
+                    let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+                    lits.push(xla::Literal::vec1(d).reshape(&dims)?);
+                }
+            }
+        }
+        self.execute_lits(name, &lits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // exercised by rust/tests/integration_runtime.rs (requires artifacts)
+}

@@ -1,0 +1,41 @@
+//! PJRT runtime: load the AOT HLO-text artifacts (`artifacts/*.hlo.txt`)
+//! and execute them on the CPU PJRT client. Python never runs here — the
+//! binary is self-contained once `make artifacts` has produced the files.
+
+pub mod artifact;
+pub mod client;
+pub mod executor;
+
+pub use artifact::Manifest;
+pub use client::Runtime;
+
+/// Back-compat smoke helper used by `alps smoke` (see main.rs).
+pub mod smoke {
+    use anyhow::Result;
+
+    /// Load an HLO text artifact and run it with the given f32 inputs.
+    pub fn run_hlo_f32(
+        path: &str,
+        inputs: &[(Vec<f32>, Vec<i64>)],
+        scalar_i32: Option<i32>,
+    ) -> Result<Vec<Vec<f32>>> {
+        let client = xla::PjRtClient::cpu()?;
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        let mut lits: Vec<xla::Literal> = Vec::new();
+        for (data, shape) in inputs {
+            lits.push(xla::Literal::vec1(data).reshape(shape)?);
+        }
+        if let Some(k) = scalar_i32 {
+            lits.push(xla::Literal::from(k));
+        }
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        let mut out = Vec::new();
+        for t in tuple {
+            out.push(t.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}

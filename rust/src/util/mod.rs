@@ -1,0 +1,9 @@
+//! Small shared utilities: deterministic PRNG, statistics, timers, tables.
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timer;
+
+pub use rng::Rng;
+pub use stats::Stats;
+pub use timer::Timer;

@@ -1,0 +1,120 @@
+//! Summary statistics used by the bench harness and result tables.
+
+/// Accumulated sample statistics (mean/std/min/max/percentiles).
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    samples: Vec<f64>,
+}
+
+impl Stats {
+    pub fn new() -> Self {
+        Stats { samples: Vec::new() }
+    }
+
+    pub fn from_samples(samples: &[f64]) -> Self {
+        Stats { samples: samples.to_vec() }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Sample standard deviation (n-1 denominator; 0 for n<2).
+    pub fn std(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let ss: f64 = self.samples.iter().map(|x| (x - m) * (x - m)).sum();
+        (ss / (n - 1) as f64).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Percentile via linear interpolation on the sorted samples (q in [0,100]).
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pos = (q / 100.0) * (s.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            s[lo]
+        } else {
+            let frac = pos - lo as f64;
+            s[lo] * (1.0 - frac) + s[hi] * frac
+        }
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let s = Stats::from_samples(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.std() - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let s = Stats::from_samples(&[10.0, 20.0, 30.0, 40.0, 50.0]);
+        assert_eq!(s.median(), 30.0);
+        assert_eq!(s.percentile(0.0), 10.0);
+        assert_eq!(s.percentile(100.0), 50.0);
+        assert!((s.percentile(25.0) - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        let s = Stats::new();
+        assert!(s.mean().is_nan());
+        assert!(s.percentile(50.0).is_nan());
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = Stats::from_samples(&[7.0]);
+        assert_eq!(s.mean(), 7.0);
+        assert_eq!(s.std(), 0.0);
+        assert_eq!(s.median(), 7.0);
+    }
+
+    #[test]
+    fn min_max() {
+        let s = Stats::from_samples(&[3.0, -1.0, 5.0]);
+        assert_eq!(s.min(), -1.0);
+        assert_eq!(s.max(), 5.0);
+    }
+}

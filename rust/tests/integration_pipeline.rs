@@ -1,0 +1,272 @@
+//! End-to-end pipeline integration on the real trained artifacts: prune a
+//! trained model through the coordinator, evaluate perplexity, verify the
+//! paper's ordering. Skipped when artifacts have not been built.
+
+use alps::config::SparsityTarget;
+use alps::coordinator::{PruneEngine, Scheduler};
+use alps::data::{sample_windows, tasks, Corpus};
+use alps::eval::{perplexity, zero_shot_accuracy};
+use alps::model::Model;
+use std::path::Path;
+
+fn have_artifacts() -> bool {
+    let ok = Path::new("artifacts/model_alps-tiny.bin").exists()
+        && Path::new("artifacts/corpus.bin").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+    }
+    ok
+}
+
+fn setup() -> (Model, Corpus, Vec<Vec<u16>>) {
+    let dir = Path::new("artifacts");
+    let model = Model::load(dir, "alps-tiny").unwrap();
+    let corpus = Corpus::load(&dir.join("corpus.bin")).unwrap();
+    let calib = sample_windows(corpus.split("train").unwrap(), 8, model.cfg.seq_len, 1);
+    (model, corpus, calib)
+}
+
+#[test]
+fn trained_model_has_low_perplexity() {
+    if !have_artifacts() {
+        return;
+    }
+    let (model, corpus, _) = setup();
+    let ids = &corpus.split("wikitext2-like").unwrap()[..128 * 8];
+    let ppl = perplexity(&model, ids).unwrap();
+    assert!(ppl < 3.0, "dense trained ppl should be low, got {ppl}");
+}
+
+#[test]
+fn e2e_alps_beats_mp_on_perplexity() {
+    if !have_artifacts() {
+        return;
+    }
+    let (model, corpus, calib) = setup();
+    let eval_ids = &corpus.split("wikitext2-like").unwrap()[..128 * 6];
+    let target = SparsityTarget::Unstructured(0.7);
+    let sched = Scheduler::new(calib);
+
+    let mut m_alps = Model::load(Path::new("artifacts"), "alps-tiny").unwrap();
+    let mut m_mp = Model::load(Path::new("artifacts"), "alps-tiny").unwrap();
+    sched
+        .prune_model(&mut m_alps, target, &PruneEngine::Native("alps".into()))
+        .unwrap();
+    sched
+        .prune_model(&mut m_mp, target, &PruneEngine::Native("mp".into()))
+        .unwrap();
+
+    let ppl_dense = perplexity(&model, eval_ids).unwrap();
+    let ppl_alps = perplexity(&m_alps, eval_ids).unwrap();
+    let ppl_mp = perplexity(&m_mp, eval_ids).unwrap();
+    assert!(ppl_dense <= ppl_alps, "pruning cannot improve ppl");
+    assert!(
+        ppl_alps < ppl_mp,
+        "alps ppl {ppl_alps} must beat mp ppl {ppl_mp}"
+    );
+}
+
+#[test]
+fn e2e_sparsity_written_back() {
+    if !have_artifacts() {
+        return;
+    }
+    let (mut model, _, calib) = setup();
+    let target = SparsityTarget::Unstructured(0.6);
+    Scheduler::new(calib)
+        .prune_model(&mut model, target, &PruneEngine::Native("wanda".into()))
+        .unwrap();
+    let names = model.prunable_names();
+    let s = model.weights.sparsity_of(&names);
+    assert!((s - 0.6).abs() < 0.03, "sparsity {s}");
+    // non-prunable tensors untouched
+    let dense = Model::load(Path::new("artifacts"), "alps-tiny").unwrap();
+    assert_eq!(
+        model.weights.get("tok_emb").unwrap().data,
+        dense.weights.get("tok_emb").unwrap().data
+    );
+}
+
+#[test]
+fn e2e_nm_pipeline() {
+    if !have_artifacts() {
+        return;
+    }
+    let (mut model, corpus, calib) = setup();
+    let target = SparsityTarget::NM { n: 2, m: 4 };
+    Scheduler::new(calib)
+        .prune_model(&mut model, target, &PruneEngine::Native("alps".into()))
+        .unwrap();
+    for name in model.prunable_names() {
+        let w = model.weights.matrix(&name).unwrap();
+        assert!(alps::pruning::check_target(&w, target), "{name}");
+    }
+    let eval_ids = &corpus.split("ptb-like").unwrap()[..128 * 4];
+    let ppl = perplexity(&model, eval_ids).unwrap();
+    assert!(ppl.is_finite() && ppl < 100.0, "2:4 ppl {ppl}");
+}
+
+#[test]
+fn e2e_zero_shot_degrades_gracefully() {
+    if !have_artifacts() {
+        return;
+    }
+    let (model, corpus, calib) = setup();
+    let ids = corpus.split("wikitext2-like").unwrap();
+    let task = tasks::arc_easy_like(ids, 30, 32, 4, 0);
+    let acc_dense = zero_shot_accuracy(&model, &task).unwrap();
+
+    let mut m90 = Model::load(Path::new("artifacts"), "alps-tiny").unwrap();
+    Scheduler::new(calib)
+        .prune_model(
+            &mut m90,
+            SparsityTarget::Unstructured(0.9),
+            &PruneEngine::Native("mp".into()),
+        )
+        .unwrap();
+    let acc_90 = zero_shot_accuracy(&m90, &task).unwrap();
+    assert!(
+        acc_dense >= acc_90,
+        "90% MP pruning should not beat dense: {acc_dense} vs {acc_90}"
+    );
+}
+
+#[test]
+fn e2e_structured_pruning_removes_rows() {
+    if !have_artifacts() {
+        return;
+    }
+    let (model, _, calib) = setup();
+    let p = alps::coordinator::scheduler::single_layer_problem(&model, &calib, 0, "mlp.w2")
+        .unwrap();
+    let w = alps::pruning::structured::StructuredAlps::default()
+        .prune_rows(&p, 0.5)
+        .unwrap();
+    let rows = alps::pruning::structured::nonzero_rows(&w);
+    assert!(rows <= p.n_in() / 2, "rows {rows}");
+    // structured support must still beat zeroing the same rows naively
+    let naive = alps::pruning::structured::structured_magnitude(&p, p.n_in() / 2);
+    assert!(p.rel_error(&w) < p.rel_error(&naive) * 1.5);
+}
+
+#[test]
+fn e2e_prune_then_quantize_small_ppl_cost() {
+    if !have_artifacts() {
+        return;
+    }
+    let (mut model, corpus, calib) = setup();
+    let sched = Scheduler::new(calib.clone());
+    sched
+        .prune_model(
+            &mut model,
+            SparsityTarget::Unstructured(0.5),
+            &PruneEngine::Native("alps".into()),
+        )
+        .unwrap();
+    let ids = &corpus.split("wikitext2-like").unwrap()[..128 * 4];
+    let ppl_pruned = perplexity(&model, ids).unwrap();
+    for name in model.prunable_names() {
+        let w = model.weights.matrix(&name).unwrap();
+        let q = alps::pruning::quantize::QuantizedWeights::quantize(&w);
+        model.weights.set_matrix(&name, &q.dequantize()).unwrap();
+    }
+    let ppl_quant = perplexity(&model, ids).unwrap();
+    assert!(
+        ppl_quant < ppl_pruned * 1.10,
+        "int8 cost too high: {ppl_quant} vs {ppl_pruned}"
+    );
+}
+
+#[test]
+fn e2e_sparse_inference_matches_dense_ppl() {
+    if !have_artifacts() {
+        return;
+    }
+    let (mut model, corpus, calib) = setup();
+    Scheduler::new(calib)
+        .prune_model(
+            &mut model,
+            SparsityTarget::Unstructured(0.7),
+            &PruneEngine::Native("wanda".into()),
+        )
+        .unwrap();
+    let sm = alps::model::sparse_infer::SparseModel::from_model(&model).unwrap();
+    let ids = &corpus.split("ptb-like").unwrap()[..128 * 2];
+    for w in ids.chunks_exact(128) {
+        let a = model.nll(w).unwrap();
+        let b = sm.nll(w).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+    assert!((sm.density() - 0.3).abs() < 0.05);
+}
+
+#[test]
+fn failure_injection_corrupt_weights_rejected() {
+    if !have_artifacts() {
+        return;
+    }
+    // truncated weights file must error, not panic or mis-load
+    let src = std::fs::read("artifacts/model_alps-tiny.bin").unwrap();
+    let dir = std::env::temp_dir().join("alps_fail_inject");
+    std::fs::create_dir_all(&dir).unwrap();
+    let trunc = dir.join("trunc.bin");
+    std::fs::write(&trunc, &src[..src.len() / 2]).unwrap();
+    assert!(alps::model::Weights::load(&trunc).is_err());
+    // corrupted magic
+    let mut bad = src.clone();
+    bad[0] ^= 0xFF;
+    let badp = dir.join("bad.bin");
+    std::fs::write(&badp, &bad).unwrap();
+    assert!(alps::model::Weights::load(&badp).is_err());
+}
+
+#[test]
+fn failure_injection_corrupt_hlo_rejected() {
+    if !have_artifacts() {
+        return;
+    }
+    // a syntactically-broken HLO artifact must fail at compile, not crash
+    let dir = std::env::temp_dir().join("alps_fail_hlo");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::copy("artifacts/manifest.json", dir.join("manifest.json")).unwrap();
+    std::fs::write(dir.join("admm_iter_128x128.hlo.txt"), "HloModule garbage ???").unwrap();
+    let rt = alps::runtime::Runtime::new(&dir).unwrap();
+    use alps::runtime::client::Value;
+    let z = alps::linalg::Matrix::zeros(128, 128);
+    let inputs = vec![
+        Value::matrix(&z),
+        Value::vector(&[0.0; 128]),
+        Value::matrix(&z),
+        Value::matrix(&z),
+        Value::matrix(&z),
+        Value::scalar(1.0),
+        Value::I32(10),
+    ];
+    assert!(rt.run("admm_iter_128x128", &inputs).is_err());
+}
+
+#[test]
+fn e2e_save_load_pruned_checkpoint() {
+    if !have_artifacts() {
+        return;
+    }
+    let (mut model, corpus, calib) = setup();
+    Scheduler::new(calib)
+        .prune_model(
+            &mut model,
+            SparsityTarget::Unstructured(0.5),
+            &PruneEngine::Native("sparsegpt".into()),
+        )
+        .unwrap();
+    let path = std::env::temp_dir().join("alps_e2e_ckpt.bin");
+    model.weights.save(&path).unwrap();
+    let reloaded = alps::model::Weights::load(&path).unwrap();
+    let mut m2 = Model::load(Path::new("artifacts"), "alps-tiny").unwrap();
+    m2.weights = reloaded;
+    let ids = &corpus.split("c4-like").unwrap()[..128 * 3];
+    let p1 = perplexity(&model, ids).unwrap();
+    let p2 = perplexity(&m2, ids).unwrap();
+    assert!((p1 - p2).abs() < 1e-9, "{p1} vs {p2}");
+}

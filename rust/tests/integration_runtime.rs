@@ -1,0 +1,195 @@
+//! Runtime integration: the AOT HLO artifacts must reproduce the native
+//! rust math — ADMM iteration parity, PCG parity, model-forward parity,
+//! and the pallas-kernel variant. Skipped (with a notice) when artifacts
+//! have not been built.
+
+use alps::config::{AlpsConfig, SparsityTarget};
+use alps::linalg::matmul::gram;
+use alps::linalg::Matrix;
+use alps::model::Model;
+use alps::pruning::alps::Alps;
+use alps::pruning::LayerProblem;
+use alps::runtime::executor::{gram_via_runtime, AlpsHlo, ModelFwdHlo};
+use alps::runtime::Runtime;
+use alps::util::Rng;
+use std::path::Path;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new(dir).expect("runtime"))
+}
+
+fn problem_128() -> LayerProblem {
+    let mut rng = Rng::new(0);
+    let mut x = Matrix::randn(300, 128, &mut rng);
+    for c in 0..128 {
+        let s = 0.3 + 1.5 * (c as f32 / 128.0);
+        for r in 0..300 {
+            *x.at_mut(r, c) *= s;
+        }
+    }
+    let what = Matrix::randn(128, 128, &mut rng);
+    LayerProblem::from_activations(&x, &what).unwrap()
+}
+
+#[test]
+fn hlo_alps_matches_native_alps() {
+    let Some(rt) = runtime() else { return };
+    let p = problem_128();
+    let t = SparsityTarget::Unstructured(0.7);
+    let hlo = AlpsHlo::new(&rt);
+    assert!(hlo.supports(128, 128, t));
+    let (w_hlo, trace_hlo) = hlo.prune_traced(&p, t).unwrap();
+    let (w_nat, trace_nat) = Alps::default().prune_traced(&p, t).unwrap();
+    let (e_hlo, e_nat) = (p.rel_error(&w_hlo), p.rel_error(&w_nat));
+    // identical algorithm, different substrates: errors must agree closely
+    assert!(
+        (e_hlo - e_nat).abs() / e_nat.max(1e-9) < 0.05,
+        "hlo {e_hlo} vs native {e_nat}"
+    );
+    // same ballpark of iterations
+    let (a, b) = (trace_hlo.admm_iters as f64, trace_nat.admm_iters as f64);
+    assert!(a / b < 2.0 && b / a < 2.0, "iters {a} vs {b}");
+    // budget respected
+    assert!(w_hlo.nnz() <= t.keep_count(128, 128));
+}
+
+#[test]
+fn hlo_alps_nm_pattern() {
+    let Some(rt) = runtime() else { return };
+    // N:M artifacts exist for alps-base shapes (256x256 etc.)
+    let mut rng = Rng::new(1);
+    let x = Matrix::randn(400, 256, &mut rng);
+    let what = Matrix::randn(256, 256, &mut rng);
+    let p = LayerProblem::from_activations(&x, &what).unwrap();
+    let t = SparsityTarget::NM { n: 2, m: 4 };
+    let hlo = AlpsHlo::new(&rt);
+    assert!(hlo.supports(256, 256, t));
+    let (w, _) = hlo.prune_traced(&p, t).unwrap();
+    assert!(alps::pruning::check_target(&w, t));
+    let e_alps = p.rel_error(&w);
+    let w_mp = alps::pruning::projection::nm_project(&what, 2, 4);
+    assert!(e_alps < p.rel_error(&w_mp));
+}
+
+#[test]
+fn gram_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(2);
+    // gram artifact shape: rows=4096, n_in=128, n_out=128 (alps-tiny attn)
+    let x = Matrix::randn(4096, 128, &mut rng);
+    let what = Matrix::randn(128, 128, &mut rng);
+    let (h_rt, g_rt) = gram_via_runtime(&rt, &x, &what).unwrap();
+    let h = gram(&x);
+    let g = alps::linalg::matmul::matmul(&h, &what);
+    assert!(h_rt.max_abs_diff(&h) / h.fro_norm() < 1e-4);
+    assert!(g_rt.max_abs_diff(&g) / g.fro_norm() < 1e-4);
+}
+
+#[test]
+fn pallas_variant_matches_jnp_variant() {
+    let Some(rt) = runtime() else { return };
+    if !rt.has("admm_iter_pallas_128x128") {
+        eprintln!("SKIP: pallas variant not exported");
+        return;
+    }
+    use alps::runtime::client::Value;
+    let p = problem_128();
+    let eig = alps::linalg::SymEig::new(&p.h).unwrap();
+    let inputs = vec![
+        Value::matrix(&eig.q),
+        Value::vector(&eig.vals),
+        Value::matrix(&p.g),
+        Value::matrix(&p.what),
+        Value::matrix(&Matrix::zeros(128, 128)),
+        Value::scalar(1.0),
+        Value::I32(5000),
+    ];
+    let out_a = rt.run("admm_iter_pallas_128x128", &inputs).unwrap();
+    let out_b = rt.run("admm_iter_128x128", &inputs).unwrap();
+    let wa = out_a[0].clone().into_matrix(128, 128).unwrap();
+    let wb = out_b[0].clone().into_matrix(128, 128).unwrap();
+    assert!(
+        wa.max_abs_diff(&wb) < 1e-2 * wb.fro_norm().max(1.0),
+        "pallas vs jnp W-update diverge: {}",
+        wa.max_abs_diff(&wb)
+    );
+    // D outputs: identical supports
+    let da = out_a[1].clone().into_matrix(128, 128).unwrap();
+    let db = out_b[1].clone().into_matrix(128, 128).unwrap();
+    assert_eq!(da.nnz(), db.nnz());
+}
+
+#[test]
+fn model_fwd_artifact_matches_rust_forward() {
+    let Some(rt) = runtime() else { return };
+    let dir = Path::new("artifacts");
+    if !dir.join("model_alps-tiny.bin").exists() {
+        eprintln!("SKIP: models not built");
+        return;
+    }
+    let model = Model::load(dir, "alps-tiny").unwrap();
+    let fwd = ModelFwdHlo::new(&rt, &model).unwrap();
+    let mut rng = Rng::new(3);
+    let seqs: Vec<Vec<u16>> = (0..3)
+        .map(|_| (0..128).map(|_| rng.below(293) as u16).collect())
+        .collect();
+    let nll_hlo = fwd.nll_batch(&seqs).unwrap();
+    assert_eq!(nll_hlo.len(), 3);
+    for (seq, hlo_row) in seqs.iter().zip(&nll_hlo) {
+        let nll_native = model.nll(seq).unwrap();
+        assert_eq!(hlo_row.len(), nll_native.len());
+        let mean_diff: f64 = hlo_row
+            .iter()
+            .zip(&nll_native)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f64>()
+            / hlo_row.len() as f64;
+        assert!(mean_diff < 5e-3, "mean nll diff {mean_diff}");
+    }
+}
+
+#[test]
+fn runtime_validates_inputs() {
+    let Some(rt) = runtime() else { return };
+    use alps::runtime::client::Value;
+    // wrong arity
+    assert!(rt.run("admm_iter_128x128", &[]).is_err());
+    // wrong shapes
+    let bad = vec![
+        Value::matrix(&Matrix::zeros(4, 4)),
+        Value::vector(&[0.0; 4]),
+        Value::matrix(&Matrix::zeros(4, 4)),
+        Value::matrix(&Matrix::zeros(4, 4)),
+        Value::matrix(&Matrix::zeros(4, 4)),
+        Value::scalar(1.0),
+        Value::I32(4),
+    ];
+    assert!(rt.run("admm_iter_128x128", &bad).is_err());
+    // unknown artifact
+    assert!(rt.run("nonexistent", &[]).is_err());
+}
+
+#[test]
+fn executable_cache_reused() {
+    let Some(rt) = runtime() else { return };
+    use alps::runtime::client::Value;
+    let p = problem_128();
+    let eig = alps::linalg::SymEig::new(&p.h).unwrap();
+    let inputs = vec![
+        Value::matrix(&eig.q),
+        Value::vector(&eig.vals),
+        Value::matrix(&p.g),
+        Value::matrix(&p.what),
+        Value::matrix(&Matrix::zeros(128, 128)),
+        Value::scalar(0.5),
+        Value::I32(1000),
+    ];
+    rt.run("admm_iter_128x128", &inputs).unwrap();
+    rt.run("admm_iter_128x128", &inputs).unwrap();
+    assert_eq!(rt.exec_counts.borrow()["admm_iter_128x128"], 2);
+}

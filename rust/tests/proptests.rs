@@ -1,0 +1,255 @@
+//! Property-based tests (hand-rolled harness: proptest is unavailable
+//! offline). Each property runs across a sweep of PRNG seeds and
+//! dimensions; failures print the seed for reproduction.
+
+use alps::config::{AlpsConfig, SparsityTarget};
+use alps::linalg::matmul::{gram, matmul};
+use alps::linalg::solve::pcg_support;
+use alps::linalg::{Cholesky, Matrix, SymEig};
+use alps::pruning::alps::{rho_update, Alps, DiagScaling};
+use alps::pruning::projection::{nm_project, topk_project};
+use alps::pruning::{LayerProblem, PruneMethod};
+use alps::util::Rng;
+
+/// Run `prop` across seeds; panic with the failing seed.
+fn for_seeds(n: u64, prop: impl Fn(u64)) {
+    for seed in 0..n {
+        prop(seed);
+    }
+}
+
+fn rand_dims(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+// ---------------------------------------------------------------- topk
+
+#[test]
+fn prop_topk_exact_count_and_optimality() {
+    for_seeds(40, |seed| {
+        let mut rng = Rng::new(seed);
+        let r = rand_dims(&mut rng, 1, 12);
+        let c = rand_dims(&mut rng, 1, 12);
+        let w = Matrix::randn(r, c, &mut rng);
+        let k = rng.below(r * c + 1);
+        let p = topk_project(&w, k);
+        assert_eq!(p.nnz().min(k), p.nnz(), "seed {seed}: nnz > k");
+        if k <= r * c {
+            assert_eq!(p.nnz(), k.min(w.nnz()), "seed {seed}");
+        }
+        // kept magnitudes >= dropped magnitudes
+        let kept_min = w
+            .data
+            .iter()
+            .zip(&p.data)
+            .filter(|(_, pv)| **pv != 0.0)
+            .map(|(wv, _)| wv.abs())
+            .fold(f32::INFINITY, f32::min);
+        let dropped_max = w
+            .data
+            .iter()
+            .zip(&p.data)
+            .filter(|(wv, pv)| **pv == 0.0 && **wv != 0.0)
+            .map(|(wv, _)| wv.abs())
+            .fold(0.0, f32::max);
+        if p.nnz() > 0 && p.nnz() < w.nnz() {
+            assert!(kept_min >= dropped_max, "seed {seed}: {kept_min} < {dropped_max}");
+        }
+    });
+}
+
+#[test]
+fn prop_nm_projection_budget_and_optimality() {
+    for_seeds(40, |seed| {
+        let mut rng = Rng::new(seed + 100);
+        let m = if seed % 2 == 0 { 4 } else { 8 };
+        let n = 1 + rng.below(m - 1);
+        let groups = rand_dims(&mut rng, 1, 6);
+        let cols = rand_dims(&mut rng, 1, 5);
+        let w = Matrix::randn(groups * m, cols, &mut rng);
+        let p = nm_project(&w, n, m);
+        for c in 0..cols {
+            for g0 in (0..groups * m).step_by(m) {
+                let kept: Vec<f32> = (g0..g0 + m)
+                    .filter(|&r| p.at(r, c) != 0.0)
+                    .map(|r| w.at(r, c).abs())
+                    .collect();
+                assert!(kept.len() <= n, "seed {seed}");
+                let dropped_max = (g0..g0 + m)
+                    .filter(|&r| p.at(r, c) == 0.0)
+                    .map(|r| w.at(r, c).abs())
+                    .fold(0.0f32, f32::max);
+                let kept_min = kept.iter().cloned().fold(f32::INFINITY, f32::min);
+                if !kept.is_empty() && kept.len() == n {
+                    assert!(kept_min >= dropped_max, "seed {seed}");
+                }
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------- linalg
+
+#[test]
+fn prop_eigh_reconstructs_and_orthonormal() {
+    for_seeds(15, |seed| {
+        let mut rng = Rng::new(seed + 200);
+        let n = rand_dims(&mut rng, 2, 24);
+        let x = Matrix::randn(n + 5, n, &mut rng);
+        let h = gram(&x);
+        let e = SymEig::new(&h).unwrap();
+        // Q diag Q^T == H
+        let mut lam_qt = e.q.transpose();
+        for i in 0..n {
+            lam_qt.scale_row(i, e.vals[i]);
+        }
+        let rec = matmul(&e.q, &lam_qt);
+        assert!(
+            rec.sub(&h).fro_norm() / h.fro_norm().max(1.0) < 1e-3,
+            "seed {seed}"
+        );
+        let qtq = matmul(&e.q.transpose(), &e.q);
+        assert!(qtq.max_abs_diff(&Matrix::identity(n)) < 1e-3, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_cholesky_solve_residual() {
+    for_seeds(20, |seed| {
+        let mut rng = Rng::new(seed + 300);
+        let n = rand_dims(&mut rng, 1, 20);
+        let x = Matrix::randn(n + 6, n, &mut rng);
+        let mut h = gram(&x);
+        for i in 0..n {
+            *h.at_mut(i, i) += 0.2;
+        }
+        let b: Vec<f32> = rng.gaussian_vec(n);
+        let sol = Cholesky::new(&h).unwrap().solve_vec(&b);
+        let hx = alps::linalg::matmul::matvec(&h, &sol);
+        for i in 0..n {
+            assert!((hx[i] - b[i]).abs() < 1e-2, "seed {seed} idx {i}");
+        }
+    });
+}
+
+#[test]
+fn prop_pcg_objective_never_worse_than_start() {
+    for_seeds(15, |seed| {
+        let mut rng = Rng::new(seed + 400);
+        let n = rand_dims(&mut rng, 4, 20);
+        let m = rand_dims(&mut rng, 1, 8);
+        let x = Matrix::randn(n + 10, n, &mut rng);
+        let what = Matrix::randn(n, m, &mut rng);
+        let p = LayerProblem::from_activations(&x, &what).unwrap();
+        let k = 1 + rng.below(n * m);
+        let w0 = topk_project(&what, k);
+        let mask = w0.support_mask();
+        let (w, _) = pcg_support(&p.h, &p.g, &w0, &mask, 10, 1e-12);
+        assert!(
+            p.rel_error(&w) <= p.rel_error(&w0) + 1e-6,
+            "seed {seed}: PCG made things worse"
+        );
+    });
+}
+
+// ---------------------------------------------------------------- ADMM
+
+#[test]
+fn prop_alps_budget_and_finiteness() {
+    for_seeds(10, |seed| {
+        let mut rng = Rng::new(seed + 500);
+        let n = rand_dims(&mut rng, 6, 20);
+        let m = rand_dims(&mut rng, 2, 8);
+        let x = Matrix::randn(n + 8, n, &mut rng);
+        let what = Matrix::randn(n, m, &mut rng);
+        let p = LayerProblem::from_activations(&x, &what).unwrap();
+        let s = [0.3, 0.5, 0.7, 0.9][seed as usize % 4];
+        let t = SparsityTarget::Unstructured(s);
+        let w = Alps::default().prune(&p, t).unwrap();
+        assert!(w.nnz() <= t.keep_count(n, m), "seed {seed}");
+        assert!(w.data.iter().all(|v| v.is_finite()), "seed {seed}");
+        assert!(p.rel_error(&w) <= 1.0 + 1e-6, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_theorem1_gap_bounded_by_c_over_rho() {
+    // with a geometric rho schedule, gap(t) * rho(t) must stay bounded
+    for_seeds(8, |seed| {
+        let mut rng = Rng::new(seed + 600);
+        let n = rand_dims(&mut rng, 8, 16);
+        let m = rand_dims(&mut rng, 2, 6);
+        let x = Matrix::randn(n + 8, n, &mut rng);
+        let what = Matrix::randn(n, m, &mut rng);
+        let p = LayerProblem::from_activations(&x, &what).unwrap();
+        let (_, trace) = Alps::default()
+            .prune_traced(&p, SparsityTarget::Unstructured(0.6))
+            .unwrap();
+        // primal gaps recorded at each rho checkpoint must shrink overall
+        let gaps = &trace.primal_gaps;
+        if gaps.len() >= 3 {
+            let early = gaps[0].max(1e-12);
+            let late = *gaps.last().unwrap();
+            assert!(late <= early * 2.0, "seed {seed}: gap grew {early} -> {late}");
+        }
+    });
+}
+
+#[test]
+fn prop_rho_update_monotone_nondecreasing() {
+    let cfg = AlpsConfig::default();
+    for_seeds(50, |seed| {
+        let mut rng = Rng::new(seed + 700);
+        let k = 1 + rng.below(10_000);
+        let s_t = rng.below(k + 1);
+        let rho = 0.01 + rng.uniform_f32() * 10.0;
+        let new = rho_update(rho, s_t, k, &cfg);
+        assert!(new >= rho, "seed {seed}");
+        assert!(new <= rho * 1.3 + 1e-6, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_scaling_preserves_problem() {
+    // solving the scaled problem and unscaling == solving the original:
+    // check the objective value is invariant for any W
+    for_seeds(15, |seed| {
+        let mut rng = Rng::new(seed + 800);
+        let n = rand_dims(&mut rng, 4, 16);
+        let m = rand_dims(&mut rng, 2, 6);
+        let x = Matrix::randn(n + 6, n, &mut rng);
+        let what = Matrix::randn(n, m, &mut rng);
+        let p = LayerProblem::from_activations(&x, &what).unwrap();
+        let (scaling, hs) = DiagScaling::from_gram(&p.h, 0.0);
+        let w = Matrix::randn(n, m, &mut rng);
+        // (What - W)^T H (What - W) == (What' - W')^T H' (What' - W')
+        let delta = p.what.sub(&w);
+        let obj = delta.dot(&matmul(&p.h, &delta));
+        let ws = scaling.to_scaled(&w);
+        let whats = scaling.to_scaled(&p.what);
+        let deltas = whats.sub(&ws);
+        let objs = deltas.dot(&matmul(&hs, &deltas));
+        assert!(
+            (obj - objs).abs() / obj.abs().max(1e-6) < 1e-3,
+            "seed {seed}: {obj} vs {objs}"
+        );
+    });
+}
+
+#[test]
+fn prop_sparse_csr_roundtrip_random_density() {
+    for_seeds(25, |seed| {
+        let mut rng = Rng::new(seed + 900);
+        let r = rand_dims(&mut rng, 1, 30);
+        let c = rand_dims(&mut rng, 1, 30);
+        let density = rng.uniform();
+        let mut m = Matrix::zeros(r, c);
+        for v in m.data.iter_mut() {
+            if rng.uniform() < density {
+                *v = rng.gaussian();
+            }
+        }
+        let csr = alps::linalg::Csr::from_dense(&m);
+        assert_eq!(csr.to_dense(), m, "seed {seed}");
+    });
+}
