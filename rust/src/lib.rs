@@ -1,4 +1,5 @@
-//! ALPS — ADMM-based one-shot LLM pruning (NeurIPS 2024 reproduction).
+//! ALPS — ADMM-based one-shot LLM pruning (NeurIPS 2024 reproduction),
+//! plus the serving stack that cashes in the sparsity.
 //!
 //! Three-layer architecture (see DESIGN.md):
 //! * Layer 3 (this crate): coordinator — config, data pipeline, layer-wise
@@ -8,6 +9,20 @@
 //!
 //! The `runtime` module executes the AOT artifacts via PJRT; every pruning
 //! method also has a pure-rust native path used for tests and baselines.
+//!
+//! On top of pruning, the crate serves generation traffic from the pruned
+//! weights:
+//! * `model` — dense transformer forward plus the incremental KV-cache
+//!   decode path ([`model::Decoder`]): per-token cost is O(context)
+//!   attention + O(1) weight matmuls instead of a full prefix re-forward.
+//!   The [`model::DecodeOps`] seam runs the same decode over dense
+//!   matrices or the CSR [`model::SparseModel`].
+//! * `serve` — continuous-batching generation engine (engine / batcher /
+//!   metrics) behind the `alps serve` CLI subcommand; `bench_serve`
+//!   load-tests it dense-vs-sparse across sparsity levels. See
+//!   `serve/mod.rs` for the architecture and wire protocol.
+//! * `linalg` — dense blocked/threaded matmul (thread count overridable
+//!   via `ALPS_THREADS`) and u32-indexed CSR kernels.
 pub mod bench;
 pub mod config;
 pub mod coordinator;
@@ -17,4 +32,5 @@ pub mod linalg;
 pub mod model;
 pub mod pruning;
 pub mod runtime;
+pub mod serve;
 pub mod util;

@@ -58,9 +58,22 @@ pub fn matvec(a: &Matrix, x: &[f32]) -> Vec<f32> {
     y
 }
 
-/// Number of worker threads (cores - 1, at least 1).
+/// Number of worker threads: the `ALPS_THREADS` env override when set to a
+/// positive integer (read once — serve benches pin it for reproducibility
+/// on shared CI machines), else cores - 1, at least 1.
 pub fn num_threads() -> usize {
+    static OVERRIDE: std::sync::OnceLock<Option<usize>> = std::sync::OnceLock::new();
+    let ov = OVERRIDE
+        .get_or_init(|| std::env::var("ALPS_THREADS").ok().and_then(|v| parse_threads(&v)));
+    if let Some(n) = ov {
+        return *n;
+    }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).saturating_sub(1).max(1)
+}
+
+/// Parse an `ALPS_THREADS` value; `None` for anything non-positive/garbled.
+fn parse_threads(v: &str) -> Option<usize> {
+    v.trim().parse::<usize>().ok().filter(|&n| n > 0)
 }
 
 /// Micro-kernel geometry: MR rows of A against an NR-wide strip of B, with
@@ -271,6 +284,16 @@ mod tests {
         for i in 0..15 {
             assert!((got[i] - expect.at(i, 0)).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn thread_override_parsing() {
+        assert_eq!(parse_threads("4"), Some(4));
+        assert_eq!(parse_threads(" 2 "), Some(2));
+        assert_eq!(parse_threads("0"), None);
+        assert_eq!(parse_threads("-1"), None);
+        assert_eq!(parse_threads("lots"), None);
+        assert!(num_threads() >= 1);
     }
 
     #[test]

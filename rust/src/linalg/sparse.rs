@@ -3,23 +3,32 @@
 
 use super::matrix::Matrix;
 
-/// Compressed sparse row matrix.
+/// Compressed sparse row matrix. Row pointers are `u32` (not `usize`) to
+/// halve the bookkeeping footprint; `from_dense` guards the nnz overflow.
 #[derive(Clone, Debug)]
 pub struct Csr {
     pub rows: usize,
     pub cols: usize,
-    pub indptr: Vec<usize>,
+    pub indptr: Vec<u32>,
     pub indices: Vec<u32>,
     pub values: Vec<f32>,
 }
 
 impl Csr {
     /// Convert from dense, dropping exact zeros.
+    ///
+    /// Panics if the matrix holds more than `u32::MAX` nonzeros — beyond
+    /// the u32 indptr representation (a 16 GiB+ values array; none of our
+    /// models come within orders of magnitude of that).
     pub fn from_dense(m: &Matrix) -> Self {
+        assert!(
+            m.rows * m.cols <= u32::MAX as usize || m.nnz() <= u32::MAX as usize,
+            "matrix nnz overflows u32 CSR row pointers"
+        );
         let mut indptr = Vec::with_capacity(m.rows + 1);
         let mut indices = Vec::new();
         let mut values = Vec::new();
-        indptr.push(0);
+        indptr.push(0u32);
         for r in 0..m.rows {
             for (c, &v) in m.row(r).iter().enumerate() {
                 if v != 0.0 {
@@ -27,9 +36,15 @@ impl Csr {
                     values.push(v);
                 }
             }
-            indptr.push(indices.len());
+            indptr.push(indices.len() as u32);
         }
         Csr { rows: m.rows, cols: m.cols, indptr, indices, values }
+    }
+
+    /// Half-open nonzero range of row `r` into `indices`/`values`.
+    #[inline]
+    pub fn row_range(&self, r: usize) -> std::ops::Range<usize> {
+        self.indptr[r] as usize..self.indptr[r + 1] as usize
     }
 
     pub fn nnz(&self) -> usize {
@@ -43,7 +58,7 @@ impl Csr {
     pub fn to_dense(&self) -> Matrix {
         let mut m = Matrix::zeros(self.rows, self.cols);
         for r in 0..self.rows {
-            for i in self.indptr[r]..self.indptr[r + 1] {
+            for i in self.row_range(r) {
                 *m.at_mut(r, self.indices[i] as usize) = self.values[i];
             }
         }
@@ -56,10 +71,27 @@ impl Csr {
         let mut y = vec![0.0f32; self.rows];
         for r in 0..self.rows {
             let mut acc = 0.0f32;
-            for i in self.indptr[r]..self.indptr[r + 1] {
+            for i in self.row_range(r) {
                 acc += self.values[i] * x[self.indices[i] as usize];
             }
             y[r] = acc;
+        }
+        y
+    }
+
+    /// y = x A for a single activation row x (len == A.rows) — the
+    /// KV-cache decode shape: one token's activations against the pruned
+    /// weight matrix.
+    pub fn row_matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.rows);
+        let mut y = vec![0.0f32; self.cols];
+        for (r, &xv) in x.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            for i in self.row_range(r) {
+                y[self.indices[i] as usize] += xv * self.values[i];
+            }
         }
         y
     }
@@ -78,12 +110,18 @@ impl Csr {
                 if xv == 0.0 {
                     continue;
                 }
-                for i in self.indptr[r]..self.indptr[r + 1] {
+                for i in self.row_range(r) {
                     yrow[self.indices[i] as usize] += xv * self.values[i];
                 }
             }
         }
         y
+    }
+
+    /// Bytes of the CSR representation (f32 values + u32 col indices +
+    /// u32 row pointers).
+    pub fn bytes(&self) -> usize {
+        self.nnz() * (4 + 4) + (self.rows + 1) * 4
     }
 }
 
@@ -143,6 +181,28 @@ mod tests {
         let expect = matmul(&x, &w);
         let got = csr.left_matmul(&x);
         assert!(got.max_abs_diff(&expect) < 1e-4);
+    }
+
+    #[test]
+    fn row_matvec_matches_left_matmul() {
+        let w = sparse_random(14, 11, 0.3, 5);
+        let csr = Csr::from_dense(&w);
+        let mut rng = Rng::new(6);
+        let x = Matrix::randn(3, 14, &mut rng);
+        let full = csr.left_matmul(&x);
+        for t in 0..x.rows {
+            let got = csr.row_matvec(x.row(t));
+            for (c, g) in got.iter().enumerate() {
+                assert!((g - full.at(t, c)).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn bytes_accounting_u32() {
+        let m = sparse_random(10, 10, 0.2, 7);
+        let csr = Csr::from_dense(&m);
+        assert_eq!(csr.bytes(), csr.nnz() * 8 + 11 * 4);
     }
 
     #[test]

@@ -7,16 +7,19 @@
 //!          perplexity on the three eval splits + 4 zero-shot tasks
 //!   layer  --model alps-base --layer mlp.w2 --sparsity 0.7 [--methods all]
 //!          single-layer reconstruction-error comparison (Fig. 2 row)
+//!   serve  --model alps-base --weights pruned.bin [--sparse] [--stdin]
+//!          continuous-batching generation server (see serve/mod.rs)
 //!   info                                      artifact + model inventory
 //!   smoke  <file.hlo.txt>                     runtime smoke test
 
-use alps::config::{AlpsConfig, SparsityTarget};
+use alps::config::{AlpsConfig, ModelConfig, SparsityTarget};
 use alps::coordinator::{PruneEngine, Scheduler};
 use alps::data::{sample_windows, tasks, Corpus};
 use alps::eval::{perplexity, zero_shot_accuracy};
 use alps::model::{Model, Weights};
 use alps::pruning::{all_methods, method_by_name};
 use alps::runtime::{artifact, Runtime};
+use alps::serve::{Batcher, Engine, SamplingParams};
 use alps::util::table::{fmt_sig, Table};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -102,7 +105,8 @@ fn cmd_prune(args: &Args) -> Result<()> {
             bail!("--engine hlo only supports --method alps");
         }
         let rt = Runtime::new(&artifacts_dir())?;
-        let r = sched.prune_model(&mut model, target, &PruneEngine::Hlo(&rt, AlpsConfig::default()))?;
+        let engine = PruneEngine::Hlo(&rt, AlpsConfig::default());
+        let r = sched.prune_model(&mut model, target, &engine)?;
         println!("(hlo engine: {} artifact executions)", rt.total_execs());
         r
     } else {
@@ -183,6 +187,186 @@ fn cmd_layer(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn parse_prompt(line: &str) -> Result<Vec<u16>> {
+    line.split_whitespace()
+        .map(|t| t.parse::<u16>().with_context(|| format!("bad token id '{t}'")))
+        .collect()
+}
+
+fn fmt_tokens(tokens: &[u16]) -> String {
+    tokens.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(" ")
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let name = args.get("model", "alps-tiny");
+    let model = if args.has("random") {
+        // synthetic weights: lets the server run without built artifacts
+        Model::random(ModelConfig::preset(&name)?, 0xA125)?
+    } else {
+        load_model(args)?
+    };
+    let engine = if args.has("sparse") {
+        Engine::sparse(&model)?
+    } else {
+        Engine::dense(&model)?
+    };
+    let stop_token = match args.flags.get("stop") {
+        Some(s) => Some(s.parse::<u16>().context("--stop token id")?),
+        None => None,
+    };
+    let params = SamplingParams {
+        max_new_tokens: args.get("max-new", "32").parse().context("--max-new")?,
+        temperature: args.get("temperature", "0").parse().context("--temperature")?,
+        top_k: args.get("top-k", "0").parse().context("--top-k")?,
+        stop_token,
+    };
+    let max_batch: usize = args.get("max-batch", "8").parse().context("--max-batch")?;
+    println!(
+        "serving {} [{}] — vocab {}, ctx {}, max batch {max_batch}, threads {}",
+        model.cfg.name,
+        engine.label(),
+        model.cfg.vocab,
+        model.cfg.seq_len,
+        alps::linalg::matmul::num_threads(),
+    );
+    if args.has("stdin") {
+        serve_stdin(&engine, &params, max_batch)
+    } else {
+        serve_tcp(&engine, &params, max_batch, &args.get("addr", "127.0.0.1:7878"))
+    }
+}
+
+/// Batch every prompt line from stdin through the continuous batcher,
+/// print `<id>: <tokens>` lines plus the metrics table.
+fn serve_stdin(engine: &Engine, params: &SamplingParams, max_batch: usize) -> Result<()> {
+    let mut batcher = Batcher::new(engine, max_batch);
+    for line in std::io::stdin().lines() {
+        let line = line.context("reading stdin")?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        match parse_prompt(line) {
+            Ok(p) => {
+                batcher.submit(p, params.clone());
+            }
+            Err(e) => eprintln!("skipping line: {e}"),
+        }
+    }
+    let mut responses = batcher.run_to_completion()?;
+    responses.sort_by_key(|r| r.id);
+    for r in responses {
+        match r.error {
+            Some(e) => println!("{}: ERR {e}", r.id),
+            None => println!("{}: {}", r.id, fmt_tokens(&r.tokens)),
+        }
+    }
+    println!("{}", batcher.metrics.render());
+    Ok(())
+}
+
+/// Line protocol over TCP: each line is a prompt of token ids; a blank
+/// line, `run`, or EOF flushes the accumulated requests through one
+/// batched generation. A leading `GET ` gets an HTTP health response.
+fn serve_tcp(
+    engine: &Engine,
+    params: &SamplingParams,
+    max_batch: usize,
+    addr: &str,
+) -> Result<()> {
+    let listener =
+        std::net::TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    println!("listening on {addr} (blank line or `run` flushes a batch; GET /healthz for status)");
+    for stream in listener.incoming() {
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("[serve] accept error: {e}");
+                continue;
+            }
+        };
+        if let Err(e) = handle_conn(stream, engine, params, max_batch) {
+            eprintln!("[serve] connection error: {e}");
+        }
+    }
+    return Ok(());
+
+    fn handle_conn(
+        stream: std::net::TcpStream,
+        engine: &Engine,
+        params: &SamplingParams,
+        max_batch: usize,
+    ) -> Result<()> {
+        use std::io::{BufRead, BufReader, Write};
+        let mut reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+        let mut stream = stream;
+        let mut batcher = Batcher::new(engine, max_batch);
+        let mut line = String::new();
+        let mut first = true;
+        loop {
+            line.clear();
+            let n = reader.read_line(&mut line).context("reading request line")?;
+            if first && line.starts_with("GET ") {
+                // drain the request headers before replying: closing with
+                // unread data still buffered can RST the response away
+                let mut hdr = String::new();
+                loop {
+                    hdr.clear();
+                    let n = reader.read_line(&mut hdr).context("reading http header")?;
+                    if n == 0 || hdr.trim().is_empty() {
+                        break;
+                    }
+                }
+                let m = engine.model();
+                let body = format!(
+                    "{{\"model\":\"{}\",\"backend\":\"{}\",\"vocab\":{},\"seq_len\":{}}}\n",
+                    m.cfg.name,
+                    engine.label(),
+                    m.cfg.vocab,
+                    m.cfg.seq_len
+                );
+                write!(
+                    stream,
+                    "HTTP/1.1 200 OK\r\nContent-Type: application/json\r\n\
+                     Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+                    body.len(),
+                    body
+                )?;
+                return Ok(());
+            }
+            first = false;
+            let trimmed = line.trim();
+            let flush = n == 0 || trimmed.is_empty() || trimmed == "run";
+            if !flush {
+                match parse_prompt(trimmed) {
+                    Ok(p) => {
+                        let id = batcher.submit(p, params.clone());
+                        writeln!(stream, "queued {id}")?;
+                    }
+                    Err(e) => writeln!(stream, "err - {e}")?,
+                }
+            } else if !batcher.is_idle() {
+                let mut responses = batcher.run_to_completion()?;
+                responses.sort_by_key(|r| r.id);
+                for r in responses {
+                    match r.error {
+                        Some(e) => writeln!(stream, "err {} {e}", r.id)?,
+                        None => writeln!(stream, "ok {} {}", r.id, fmt_tokens(&r.tokens))?,
+                    }
+                }
+                println!("[serve] {}", batcher.metrics.summary());
+            } else if n != 0 {
+                // flush with nothing queued: answer rather than leaving a
+                // client blocked on read waiting for batch results
+                writeln!(stream, "err - no pending requests")?;
+            }
+            if n == 0 {
+                return Ok(());
+            }
+        }
+    }
+}
+
 fn cmd_info() -> Result<()> {
     let dir = artifacts_dir();
     println!("artifacts dir: {dir:?}");
@@ -247,11 +431,14 @@ fn cmd_smoke(args: &Args) -> Result<()> {
 fn usage() {
     println!(
         "alps — ADMM-based one-shot LLM pruning (NeurIPS 2024 reproduction)\n\
-         usage: alps <prune|eval|layer|info|smoke> [flags]\n\
+         usage: alps <prune|eval|layer|serve|info|smoke> [flags]\n\
            prune --model alps-base --sparsity 0.7|2:4 --method alps|mp|wanda|sparsegpt|dsnot\n\
                  [--engine native|hlo] [--calib 32] [--out pruned.bin] [--quiet]\n\
            eval  --model alps-base [--weights pruned.bin] [--items 50]\n\
            layer --model alps-base --block 0 --layer mlp.w2 --sparsity 0.7 [--methods all]\n\
+           serve --model alps-base [--weights pruned.bin] [--sparse] [--random]\n\
+                 [--addr 127.0.0.1:7878 | --stdin] [--max-batch 8] [--max-new 32]\n\
+                 [--temperature 0] [--top-k 0] [--stop id]\n\
            info\n\
            smoke [file.hlo.txt]"
     );
@@ -268,6 +455,7 @@ fn main() -> Result<()> {
         "prune" => cmd_prune(&args),
         "eval" => cmd_eval(&args),
         "layer" => cmd_layer(&args),
+        "serve" => cmd_serve(&args),
         "info" => cmd_info(),
         "smoke" => cmd_smoke(&args),
         _ => {

@@ -6,7 +6,8 @@ pub mod sparse_infer;
 pub mod transformer;
 pub mod weights;
 
-pub use transformer::{BlockInputs, Model};
+pub use sparse_infer::SparseModel;
+pub use transformer::{BlockInputs, DecodeOps, Decoder, DenseOps, KvCache, Model};
 pub use weights::Weights;
 
 /// Names of the prunable matrices of block `i`, with their activation

@@ -7,7 +7,7 @@
 //! crosses over once prunable-matrix density drops below the CSR
 //! bookkeeping overhead (~50% on this CPU; see bench_perf_hotpath).
 
-use super::transformer::Model;
+use super::transformer::{DecodeOps, Model};
 use crate::linalg::{Csr, Matrix};
 use anyhow::Result;
 use std::collections::HashMap;
@@ -39,13 +39,13 @@ impl<'m> SparseModel<'m> {
         nnz as f64 / total.max(1) as f64
     }
 
-    /// Memory footprint of the sparse prunable weights in bytes (values +
-    /// u32 col indices + row pointers), vs dense f32.
+    /// Memory footprint of the sparse prunable weights in bytes (f32
+    /// values + u32 col indices + u32 row pointers), vs dense f32.
     pub fn bytes_sparse_vs_dense(&self) -> (usize, usize) {
         let mut sparse = 0usize;
         let mut dense = 0usize;
         for c in self.csr.values() {
-            sparse += c.nnz() * (4 + 4) + (c.rows + 1) * 8;
+            sparse += c.bytes();
             dense += c.rows * c.cols * 4;
         }
         (sparse, dense)
@@ -154,6 +154,22 @@ impl<'m> SparseModel<'m> {
     }
 }
 
+/// CSR decode backend: the same incremental KV-cache decode as the dense
+/// path, with every prunable matmul routed through the sparse kernels —
+/// the single-row kernel for unbatched decode, `left_matmul` for batches.
+impl DecodeOps for SparseModel<'_> {
+    fn apply(&self, name: &str, x: &Matrix) -> Result<Matrix> {
+        if x.rows == 1 {
+            let c = self
+                .csr
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("no CSR for '{name}'"))?;
+            return Ok(Matrix::from_vec(1, c.cols, c.row_matvec(x.row(0))));
+        }
+        self.mm(name, x)
+    }
+}
+
 // local mirrors of the dense helpers (kept private in transformer.rs)
 fn layer_norm(x: &Matrix, g: &[f32], b: &[f32]) -> Matrix {
     let eps = 1e-5f32;
@@ -240,6 +256,36 @@ mod tests {
         let (sparse, dense) = sm.bytes_sparse_vs_dense();
         assert!(sparse < dense, "sparse {sparse} !< dense {dense}");
         assert!((sm.density() - 0.1).abs() < 0.01);
+    }
+
+    #[test]
+    fn sparse_kv_decode_matches_full_forward() {
+        // CSR-path incremental decode pins against the dense full-prefix
+        // forward on a pruned model (both are exact on the same weights)
+        use crate::model::transformer::Decoder;
+        let mut m = random_model(4);
+        for name in m.prunable_names() {
+            let w = m.weights.matrix(&name).unwrap();
+            let pruned = crate::pruning::projection::topk_project(&w, w.data.len() * 3 / 10);
+            m.weights.set_matrix(&name, &pruned).unwrap();
+        }
+        let sm = SparseModel::from_model(&m).unwrap();
+        assert!(sm.density() < 0.35);
+        let dec = Decoder::new(&m, sm).unwrap();
+        let ids = [2u16, 7, 1, 9, 4, 3];
+        let full = m.logits(&ids).unwrap();
+        let mut cache = dec.new_cache();
+        for (t, &tok) in ids.iter().enumerate() {
+            let logits = dec.step(&mut cache, tok).unwrap();
+            for c in 0..m.cfg.vocab {
+                assert!(
+                    (logits[c] - full.at(t, c)).abs() < 1e-4,
+                    "t={t} c={c}: {} vs {}",
+                    logits[c],
+                    full.at(t, c)
+                );
+            }
+        }
     }
 
     #[test]

@@ -3,11 +3,12 @@
 //! tied unembedding) so the trained weights evaluate identically on both
 //! sides. Integration tests pin this against the `model_fwd_*` artifact.
 
-use super::weights::Weights;
+use super::weights::{Tensor, Weights};
 use super::ActivationTap;
 use crate::config::ModelConfig;
 use crate::linalg::matmul::matmul;
 use crate::linalg::Matrix;
+use crate::util::Rng;
 use anyhow::{bail, Result};
 use std::collections::HashMap;
 
@@ -248,35 +249,11 @@ impl Model {
             .flat_map(|i| super::prunable_layers(i).into_iter().map(|(n, _)| n))
             .collect()
     }
-}
 
-fn append_rows(sink: &mut BlockInputs, tap: ActivationTap, m: &Matrix) {
-    let entry = sink
-        .taps
-        .entry(tap)
-        .or_insert_with(|| Matrix::zeros(0, m.cols));
-    debug_assert_eq!(entry.cols, m.cols);
-    entry.data.extend_from_slice(&m.data);
-    entry.rows += m.rows;
-}
-
-#[cfg(test)]
-pub(crate) mod testutil {
-    use super::*;
-    use crate::model::weights::Tensor;
-    use crate::util::Rng;
-
-    /// Tiny random model for unit tests.
-    pub fn random_model(seed: u64) -> Model {
-        let cfg = ModelConfig {
-            name: "test".into(),
-            d_model: 16,
-            d_ff: 32,
-            n_layers: 2,
-            n_heads: 4,
-            vocab: 24,
-            seq_len: 12,
-        };
+    /// Synthetic Gaussian-initialized model for the given config — used by
+    /// benches and the serve demo path when trained artifacts are absent
+    /// (unit tests call it with a tiny config via `testutil`).
+    pub fn random(cfg: ModelConfig, seed: u64) -> Result<Model> {
         let mut rng = Rng::new(seed);
         let mut w = Weights::default();
         let mut add2 = |w: &mut Weights, name: &str, r: usize, c: usize, rng: &mut Rng| {
@@ -306,7 +283,312 @@ pub(crate) mod testutil {
         }
         add1(&mut w, "ln_f.g", cfg.d_model, 1.0);
         add1(&mut w, "ln_f.b", cfg.d_model, 0.0);
-        Model::new(cfg, w).unwrap()
+        Model::new(cfg, w)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Incremental (KV-cache) decode — the serving hot path. One decode step
+// recomputes only the current token's activations and attends over cached
+// K/V rows, so the per-token cost is O(context) attention + O(1) matmuls
+// instead of re-running the full prefix through every layer.
+
+/// Per-layer cached attention K/V rows of one sequence.
+struct LayerKv {
+    k: Matrix,
+    v: Matrix,
+}
+
+/// Per-sequence decode state: one K and one V row per generated position
+/// and layer. Rows are appended by [`Decoder::step_batch`].
+pub struct KvCache {
+    layers: Vec<LayerKv>,
+    len: usize,
+}
+
+impl KvCache {
+    /// Empty cache for a model with `n_layers` blocks of width `d_model`.
+    pub fn new(n_layers: usize, d_model: usize) -> KvCache {
+        KvCache {
+            layers: (0..n_layers)
+                .map(|_| LayerKv { k: Matrix::zeros(0, d_model), v: Matrix::zeros(0, d_model) })
+                .collect(),
+            len: 0,
+        }
+    }
+
+    /// Number of positions consumed so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Cache memory footprint in bytes (K + V rows across layers).
+    pub fn bytes(&self) -> usize {
+        self.layers.iter().map(|l| (l.k.data.len() + l.v.data.len()) * 4).sum()
+    }
+}
+
+/// How a named prunable weight matrix is applied to activation rows —
+/// dense matmul ([`DenseOps`]) or CSR kernels (`SparseModel`). This is the
+/// seam that lets one decode implementation serve both weight formats.
+pub trait DecodeOps {
+    /// y = x @ W\[name\] for activation rows x (\[batch, n_in\]).
+    fn apply(&self, name: &str, x: &Matrix) -> Result<Matrix>;
+}
+
+impl<O: DecodeOps + ?Sized> DecodeOps for Box<O> {
+    fn apply(&self, name: &str, x: &Matrix) -> Result<Matrix> {
+        (**self).apply(name, x)
+    }
+}
+
+/// Dense decode backend: prunable matrices resolved once up front so the
+/// per-step path never clones weight tensors.
+pub struct DenseOps {
+    mats: HashMap<String, Matrix>,
+}
+
+impl DenseOps {
+    pub fn new(model: &Model) -> Result<DenseOps> {
+        let mut mats = HashMap::new();
+        for name in model.prunable_names() {
+            let w = model.weights.matrix(&name)?;
+            mats.insert(name, w);
+        }
+        Ok(DenseOps { mats })
+    }
+}
+
+impl DecodeOps for DenseOps {
+    fn apply(&self, name: &str, x: &Matrix) -> Result<Matrix> {
+        match self.mats.get(name) {
+            Some(w) => Ok(matmul(x, w)),
+            None => bail!("no dense weight '{name}'"),
+        }
+    }
+}
+
+/// Pre-built weight/param names of one block — the decode hot path calls
+/// into name-keyed maps every layer of every step, so the `format!`
+/// allocations are hoisted to construction time.
+struct BlockNames {
+    ln1_g: String,
+    ln1_b: String,
+    wq: String,
+    wk: String,
+    wv: String,
+    wo: String,
+    ln2_g: String,
+    ln2_b: String,
+    w1: String,
+    w2: String,
+}
+
+impl BlockNames {
+    fn new(block: usize) -> BlockNames {
+        let p = format!("blocks.{block}.");
+        BlockNames {
+            ln1_g: format!("{p}ln1.g"),
+            ln1_b: format!("{p}ln1.b"),
+            wq: format!("{p}attn.wq"),
+            wk: format!("{p}attn.wk"),
+            wv: format!("{p}attn.wv"),
+            wo: format!("{p}attn.wo"),
+            ln2_g: format!("{p}ln2.g"),
+            ln2_b: format!("{p}ln2.b"),
+            w1: format!("{p}mlp.w1"),
+            w2: format!("{p}mlp.w2"),
+        }
+    }
+}
+
+/// Incremental decoder: model + weight backend + pre-transposed
+/// unembedding. Numerically pins to [`Model::logits`] (tests assert the
+/// per-position logits match the full-prefix forward).
+pub struct Decoder<'m, O: DecodeOps> {
+    model: &'m Model,
+    ops: O,
+    emb_t: Matrix,
+    names: Vec<BlockNames>,
+}
+
+impl<'m, O: DecodeOps> Decoder<'m, O> {
+    pub fn new(model: &'m Model, ops: O) -> Result<Decoder<'m, O>> {
+        let emb_t = model.weights.matrix("tok_emb")?.transpose();
+        let names = (0..model.cfg.n_layers).map(BlockNames::new).collect();
+        Ok(Decoder { model, ops, emb_t, names })
+    }
+
+    pub fn model(&self) -> &'m Model {
+        self.model
+    }
+
+    /// Fresh per-sequence cache sized for this model.
+    pub fn new_cache(&self) -> KvCache {
+        KvCache::new(self.model.cfg.n_layers, self.model.cfg.d_model)
+    }
+
+    /// Feed one token for one sequence; returns the next-token logits row.
+    pub fn step(&self, cache: &mut KvCache, token: u16) -> Result<Vec<f32>> {
+        let logits = self.step_batch(&mut [cache], &[token])?;
+        Ok(logits.row(0).to_vec())
+    }
+
+    /// Feed the whole prompt token by token; returns the logits after the
+    /// final prompt token (the distribution of the first generated token).
+    pub fn prefill(&self, cache: &mut KvCache, prompt: &[u16]) -> Result<Vec<f32>> {
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        let mut last = Vec::new();
+        for &t in prompt {
+            last = self.step(cache, t)?;
+        }
+        Ok(last)
+    }
+
+    /// One decode step over a batch of independent sequences (each with its
+    /// own cache and position). The linear layers run as one [batch, d]
+    /// matrix product — fanning the batch across the matmul thread pool —
+    /// while attention loops per sequence over its cached K/V rows.
+    /// Returns next-token logits [batch, vocab].
+    ///
+    /// Validation (vocab bounds, cache capacity) happens before any cache
+    /// mutation; a later structural error (missing weight) leaves caches
+    /// partially advanced.
+    pub fn step_batch(&self, caches: &mut [&mut KvCache], tokens: &[u16]) -> Result<Matrix> {
+        let m = self.model;
+        let cfg = &m.cfg;
+        let bsz = tokens.len();
+        if bsz == 0 || caches.len() != bsz {
+            bail!("decode batch mismatch: {} caches, {} tokens", caches.len(), bsz);
+        }
+        let d = cfg.d_model;
+        let emb = m.weights.get("tok_emb")?;
+        let pos = m.weights.get("pos_emb")?;
+        let mut x = Matrix::zeros(bsz, d);
+        for (i, &tok) in tokens.iter().enumerate() {
+            if (tok as usize) >= cfg.vocab {
+                bail!("token id {tok} out of vocab {}", cfg.vocab);
+            }
+            let t = caches[i].len;
+            if t >= cfg.seq_len {
+                bail!("KV cache full: position {t} >= seq_len {}", cfg.seq_len);
+            }
+            let erow = &emb.data[(tok as usize) * d..(tok as usize + 1) * d];
+            let prow = &pos.data[t * d..(t + 1) * d];
+            let xrow = x.row_mut(i);
+            for c in 0..d {
+                xrow[c] = erow[c] + prow[c];
+            }
+        }
+        let hd = cfg.head_dim();
+        let heads = cfg.n_heads;
+        let scale = 1.0 / (hd as f32).sqrt();
+        // attention-score scratch, reused across layers/sequences/heads so
+        // the hot path allocates once per step instead of per head
+        let mut sc: Vec<f32> = Vec::with_capacity(cfg.seq_len);
+        for b in 0..cfg.n_layers {
+            let names = &self.names[b];
+            let h = layer_norm(
+                &x,
+                m.weights.vector(&names.ln1_g)?,
+                m.weights.vector(&names.ln1_b)?,
+            );
+            let q = self.ops.apply(&names.wq, &h)?;
+            let k = self.ops.apply(&names.wk, &h)?;
+            let v = self.ops.apply(&names.wv, &h)?;
+            let mut mix = Matrix::zeros(bsz, d);
+            for i in 0..bsz {
+                let lk = &mut caches[i].layers[b];
+                lk.k.data.extend_from_slice(k.row(i));
+                lk.k.rows += 1;
+                lk.v.data.extend_from_slice(v.row(i));
+                lk.v.rows += 1;
+                let ctx = lk.k.rows;
+                let orow = mix.row_mut(i);
+                for head in 0..heads {
+                    let off = head * hd;
+                    let qi = &q.row(i)[off..off + hd];
+                    sc.clear();
+                    sc.resize(ctx, 0.0);
+                    for (j, s) in sc.iter_mut().enumerate() {
+                        let kj = &lk.k.row(j)[off..off + hd];
+                        let dot: f32 = qi.iter().zip(kj).map(|(a, b)| a * b).sum();
+                        *s = dot * scale;
+                    }
+                    // softmax over the live context; future positions are
+                    // simply absent (the full forward's -1e30 mask entries
+                    // underflow to exactly 0.0, so the sums agree).
+                    let max = sc.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let mut sum = 0.0f32;
+                    for s in sc.iter_mut() {
+                        *s = (*s - max).exp();
+                        sum += *s;
+                    }
+                    for s in sc.iter_mut() {
+                        *s /= sum;
+                    }
+                    for (j, &sv) in sc.iter().enumerate() {
+                        if sv == 0.0 {
+                            continue;
+                        }
+                        let vrow = &lk.v.row(j)[off..off + hd];
+                        for (t, vv) in vrow.iter().enumerate() {
+                            orow[off + t] += sv * vv;
+                        }
+                    }
+                }
+            }
+            let attn_out = self.ops.apply(&names.wo, &mix)?;
+            x = x.add(&attn_out);
+            let h2 = layer_norm(
+                &x,
+                m.weights.vector(&names.ln2_g)?,
+                m.weights.vector(&names.ln2_b)?,
+            );
+            let mut hidden = self.ops.apply(&names.w1, &h2)?;
+            hidden.data.iter_mut().for_each(|vv| *vv = gelu(*vv));
+            x = x.add(&self.ops.apply(&names.w2, &hidden)?);
+        }
+        for c in caches.iter_mut() {
+            c.len += 1;
+        }
+        let hf = layer_norm(&x, m.weights.vector("ln_f.g")?, m.weights.vector("ln_f.b")?);
+        Ok(matmul(&hf, &self.emb_t))
+    }
+}
+
+fn append_rows(sink: &mut BlockInputs, tap: ActivationTap, m: &Matrix) {
+    let entry = sink
+        .taps
+        .entry(tap)
+        .or_insert_with(|| Matrix::zeros(0, m.cols));
+    debug_assert_eq!(entry.cols, m.cols);
+    entry.data.extend_from_slice(&m.data);
+    entry.rows += m.rows;
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    /// Tiny random model for unit tests.
+    pub fn random_model(seed: u64) -> Model {
+        let cfg = ModelConfig {
+            name: "test".into(),
+            d_model: 16,
+            d_ff: 32,
+            n_layers: 2,
+            n_heads: 4,
+            vocab: 24,
+            seq_len: 12,
+        };
+        Model::random(cfg, seed).unwrap()
     }
 }
 
@@ -385,6 +667,80 @@ mod tests {
     fn prunable_names_count() {
         let m = random_model(7);
         assert_eq!(m.prunable_names().len(), 2 * 6);
+    }
+
+    #[test]
+    fn kv_decode_matches_full_forward() {
+        // the tentpole exactness pin: incremental decode with a KV cache
+        // reproduces the full-prefix forward at every position
+        let m = random_model(8);
+        let ids = [1u16, 5, 9, 3, 7, 2, 11];
+        let full = m.logits(&ids).unwrap();
+        let dec = Decoder::new(&m, DenseOps::new(&m).unwrap()).unwrap();
+        let mut cache = dec.new_cache();
+        for (t, &tok) in ids.iter().enumerate() {
+            let logits = dec.step(&mut cache, tok).unwrap();
+            for c in 0..m.cfg.vocab {
+                assert!(
+                    (logits[c] - full.at(t, c)).abs() < 1e-4,
+                    "t={t} c={c}: {} vs {}",
+                    logits[c],
+                    full.at(t, c)
+                );
+            }
+        }
+        assert_eq!(cache.len(), ids.len());
+        assert!(cache.bytes() > 0);
+    }
+
+    #[test]
+    fn batched_decode_matches_single_at_mixed_positions() {
+        // sequences admitted at different times (continuous batching) —
+        // each row carries its own position
+        let m = random_model(9);
+        let a = [1u16, 2, 3, 4];
+        let b = [5u16, 6, 7];
+        let dec = Decoder::new(&m, DenseOps::new(&m).unwrap()).unwrap();
+        let mut ca = dec.new_cache();
+        dec.step(&mut ca, a[0]).unwrap(); // a is one step ahead of b
+        let mut cb = dec.new_cache();
+        let mut last = Matrix::zeros(0, 0);
+        for i in 0..3 {
+            last = dec.step_batch(&mut [&mut ca, &mut cb], &[a[i + 1], b[i]]).unwrap();
+        }
+        let fa = m.logits(&a).unwrap();
+        let fb = m.logits(&b).unwrap();
+        for c in 0..m.cfg.vocab {
+            assert!((last.at(0, c) - fa.at(3, c)).abs() < 1e-4);
+            assert!((last.at(1, c) - fb.at(2, c)).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_overflow_and_bad_tokens() {
+        let m = random_model(10);
+        let dec = Decoder::new(&m, DenseOps::new(&m).unwrap()).unwrap();
+        let mut cache = dec.new_cache();
+        assert!(dec.step(&mut cache, 200).is_err()); // out of vocab
+        assert_eq!(cache.len(), 0); // rejected before mutation
+        for t in 0..m.cfg.seq_len {
+            dec.step(&mut cache, (t % 24) as u16).unwrap();
+        }
+        assert!(dec.step(&mut cache, 0).is_err()); // context full
+        assert!(dec.prefill(&mut dec.new_cache(), &[]).is_err());
+    }
+
+    #[test]
+    fn prefill_matches_stepwise() {
+        let m = random_model(11);
+        let dec = Decoder::new(&m, DenseOps::new(&m).unwrap()).unwrap();
+        let ids = [3u16, 1, 4, 1, 5];
+        let mut cache = dec.new_cache();
+        let logits = dec.prefill(&mut cache, &ids).unwrap();
+        let full = m.logits(&ids).unwrap();
+        for c in 0..m.cfg.vocab {
+            assert!((logits[c] - full.at(4, c)).abs() < 1e-4);
+        }
     }
 
     #[test]

@@ -1,0 +1,318 @@
+//! Continuous-batching request scheduler: a FIFO queue feeding a bounded
+//! decode batch. Between decode steps, finished sequences are evicted and
+//! waiting requests admitted (prefill happens at admission), so short and
+//! long generations share the batch without head-of-line blocking.
+
+use super::engine::{sample_token, Engine, SamplingParams};
+use super::metrics::ServeMetrics;
+use crate::model::KvCache;
+use crate::util::{Rng, Timer};
+use anyhow::Result;
+use std::collections::VecDeque;
+
+/// A queued generation request.
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u16>,
+    pub params: SamplingParams,
+    /// Seed for this request's sampling stream.
+    pub seed: u64,
+}
+
+/// A completed (or failed) generation.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<u16>,
+    pub prompt_len: usize,
+    /// End-to-end seconds from submission (queue wait included).
+    pub total_secs: f64,
+    /// Set when the request was rejected (bad prompt); `tokens` is empty.
+    pub error: Option<String>,
+}
+
+/// One in-flight sequence.
+struct SeqState {
+    id: u64,
+    cache: KvCache,
+    /// Last sampled token — the input of the next decode step.
+    next: u16,
+    out: Vec<u16>,
+    prompt_len: usize,
+    params: SamplingParams,
+    rng: Rng,
+    /// Started at submission: measures queue wait + prefill + decode.
+    timer: Timer,
+}
+
+/// FIFO continuous batcher over one [`Engine`].
+pub struct Batcher<'e, 'm> {
+    engine: &'e Engine<'m>,
+    queue: VecDeque<(Request, Timer)>,
+    active: Vec<SeqState>,
+    max_batch: usize,
+    next_id: u64,
+    pub metrics: ServeMetrics,
+}
+
+impl<'e, 'm> Batcher<'e, 'm> {
+    pub fn new(engine: &'e Engine<'m>, max_batch: usize) -> Batcher<'e, 'm> {
+        Batcher {
+            engine,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            max_batch: max_batch.max(1),
+            next_id: 0,
+            metrics: ServeMetrics::new(),
+        }
+    }
+
+    /// Enqueue a prompt with an auto-assigned id (returned).
+    pub fn submit(&mut self, prompt: Vec<u16>, params: SamplingParams) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        let seed = 0x5EED ^ id;
+        self.submit_request(Request { id, prompt, params, seed });
+        id
+    }
+
+    /// Enqueue a fully-specified request (caller owns id uniqueness).
+    pub fn submit_request(&mut self, req: Request) {
+        self.next_id = self.next_id.max(req.id + 1);
+        self.queue.push_back((req, Timer::start()));
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Ids currently being decoded, in admission order.
+    pub fn active_ids(&self) -> Vec<u64> {
+        self.active.iter().map(|s| s.id).collect()
+    }
+
+    /// Nothing queued and nothing in flight.
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.active.is_empty()
+    }
+
+    fn seq_finished(&self, s: &SeqState) -> bool {
+        s.out.len() >= s.params.max_new_tokens.max(1)
+            || s.params.stop_token == Some(*s.out.last().expect("seq has >= 1 token"))
+            || s.cache.len() >= self.engine.model().cfg.seq_len
+    }
+
+    /// Admit queued requests while the batch has room. Prefill runs here
+    /// (admission time); rejected prompts complete immediately as errors.
+    fn admit(&mut self, finished: &mut Vec<Response>) {
+        while self.active.len() < self.max_batch {
+            let Some((req, timer)) = self.queue.pop_front() else { break };
+            let mut cache = self.engine.decoder().new_cache();
+            let logits = match self.engine.decoder().prefill(&mut cache, &req.prompt) {
+                Ok(l) => l,
+                Err(e) => {
+                    finished.push(Response {
+                        id: req.id,
+                        tokens: Vec::new(),
+                        prompt_len: req.prompt.len(),
+                        total_secs: timer.elapsed_secs(),
+                        error: Some(e.to_string()),
+                    });
+                    continue;
+                }
+            };
+            let mut rng = Rng::new(req.seed);
+            let first = sample_token(&logits, &req.params, &mut rng);
+            let s = SeqState {
+                id: req.id,
+                cache,
+                next: first,
+                out: vec![first],
+                prompt_len: req.prompt.len(),
+                params: req.params,
+                rng,
+                timer,
+            };
+            if self.seq_finished(&s) {
+                self.metrics.record_request(s.timer.elapsed_secs());
+                finished.push(Response {
+                    id: s.id,
+                    tokens: s.out,
+                    prompt_len: s.prompt_len,
+                    total_secs: s.timer.elapsed_secs(),
+                    error: None,
+                });
+            } else {
+                self.active.push(s);
+            }
+        }
+    }
+
+    /// One scheduler tick: admit, run one batched decode step, sample one
+    /// token per sequence, evict finished sequences. Returns requests that
+    /// completed during this tick.
+    pub fn step(&mut self) -> Result<Vec<Response>> {
+        let mut finished = Vec::new();
+        self.admit(&mut finished);
+        if self.active.is_empty() {
+            return Ok(finished);
+        }
+        let toks: Vec<u16> = self.active.iter().map(|s| s.next).collect();
+        let timer = Timer::start();
+        let step_result = {
+            let mut refs: Vec<&mut KvCache> =
+                self.active.iter_mut().map(|s| &mut s.cache).collect();
+            self.engine.decoder().step_batch(&mut refs, &toks)
+        };
+        let logits = match step_result {
+            Ok(l) => l,
+            Err(e) => {
+                // a mid-layer failure leaves KV caches partially advanced
+                // (see Decoder::step_batch docs) — the in-flight sequences
+                // cannot be decoded further, so fail them explicitly
+                // instead of continuing over poisoned caches
+                for s in self.active.drain(..) {
+                    finished.push(Response {
+                        id: s.id,
+                        tokens: Vec::new(),
+                        prompt_len: s.prompt_len,
+                        total_secs: s.timer.elapsed_secs(),
+                        error: Some(format!("decode failed: {e}")),
+                    });
+                }
+                return Ok(finished);
+            }
+        };
+        self.metrics.record_step(toks.len(), timer.elapsed_secs());
+        for (i, s) in self.active.iter_mut().enumerate() {
+            let tok = sample_token(logits.row(i), &s.params, &mut s.rng);
+            s.out.push(tok);
+            s.next = tok;
+        }
+        // evict finished sequences, preserving admission order of survivors
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.seq_finished(&self.active[i]) {
+                let s = self.active.remove(i);
+                self.metrics.record_request(s.timer.elapsed_secs());
+                finished.push(Response {
+                    id: s.id,
+                    tokens: s.out,
+                    prompt_len: s.prompt_len,
+                    total_secs: s.timer.elapsed_secs(),
+                    error: None,
+                });
+            } else {
+                i += 1;
+            }
+        }
+        Ok(finished)
+    }
+
+    /// Drain the queue and all in-flight sequences; returns all responses
+    /// in completion order.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Response>> {
+        let mut out = Vec::new();
+        while !self.is_idle() {
+            out.extend(self.step()?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::transformer::testutil::random_model;
+
+    fn params(n: usize) -> SamplingParams {
+        SamplingParams { max_new_tokens: n, ..Default::default() }
+    }
+
+    #[test]
+    fn admit_evict_ordering_under_full_queue() {
+        // max_batch=2, four queued requests: 0 and 1 admitted first (FIFO);
+        // 0 is short, so 2 is admitted the step after 0 finishes, then 3.
+        let m = random_model(30);
+        let e = Engine::dense(&m).unwrap();
+        let mut b = Batcher::new(&e, 2);
+        b.submit(vec![1, 2], params(2)); // id 0: finishes on 1st decode step
+        b.submit(vec![3, 4], params(5)); // id 1
+        b.submit(vec![5, 6], params(3)); // id 2: waits for a slot
+        b.submit(vec![7], params(2)); // id 3: waits behind 2
+        assert_eq!(b.pending(), 4);
+
+        let done = b.step().unwrap(); // admits 0,1; decode finishes 0
+        assert_eq!(done.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0]);
+        assert_eq!(b.active_ids(), vec![1]);
+        assert_eq!(b.pending(), 2);
+
+        let done = b.step().unwrap(); // admits 2 into the free slot
+        assert!(done.is_empty());
+        assert_eq!(b.active_ids(), vec![1, 2]);
+
+        let mut all: Vec<u64> = done.iter().map(|r| r.id).collect();
+        while !b.is_idle() {
+            all.extend(b.step().unwrap().iter().map(|r| r.id));
+        }
+        all.sort_unstable();
+        assert_eq!(all, vec![1, 2, 3]);
+        assert_eq!(b.metrics.requests_completed(), 4);
+        // batch never exceeded the cap
+        assert!(b.metrics.mean_batch() <= 2.0);
+    }
+
+    #[test]
+    fn responses_match_unbatched_engine() {
+        // batched scheduling must not change greedy outputs
+        let m = random_model(31);
+        let e = Engine::dense(&m).unwrap();
+        let prompts: Vec<Vec<u16>> = vec![vec![1, 2, 3], vec![9, 8], vec![4], vec![6, 5, 7, 2]];
+        let mut b = Batcher::new(&e, 3);
+        for p in &prompts {
+            b.submit(p.clone(), params(4));
+        }
+        let mut got = b.run_to_completion().unwrap();
+        got.sort_by_key(|r| r.id);
+        assert_eq!(got.len(), prompts.len());
+        for (r, p) in got.iter().zip(&prompts) {
+            assert!(r.error.is_none());
+            let solo = e.generate(p, &params(4), 0).unwrap();
+            assert_eq!(r.tokens, solo.tokens, "req {}", r.id);
+            assert_eq!(r.prompt_len, p.len());
+            assert!(r.total_secs >= 0.0);
+        }
+    }
+
+    #[test]
+    fn bad_prompt_rejected_without_poisoning_batch() {
+        let m = random_model(32);
+        let e = Engine::dense(&m).unwrap();
+        let mut b = Batcher::new(&e, 2);
+        b.submit(vec![], params(3)); // empty -> error
+        b.submit(vec![200], params(3)); // out of vocab -> error
+        b.submit(vec![1, 2], params(3)); // fine
+        let mut got = b.run_to_completion().unwrap();
+        got.sort_by_key(|r| r.id);
+        assert!(got[0].error.is_some());
+        assert!(got[1].error.is_some());
+        assert!(got[2].error.is_none());
+        assert_eq!(got[2].tokens.len(), 3);
+    }
+
+    #[test]
+    fn single_token_requests_complete_at_admission() {
+        let m = random_model(33);
+        let e = Engine::dense(&m).unwrap();
+        let mut b = Batcher::new(&e, 4);
+        b.submit(vec![2, 3], params(1));
+        let done = b.step().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].tokens.len(), 1);
+        assert!(b.is_idle());
+    }
+}

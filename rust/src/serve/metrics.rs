@@ -1,0 +1,198 @@
+//! Serving metrics: decode throughput and latency histograms — the
+//! numbers `bench_serve` and the `serve` CLI report (tokens/s,
+//! p50/p95/p99, batch occupancy). Per-step samples are stored once as
+//! `(secs, batch)` pairs in a sliding window ([`STEP_WINDOW`] most recent
+//! steps, likewise for request latencies), so a long-lived server holds
+//! bounded memory; latency percentiles cover that window while the
+//! throughput counters cover the full lifetime.
+
+use crate::util::table::Table;
+use crate::util::Stats;
+use std::collections::VecDeque;
+
+/// Latency percentiles are computed over the most recent this-many decode
+/// steps — bounded memory and report cost on long-lived servers.
+pub const STEP_WINDOW: usize = 4096;
+
+/// Accumulated serving counters for one engine run.
+#[derive(Default)]
+pub struct ServeMetrics {
+    /// Sliding window of batched decode steps: (seconds, tokens produced).
+    steps: VecDeque<(f64, usize)>,
+    steps_total: usize,
+    /// Sliding window of per-request end-to-end latencies (seconds).
+    request_secs: VecDeque<f64>,
+    tokens_generated: usize,
+    requests_completed: usize,
+    decode_wall_secs: f64,
+}
+
+impl ServeMetrics {
+    pub fn new() -> ServeMetrics {
+        ServeMetrics::default()
+    }
+
+    /// Record one batched decode step that produced `batch` tokens.
+    pub fn record_step(&mut self, batch: usize, secs: f64) {
+        if self.steps.len() == STEP_WINDOW {
+            self.steps.pop_front();
+        }
+        self.steps.push_back((secs, batch));
+        self.steps_total += 1;
+        self.tokens_generated += batch;
+        self.decode_wall_secs += secs;
+    }
+
+    /// Record one completed request's end-to-end latency (queue + prefill
+    /// + decode).
+    pub fn record_request(&mut self, total_secs: f64) {
+        if self.request_secs.len() == STEP_WINDOW {
+            self.request_secs.pop_front();
+        }
+        self.request_secs.push_back(total_secs);
+        self.requests_completed += 1;
+    }
+
+    pub fn tokens_generated(&self) -> usize {
+        self.tokens_generated
+    }
+
+    pub fn requests_completed(&self) -> usize {
+        self.requests_completed
+    }
+
+    pub fn steps(&self) -> usize {
+        self.steps_total
+    }
+
+    /// Decode throughput over the time actually spent in decode steps.
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.decode_wall_secs <= 0.0 {
+            return 0.0;
+        }
+        self.tokens_generated as f64 / self.decode_wall_secs
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.steps_total == 0 {
+            return f64::NAN;
+        }
+        self.tokens_generated as f64 / self.steps_total as f64
+    }
+
+    /// Per-token decode latency percentile in milliseconds over the step
+    /// window: every token emitted by a step observed that step's latency,
+    /// so steps are weighted by their batch size (nearest-rank over the
+    /// window's token multiset).
+    pub fn token_latency_ms(&self, q: f64) -> f64 {
+        if self.steps.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted: Vec<(f64, usize)> = self.steps.iter().copied().collect();
+        sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let window_tokens: usize = sorted.iter().map(|(_, b)| b).sum();
+        let target = (q / 100.0) * window_tokens as f64;
+        let mut cum = 0usize;
+        for (secs, batch) in &sorted {
+            cum += batch;
+            if cum as f64 >= target {
+                return secs * 1e3;
+            }
+        }
+        sorted.last().unwrap().0 * 1e3
+    }
+
+    /// End-to-end request latency percentile in milliseconds (over the
+    /// most recent [`STEP_WINDOW`] requests).
+    pub fn request_latency_ms(&self, q: f64) -> f64 {
+        let window: Vec<f64> = self.request_secs.iter().copied().collect();
+        Stats::from_samples(&window).percentile(q) * 1e3
+    }
+
+    /// Render the standard report table.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&["metric", "value"]);
+        t.row(&["tokens/s (decode)".to_string(), format!("{:.1}", self.tokens_per_sec())]);
+        t.row(&["tokens generated".to_string(), self.tokens_generated.to_string()]);
+        t.row(&["requests completed".to_string(), self.requests_completed.to_string()]);
+        t.row(&["decode steps".to_string(), self.steps().to_string()]);
+        t.row(&["mean batch".to_string(), format!("{:.2}", self.mean_batch())]);
+        for q in [50.0, 95.0, 99.0] {
+            t.row(&[
+                format!("token p{q:.0} ms"),
+                format!("{:.3}", self.token_latency_ms(q)),
+            ]);
+        }
+        for q in [50.0, 99.0] {
+            t.row(&[
+                format!("request p{q:.0} ms"),
+                format!("{:.3}", self.request_latency_ms(q)),
+            ]);
+        }
+        t.render()
+    }
+
+    /// One-line summary for server logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} reqs, {} toks, {:.1} tok/s, token p50/p95/p99 {:.2}/{:.2}/{:.2} ms, \
+             request p50/p99 {:.1}/{:.1} ms",
+            self.requests_completed,
+            self.tokens_generated,
+            self.tokens_per_sec(),
+            self.token_latency_ms(50.0),
+            self.token_latency_ms(95.0),
+            self.token_latency_ms(99.0),
+            self.request_latency_ms(50.0),
+            self.request_latency_ms(99.0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_percentiles() {
+        let mut m = ServeMetrics::new();
+        m.record_step(2, 0.010);
+        m.record_step(4, 0.020);
+        m.record_step(1, 0.030);
+        m.record_request(0.5);
+        m.record_request(1.5);
+        assert_eq!(m.tokens_generated(), 7);
+        assert_eq!(m.steps(), 3);
+        assert_eq!(m.requests_completed(), 2);
+        assert!((m.tokens_per_sec() - 7.0 / 0.060).abs() < 1e-9);
+        assert!((m.mean_batch() - 7.0 / 3.0).abs() < 1e-9);
+        // token multiset (ms): 10,10,20,20,20,20,30 — weighted nearest-rank
+        assert!((m.token_latency_ms(50.0) - 20.0).abs() < 1e-9);
+        assert!((m.token_latency_ms(99.0) - 30.0).abs() < 1e-9);
+        assert!((m.token_latency_ms(1.0) - 10.0).abs() < 1e-9);
+        assert!((m.request_latency_ms(50.0) - 1000.0).abs() < 1e-9);
+        let r = m.render();
+        assert!(r.contains("tokens/s"));
+        assert!(m.summary().contains("2 reqs"));
+    }
+
+    #[test]
+    fn step_window_bounds_memory_not_counters() {
+        let mut m = ServeMetrics::new();
+        for _ in 0..(STEP_WINDOW + 100) {
+            m.record_step(1, 0.001);
+        }
+        assert_eq!(m.steps(), STEP_WINDOW + 100);
+        assert_eq!(m.tokens_generated(), STEP_WINDOW + 100);
+        assert!((m.token_latency_ms(50.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.tokens_per_sec(), 0.0);
+        assert!(m.token_latency_ms(50.0).is_nan());
+        assert!(m.mean_batch().is_nan());
+        let _ = m.render();
+    }
+}

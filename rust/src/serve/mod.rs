@@ -1,0 +1,68 @@
+//! `serve` — batched sparse-inference serving engine.
+//!
+//! This subsystem turns the pruned model from a benchmark artifact into
+//! something that can answer generation traffic — the deployment payoff
+//! the paper motivates ("sparsity reduces the storage and can accelerate
+//! the inference"). It is layered as:
+//!
+//! * [`engine`] — token-level generation over the incremental KV-cache
+//!   decode path ([`crate::model::Decoder`]): greedy and temperature/top-k
+//!   sampling via the deterministic [`crate::util::Rng`]. One [`Engine`]
+//!   wraps either the dense weight backend or the CSR
+//!   [`crate::model::SparseModel`] backend behind the same
+//!   [`crate::model::DecodeOps`] seam.
+//! * [`batcher`] — a FIFO request queue with **continuous batching**:
+//!   between decode steps, finished sequences are evicted and queued
+//!   requests admitted, so the batch stays full without waiting for the
+//!   slowest member. Each step runs the whole batch's linear layers as one
+//!   `[batch, d_model]` product, fanning across the matmul thread pool
+//!   (`ALPS_THREADS` pins the pool width for reproducible benches).
+//! * [`metrics`] — throughput and latency accounting on
+//!   [`crate::util::Stats`]: tokens/s, per-step and per-token latency
+//!   p50/p95/p99, per-request latency, mean batch occupancy.
+//!
+//! Per-token decode cost is O(context) attention + O(1) weight matmuls
+//! thanks to the KV cache; re-running the full prefix each token (the
+//! pre-serve eval path) is O(context) *matmuls*. `bench_serve` measures
+//! both, plus the dense-vs-CSR crossover at 50/70/90% sparsity.
+//!
+//! ## CLI
+//!
+//! ```text
+//! alps serve --model alps-base --weights pruned.bin [--sparse]
+//!            [--addr 127.0.0.1:7878] [--stdin] [--random]
+//!            [--max-batch 8] [--max-new 32] [--temperature 0.0] [--top-k 0]
+//! ```
+//!
+//! Two std-only front-ends:
+//!
+//! * `--stdin`: read one prompt per line (whitespace-separated token ids),
+//!   run everything through the continuous batcher, print `id: tokens`
+//!   lines plus a metrics table. Good for scripted smoke tests.
+//! * TCP line protocol (default, on `--addr`): each line is a prompt of
+//!   token ids, acknowledged immediately with `queued <id>` (or
+//!   `err - <msg>` — literal dash, no id — if the line doesn't parse).
+//!   A blank line (or `run`, or EOF) flushes the accumulated requests
+//!   through one batched generation and writes one `ok <id> <tokens...>`
+//!   line per request, or `err <id> <msg>` for requests rejected at
+//!   prefill; a flush with nothing queued answers `err - no pending
+//!   requests`. A leading `GET ` line gets a minimal HTTP 200 health/info
+//!   response instead, so `curl http://addr/healthz` works.
+//!
+//! ## Known limits (open items)
+//!
+//! * The TCP front-end serves one connection at a time (std-only, no
+//!   threading yet): an idle connected client delays later clients,
+//!   including health probes. Batching happens within a connection.
+//! * Prompt prefill at admission runs token-by-token through the decode
+//!   step (exact, O(prompt) single-row passes). A batched multi-row
+//!   prefill (one `[prompt, d]` pass per layer) would cut admission
+//!   latency substantially; the decode seam already supports it.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+
+pub use batcher::{Batcher, Request, Response};
+pub use engine::{sample_token, Engine, Generation, SamplingParams};
+pub use metrics::ServeMetrics;
