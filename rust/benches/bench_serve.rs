@@ -1,9 +1,12 @@
 //! Serving benchmark: (a) KV-cache incremental decode vs full-prefix
-//! re-forward per token, (b) closed-loop continuous-batching load test,
-//! dense vs CSR backends at 0/50/70/90% sparsity, with tokens/s and
-//! p50/p95/p99 token latency. Results feed EXPERIMENTS.md §Serve.
+//! re-forward per token, (b) batched multi-row prefill vs token-by-token
+//! prefill (admission latency), (c) closed-loop continuous-batching load
+//! test, dense vs CSR backends at 0/50/70/90% sparsity, with tokens/s and
+//! p50/p95/p99 token latency, (d) concurrent TCP clients with healthz
+//! latency under load. Results feed EXPERIMENTS.md §Serve.
 //!
 //!     ALPS_THREADS=4 cargo bench --bench bench_serve
+//!     cargo bench --bench bench_serve -- --smoke   # reduced CI workload
 //!
 //! Uses a synthetic alps-tiny model, so no artifacts are required.
 
@@ -11,9 +14,11 @@ use alps::config::ModelConfig;
 use alps::linalg::matmul::num_threads;
 use alps::model::{Model, SparseModel};
 use alps::pruning::projection::topk_project;
-use alps::serve::{Batcher, Engine, SamplingParams};
+use alps::serve::{tcp, Batcher, Engine, SamplingParams, TcpConfig};
 use alps::util::table::Table;
 use alps::util::{Rng, Timer};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
 
 /// Copy of `model` with every prunable matrix magnitude-pruned to `density`.
 fn prune_model(model: &Model, density: f64) -> anyhow::Result<Model> {
@@ -54,15 +59,145 @@ fn run_load(
     ))
 }
 
+/// (b) admission latency: batched multi-row prefill vs token-by-token.
+fn bench_prefill(model: &Model, prompt_lens: &[usize], reps: usize) -> anyhow::Result<()> {
+    println!("\nprefill (admission) latency: batched [prompt, d] passes vs token-by-token");
+    let mut t = Table::new(&["backend", "prompt", "stepwise ms", "batched ms", "speedup"]);
+    let pruned = prune_model(model, 0.3)?;
+    for (label, m) in [("dense", model), ("sparse(0.30)", &pruned)] {
+        let engine = if label == "dense" { Engine::dense(m)? } else { Engine::sparse(m)? };
+        let dec = engine.decoder();
+        for &plen in prompt_lens {
+            let prompt: Vec<u16> = (0..plen).map(|i| (i * 7 % m.cfg.vocab) as u16).collect();
+            let mut step_secs = 0.0;
+            let mut batch_secs = 0.0;
+            for _ in 0..reps {
+                let timer = Timer::start();
+                let mut c = dec.new_cache();
+                let a = dec.prefill(&mut c, &prompt)?;
+                step_secs += timer.elapsed_secs();
+                let timer = Timer::start();
+                let mut c = dec.new_cache();
+                let b = dec.prefill_batch(&mut c, &prompt)?;
+                batch_secs += timer.elapsed_secs();
+                let drift = a
+                    .iter()
+                    .zip(&b)
+                    .map(|(x, y)| (x - y).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(drift < 1e-3, "prefill_batch diverged: max |d|={drift}");
+            }
+            t.row(&[
+                label.to_string(),
+                plen.to_string(),
+                format!("{:.3}", step_secs / reps as f64 * 1e3),
+                format!("{:.3}", batch_secs / reps as f64 * 1e3),
+                format!("{:.1}x", step_secs / batch_secs.max(1e-12)),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+/// (d) concurrent TCP clients against the threaded front-end, measuring
+/// healthz latency while generations are in flight.
+fn bench_tcp_concurrency(
+    model: &Model,
+    n_clients: usize,
+    reqs_per_client: usize,
+    max_new: usize,
+) -> anyhow::Result<()> {
+    let engine = Engine::dense(model)?;
+    let params = SamplingParams { max_new_tokens: max_new, ..Default::default() };
+    let cfg = TcpConfig::default();
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    println!(
+        "\nconcurrent TCP load: {n_clients} clients x {reqs_per_client} reqs, {max_new} new tokens each"
+    );
+    let wall = Timer::start();
+    let mut healthz_ms: Vec<f64> = Vec::new();
+    std::thread::scope(|s| -> anyhow::Result<()> {
+        let server = s.spawn(|| tcp::serve(listener, &engine, &params, &cfg));
+        let clients: Vec<_> = (0..n_clients)
+            .map(|ci| {
+                s.spawn(move || -> std::io::Result<usize> {
+                    let stream = TcpStream::connect(addr)?;
+                    // a dropped result line must fail the bench, not hang CI
+                    stream.set_read_timeout(Some(std::time::Duration::from_secs(60)))?;
+                    let mut r = BufReader::new(stream.try_clone()?);
+                    let mut w = stream;
+                    let mut line = String::new();
+                    for k in 0..reqs_per_client {
+                        writeln!(w, "{} {} {}", 1 + ci, 2 + k, 3)?;
+                        line.clear();
+                        r.read_line(&mut line)?;
+                    }
+                    writeln!(w, "run")?;
+                    let mut ok = 0;
+                    for _ in 0..reqs_per_client {
+                        line.clear();
+                        r.read_line(&mut line)?;
+                        if line.starts_with("ok ") {
+                            ok += 1;
+                        }
+                    }
+                    Ok(ok)
+                })
+            })
+            .collect();
+        // probe healthz while the clients are decoding
+        for _ in 0..8 {
+            let t = Timer::start();
+            let stream = TcpStream::connect(addr)?;
+            stream.set_read_timeout(Some(std::time::Duration::from_secs(60)))?;
+            let mut r = BufReader::new(stream.try_clone()?);
+            let mut w = stream;
+            write!(w, "GET /healthz HTTP/1.1\r\n\r\n")?;
+            let mut status = String::new();
+            r.read_line(&mut status)?;
+            healthz_ms.push(t.elapsed_secs() * 1e3);
+            assert!(status.starts_with("HTTP/1.1 200"), "healthz: {status}");
+            let mut rest = String::new();
+            let _ = r.read_to_string(&mut rest); // drain so the server write completes
+        }
+        let mut served = 0;
+        for c in clients {
+            served += c.join().expect("client thread panicked")?;
+        }
+        assert_eq!(served, n_clients * reqs_per_client, "not all requests answered");
+        let stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(Some(std::time::Duration::from_secs(60)))?;
+        let mut w = stream.try_clone()?;
+        writeln!(w, "shutdown")?;
+        let mut r = BufReader::new(stream);
+        let mut line = String::new();
+        r.read_line(&mut line)?;
+        server.join().expect("server thread panicked")?;
+        Ok(())
+    })?;
+    healthz_ms.sort_by(|a, b| a.total_cmp(b));
+    println!(
+        "all {} requests served in {:.3}s; healthz under load: p50 {:.3} ms, max {:.3} ms",
+        n_clients * reqs_per_client,
+        wall.elapsed_secs(),
+        healthz_ms[healthz_ms.len() / 2],
+        healthz_ms.last().copied().unwrap_or(f64::NAN),
+    );
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
-    println!("== bench_serve: batched sparse serving ==");
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    println!("== bench_serve: batched sparse serving{} ==", if smoke { " (smoke)" } else { "" });
     println!("threads: {} (pin with ALPS_THREADS for reproducible runs)\n", num_threads());
     let model = Model::random(ModelConfig::preset("alps-tiny")?, 0)?;
 
     // ---------- (a) KV-cache decode vs full-prefix re-forward
     let engine = Engine::dense(&model)?;
     let prompt: Vec<u16> = (0..16u16).map(|i| i * 7 % 512).collect();
-    let gen_n = 32;
+    let gen_n = if smoke { 8 } else { 32 };
     let params = SamplingParams { max_new_tokens: gen_n, ..Default::default() };
     let timer = Timer::start();
     let g = engine.generate(&prompt, &params, 0)?;
@@ -89,15 +224,24 @@ fn main() -> anyhow::Result<()> {
         naive_secs / kv_secs.max(1e-12),
     );
 
-    // ---------- (b) continuous-batching load, dense vs CSR per density
-    let (n_req, prompt_len, max_new, max_batch) = (24, 16, 24, 8);
+    // ---------- (b) batched vs token-by-token prefill
+    if smoke {
+        bench_prefill(&model, &[16], 2)?;
+    } else {
+        bench_prefill(&model, &[16, 48, 96], 5)?;
+    }
+
+    // ---------- (c) continuous-batching load, dense vs CSR per density
+    let (n_req, prompt_len, max_new, max_batch) =
+        if smoke { (6, 8, 6, 4) } else { (24, 16, 24, 8) };
     println!(
         "\nclosed loop: {n_req} reqs x {max_new} new tokens, prompt {prompt_len}, batch {max_batch}"
     );
     let mut t = Table::new(&[
         "density", "backend", "tok/s", "p50 ms", "p95 ms", "p99 ms", "weight MiB",
     ]);
-    for density in [1.0f64, 0.5, 0.3, 0.1] {
+    let densities: &[f64] = if smoke { &[1.0, 0.3] } else { &[1.0, 0.5, 0.3, 0.1] };
+    for &density in densities {
         let m = prune_model(&model, density)?;
         let (sparse_bytes, dense_bytes) = SparseModel::from_model(&m)?.bytes_sparse_vs_dense();
         let mut tps = [0.0f64; 2];
@@ -125,5 +269,12 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
     println!("\n(CSR should cross over dense below ~0.5 density on this kernel)");
+
+    // ---------- (d) concurrent TCP clients + healthz under load
+    if smoke {
+        bench_tcp_concurrency(&model, 4, 2, 4)?;
+    } else {
+        bench_tcp_concurrency(&model, 8, 4, 16)?;
+    }
     Ok(())
 }

@@ -18,11 +18,19 @@
 //!   The [`model::DecodeOps`] seam runs the same decode over dense
 //!   matrices or the CSR [`model::SparseModel`].
 //! * `serve` — continuous-batching generation engine (engine / batcher /
-//!   metrics) behind the `alps serve` CLI subcommand; `bench_serve`
-//!   load-tests it dense-vs-sparse across sparsity levels. See
-//!   `serve/mod.rs` for the architecture and wire protocol.
+//!   tcp / metrics) behind the `alps serve` CLI subcommand: batched
+//!   multi-row prompt prefill at admission and a threaded
+//!   multi-connection TCP front-end; `bench_serve` load-tests it
+//!   dense-vs-sparse across sparsity levels. See `serve/mod.rs` for the
+//!   architecture and wire protocol.
 //! * `linalg` — dense blocked/threaded matmul (thread count overridable
 //!   via `ALPS_THREADS`) and u32-indexed CSR kernels.
+
+// CI runs `cargo clippy -- -D warnings`; the numeric kernels throughout
+// this crate deliberately use explicit index loops (they mirror the math
+// and the Pallas kernels), so keep that one style lint out of the gate.
+#![allow(clippy::needless_range_loop)]
+
 pub mod bench;
 pub mod config;
 pub mod coordinator;

@@ -167,6 +167,11 @@ fn scalar_tail(
 }
 
 /// C = A @ B into a preallocated C (zeroed here).
+///
+/// Row-partitioned across the thread pool; both the serve decode batch
+/// (`[batch, d]`) and the batched prefill (`[prompt, d]`) land here, so a
+/// multi-row prefill fans its rows across workers while a single decode
+/// row stays on the calling thread (below the threading cutoff).
 pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     assert_eq!(a.cols, b.rows);
     assert_eq!((c.rows, c.cols), (a.rows, b.cols));
@@ -180,7 +185,7 @@ pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
         c.data.copy_from_slice(&strip);
         return;
     }
-    let rows_per = (a.rows + nt - 1) / nt;
+    let rows_per = a.rows.div_ceil(nt);
     let n_dim = b.cols;
     let chunks: Vec<(usize, usize)> = (0..nt)
         .map(|t| (t * rows_per, ((t + 1) * rows_per).min(a.rows)))

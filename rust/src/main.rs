@@ -19,7 +19,8 @@ use alps::eval::{perplexity, zero_shot_accuracy};
 use alps::model::{Model, Weights};
 use alps::pruning::{all_methods, method_by_name};
 use alps::runtime::{artifact, Runtime};
-use alps::serve::{Batcher, Engine, SamplingParams};
+use alps::serve::tcp::{fmt_tokens, parse_prompt};
+use alps::serve::{Batcher, Engine, SamplingParams, TcpConfig};
 use alps::util::table::{fmt_sig, Table};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -187,16 +188,6 @@ fn cmd_layer(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn parse_prompt(line: &str) -> Result<Vec<u16>> {
-    line.split_whitespace()
-        .map(|t| t.parse::<u16>().with_context(|| format!("bad token id '{t}'")))
-        .collect()
-}
-
-fn fmt_tokens(tokens: &[u16]) -> String {
-    tokens.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(" ")
-}
-
 fn cmd_serve(args: &Args) -> Result<()> {
     let name = args.get("model", "alps-tiny");
     let model = if args.has("random") {
@@ -220,19 +211,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
         top_k: args.get("top-k", "0").parse().context("--top-k")?,
         stop_token,
     };
-    let max_batch: usize = args.get("max-batch", "8").parse().context("--max-batch")?;
+    let cfg = TcpConfig {
+        max_batch: args.get("max-batch", "8").parse().context("--max-batch")?,
+        max_conns: args.get("max-conns", "64").parse().context("--max-conns")?,
+        max_line_bytes: args.get("max-line", "65536").parse().context("--max-line")?,
+    };
     println!(
-        "serving {} [{}] — vocab {}, ctx {}, max batch {max_batch}, threads {}",
+        "serving {} [{}] — vocab {}, ctx {}, max batch {}, threads {}",
         model.cfg.name,
         engine.label(),
         model.cfg.vocab,
         model.cfg.seq_len,
+        cfg.max_batch,
         alps::linalg::matmul::num_threads(),
     );
     if args.has("stdin") {
-        serve_stdin(&engine, &params, max_batch)
+        serve_stdin(&engine, &params, cfg.max_batch)
     } else {
-        serve_tcp(&engine, &params, max_batch, &args.get("addr", "127.0.0.1:7878"))
+        serve_tcp(&engine, &params, &cfg, &args.get("addr", "127.0.0.1:7878"))
     }
 }
 
@@ -265,106 +261,26 @@ fn serve_stdin(engine: &Engine, params: &SamplingParams, max_batch: usize) -> Re
     Ok(())
 }
 
-/// Line protocol over TCP: each line is a prompt of token ids; a blank
-/// line, `run`, or EOF flushes the accumulated requests through one
-/// batched generation. A leading `GET ` gets an HTTP health response.
+/// Threaded multi-connection line protocol over TCP — see
+/// `alps::serve::tcp` for the protocol and threading model. Runs until a
+/// client sends `shutdown`, then prints the final metrics report.
 fn serve_tcp(
     engine: &Engine,
     params: &SamplingParams,
-    max_batch: usize,
+    cfg: &TcpConfig,
     addr: &str,
 ) -> Result<()> {
     let listener =
         std::net::TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-    println!("listening on {addr} (blank line or `run` flushes a batch; GET /healthz for status)");
-    for stream in listener.incoming() {
-        let stream = match stream {
-            Ok(s) => s,
-            Err(e) => {
-                eprintln!("[serve] accept error: {e}");
-                continue;
-            }
-        };
-        if let Err(e) = handle_conn(stream, engine, params, max_batch) {
-            eprintln!("[serve] connection error: {e}");
-        }
-    }
-    return Ok(());
-
-    fn handle_conn(
-        stream: std::net::TcpStream,
-        engine: &Engine,
-        params: &SamplingParams,
-        max_batch: usize,
-    ) -> Result<()> {
-        use std::io::{BufRead, BufReader, Write};
-        let mut reader = BufReader::new(stream.try_clone().context("cloning stream")?);
-        let mut stream = stream;
-        let mut batcher = Batcher::new(engine, max_batch);
-        let mut line = String::new();
-        let mut first = true;
-        loop {
-            line.clear();
-            let n = reader.read_line(&mut line).context("reading request line")?;
-            if first && line.starts_with("GET ") {
-                // drain the request headers before replying: closing with
-                // unread data still buffered can RST the response away
-                let mut hdr = String::new();
-                loop {
-                    hdr.clear();
-                    let n = reader.read_line(&mut hdr).context("reading http header")?;
-                    if n == 0 || hdr.trim().is_empty() {
-                        break;
-                    }
-                }
-                let m = engine.model();
-                let body = format!(
-                    "{{\"model\":\"{}\",\"backend\":\"{}\",\"vocab\":{},\"seq_len\":{}}}\n",
-                    m.cfg.name,
-                    engine.label(),
-                    m.cfg.vocab,
-                    m.cfg.seq_len
-                );
-                write!(
-                    stream,
-                    "HTTP/1.1 200 OK\r\nContent-Type: application/json\r\n\
-                     Content-Length: {}\r\nConnection: close\r\n\r\n{}",
-                    body.len(),
-                    body
-                )?;
-                return Ok(());
-            }
-            first = false;
-            let trimmed = line.trim();
-            let flush = n == 0 || trimmed.is_empty() || trimmed == "run";
-            if !flush {
-                match parse_prompt(trimmed) {
-                    Ok(p) => {
-                        let id = batcher.submit(p, params.clone());
-                        writeln!(stream, "queued {id}")?;
-                    }
-                    Err(e) => writeln!(stream, "err - {e}")?,
-                }
-            } else if !batcher.is_idle() {
-                let mut responses = batcher.run_to_completion()?;
-                responses.sort_by_key(|r| r.id);
-                for r in responses {
-                    match r.error {
-                        Some(e) => writeln!(stream, "err {} {e}", r.id)?,
-                        None => writeln!(stream, "ok {} {}", r.id, fmt_tokens(&r.tokens))?,
-                    }
-                }
-                println!("[serve] {}", batcher.metrics.summary());
-            } else if n != 0 {
-                // flush with nothing queued: answer rather than leaving a
-                // client blocked on read waiting for batch results
-                writeln!(stream, "err - no pending requests")?;
-            }
-            if n == 0 {
-                return Ok(());
-            }
-        }
-    }
+    println!(
+        "listening on {addr} — up to {} connections; prompt lines ack `queued <id>`, \
+         blank line or `run` waits for results, `stats` for metrics, `shutdown` stops; \
+         GET /healthz for status",
+        cfg.max_conns
+    );
+    let report = alps::serve::tcp::serve(listener, engine, params, cfg)?;
+    println!("{report}");
+    Ok(())
 }
 
 fn cmd_info() -> Result<()> {
@@ -437,8 +353,8 @@ fn usage() {
            eval  --model alps-base [--weights pruned.bin] [--items 50]\n\
            layer --model alps-base --block 0 --layer mlp.w2 --sparsity 0.7 [--methods all]\n\
            serve --model alps-base [--weights pruned.bin] [--sparse] [--random]\n\
-                 [--addr 127.0.0.1:7878 | --stdin] [--max-batch 8] [--max-new 32]\n\
-                 [--temperature 0] [--top-k 0] [--stop id]\n\
+                 [--addr 127.0.0.1:7878 | --stdin] [--max-batch 8] [--max-conns 64]\n\
+                 [--max-line 65536] [--max-new 32] [--temperature 0] [--top-k 0] [--stop id]\n\
            info\n\
            smoke [file.hlo.txt]"
     );

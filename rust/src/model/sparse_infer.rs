@@ -156,7 +156,8 @@ impl<'m> SparseModel<'m> {
 
 /// CSR decode backend: the same incremental KV-cache decode as the dense
 /// path, with every prunable matmul routed through the sparse kernels —
-/// the single-row kernel for unbatched decode, `left_matmul` for batches.
+/// the single-row kernel for unbatched decode, `left_matmul` for batched
+/// decode steps and the multi-row `Decoder::prefill_batch` passes.
 impl DecodeOps for SparseModel<'_> {
     fn apply(&self, name: &str, x: &Matrix) -> Result<Matrix> {
         if x.rows == 1 {
@@ -286,6 +287,34 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn sparse_prefill_batch_matches_stepwise_and_dense() {
+        // CSR-path batched prefill pins against both the CSR token-by-token
+        // prefill and the dense full-prefix forward on a pruned model
+        use crate::model::transformer::{DenseOps, Decoder};
+        let mut m = random_model(5);
+        for name in m.prunable_names() {
+            let w = m.weights.matrix(&name).unwrap();
+            let pruned = crate::pruning::projection::topk_project(&w, w.data.len() * 3 / 10);
+            m.weights.set_matrix(&name, &pruned).unwrap();
+        }
+        let sm = SparseModel::from_model(&m).unwrap();
+        let sdec = Decoder::new(&m, sm).unwrap();
+        let ddec = Decoder::new(&m, DenseOps::new(&m).unwrap()).unwrap();
+        let ids = [2u16, 7, 1, 9, 4, 3];
+        let mut c_batch = sdec.new_cache();
+        let batched = sdec.prefill_batch(&mut c_batch, &ids).unwrap();
+        let mut c_step = sdec.new_cache();
+        let stepwise = sdec.prefill(&mut c_step, &ids).unwrap();
+        let mut c_dense = ddec.new_cache();
+        let dense = ddec.prefill_batch(&mut c_dense, &ids).unwrap();
+        for c in 0..m.cfg.vocab {
+            assert!((batched[c] - stepwise[c]).abs() < 1e-4, "csr batch vs step c={c}");
+            assert!((batched[c] - dense[c]).abs() < 1e-4, "csr vs dense c={c}");
+        }
+        assert_eq!(c_batch.len(), ids.len());
     }
 
     #[test]

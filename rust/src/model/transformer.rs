@@ -332,6 +332,56 @@ impl KvCache {
     }
 }
 
+/// One query row attended over the first `ctx` cached K/V rows of a layer,
+/// all heads: scaled dot-product scores, softmax over the live context,
+/// weighted-V accumulation into `orow`. Shared by [`Decoder::step_batch`]
+/// and [`Decoder::prefill_batch`] so the numerically-sensitive kernel has
+/// one definition; `sc` is the caller's score scratch (reused across rows
+/// to avoid per-head allocations). Future positions are simply absent from
+/// `ctx` — the full forward's -1e30 mask entries underflow to exactly 0.0,
+/// so the softmax sums agree.
+#[allow(clippy::too_many_arguments)]
+fn attend_row(
+    q_row: &[f32],
+    lk: &LayerKv,
+    ctx: usize,
+    heads: usize,
+    hd: usize,
+    scale: f32,
+    sc: &mut Vec<f32>,
+    orow: &mut [f32],
+) {
+    for head in 0..heads {
+        let off = head * hd;
+        let qi = &q_row[off..off + hd];
+        sc.clear();
+        sc.resize(ctx, 0.0);
+        for (j, s) in sc.iter_mut().enumerate() {
+            let kj = &lk.k.row(j)[off..off + hd];
+            let dot: f32 = qi.iter().zip(kj).map(|(a, b)| a * b).sum();
+            *s = dot * scale;
+        }
+        let max = sc.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for s in sc.iter_mut() {
+            *s = (*s - max).exp();
+            sum += *s;
+        }
+        for s in sc.iter_mut() {
+            *s /= sum;
+        }
+        for (j, &sv) in sc.iter().enumerate() {
+            if sv == 0.0 {
+                continue;
+            }
+            let vrow = &lk.v.row(j)[off..off + hd];
+            for (t, vv) in vrow.iter().enumerate() {
+                orow[off + t] += sv * vv;
+            }
+        }
+    }
+}
+
 /// How a named prunable weight matrix is applied to activation rows —
 /// dense matmul ([`DenseOps`]) or CSR kernels (`SparseModel`). This is the
 /// seam that lets one decode implementation serve both weight formats.
@@ -440,6 +490,10 @@ impl<'m, O: DecodeOps> Decoder<'m, O> {
 
     /// Feed the whole prompt token by token; returns the logits after the
     /// final prompt token (the distribution of the first generated token).
+    ///
+    /// Reference path: O(prompt) single-row passes. Serving admission uses
+    /// [`Decoder::prefill_batch`] instead (one multi-row pass per layer);
+    /// this stays as the exactness baseline for tests and benches.
     pub fn prefill(&self, cache: &mut KvCache, prompt: &[u16]) -> Result<Vec<f32>> {
         if prompt.is_empty() {
             bail!("empty prompt");
@@ -449,6 +503,106 @@ impl<'m, O: DecodeOps> Decoder<'m, O> {
             last = self.step(cache, t)?;
         }
         Ok(last)
+    }
+
+    /// Consume the whole prompt as one `[prompt, d_model]` pass per layer —
+    /// the SparseGPT-style layer-batched formulation. Every linear layer
+    /// runs once over all prompt rows (fanning across the matmul thread
+    /// pool via the [`DecodeOps`] seam), so admission costs O(layers)
+    /// batched matmuls instead of O(prompt) single-row passes. Attention is
+    /// causally masked over the growing KV cache: row `i` (global position
+    /// `t0 + i`, where `t0` is the pre-existing cache length) attends to
+    /// cached positions `0..=t0+i`, so a partially-filled cache can be
+    /// extended mid-sequence. Returns the logits after the final prompt
+    /// token, numerically matching [`Decoder::prefill`].
+    ///
+    /// Token/capacity validation happens before any cache mutation; a later
+    /// structural error (missing weight) leaves the cache partially
+    /// advanced, same caveat as [`Decoder::step_batch`].
+    pub fn prefill_batch(&self, cache: &mut KvCache, prompt: &[u16]) -> Result<Vec<f32>> {
+        let m = self.model;
+        let cfg = &m.cfg;
+        let s = prompt.len();
+        let t0 = cache.len;
+        self.validate_prompt(t0, prompt)?;
+        let d = cfg.d_model;
+        let emb = m.weights.get("tok_emb")?;
+        let pos = m.weights.get("pos_emb")?;
+        let mut x = Matrix::zeros(s, d);
+        for (i, &tok) in prompt.iter().enumerate() {
+            let erow = &emb.data[(tok as usize) * d..(tok as usize + 1) * d];
+            let prow = &pos.data[(t0 + i) * d..(t0 + i + 1) * d];
+            let xrow = x.row_mut(i);
+            for c in 0..d {
+                xrow[c] = erow[c] + prow[c];
+            }
+        }
+        let hd = cfg.head_dim();
+        let heads = cfg.n_heads;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut sc: Vec<f32> = Vec::with_capacity(t0 + s);
+        for b in 0..cfg.n_layers {
+            let names = &self.names[b];
+            let h = layer_norm(
+                &x,
+                m.weights.vector(&names.ln1_g)?,
+                m.weights.vector(&names.ln1_b)?,
+            );
+            // the batched win: each projection is one [s, d] product
+            let q = self.ops.apply(&names.wq, &h)?;
+            let k = self.ops.apply(&names.wk, &h)?;
+            let v = self.ops.apply(&names.wv, &h)?;
+            let lk = &mut cache.layers[b];
+            lk.k.data.extend_from_slice(&k.data);
+            lk.k.rows += s;
+            lk.v.data.extend_from_slice(&v.data);
+            lk.v.rows += s;
+            let mut mix = Matrix::zeros(s, d);
+            for i in 0..s {
+                // causal mask: position t0+i sees the cached prefix plus
+                // itself; the rows we just appended past it are excluded
+                let ctx = t0 + i + 1;
+                attend_row(q.row(i), lk, ctx, heads, hd, scale, &mut sc, mix.row_mut(i));
+            }
+            let attn_out = self.ops.apply(&names.wo, &mix)?;
+            x = x.add(&attn_out);
+            let h2 = layer_norm(
+                &x,
+                m.weights.vector(&names.ln2_g)?,
+                m.weights.vector(&names.ln2_b)?,
+            );
+            let mut hidden = self.ops.apply(&names.w1, &h2)?;
+            hidden.data.iter_mut().for_each(|vv| *vv = gelu(*vv));
+            x = x.add(&self.ops.apply(&names.w2, &hidden)?);
+        }
+        cache.len += s;
+        // only the last position's logits are needed; layer norm is
+        // per-row, so norming just row s-1 before the unembed is exact
+        let last = Matrix::from_vec(1, d, x.row(s - 1).to_vec());
+        let hf = layer_norm(&last, m.weights.vector("ln_f.g")?, m.weights.vector("ln_f.b")?);
+        Ok(matmul(&hf, &self.emb_t).row(0).to_vec())
+    }
+
+    /// Validate a prompt against this model and a cache position without
+    /// touching any state: non-empty, within context capacity, every id
+    /// in vocab. Shared by [`Decoder::prefill_batch`] and the batcher's
+    /// zero-decode admission path so both report identical errors.
+    pub fn validate_prompt(&self, cached: usize, prompt: &[u16]) -> Result<()> {
+        let cfg = &self.model.cfg;
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        if cached + prompt.len() > cfg.seq_len {
+            bail!(
+                "prompt length {} + cached {cached} exceeds model seq_len {}",
+                prompt.len(),
+                cfg.seq_len
+            );
+        }
+        if let Some(&t) = prompt.iter().find(|&&t| (t as usize) >= cfg.vocab) {
+            bail!("token id {t} out of vocab {}", cfg.vocab);
+        }
+        Ok(())
     }
 
     /// One decode step over a batch of independent sequences (each with its
@@ -510,39 +664,7 @@ impl<'m, O: DecodeOps> Decoder<'m, O> {
                 lk.v.data.extend_from_slice(v.row(i));
                 lk.v.rows += 1;
                 let ctx = lk.k.rows;
-                let orow = mix.row_mut(i);
-                for head in 0..heads {
-                    let off = head * hd;
-                    let qi = &q.row(i)[off..off + hd];
-                    sc.clear();
-                    sc.resize(ctx, 0.0);
-                    for (j, s) in sc.iter_mut().enumerate() {
-                        let kj = &lk.k.row(j)[off..off + hd];
-                        let dot: f32 = qi.iter().zip(kj).map(|(a, b)| a * b).sum();
-                        *s = dot * scale;
-                    }
-                    // softmax over the live context; future positions are
-                    // simply absent (the full forward's -1e30 mask entries
-                    // underflow to exactly 0.0, so the sums agree).
-                    let max = sc.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-                    let mut sum = 0.0f32;
-                    for s in sc.iter_mut() {
-                        *s = (*s - max).exp();
-                        sum += *s;
-                    }
-                    for s in sc.iter_mut() {
-                        *s /= sum;
-                    }
-                    for (j, &sv) in sc.iter().enumerate() {
-                        if sv == 0.0 {
-                            continue;
-                        }
-                        let vrow = &lk.v.row(j)[off..off + hd];
-                        for (t, vv) in vrow.iter().enumerate() {
-                            orow[off + t] += sv * vv;
-                        }
-                    }
-                }
+                attend_row(q.row(i), lk, ctx, heads, hd, scale, &mut sc, mix.row_mut(i));
             }
             let attn_out = self.ops.apply(&names.wo, &mix)?;
             x = x.add(&attn_out);
@@ -741,6 +863,66 @@ mod tests {
         for c in 0..m.cfg.vocab {
             assert!((logits[c] - full.at(4, c)).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn prefill_batch_matches_stepwise_prefill() {
+        // the admission tentpole: one [prompt, d] pass per layer must be
+        // numerically interchangeable with O(prompt) single-row passes
+        let m = random_model(12);
+        let dec = Decoder::new(&m, DenseOps::new(&m).unwrap()).unwrap();
+        let ids = [3u16, 1, 4, 1, 5, 9, 2];
+        let mut c_step = dec.new_cache();
+        let a = dec.prefill(&mut c_step, &ids).unwrap();
+        let mut c_batch = dec.new_cache();
+        let b = dec.prefill_batch(&mut c_batch, &ids).unwrap();
+        assert_eq!(c_batch.len(), ids.len());
+        for c in 0..m.cfg.vocab {
+            assert!((a[c] - b[c]).abs() < 1e-4, "c={c}: {} vs {}", a[c], b[c]);
+        }
+        // the caches must be interchangeable too: continuing decode from
+        // the batched cache matches continuing from the stepwise cache
+        let sa = dec.step(&mut c_step, 7).unwrap();
+        let sb = dec.step(&mut c_batch, 7).unwrap();
+        for c in 0..m.cfg.vocab {
+            assert!((sa[c] - sb[c]).abs() < 1e-4, "post-step c={c}");
+        }
+    }
+
+    #[test]
+    fn prefill_batch_extends_partial_cache() {
+        // prefix fed stepwise, suffix fed batched: the causal mask must
+        // offset by the pre-existing cache length
+        let m = random_model(13);
+        let dec = Decoder::new(&m, DenseOps::new(&m).unwrap()).unwrap();
+        let ids = [2u16, 7, 1, 9, 4, 3];
+        let mut cache = dec.new_cache();
+        dec.step(&mut cache, ids[0]).unwrap();
+        dec.step(&mut cache, ids[1]).unwrap();
+        let logits = dec.prefill_batch(&mut cache, &ids[2..]).unwrap();
+        assert_eq!(cache.len(), ids.len());
+        let full = m.logits(&ids).unwrap();
+        for c in 0..m.cfg.vocab {
+            assert!(
+                (logits[c] - full.at(ids.len() - 1, c)).abs() < 1e-4,
+                "c={c}: {} vs {}",
+                logits[c],
+                full.at(ids.len() - 1, c)
+            );
+        }
+    }
+
+    #[test]
+    fn prefill_batch_rejects_before_mutation() {
+        let m = random_model(14);
+        let dec = Decoder::new(&m, DenseOps::new(&m).unwrap()).unwrap();
+        let mut cache = dec.new_cache();
+        assert!(dec.prefill_batch(&mut cache, &[]).is_err());
+        assert!(dec.prefill_batch(&mut cache, &[1, 200, 2]).is_err()); // out of vocab
+        assert_eq!(cache.len(), 0, "rejected prompt must not advance the cache");
+        let too_long: Vec<u16> = (0..13).map(|i| (i % 24) as u16).collect();
+        assert!(dec.prefill_batch(&mut cache, &too_long).is_err()); // > seq_len
+        assert_eq!(cache.len(), 0);
     }
 
     #[test]

@@ -101,19 +101,54 @@ impl<'e, 'm> Batcher<'e, 'm> {
     }
 
     fn seq_finished(&self, s: &SeqState) -> bool {
+        // `out` can be empty for a sequence evicted before emitting any
+        // token (max_new == 0, prefill rejection); an empty output never
+        // matches the stop token rather than panicking on `last()`
+        let stop_hit = match (s.params.stop_token, s.out.last()) {
+            (Some(stop), Some(&last)) => stop == last,
+            _ => false,
+        };
         s.out.len() >= s.params.max_new_tokens.max(1)
-            || s.params.stop_token == Some(*s.out.last().expect("seq has >= 1 token"))
+            || stop_hit
             || s.cache.len() >= self.engine.model().cfg.seq_len
     }
 
     /// Admit queued requests while the batch has room. Prefill runs here
-    /// (admission time); rejected prompts complete immediately as errors.
+    /// (admission time) as one multi-row pass per layer
+    /// ([`crate::model::Decoder::prefill_batch`]); rejected prompts
+    /// complete immediately as errors, and `max_new_tokens == 0` requests
+    /// complete immediately with empty output (nothing to decode).
     fn admit(&mut self, finished: &mut Vec<Response>) {
         while self.active.len() < self.max_batch {
             let Some((req, timer)) = self.queue.pop_front() else { break };
+            if req.params.max_new_tokens == 0 {
+                // nothing to decode, but validate the prompt exactly as
+                // prefill would so both outcomes agree with max_new >= 1
+                let error = self
+                    .engine
+                    .decoder()
+                    .validate_prompt(0, &req.prompt)
+                    .err()
+                    .map(|e| e.to_string());
+                if error.is_none() {
+                    self.metrics.record_request(timer.elapsed_secs());
+                }
+                finished.push(Response {
+                    id: req.id,
+                    tokens: Vec::new(),
+                    prompt_len: req.prompt.len(),
+                    total_secs: timer.elapsed_secs(),
+                    error,
+                });
+                continue;
+            }
             let mut cache = self.engine.decoder().new_cache();
-            let logits = match self.engine.decoder().prefill(&mut cache, &req.prompt) {
-                Ok(l) => l,
+            let prefill_timer = Timer::start();
+            let logits = match self.engine.decoder().prefill_batch(&mut cache, &req.prompt) {
+                Ok(l) => {
+                    self.metrics.record_prefill(req.prompt.len(), prefill_timer.elapsed_secs());
+                    l
+                }
                 Err(e) => {
                     finished.push(Response {
                         id: req.id,
@@ -302,6 +337,66 @@ mod tests {
         assert!(got[1].error.is_some());
         assert!(got[2].error.is_none());
         assert_eq!(got[2].tokens.len(), 3);
+    }
+
+    #[test]
+    fn zero_max_new_completes_empty_without_panic() {
+        // regression: max_new == 0 used to leave an empty-output sequence
+        // whose eviction check panicked on `out.last().expect(..)`
+        let m = random_model(34);
+        let e = Engine::dense(&m).unwrap();
+        let mut b = Batcher::new(&e, 2);
+        b.submit(vec![1, 2], params(0));
+        b.submit(vec![3], params(2)); // normal request rides along
+        b.submit(vec![200], params(0)); // invalid prompt must still error
+        let mut got = b.run_to_completion().unwrap();
+        got.sort_by_key(|r| r.id);
+        assert_eq!(got.len(), 3);
+        assert!(got[0].tokens.is_empty());
+        assert!(got[0].error.is_none());
+        assert_eq!(got[1].tokens.len(), 2);
+        // validation parity with the max_new >= 1 path: same rejection
+        assert!(got[2].error.as_deref().unwrap_or("").contains("out of vocab"));
+    }
+
+    #[test]
+    fn empty_output_sequence_never_matches_stop_token() {
+        // regression: seq_finished panicked on an empty `out` when a stop
+        // token was set; construct the state directly and probe it
+        let m = random_model(35);
+        let e = Engine::dense(&m).unwrap();
+        let b = Batcher::new(&e, 1);
+        let s = SeqState {
+            id: 0,
+            cache: e.decoder().new_cache(),
+            next: 1,
+            out: Vec::new(),
+            prompt_len: 1,
+            params: SamplingParams { stop_token: Some(1), ..Default::default() },
+            rng: Rng::new(0),
+            timer: Timer::start(),
+        };
+        assert!(!b.seq_finished(&s)); // must not panic, must not finish
+    }
+
+    #[test]
+    fn batched_prefill_responses_match_unbatched_engine() {
+        // admission prefill now runs multi-row; scheduling must still not
+        // change greedy outputs vs the single-request path
+        let m = random_model(36);
+        let e = Engine::dense(&m).unwrap();
+        let prompts: Vec<Vec<u16>> = vec![vec![1, 2, 3, 4, 5], vec![9, 8, 7], vec![4]];
+        let mut b = Batcher::new(&e, 2);
+        for p in &prompts {
+            b.submit(p.clone(), params(3));
+        }
+        let mut got = b.run_to_completion().unwrap();
+        got.sort_by_key(|r| r.id);
+        for (r, p) in got.iter().zip(&prompts) {
+            let solo = e.generate(p, &params(3), 0).unwrap();
+            assert_eq!(r.tokens, solo.tokens, "req {}", r.id);
+        }
+        assert_eq!(b.metrics.prompts_prefilled(), prompts.len());
     }
 
     #[test]

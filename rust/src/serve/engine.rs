@@ -6,8 +6,10 @@ use crate::util::{Rng, Timer};
 use anyhow::Result;
 
 /// Boxed-backend decoder: the single concrete decoder type the serve
-/// stack works with (dense and CSR backends both erase to this).
-pub type DynDecoder<'m> = Decoder<'m, Box<dyn DecodeOps + 'm>>;
+/// stack works with (dense and CSR backends both erase to this). The
+/// backend is `Send + Sync` so one engine can be shared by reference
+/// across the TCP server's connection and scheduler threads.
+pub type DynDecoder<'m> = Decoder<'m, Box<dyn DecodeOps + Send + Sync + 'm>>;
 
 /// Per-request sampling configuration.
 #[derive(Clone, Debug)]
@@ -85,7 +87,7 @@ pub struct Engine<'m> {
 impl<'m> Engine<'m> {
     /// Serve from dense weights (pre-resolved once, no per-step clones).
     pub fn dense(model: &'m Model) -> Result<Engine<'m>> {
-        let ops: Box<dyn DecodeOps + 'm> = Box::new(DenseOps::new(model)?);
+        let ops: Box<dyn DecodeOps + Send + Sync + 'm> = Box::new(DenseOps::new(model)?);
         Ok(Engine { decoder: Decoder::new(model, ops)?, label: "dense".to_string() })
     }
 
@@ -94,7 +96,7 @@ impl<'m> Engine<'m> {
     pub fn sparse(model: &'m Model) -> Result<Engine<'m>> {
         let sm = SparseModel::from_model(model)?;
         let label = format!("sparse(d={:.2})", sm.density());
-        let ops: Box<dyn DecodeOps + 'm> = Box::new(sm);
+        let ops: Box<dyn DecodeOps + Send + Sync + 'm> = Box::new(sm);
         Ok(Engine { decoder: Decoder::new(model, ops)?, label })
     }
 
@@ -111,8 +113,9 @@ impl<'m> Engine<'m> {
         &self.label
     }
 
-    /// Single-request generation: prefill the prompt, then sample/decode
-    /// until `max_new_tokens`, the stop token, or a full context window.
+    /// Single-request generation: batched prefill of the prompt (one
+    /// multi-row pass per layer), then sample/decode until
+    /// `max_new_tokens`, the stop token, or a full context window.
     pub fn generate(
         &self,
         prompt: &[u16],
@@ -122,7 +125,7 @@ impl<'m> Engine<'m> {
         let timer = Timer::start();
         let mut cache = self.decoder.new_cache();
         let mut rng = Rng::new(seed);
-        let mut logits = self.decoder.prefill(&mut cache, prompt)?;
+        let mut logits = self.decoder.prefill_batch(&mut cache, prompt)?;
         let prefill_secs = timer.elapsed_secs();
         let mut tokens = Vec::new();
         loop {

@@ -22,8 +22,12 @@ pub struct ServeMetrics {
     steps_total: usize,
     /// Sliding window of per-request end-to-end latencies (seconds).
     request_secs: VecDeque<f64>,
+    /// Sliding window of admission prefill latencies (seconds).
+    prefill_secs: VecDeque<f64>,
     tokens_generated: usize,
     requests_completed: usize,
+    prompts_prefilled: usize,
+    prompt_tokens: usize,
     decode_wall_secs: f64,
 }
 
@@ -51,6 +55,31 @@ impl ServeMetrics {
         }
         self.request_secs.push_back(total_secs);
         self.requests_completed += 1;
+    }
+
+    /// Record one admission prefill of a `tokens`-long prompt.
+    pub fn record_prefill(&mut self, tokens: usize, secs: f64) {
+        if self.prefill_secs.len() == STEP_WINDOW {
+            self.prefill_secs.pop_front();
+        }
+        self.prefill_secs.push_back(secs);
+        self.prompts_prefilled += 1;
+        self.prompt_tokens += tokens;
+    }
+
+    pub fn prompts_prefilled(&self) -> usize {
+        self.prompts_prefilled
+    }
+
+    pub fn prompt_tokens(&self) -> usize {
+        self.prompt_tokens
+    }
+
+    /// Admission prefill latency percentile in milliseconds (over the most
+    /// recent [`STEP_WINDOW`] prompts).
+    pub fn prefill_latency_ms(&self, q: f64) -> f64 {
+        let window: Vec<f64> = self.prefill_secs.iter().copied().collect();
+        Stats::from_samples(&window).percentile(q) * 1e3
     }
 
     pub fn tokens_generated(&self) -> usize {
@@ -89,7 +118,10 @@ impl ServeMetrics {
             return f64::NAN;
         }
         let mut sorted: Vec<(f64, usize)> = self.steps.iter().copied().collect();
-        sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        // total order even in the presence of NaN samples (a NaN-poisoned
+        // comparator panicked sort_by here); NaNs order after every finite
+        // latency, so they only surface at the extreme percentiles
+        sorted.sort_by(|a, b| a.0.total_cmp(&b.0));
         let window_tokens: usize = sorted.iter().map(|(_, b)| b).sum();
         let target = (q / 100.0) * window_tokens as f64;
         let mut cum = 0usize;
@@ -99,7 +131,7 @@ impl ServeMetrics {
                 return secs * 1e3;
             }
         }
-        sorted.last().unwrap().0 * 1e3
+        sorted.last().map_or(f64::NAN, |(secs, _)| secs * 1e3)
     }
 
     /// End-to-end request latency percentile in milliseconds (over the
@@ -127,6 +159,13 @@ impl ServeMetrics {
             t.row(&[
                 format!("request p{q:.0} ms"),
                 format!("{:.3}", self.request_latency_ms(q)),
+            ]);
+        }
+        t.row(&["prompts prefilled".to_string(), self.prompts_prefilled.to_string()]);
+        for q in [50.0, 99.0] {
+            t.row(&[
+                format!("prefill p{q:.0} ms"),
+                format!("{:.3}", self.prefill_latency_ms(q)),
             ]);
         }
         t.render()
@@ -192,7 +231,39 @@ mod tests {
         let m = ServeMetrics::new();
         assert_eq!(m.tokens_per_sec(), 0.0);
         assert!(m.token_latency_ms(50.0).is_nan());
+        assert!(m.prefill_latency_ms(50.0).is_nan());
         assert!(m.mean_batch().is_nan());
         let _ = m.render();
+    }
+
+    #[test]
+    fn nan_latency_samples_do_not_panic() {
+        // regression: a NaN step latency panicked the partial_cmp sort in
+        // token_latency_ms (and the Stats sort behind request_latency_ms)
+        let mut m = ServeMetrics::new();
+        m.record_step(1, f64::NAN);
+        m.record_step(1, 0.002);
+        m.record_step(1, 0.001);
+        // NaN orders last, so the median over {1ms, 2ms, NaN} stays finite
+        assert!((m.token_latency_ms(50.0) - 2.0).abs() < 1e-9);
+        m.record_request(f64::NAN);
+        m.record_request(0.5);
+        let _ = m.request_latency_ms(50.0);
+        m.record_prefill(4, f64::NAN);
+        m.record_prefill(4, 0.001);
+        let _ = m.prefill_latency_ms(50.0);
+        let _ = m.render();
+        let _ = m.summary();
+    }
+
+    #[test]
+    fn prefill_counters_and_percentiles() {
+        let mut m = ServeMetrics::new();
+        m.record_prefill(16, 0.004);
+        m.record_prefill(8, 0.002);
+        assert_eq!(m.prompts_prefilled(), 2);
+        assert_eq!(m.prompt_tokens(), 24);
+        assert!((m.prefill_latency_ms(50.0) - 3.0).abs() < 1e-9);
+        assert!(m.render().contains("prefill p50"));
     }
 }

@@ -10,28 +10,44 @@
 //!   sampling via the deterministic [`crate::util::Rng`]. One [`Engine`]
 //!   wraps either the dense weight backend or the CSR
 //!   [`crate::model::SparseModel`] backend behind the same
-//!   [`crate::model::DecodeOps`] seam.
+//!   [`crate::model::DecodeOps`] seam; backends are `Send + Sync` so one
+//!   engine is shared by reference across server threads.
 //! * [`batcher`] — a FIFO request queue with **continuous batching**:
 //!   between decode steps, finished sequences are evicted and queued
 //!   requests admitted, so the batch stays full without waiting for the
-//!   slowest member. Each step runs the whole batch's linear layers as one
-//!   `[batch, d_model]` product, fanning across the matmul thread pool
-//!   (`ALPS_THREADS` pins the pool width for reproducible benches).
+//!   slowest member. Admission prefill runs the whole prompt as one
+//!   `[prompt, d_model]` pass per layer
+//!   ([`crate::model::Decoder::prefill_batch`] — the SparseGPT-style
+//!   layer-batched formulation), so admission costs O(layers) batched
+//!   matmuls instead of O(prompt) single-row passes. Each decode step
+//!   runs the whole batch's linear layers as one `[batch, d_model]`
+//!   product, fanning across the matmul thread pool (`ALPS_THREADS` pins
+//!   the pool width for reproducible benches).
+//! * [`tcp`] — the threaded multi-connection TCP front-end: one thread
+//!   per connection (bounded by a connection cap) feeding a shared
+//!   `Mutex<Batcher>`, a scheduler thread driving decode steps, lock-free
+//!   `GET /healthz`, bounded request-line reads, and graceful
+//!   drain-on-shutdown. See its module docs for the wire protocol.
 //! * [`metrics`] — throughput and latency accounting on
 //!   [`crate::util::Stats`]: tokens/s, per-step and per-token latency
-//!   p50/p95/p99, per-request latency, mean batch occupancy.
+//!   p50/p95/p99, per-request latency, admission prefill latency, mean
+//!   batch occupancy. Latency windows tolerate NaN samples
+//!   (`f64::total_cmp` ordering) instead of panicking the comparator.
 //!
 //! Per-token decode cost is O(context) attention + O(1) weight matmuls
 //! thanks to the KV cache; re-running the full prefix each token (the
 //! pre-serve eval path) is O(context) *matmuls*. `bench_serve` measures
-//! both, plus the dense-vs-CSR crossover at 50/70/90% sparsity.
+//! both, the batched-vs-stepwise prefill speedup, the dense-vs-CSR
+//! crossover at 50/70/90% sparsity, and healthz latency under concurrent
+//! TCP load.
 //!
 //! ## CLI
 //!
 //! ```text
 //! alps serve --model alps-base --weights pruned.bin [--sparse]
 //!            [--addr 127.0.0.1:7878] [--stdin] [--random]
-//!            [--max-batch 8] [--max-new 32] [--temperature 0.0] [--top-k 0]
+//!            [--max-batch 8] [--max-conns 64] [--max-line 65536]
+//!            [--max-new 32] [--temperature 0.0] [--top-k 0]
 //! ```
 //!
 //! Two std-only front-ends:
@@ -39,30 +55,27 @@
 //! * `--stdin`: read one prompt per line (whitespace-separated token ids),
 //!   run everything through the continuous batcher, print `id: tokens`
 //!   lines plus a metrics table. Good for scripted smoke tests.
-//! * TCP line protocol (default, on `--addr`): each line is a prompt of
-//!   token ids, acknowledged immediately with `queued <id>` (or
-//!   `err - <msg>` — literal dash, no id — if the line doesn't parse).
-//!   A blank line (or `run`, or EOF) flushes the accumulated requests
-//!   through one batched generation and writes one `ok <id> <tokens...>`
-//!   line per request, or `err <id> <msg>` for requests rejected at
-//!   prefill; a flush with nothing queued answers `err - no pending
-//!   requests`. A leading `GET ` line gets a minimal HTTP 200 health/info
-//!   response instead, so `curl http://addr/healthz` works.
+//! * TCP line protocol (default, on `--addr`), served concurrently to up
+//!   to `--max-conns` clients — see [`tcp`] for the full protocol
+//!   (`queued <id>` acks, `run`/blank-line result waits, `stats`,
+//!   `shutdown`, `GET /healthz`).
 //!
 //! ## Known limits (open items)
 //!
-//! * The TCP front-end serves one connection at a time (std-only, no
-//!   threading yet): an idle connected client delays later clients,
-//!   including health probes. Batching happens within a connection.
-//! * Prompt prefill at admission runs token-by-token through the decode
-//!   step (exact, O(prompt) single-row passes). A batched multi-row
-//!   prefill (one `[prompt, d]` pass per layer) would cut admission
-//!   latency substantially; the decode seam already supports it.
+//! * No request cancellation or per-request deadlines: a flushing client
+//!   that disconnects still has its generations decoded to completion
+//!   (results are then discarded).
+//! * One scheduler thread drives decode; the parallelism inside a step
+//!   comes from the matmul pool. Multiple model replicas (one batcher
+//!   per replica) would scale further.
+//! * No TLS/auth on the TCP front-end; it trusts its network.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod tcp;
 
 pub use batcher::{Batcher, Request, Response};
 pub use engine::{sample_token, Engine, Generation, SamplingParams};
 pub use metrics::ServeMetrics;
+pub use tcp::TcpConfig;

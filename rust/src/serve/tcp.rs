@@ -1,0 +1,756 @@
+//! Threaded multi-connection TCP front-end (std-only).
+//!
+//! PR 1's front-end served one connection at a time: an idle connected
+//! client delayed every later client, including health probes. This
+//! module replaces it with one thread per connection feeding a **shared**
+//! continuous batcher:
+//!
+//! * The accept loop spawns a scoped thread per connection, bounded by
+//!   [`TcpConfig::max_conns`]. Excess connections get `err - connection
+//!   limit reached` and are closed — except `GET` health probes, which
+//!   are still answered (with `"at_capacity":true`) so monitoring works
+//!   when it matters most; the refusal pool itself is capped, and a
+//!   connect flood beyond it is dropped outright.
+//! * All connections submit into one `Mutex<Batcher>`; a dedicated
+//!   scheduler thread runs decode steps whenever work is queued (woken by
+//!   a condvar on submit), so requests from different connections share
+//!   the decode batch. Finished responses are routed back to the owning
+//!   connection over per-connection mpsc channels.
+//! * `GET /healthz` is answered from static model info plus atomics —
+//!   never touching the batcher lock — so probes stay responsive while
+//!   decode steps run.
+//! * Graceful shutdown: the `shutdown` protocol line (or an accept-loop
+//!   exit) sets a flag; the scheduler drains all in-flight generations,
+//!   reader loops notice within one read-timeout tick, and `serve`
+//!   returns the final metrics report.
+//!
+//! ## Wire protocol (line-oriented)
+//!
+//! * A line of whitespace-separated token ids queues a generation,
+//!   acknowledged `queued <id>` (ids are global across connections).
+//!   Generation starts immediately — no flush needed to begin work.
+//! * A blank line, `run`, or EOF (client half-close) waits for all of
+//!   this connection's outstanding requests and writes one
+//!   `ok <id> <tokens...>` or `err <id> <msg>` line per request (sorted
+//!   by id); an explicit flush with nothing outstanding answers
+//!   `err - no pending requests`.
+//! * `stats` answers one `ok - <metrics summary>` line.
+//! * `shutdown` answers `ok shutdown` and stops the whole server after
+//!   draining in-flight work.
+//! * A first line starting with `GET ` gets a minimal HTTP 200 health
+//!   response (so `curl http://addr/healthz` works) and closes.
+//! * Lines longer than [`TcpConfig::max_line_bytes`] get `err - line too
+//!   long` and the connection is closed — a malicious client cannot grow
+//!   an unbounded buffer.
+
+use super::batcher::{Batcher, Response};
+use super::engine::{Engine, SamplingParams};
+use anyhow::{Context as _, Result};
+use std::collections::{HashMap, HashSet};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+/// Read timeout on client sockets: how quickly an idle reader notices a
+/// server shutdown.
+const READ_POLL: Duration = Duration::from_millis(200);
+/// Write timeout on client sockets: a client that stops reading (full TCP
+/// window) fails its handler instead of wedging the scope join at
+/// shutdown.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+/// Scheduler condvar timeout while idle (also bounds shutdown latency).
+const IDLE_POLL: Duration = Duration::from_millis(50);
+/// Slice for response-wait polling during a flush.
+const RECV_POLL: Duration = Duration::from_millis(100);
+/// Overall cap on one flush's wait for generations.
+const FLUSH_TIMEOUT: Duration = Duration::from_secs(120);
+/// Once shutdown begins, a flush waits at most this long for the drain.
+const SHUTDOWN_DRAIN: Duration = Duration::from_secs(5);
+/// How long an over-cap refusal waits to classify the client (healthz
+/// probe vs line-protocol client) before giving up on it.
+const REFUSE_READ_TIMEOUT: Duration = Duration::from_millis(500);
+/// Concurrent refusal threads; connections beyond this during a connect
+/// flood are dropped without ceremony so the cap actually bounds server
+/// resources.
+const MAX_REFUSALS: usize = 8;
+
+/// Front-end configuration (CLI flags `--max-batch`, `--max-conns`,
+/// `--max-line`).
+#[derive(Clone, Debug)]
+pub struct TcpConfig {
+    /// Decode batch width of the shared batcher.
+    pub max_batch: usize,
+    /// Concurrent connection cap; excess connections are refused.
+    pub max_conns: usize,
+    /// Longest accepted request line in bytes.
+    pub max_line_bytes: usize,
+}
+
+impl Default for TcpConfig {
+    fn default() -> Self {
+        TcpConfig { max_batch: 8, max_conns: 64, max_line_bytes: 64 * 1024 }
+    }
+}
+
+/// Parse a prompt line of whitespace-separated token ids.
+pub fn parse_prompt(line: &str) -> Result<Vec<u16>> {
+    line.split_whitespace()
+        .map(|t| t.parse::<u16>().with_context(|| format!("bad token id '{t}'")))
+        .collect()
+}
+
+/// Render tokens as the wire format (space-separated ids).
+pub fn fmt_tokens(tokens: &[u16]) -> String {
+    tokens.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(" ")
+}
+
+/// Poison-tolerant lock: a panicked connection thread must not take the
+/// whole server down with it.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// State shared between the accept loop, connection threads, and the
+/// scheduler thread.
+struct Shared<'e, 'm> {
+    engine: &'e Engine<'m>,
+    batcher: Mutex<Batcher<'e, 'm>>,
+    /// Notified on submit so the scheduler wakes without polling.
+    work: Condvar,
+    /// Reply route per in-flight request id.
+    replies: Mutex<HashMap<u64, mpsc::Sender<Response>>>,
+    shutdown: AtomicBool,
+    conns: AtomicUsize,
+    /// Live over-cap refusal threads (bounded by [`MAX_REFUSALS`]).
+    refusing: AtomicUsize,
+    addr: SocketAddr,
+    max_conns: usize,
+}
+
+impl Shared<'_, '_> {
+    /// Flag shutdown, wake the scheduler, and poke the blocking accept
+    /// loop with a dummy connection so it observes the flag. A wildcard
+    /// bind (0.0.0.0 / ::) is not a connectable address, so the poke
+    /// targets loopback on the same port. Best-effort: if the connect
+    /// fails anyway, the accept loop still exits on the next inbound
+    /// connection attempt.
+    fn begin_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.work.notify_all();
+        let mut addr = self.addr;
+        if addr.ip().is_unspecified() {
+            addr.set_ip(match addr {
+                SocketAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+                SocketAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+            });
+        }
+        let _ = TcpStream::connect(addr);
+    }
+}
+
+/// Serve the line protocol on `listener` until a client sends `shutdown`.
+/// Returns the final metrics report. The listener may be bound to port 0;
+/// tests read the actual address back via `TcpListener::local_addr`
+/// before handing the listener in.
+pub fn serve(
+    listener: TcpListener,
+    engine: &Engine,
+    params: &SamplingParams,
+    cfg: &TcpConfig,
+) -> Result<String> {
+    let addr = listener.local_addr().context("reading bound address")?;
+    let shared = Shared {
+        engine,
+        batcher: Mutex::new(Batcher::new(engine, cfg.max_batch)),
+        work: Condvar::new(),
+        replies: Mutex::new(HashMap::new()),
+        shutdown: AtomicBool::new(false),
+        conns: AtomicUsize::new(0),
+        refusing: AtomicUsize::new(0),
+        addr,
+        max_conns: cfg.max_conns.max(1),
+    };
+    std::thread::scope(|s| {
+        s.spawn(|| scheduler(&shared));
+        for stream in listener.incoming() {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match stream {
+                Ok(st) => st,
+                Err(e) => {
+                    eprintln!("[serve] accept error: {e}");
+                    continue;
+                }
+            };
+            if shared.conns.load(Ordering::SeqCst) >= shared.max_conns {
+                // refusal drains briefly; keep the accept loop free by
+                // doing it off-thread, with the refusal pool itself capped
+                // so a connect flood can't mint unbounded threads
+                if shared.refusing.load(Ordering::SeqCst) < MAX_REFUSALS {
+                    shared.refusing.fetch_add(1, Ordering::SeqCst);
+                    let shared_ref = &shared;
+                    s.spawn(move || {
+                        refuse_conn(stream, shared_ref);
+                        shared_ref.refusing.fetch_sub(1, Ordering::SeqCst);
+                    });
+                }
+                continue; // beyond the refusal pool: dropped without ceremony
+            }
+            // incremented here (not in the spawned thread) so the cap check
+            // on the next accept already sees this connection
+            shared.conns.fetch_add(1, Ordering::SeqCst);
+            let shared_ref = &shared;
+            s.spawn(move || {
+                if let Err(e) = handle_conn(stream, shared_ref, params, cfg) {
+                    eprintln!("[serve] connection error: {e}");
+                }
+                shared_ref.conns.fetch_sub(1, Ordering::SeqCst);
+            });
+        }
+        // accept loop done: let the scheduler drain and exit, readers
+        // notice within one READ_POLL tick, then the scope joins everyone
+        shared.shutdown.store(true, Ordering::SeqCst);
+        shared.work.notify_all();
+    });
+    let report = lock(&shared.batcher).metrics.render();
+    Ok(report)
+}
+
+/// Handle an over-cap connection. `GET` health probes are still answered
+/// (monitoring matters most when the server is saturated); everything
+/// else is refused with an error line. One bounded read with a short
+/// deadline classifies the client, then the write side is half-closed and
+/// pipelined input briefly drained — closing with unread inbound data
+/// buffered can RST the reply away before the client reads it (same
+/// hazard the healthz header drain avoids).
+fn refuse_conn(stream: TcpStream, shared: &Shared) {
+    let mut st = stream;
+    let _ = st.set_read_timeout(Some(REFUSE_READ_TIMEOUT));
+    let _ = st.set_write_timeout(Some(WRITE_TIMEOUT));
+    let mut first = [0u8; 512];
+    let mut have = 0usize;
+    // classify from up to a few bounded reads: "GET " can arrive split
+    // across TCP segments; stop once 4 bytes or a newline are in hand, or
+    // the client stalls past the read deadline (silent client => refuse)
+    for _ in 0..4 {
+        match std::io::Read::read(&mut st, &mut first[have..]) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => {
+                have += n;
+                if have >= 4 || first[..have].contains(&b'\n') {
+                    break;
+                }
+            }
+        }
+    }
+    if first[..have].starts_with(b"GET ") {
+        let m = shared.engine.model();
+        let body = format!(
+            "{{\"model\":\"{}\",\"backend\":\"{}\",\"connections\":{},\"at_capacity\":true}}\n",
+            m.cfg.name,
+            shared.engine.label(),
+            shared.conns.load(Ordering::SeqCst),
+        );
+        let _ = write!(
+            st,
+            "HTTP/1.1 200 OK\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+            body.len(),
+            body
+        );
+    } else {
+        let _ = writeln!(st, "err - connection limit reached ({})", shared.max_conns);
+    }
+    let _ = st.shutdown(std::net::Shutdown::Write);
+    let mut sink = [0u8; 512];
+    for _ in 0..8 {
+        match std::io::Read::read(&mut st, &mut sink) {
+            Ok(0) | Err(_) => break, // EOF, timeout, or reset: done either way
+            Ok(_) => continue,
+        }
+    }
+}
+
+/// Scheduler thread: run decode steps whenever work is queued, route
+/// finished responses to their connections. Holds the batcher lock only
+/// for the duration of one step, so submissions interleave between steps.
+fn scheduler(shared: &Shared) {
+    loop {
+        let mut b = lock(&shared.batcher);
+        while b.is_idle() {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            b = match shared.work.wait_timeout(b, IDLE_POLL) {
+                Ok((g, _)) => g,
+                Err(p) => p.into_inner().0,
+            };
+        }
+        let finished = match b.step() {
+            Ok(f) => f,
+            Err(e) => {
+                // structural failure (missing weight): nothing further can
+                // decode — shut the server down rather than spin on errors
+                eprintln!("[serve] scheduler decode error, shutting down: {e}");
+                drop(b);
+                shared.begin_shutdown();
+                return;
+            }
+        };
+        drop(b);
+        if finished.is_empty() {
+            continue;
+        }
+        let mut replies = lock(&shared.replies);
+        for r in finished {
+            if let Some(tx) = replies.remove(&r.id) {
+                let _ = tx.send(r); // receiver gone => connection closed
+            }
+        }
+    }
+}
+
+/// Outcome of one bounded line read.
+enum LineRead {
+    Line(String),
+    TooLong,
+    Eof,
+    Shutdown,
+}
+
+/// Read one `\n`-terminated line, holding at most `max` bytes of it in
+/// memory. Oversized lines are discarded as they stream in and reported
+/// as [`LineRead::TooLong`]. Read-timeout ticks re-check the shutdown
+/// flag so blocked readers terminate promptly.
+fn read_line_bounded<R: BufRead>(
+    r: &mut R,
+    max: usize,
+    shutdown: &AtomicBool,
+) -> std::io::Result<LineRead> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut too_long = false;
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return Ok(LineRead::Shutdown);
+        }
+        let (consumed, done) = {
+            let chunk = match r.fill_buf() {
+                Ok(c) => c,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock
+                            | std::io::ErrorKind::TimedOut
+                            | std::io::ErrorKind::Interrupted
+                    ) =>
+                {
+                    continue
+                }
+                Err(e) => return Err(e),
+            };
+            if chunk.is_empty() {
+                // EOF: a non-empty partial line still counts as a line
+                let done = if too_long {
+                    LineRead::TooLong
+                } else if buf.is_empty() {
+                    LineRead::Eof
+                } else {
+                    LineRead::Line(String::from_utf8_lossy(&buf).into_owned())
+                };
+                (0, Some(done))
+            } else {
+                match chunk.iter().position(|&b| b == b'\n') {
+                    Some(p) => {
+                        if !too_long && buf.len() + p > max {
+                            too_long = true;
+                        }
+                        if !too_long {
+                            buf.extend_from_slice(&chunk[..p]);
+                        }
+                        let done = if too_long {
+                            LineRead::TooLong
+                        } else {
+                            LineRead::Line(String::from_utf8_lossy(&buf).into_owned())
+                        };
+                        (p + 1, Some(done))
+                    }
+                    None => {
+                        if buf.len() + chunk.len() > max {
+                            too_long = true;
+                            buf.clear(); // cap memory; the line is rejected
+                        } else {
+                            buf.extend_from_slice(chunk);
+                        }
+                        (chunk.len(), None)
+                    }
+                }
+            }
+        };
+        r.consume(consumed);
+        if let Some(l) = done {
+            return Ok(l);
+        }
+    }
+}
+
+/// Wait for all of this connection's outstanding generations and write
+/// one result line per request (sorted by id). Requests not done by the
+/// deadline (shortened once a server shutdown begins) are reported as
+/// timed out and their reply routes dropped; a response arriving after
+/// its timeout report is discarded on the next flush rather than emitted
+/// as a stray extra line.
+fn flush_results(
+    stream: &mut TcpStream,
+    rx: &mpsc::Receiver<Response>,
+    outstanding: &mut HashSet<u64>,
+    shared: &Shared,
+) -> Result<()> {
+    let mut ready: Vec<Response> = Vec::new();
+    let deadline = Instant::now() + FLUSH_TIMEOUT;
+    let mut drain_deadline: Option<Instant> = None;
+    while !outstanding.is_empty() {
+        let now = Instant::now();
+        if shared.shutdown.load(Ordering::SeqCst) && drain_deadline.is_none() {
+            drain_deadline = Some(now + SHUTDOWN_DRAIN);
+        }
+        let until = drain_deadline.map_or(deadline, |d| d.min(deadline));
+        if now >= until {
+            break;
+        }
+        match rx.recv_timeout(RECV_POLL.min(until - now)) {
+            Ok(r) => {
+                if outstanding.remove(&r.id) {
+                    ready.push(r);
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    ready.sort_by_key(|r| r.id);
+    for r in ready {
+        match r.error {
+            Some(e) => writeln!(stream, "err {} {e}", r.id)?,
+            None => writeln!(stream, "ok {} {}", r.id, fmt_tokens(&r.tokens))?,
+        }
+    }
+    for id in outstanding.drain() {
+        writeln!(stream, "err {id} timed out waiting for generation")?;
+        lock(&shared.replies).remove(&id);
+    }
+    println!("[serve] {}", lock(&shared.batcher).metrics.summary());
+    Ok(())
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    shared: &Shared,
+    params: &SamplingParams,
+    cfg: &TcpConfig,
+) -> Result<()> {
+    stream.set_read_timeout(Some(READ_POLL)).context("setting read timeout")?;
+    stream.set_write_timeout(Some(WRITE_TIMEOUT)).context("setting write timeout")?;
+    let _ = stream.set_nodelay(true);
+    let mut reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+    let mut stream = stream;
+    let (tx, rx) = mpsc::channel::<Response>();
+    let mut outstanding: HashSet<u64> = HashSet::new();
+    let mut first = true;
+    loop {
+        let line = match read_line_bounded(&mut reader, cfg.max_line_bytes, &shared.shutdown)? {
+            LineRead::Line(l) => l,
+            LineRead::TooLong => {
+                writeln!(stream, "err - line too long (max {} bytes)", cfg.max_line_bytes)?;
+                break;
+            }
+            // EOF is an implicit flush (PR 1 contract: `printf .. | nc`
+            // with no trailing blank line still gets its results; the
+            // client half-closes and keeps reading). Server shutdown is
+            // too: the drain decodes acked work to completion, so deliver
+            // it instead of dropping it (flush_results shortens its
+            // deadline once shutdown is flagged). Best-effort either way:
+            // a fully-gone client just fails the writes.
+            LineRead::Eof | LineRead::Shutdown => {
+                if !outstanding.is_empty() {
+                    let _ = flush_results(&mut stream, &rx, &mut outstanding, shared);
+                }
+                break;
+            }
+        };
+        if first && line.starts_with("GET ") {
+            // drain the request headers before replying: closing with
+            // unread data still buffered can RST the response away
+            loop {
+                match read_line_bounded(&mut reader, cfg.max_line_bytes, &shared.shutdown)? {
+                    LineRead::Line(h) if !h.trim().is_empty() => continue,
+                    _ => break,
+                }
+            }
+            let m = shared.engine.model();
+            let body = format!(
+                "{{\"model\":\"{}\",\"backend\":\"{}\",\"vocab\":{},\"seq_len\":{},\
+                 \"connections\":{},\"max_batch\":{}}}\n",
+                m.cfg.name,
+                shared.engine.label(),
+                m.cfg.vocab,
+                m.cfg.seq_len,
+                shared.conns.load(Ordering::SeqCst),
+                cfg.max_batch,
+            );
+            write!(
+                stream,
+                "HTTP/1.1 200 OK\r\nContent-Type: application/json\r\n\
+                 Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+                body.len(),
+                body
+            )?;
+            break;
+        }
+        first = false;
+        let trimmed = line.trim();
+        if trimmed == "shutdown" {
+            writeln!(stream, "ok shutdown")?;
+            shared.begin_shutdown();
+            break;
+        }
+        if trimmed == "stats" {
+            let summary = lock(&shared.batcher).metrics.summary();
+            writeln!(stream, "ok - {summary}")?;
+            continue;
+        }
+        let flush = trimmed.is_empty() || trimmed == "run";
+        if !flush {
+            match parse_prompt(trimmed) {
+                Ok(p) => {
+                    // register the reply route while still holding the
+                    // batcher lock: the scheduler cannot complete the
+                    // request before the route exists because completing
+                    // it needs this same lock
+                    let id = {
+                        let mut b = lock(&shared.batcher);
+                        let id = b.submit(p, params.clone());
+                        lock(&shared.replies).insert(id, tx.clone());
+                        id
+                    };
+                    shared.work.notify_all();
+                    outstanding.insert(id);
+                    writeln!(stream, "queued {id}")?;
+                }
+                Err(e) => writeln!(stream, "err - {e}")?,
+            }
+        } else if outstanding.is_empty() {
+            // answer rather than leaving a client blocked on read
+            writeln!(stream, "err - no pending requests")?;
+        } else {
+            flush_results(&mut stream, &rx, &mut outstanding, shared)?;
+        }
+    }
+    // connection over: drop reply routes for anything still outstanding so
+    // the shared map does not accumulate dead entries
+    if !outstanding.is_empty() {
+        let mut replies = lock(&shared.replies);
+        for id in outstanding {
+            replies.remove(&id);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::transformer::testutil::random_model;
+    use crate::util::Timer;
+    use std::io::Read;
+
+    fn connect(addr: SocketAddr) -> (BufReader<TcpStream>, TcpStream) {
+        let s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        (BufReader::new(s.try_clone().unwrap()), s)
+    }
+
+    fn send(w: &mut TcpStream, line: &str) {
+        writeln!(w, "{line}").unwrap();
+    }
+
+    fn recv(r: &mut BufReader<TcpStream>) -> String {
+        let mut l = String::new();
+        r.read_line(&mut l).unwrap();
+        l.trim_end().to_string()
+    }
+
+    #[test]
+    fn concurrent_clients_served_with_responsive_healthz() {
+        // the tentpole acceptance: >= 4 concurrent TCP clients all get
+        // answers while healthz probes stay responsive throughout
+        let m = random_model(40);
+        let e = Engine::dense(&m).unwrap();
+        let params = SamplingParams { max_new_tokens: 6, ..Default::default() };
+        let cfg = TcpConfig::default();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::scope(|s| {
+            let server = s.spawn(|| serve(listener, &e, &params, &cfg).unwrap());
+            let clients: Vec<_> = (0..5)
+                .map(|ci| {
+                    s.spawn(move || {
+                        let (mut r, mut w) = connect(addr);
+                        for _ in 0..2 {
+                            send(&mut w, "1 2 3");
+                            let ack = recv(&mut r);
+                            assert!(ack.starts_with("queued "), "client {ci}: {ack}");
+                        }
+                        send(&mut w, "run");
+                        let mut results = Vec::new();
+                        for _ in 0..2 {
+                            let l = recv(&mut r);
+                            assert!(l.starts_with("ok "), "client {ci}: {l}");
+                            results.push(l.split_once(' ').unwrap().1.to_string());
+                        }
+                        results
+                    })
+                })
+                .collect();
+            // healthz probes while the load is in flight: must answer
+            // without queueing behind any client connection
+            for _ in 0..3 {
+                let t = Timer::start();
+                let (mut r, mut w) = connect(addr);
+                write!(w, "GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+                let mut resp = String::new();
+                r.read_to_string(&mut resp).unwrap();
+                assert!(resp.starts_with("HTTP/1.1 200 OK"), "healthz: {resp}");
+                assert!(resp.contains("\"connections\""));
+                assert!(t.elapsed_secs() < 1.0, "healthz took {:.3}s", t.elapsed_secs());
+            }
+            let all: Vec<Vec<String>> = clients.into_iter().map(|c| c.join().unwrap()).collect();
+            assert_eq!(all.len(), 5);
+            // same greedy prompt everywhere => identical generations
+            let first_tokens = all[0][0].split_once(' ').unwrap().1.to_string();
+            for res in &all {
+                assert_eq!(res.len(), 2);
+                for line in res {
+                    assert_eq!(line.split_once(' ').unwrap().1, first_tokens);
+                }
+            }
+            let (mut r, mut w) = connect(addr);
+            send(&mut w, "shutdown");
+            assert_eq!(recv(&mut r), "ok shutdown");
+            let report = server.join().unwrap();
+            assert!(report.contains("tokens/s"), "report: {report}");
+        });
+    }
+
+    #[test]
+    fn oversized_line_rejected_with_bounded_memory() {
+        let m = random_model(41);
+        let e = Engine::dense(&m).unwrap();
+        let params = SamplingParams::default();
+        let cfg = TcpConfig { max_line_bytes: 64, ..Default::default() };
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::scope(|s| {
+            let server = s.spawn(|| serve(listener, &e, &params, &cfg).unwrap());
+            let (mut r, mut w) = connect(addr);
+            let huge = "7 ".repeat(4096);
+            send(&mut w, &huge);
+            let l = recv(&mut r);
+            assert!(l.starts_with("err - line too long"), "got: {l}");
+            // server closed the connection after rejecting
+            let mut rest = String::new();
+            assert_eq!(r.read_to_string(&mut rest).unwrap(), 0);
+            let (mut r2, mut w2) = connect(addr);
+            send(&mut w2, "shutdown");
+            assert_eq!(recv(&mut r2), "ok shutdown");
+            server.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn connection_cap_refuses_excess_clients() {
+        let m = random_model(42);
+        let e = Engine::dense(&m).unwrap();
+        let params = SamplingParams::default();
+        let cfg = TcpConfig { max_conns: 1, ..Default::default() };
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::scope(|s| {
+            let server = s.spawn(|| serve(listener, &e, &params, &cfg).unwrap());
+            let (mut r1, mut w1) = connect(addr);
+            send(&mut w1, "1 2");
+            assert!(recv(&mut r1).starts_with("queued "));
+            // second client is over the cap: refused with an error line
+            let (mut r2, mut w2) = connect(addr);
+            send(&mut w2, "4 5"); // classifying read sees a non-GET line
+            let l = recv(&mut r2);
+            assert!(l.starts_with("err - connection limit reached"), "got: {l}");
+            // healthz must still be answered at the cap
+            let (mut r3, mut w3) = connect(addr);
+            write!(w3, "GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+            let mut resp = String::new();
+            r3.read_to_string(&mut resp).unwrap();
+            assert!(resp.starts_with("HTTP/1.1 200 OK"), "healthz at cap: {resp}");
+            assert!(resp.contains("\"at_capacity\":true"));
+            send(&mut w1, "run");
+            assert!(recv(&mut r1).starts_with("ok "));
+            send(&mut w1, "shutdown");
+            assert_eq!(recv(&mut r1), "ok shutdown");
+            server.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn eof_flushes_outstanding_requests() {
+        // `printf '1 2 3\n' | nc host port` (no trailing blank line) must
+        // still get its results: EOF is an implicit flush
+        let m = random_model(44);
+        let e = Engine::dense(&m).unwrap();
+        let params = SamplingParams { max_new_tokens: 4, ..Default::default() };
+        let cfg = TcpConfig::default();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::scope(|s| {
+            let server = s.spawn(|| serve(listener, &e, &params, &cfg).unwrap());
+            let (mut r, mut w) = connect(addr);
+            send(&mut w, "1 2 3");
+            assert!(recv(&mut r).starts_with("queued "));
+            w.shutdown(std::net::Shutdown::Write).unwrap(); // half-close = EOF
+            let l = recv(&mut r);
+            assert!(l.starts_with("ok "), "EOF flush got: {l}");
+            let (mut r2, mut w2) = connect(addr);
+            send(&mut w2, "shutdown");
+            assert_eq!(recv(&mut r2), "ok shutdown");
+            server.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn protocol_errors_and_stats() {
+        let m = random_model(43);
+        let e = Engine::dense(&m).unwrap();
+        let params = SamplingParams { max_new_tokens: 3, ..Default::default() };
+        let cfg = TcpConfig::default();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::scope(|s| {
+            let server = s.spawn(|| serve(listener, &e, &params, &cfg).unwrap());
+            let (mut r, mut w) = connect(addr);
+            send(&mut w, "run"); // nothing queued
+            assert_eq!(recv(&mut r), "err - no pending requests");
+            send(&mut w, "not a prompt");
+            assert!(recv(&mut r).starts_with("err - "));
+            send(&mut w, "999"); // out of vocab: rejected at prefill
+            assert!(recv(&mut r).starts_with("queued "));
+            send(&mut w, "run");
+            assert!(recv(&mut r).starts_with("err "));
+            send(&mut w, "stats");
+            assert!(recv(&mut r).starts_with("ok - "));
+            send(&mut w, "shutdown");
+            assert_eq!(recv(&mut r), "ok shutdown");
+            server.join().unwrap();
+        });
+    }
+}

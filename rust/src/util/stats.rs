@@ -59,7 +59,9 @@ impl Stats {
             return f64::NAN;
         }
         let mut s = self.samples.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total order: NaN samples sort after every finite value instead of
+        // panicking the comparator (latency windows are fed external data)
+        s.sort_by(|a, b| a.total_cmp(b));
         let pos = (q / 100.0) * (s.len() - 1) as f64;
         let lo = pos.floor() as usize;
         let hi = pos.ceil() as usize;
