@@ -5,11 +5,11 @@
 //!     make artifacts && cargo run --release --example nm_sparsity
 
 use alps::config::SparsityTarget;
-use alps::coordinator::{PruneEngine, Scheduler};
 use alps::data::{sample_windows, Corpus};
 use alps::eval::perplexity;
 use alps::linalg::Csr;
 use alps::model::Model;
+use alps::pruning::{MethodSpec, PruneSession};
 use alps::util::table::{fmt_sig, Table};
 use std::path::Path;
 
@@ -27,12 +27,11 @@ fn main() -> anyhow::Result<()> {
         let target = SparsityTarget::parse(pattern)?;
         for method in ["mp", "wanda", "sparsegpt", "alps"] {
             let mut model = Model::load(dir, "alps-tiny")?;
-            let sched = Scheduler::new(calib.clone());
-            let report = sched.prune_model(
-                &mut model,
-                target,
-                &PruneEngine::Native(method.into()),
-            )?;
+            let report = PruneSession::builder()
+                .calib(calib.clone())
+                .target(target)
+                .method(MethodSpec::parse(method)?)
+                .run(&mut model)?;
             // verify the hardware pattern on every pruned matrix
             for name in model.prunable_names() {
                 let w = model.weights.matrix(&name)?;
@@ -53,8 +52,11 @@ fn main() -> anyhow::Result<()> {
 
     // show the sparse-inference payoff: CSR matmul skips the zeros
     let mut model = Model::load(dir, "alps-tiny")?;
-    let sched = Scheduler::new(calib);
-    sched.prune_model(&mut model, SparsityTarget::parse("2:4")?, &PruneEngine::Native("alps".into()))?;
+    PruneSession::builder()
+        .calib(calib)
+        .target(SparsityTarget::parse("2:4")?)
+        .method(MethodSpec::parse("alps")?)
+        .run(&mut model)?;
     let w = model.weights.matrix("blocks.0.mlp.w1")?;
     let csr = Csr::from_dense(&w);
     println!(

@@ -5,12 +5,12 @@
 //!     make artifacts && cargo run --release --example prune_quantize
 
 use alps::config::SparsityTarget;
-use alps::coordinator::{PruneEngine, Scheduler};
 use alps::data::{sample_windows, Corpus};
 use alps::eval::perplexity;
 use alps::model::Model;
 use alps::pruning::quantize::{prune_quantize_error, QuantizedWeights};
-use alps::pruning::{LayerProblem, PruneMethod};
+use alps::pruning::session::single_layer_problem;
+use alps::pruning::{LayerProblem, MethodSpec, PruneMethod, PruneSession};
 use alps::util::table::{fmt_sig, Table};
 use std::path::Path;
 
@@ -24,9 +24,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- single-layer view: error decomposition
     println!("single-layer prune(0.5)+int8 on blocks.0.mlp.w2:\n");
-    let p = alps::coordinator::scheduler::single_layer_problem(
-        &model, &calib, 0, "mlp.w2",
-    )?;
+    let p = single_layer_problem(&model, &calib, 0, "mlp.w2")?;
     let pruned = alps::pruning::alps::Alps::default()
         .prune(&p, SparsityTarget::Unstructured(0.5))?;
     let (err_rtn, err_refit, q) = prune_quantize_error(&p, &pruned);
@@ -38,12 +36,11 @@ fn main() -> anyhow::Result<()> {
 
     // --- whole model: prune everything, quantize every prunable matrix
     println!("\nwhole-model prune(0.5)+int8, perplexity:\n");
-    let sched = Scheduler::new(calib.clone());
-    sched.prune_model(
-        &mut model,
-        SparsityTarget::Unstructured(0.5),
-        &PruneEngine::Native("alps".into()),
-    )?;
+    PruneSession::builder()
+        .calib(calib.clone())
+        .target(SparsityTarget::Unstructured(0.5))
+        .method(MethodSpec::parse("alps")?)
+        .run(&mut model)?;
     let ppl_pruned = perplexity(&model, eval_ids)?;
 
     // quantize in place (with calibration-aware refit per layer)

@@ -1,0 +1,88 @@
+//! `PruneSession` tour: the typed builder API for end-to-end pruning —
+//! method specs with hyperparameters, streaming progress events, and
+//! per-block checkpoint/resume.
+//!
+//!     cargo run --release --example prune_session
+//!
+//! No artifacts needed: the example prunes a synthetic random model with
+//! synthetic calibration data.
+
+use alps::config::{AlpsConfig, ModelConfig, SparsityTarget};
+use alps::data::synthetic_windows;
+use alps::model::Model;
+use alps::pruning::{MethodSpec, ProgressEvent, PruneSession};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ModelConfig::preset("alps-tiny")?;
+
+    // --- 1. a plain run: typed method spec, custom hyperparameters
+    let mut model = Model::random(cfg.clone(), 7)?;
+    let calib = synthetic_windows(8, cfg.seq_len, cfg.vocab, 0xCA11B);
+    let spec = MethodSpec::Alps(AlpsConfig { max_iters: 120, ..Default::default() });
+    println!("== 1. prune alps-tiny (random weights) to 60% with {} ==", spec.label());
+    let report = PruneSession::builder()
+        .calib(calib.clone())
+        .target(SparsityTarget::parse("0.6")?)
+        .method(spec)
+        .verbose(true)
+        .run(&mut model)?;
+    println!("-> {}\n", report.summary());
+
+    // --- 2. streaming progress through an observer callback
+    println!("== 2. observer: one line per block, a summary per layer kind ==");
+    let mut model = Model::random(cfg.clone(), 7)?;
+    let report = PruneSession::builder()
+        .calib(calib.clone())
+        .target(SparsityTarget::parse("0.6")?)
+        .method(MethodSpec::Wanda)
+        .observer(|ev| match ev {
+            ProgressEvent::BlockStarted { block, n_blocks } => {
+                println!("   block {}/{} ...", block + 1, n_blocks);
+            }
+            ProgressEvent::LayerSolved { layer, rel_error, .. } => {
+                println!("     {layer}: rel-err {rel_error:.4}");
+            }
+            _ => {}
+        })
+        .run(&mut model)?;
+    println!("-> {}\n", report.summary());
+
+    // --- 3. checkpoint/resume: stop after one block, resume, verify
+    println!("== 3. checkpoint after every block; resume an interrupted run ==");
+    let ck = std::env::temp_dir().join("alps_example_ck");
+    let _ = std::fs::remove_dir_all(&ck);
+    let mut interrupted = Model::random(cfg.clone(), 7)?;
+    PruneSession::builder()
+        .calib(calib.clone())
+        .target(SparsityTarget::parse("0.6")?)
+        .method(MethodSpec::Wanda)
+        .checkpoint_dir(&ck)
+        .stop_after(1) // simulate the interruption
+        .run(&mut interrupted)?;
+    println!("   interrupted after block 0 (checkpoint in {})", ck.display());
+
+    let mut resumed = Model::random(cfg.clone(), 7)?;
+    PruneSession::builder()
+        .calib(calib.clone())
+        .target(SparsityTarget::parse("0.6")?)
+        .method(MethodSpec::Wanda)
+        .checkpoint_dir(&ck)
+        .resume(true)
+        .run(&mut resumed)?;
+
+    let mut uninterrupted = Model::random(cfg, 7)?;
+    PruneSession::builder()
+        .calib(calib)
+        .target(SparsityTarget::parse("0.6")?)
+        .method(MethodSpec::Wanda)
+        .run(&mut uninterrupted)?;
+
+    let identical = uninterrupted
+        .weights
+        .tensors
+        .iter()
+        .all(|(name, t)| resumed.weights.tensors[name].data == t.data);
+    println!("   resumed == uninterrupted, bit-for-bit: {identical}");
+    assert!(identical);
+    Ok(())
+}

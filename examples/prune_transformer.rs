@@ -9,10 +9,10 @@
 //!     #        --engine hlo|native
 
 use alps::config::{AlpsConfig, SparsityTarget};
-use alps::coordinator::{PruneEngine, Scheduler};
 use alps::data::{sample_windows, tasks, Corpus};
 use alps::eval::{perplexity, zero_shot_accuracy};
 use alps::model::Model;
+use alps::pruning::{HloEngine, MethodSpec, PruneSession};
 use alps::runtime::Runtime;
 use alps::util::table::{fmt_sig, Table};
 use alps::util::Timer;
@@ -55,17 +55,22 @@ fn main() -> anyhow::Result<()> {
     let rt = Runtime::new(dir)?;
     let mut m_alps = Model::load(dir, &model_name)?;
     let mut m_mp = Model::load(dir, &model_name)?;
-    let mut sched = Scheduler::new(calib);
-    sched.verbose = true;
 
     println!("pruning with ALPS ({engine_kind} engine):");
     let t = Timer::start();
-    let engine = if engine_kind == "hlo" {
-        PruneEngine::Hlo(&rt, AlpsConfig::default())
+    let alps_builder = PruneSession::builder()
+        .calib(calib.clone())
+        .target(target)
+        .verbose(true);
+    let rep_alps = if engine_kind == "hlo" {
+        alps_builder
+            .engine(Box::new(HloEngine::new(&rt, AlpsConfig::default())))
+            .run(&mut m_alps)?
     } else {
-        PruneEngine::Native("alps".into())
+        alps_builder
+            .method(MethodSpec::Alps(AlpsConfig::default()))
+            .run(&mut m_alps)?
     };
-    let rep_alps = sched.prune_model(&mut m_alps, target, &engine)?;
     let alps_secs = t.elapsed_secs();
     println!(
         "  -> {} ({} artifact executions)\n",
@@ -73,9 +78,12 @@ fn main() -> anyhow::Result<()> {
         rt.total_execs()
     );
 
-    sched.verbose = false;
     println!("pruning with MP (baseline):");
-    let rep_mp = sched.prune_model(&mut m_mp, target, &PruneEngine::Native("mp".into()))?;
+    let rep_mp = PruneSession::builder()
+        .calib(calib)
+        .target(target)
+        .method(MethodSpec::Magnitude)
+        .run(&mut m_mp)?;
     println!("  -> {}\n", rep_mp.summary());
 
     // --- evaluate everything

@@ -8,7 +8,7 @@
 
 use alps::config::SparsityTarget;
 use alps::linalg::Matrix;
-use alps::pruning::{all_methods, LayerProblem};
+use alps::pruning::{LayerProblem, MethodSpec};
 use alps::util::table::{fmt_sig, Table};
 use alps::util::{Rng, Timer};
 
@@ -36,12 +36,12 @@ fn main() -> anyhow::Result<()> {
         n_in * n_out
     );
     let mut table = Table::new(&["method", "rel-error", "time (s)"]);
-    for method in all_methods() {
+    for spec in MethodSpec::all() {
         let timer = Timer::start();
-        let w = method.prune(&problem, target)?;
+        let w = spec.prune(&problem, target)?;
         let secs = timer.elapsed_secs();
         table.row(&[
-            method.name().to_string(),
+            spec.label().to_string(),
             fmt_sig(problem.rel_error(&w)),
             format!("{secs:.3}"),
         ]);

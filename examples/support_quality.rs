@@ -7,7 +7,7 @@
 
 use alps::config::SparsityTarget;
 use alps::linalg::Matrix;
-use alps::pruning::{all_methods, backsolve, LayerProblem};
+use alps::pruning::{backsolve, LayerProblem, MethodSpec};
 use alps::util::table::{fmt_sig, Table};
 use alps::util::Rng;
 
@@ -32,8 +32,8 @@ fn main() -> anyhow::Result<()> {
     for s in [0.5, 0.6, 0.7, 0.8, 0.9] {
         let target = SparsityTarget::Unstructured(s);
         let mut row = vec![format!("{s:.1}")];
-        for method in all_methods() {
-            let w = method.prune(&problem, target)?;
+        for spec in MethodSpec::all() {
+            let w = spec.prune(&problem, target)?;
             let optimal = backsolve::solve_on_support(&problem, &w.support_mask())?;
             row.push(fmt_sig(problem.rel_error(&optimal)));
         }

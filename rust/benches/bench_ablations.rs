@@ -15,7 +15,7 @@ use alps::model::sparse_infer::SparseModel;
 use alps::model::Model;
 use alps::pruning::alps::Alps;
 use alps::pruning::magnitude::MagnitudePruning;
-use alps::pruning::{LayerProblem, PruneMethod};
+use alps::pruning::{LayerProblem, MethodSpec, PruneMethod, PruneSession};
 use alps::util::table::{fmt_sig, Table};
 use std::path::Path;
 
@@ -122,12 +122,11 @@ fn main() -> anyhow::Result<()> {
         ]);
         for s in [0.5f64, 0.7, 0.9] {
             let mut model = Model::load(dir, "alps-tiny")?;
-            let sched = alps::coordinator::Scheduler::new(calib.clone());
-            sched.prune_model(
-                &mut model,
-                SparsityTarget::Unstructured(s),
-                &alps::coordinator::PruneEngine::Native("alps".into()),
-            )?;
+            PruneSession::builder()
+                .calib(calib.clone())
+                .target(SparsityTarget::Unstructured(s))
+                .method(MethodSpec::Alps(AlpsConfig::default()))
+                .run(&mut model)?;
             let sm = SparseModel::from_model(&model)?;
             let dense_s = bench(1, 3, || model.nll(&ids).unwrap()).median();
             let csr_s = bench(1, 3, || sm.nll(&ids).unwrap()).median();

@@ -6,7 +6,7 @@
 
 use alps::bench::paper_layer_problem;
 use alps::config::SparsityTarget;
-use alps::pruning::all_methods;
+use alps::pruning::MethodSpec;
 use alps::util::table::{fmt_sig, Table};
 
 fn main() -> anyhow::Result<()> {
@@ -22,8 +22,8 @@ fn main() -> anyhow::Result<()> {
         let target = SparsityTarget::Unstructured(s);
         let mut row = vec![format!("{s:.1}")];
         let mut errs = Vec::new();
-        for method in all_methods() {
-            let w = method.prune(&p, target)?;
+        for spec in MethodSpec::all() {
+            let w = spec.prune(&p, target)?;
             errs.push(p.rel_error(&w));
             row.push(fmt_sig(*errs.last().unwrap()));
         }

@@ -6,10 +6,10 @@
 
 use alps::bench::artifacts_ready;
 use alps::config::SparsityTarget;
-use alps::coordinator::{PruneEngine, Scheduler};
 use alps::data::{sample_windows, tasks, Corpus};
 use alps::eval::{perplexity, zero_shot_accuracy};
 use alps::model::Model;
+use alps::pruning::{MethodSpec, PruneSession};
 use alps::util::table::{fmt_sig, Table};
 use std::path::Path;
 
@@ -36,8 +36,11 @@ fn main() -> anyhow::Result<()> {
         let mut acc_row = vec![format!("{s:.1}")];
         for method in methods {
             let mut model = Model::load(dir, &model_name)?;
-            let sched = Scheduler::new(calib.clone());
-            sched.prune_model(&mut model, target, &PruneEngine::Native(method.into()))?;
+            PruneSession::builder()
+                .calib(calib.clone())
+                .target(target)
+                .method(MethodSpec::parse(method)?)
+                .run(&mut model)?;
             ppl_row.push(fmt_sig(perplexity(&model, eval_ids)?));
             acc_row.push(format!("{:.1}", zero_shot_accuracy(&model, &piqa)? * 100.0));
             eprintln!("  done s={s} {method}");

@@ -8,7 +8,7 @@
 use alps::bench::{bench, large_layer_problem};
 use alps::config::SparsityTarget;
 use alps::linalg::solve::pcg_support;
-use alps::pruning::{backsolve, magnitude::MagnitudePruning, PruneMethod};
+use alps::pruning::{backsolve, MethodSpec};
 use alps::util::table::{fmt_sig, Table};
 
 fn main() -> anyhow::Result<()> {
@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
     ]);
     for s in [0.5f64, 0.6, 0.7, 0.8, 0.9] {
         let target = SparsityTarget::Unstructured(s);
-        let w_mp = MagnitudePruning.prune(&p, target)?;
+        let w_mp = MethodSpec::Magnitude.prune(&p, target)?;
         let mask = w_mp.support_mask();
         let err_raw = p.rel_error(&w_mp);
 

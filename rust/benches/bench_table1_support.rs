@@ -5,7 +5,7 @@
 
 use alps::bench::paper_layer_problem;
 use alps::config::SparsityTarget;
-use alps::pruning::{all_methods, backsolve};
+use alps::pruning::{backsolve, MethodSpec};
 use alps::util::table::{fmt_sig, Table};
 
 fn main() -> anyhow::Result<()> {
@@ -17,8 +17,8 @@ fn main() -> anyhow::Result<()> {
     for s in [0.5f64, 0.6, 0.7, 0.8, 0.9] {
         let target = SparsityTarget::Unstructured(s);
         let mut errs = Vec::new();
-        for method in all_methods() {
-            let w = method.prune(&p, target)?;
+        for spec in MethodSpec::all() {
+            let w = spec.prune(&p, target)?;
             let opt = backsolve::solve_on_support(&p, &w.support_mask())?;
             errs.push(p.rel_error(&opt));
         }

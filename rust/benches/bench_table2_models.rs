@@ -7,10 +7,10 @@
 
 use alps::bench::artifacts_ready;
 use alps::config::SparsityTarget;
-use alps::coordinator::{PruneEngine, Scheduler};
 use alps::data::{sample_windows, tasks, Corpus};
 use alps::eval::{perplexity, zero_shot_accuracy};
 use alps::model::Model;
+use alps::pruning::{MethodSpec, PruneSession};
 use alps::util::table::{fmt_sig, Table};
 use std::path::Path;
 
@@ -43,12 +43,15 @@ fn main() -> anyhow::Result<()> {
 
         let mut rows: Vec<(String, Vec<String>)> = Vec::new();
         rows.push(("dense".into(), eval_row(&dense, &corpus, &zs_tasks)?));
-        for method in ["mp", "wanda", "sparsegpt", "dsnot", "alps"] {
+        for spec in MethodSpec::all() {
             let mut model = Model::load(dir, model_name)?;
-            let sched = Scheduler::new(calib.clone());
-            sched.prune_model(&mut model, target, &PruneEngine::Native(method.into()))?;
-            rows.push((method.into(), eval_row(&model, &corpus, &zs_tasks)?));
-            eprintln!("  done {model_name}/{method}");
+            PruneSession::builder()
+                .calib(calib.clone())
+                .target(target)
+                .method(spec.clone())
+                .run(&mut model)?;
+            rows.push((spec.label().into(), eval_row(&model, &corpus, &zs_tasks)?));
+            eprintln!("  done {model_name}/{}", spec.label());
         }
         for (method, vals) in rows {
             let mut row = vec![model_name.to_string(), method];

@@ -5,10 +5,10 @@
 
 use alps::bench::artifacts_ready;
 use alps::config::SparsityTarget;
-use alps::coordinator::{PruneEngine, Scheduler};
 use alps::data::{sample_windows, tasks, Corpus};
 use alps::eval::{perplexity, zero_shot_accuracy};
 use alps::model::Model;
+use alps::pruning::{MethodSpec, PruneSession};
 use alps::util::table::{fmt_sig, Table};
 use std::path::Path;
 
@@ -30,10 +30,14 @@ fn main() -> anyhow::Result<()> {
     ]);
     for pattern in ["2:4", "4:8"] {
         let target = SparsityTarget::parse(pattern)?;
-        for method in ["mp", "wanda", "sparsegpt", "dsnot", "alps"] {
+        for spec in MethodSpec::all() {
+            let method = spec.label();
             let mut model = Model::load(dir, &model_name)?;
-            let sched = Scheduler::new(calib.clone());
-            sched.prune_model(&mut model, target, &PruneEngine::Native(method.into()))?;
+            PruneSession::builder()
+                .calib(calib.clone())
+                .target(target)
+                .method(spec.clone())
+                .run(&mut model)?;
             // hardware-pattern validity is part of the benchmark contract
             for name in model.prunable_names() {
                 assert!(alps::pruning::check_target(

@@ -143,7 +143,7 @@ impl SparsityTarget {
 }
 
 /// ALPS (ADMM + PCG) hyperparameters — defaults are the paper's B.1 values.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct AlpsConfig {
     /// Initial penalty rho_0 (paper: 0.1).
     pub rho0: f32,
@@ -176,6 +176,36 @@ impl Default for AlpsConfig {
             diag_scaling: true,
             damp: 1e-2,
         }
+    }
+}
+
+/// SparseGPT (Frantar & Alistarh 2023) hyperparameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseGptConfig {
+    /// Mask-selection block size (paper: 128; scaled for our layer sizes).
+    pub block_size: usize,
+    /// Ridge damping fraction of mean diag (paper's percdamp: 0.01).
+    pub percdamp: f32,
+}
+
+impl Default for SparseGptConfig {
+    fn default() -> Self {
+        SparseGptConfig { block_size: 64, percdamp: 0.01 }
+    }
+}
+
+/// DSnoT (Zhang et al. 2023) hyperparameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DsNoTConfig {
+    /// Maximum grow/prune cycles per column (paper default: 50).
+    pub max_cycles: usize,
+    /// Stop when the improvement of a swap falls below this.
+    pub min_gain: f64,
+}
+
+impl Default for DsNoTConfig {
+    fn default() -> Self {
+        DsNoTConfig { max_cycles: 50, min_gain: 1e-9 }
     }
 }
 
@@ -288,5 +318,18 @@ mod tests {
     #[test]
     fn calib_rows() {
         assert_eq!(CalibConfig::default().rows(), 32 * 128);
+    }
+
+    #[test]
+    fn method_config_defaults() {
+        let sg = SparseGptConfig::default();
+        assert_eq!(sg.block_size, 64);
+        assert_eq!(sg.percdamp, 0.01);
+        let ds = DsNoTConfig::default();
+        assert_eq!(ds.max_cycles, 50);
+        assert!(ds.min_gain > 0.0);
+        // configs are comparable (MethodSpec derives PartialEq off these)
+        assert_eq!(sg, SparseGptConfig::default());
+        assert_ne!(ds, DsNoTConfig { max_cycles: 0, ..Default::default() });
     }
 }

@@ -1,16 +1,38 @@
-//! The layer-wise pruning coordinator: the paper's sequential pipeline
-//! (Appendix B.1 — "solve the LLM pruning problem sequentially, layer by
-//! layer; the input activation matrix X is the output of the previous
-//! pruned layers on the calibration samples").
+//! Coordinator-level records and compatibility shims for the layer-wise
+//! pruning pipeline.
 //!
-//! For each transformer block, the coordinator (1) re-runs the partially
-//! pruned model over the calibration set to capture the block's layer
-//! inputs, (2) builds one gram matrix per activation tap (wq/wk/wv share
-//! one — the gram cache), (3) prunes the six matrices, and (4) writes the
-//! sparse weights back before moving to the next block.
+//! The pipeline itself — the paper's sequential block-by-block loop
+//! (Appendix B.1), the gram cache, the engine dispatch, streaming
+//! progress, and checkpoint/resume — lives in
+//! [`crate::pruning::session::PruneSession`]; the solve backends
+//! (native thread-pool fan-out, AOT HLO artifacts) implement
+//! [`crate::pruning::engine::Engine`]. What remains here:
+//!
+//! * [`report`] — the per-layer / whole-run records every engine and
+//!   session produces ([`LayerReport`], [`RunReport`]).
+//! * [`scheduler`] — the deprecated [`Scheduler`] + [`PruneEngine`] shims
+//!   (one release of backwards compatibility) plus re-exports of the
+//!   single-layer experiment helpers.
+//!
+//! Typical modern usage:
+//!
+//! ```no_run
+//! use alps::config::SparsityTarget;
+//! use alps::pruning::{MethodSpec, PruneSession};
+//! # fn demo(model: &mut alps::model::Model, calib: Vec<Vec<u16>>) -> anyhow::Result<()> {
+//! let report = PruneSession::builder()
+//!     .calib(calib)
+//!     .target(SparsityTarget::parse("0.7")?)
+//!     .method(MethodSpec::parse("alps")?)
+//!     .run(model)?;
+//! println!("{}", report.summary());
+//! # Ok(()) }
+//! ```
 
 pub mod report;
 pub mod scheduler;
 
 pub use report::{LayerReport, RunReport};
-pub use scheduler::{PruneEngine, Scheduler};
+#[allow(deprecated)]
+pub use scheduler::PruneEngine;
+pub use scheduler::Scheduler;

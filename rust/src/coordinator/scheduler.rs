@@ -1,20 +1,30 @@
-//! Layer-wise pruning scheduler with activation propagation and gram
-//! caching; native methods fan the per-tap work across a thread pool, the
-//! PJRT path stays on the coordinator thread (PJRT handles are !Send).
+//! Deprecated compatibility layer over the session API.
+//!
+//! The block-by-block pipeline, the thread-pool fan-out, and the engine
+//! dispatch moved to [`crate::pruning::session::PruneSession`] and
+//! [`crate::pruning::engine::Engine`]. This module keeps the previous
+//! entry points — [`Scheduler::prune_model`] driven by the [`PruneEngine`]
+//! enum — alive as thin shims for one release so downstream callers can
+//! migrate at their own pace. New code should use `PruneSession::builder()`
+//! with a typed [`MethodSpec`] or an explicit engine.
 
-use super::report::{LayerReport, RunReport};
+use super::report::RunReport;
 use crate::config::{AlpsConfig, SparsityTarget};
-use crate::linalg::matmul::{gram, matmul};
-use crate::linalg::Matrix;
-use crate::model::{prunable_layers, ActivationTap, Model};
-use crate::pruning::{method_by_name, LayerProblem};
-use crate::runtime::executor::AlpsHlo;
+use crate::model::Model;
+use crate::pruning::engine::HloEngine;
+use crate::pruning::{MethodSpec, PruneSession};
 use crate::runtime::Runtime;
-use crate::util::Timer;
 use anyhow::Result;
-use std::collections::HashMap;
+
+// The single-layer helpers live with the session now; re-exported here so
+// `coordinator::scheduler::single_layer_problem` keeps resolving.
+pub use crate::pruning::session::{direct_rel_error, single_layer_problem};
 
 /// Which engine executes the per-layer optimization.
+#[deprecated(
+    note = "use pruning::MethodSpec with PruneSession::builder().method(..) \
+            or .engine(Box::new(HloEngine::new(..)))"
+)]
 pub enum PruneEngine<'rt> {
     /// Pure-rust implementation of the named method.
     Native(String),
@@ -23,7 +33,7 @@ pub enum PruneEngine<'rt> {
     Hlo(&'rt Runtime, AlpsConfig),
 }
 
-/// The sequential block-by-block pruning pipeline.
+/// The sequential block-by-block pruning pipeline (deprecated shim).
 pub struct Scheduler {
     /// Calibration sequences (token ids, each seq_len long).
     pub calib: Vec<Vec<u16>>,
@@ -37,166 +47,36 @@ impl Scheduler {
     }
 
     /// Prune `model` in place to `target` using `engine`.
+    ///
+    /// Behavior note vs the pre-session implementation: the method name
+    /// is normalized through [`MethodSpec::parse`], so `RunReport.method`
+    /// carries the canonical label (`"magnitude"` reports as `"mp"`; all
+    /// other accepted names are already canonical).
+    #[deprecated(note = "use PruneSession::builder().calib(..).target(..).run(model)")]
+    #[allow(deprecated)]
     pub fn prune_model(
         &self,
         model: &mut Model,
         target: SparsityTarget,
         engine: &PruneEngine,
     ) -> Result<RunReport> {
-        let total_timer = Timer::start();
-        let mut report = RunReport {
-            method: match engine {
-                PruneEngine::Native(name) => name.clone(),
-                PruneEngine::Hlo(..) => "alps(hlo)".into(),
-            },
-            target: target.label(),
-            model: model.cfg.name.clone(),
-            ..Default::default()
-        };
-
-        for block in 0..model.cfg.n_layers {
-            // (1) capture this block's layer inputs under current weights
-            let inputs = model.forward_collect(&self.calib, block)?;
-
-            // (2) gram per activation tap (wq/wk/wv share AttnIn)
-            let mut grams: HashMap<ActivationTap, Matrix> = HashMap::new();
-            for (tap, x) in &inputs.taps {
-                grams.insert(*tap, gram(x));
+        let builder = PruneSession::builder()
+            .calib(self.calib.clone())
+            .target(target)
+            .verbose(self.verbose);
+        match engine {
+            PruneEngine::Native(name) => {
+                builder.method(MethodSpec::parse(name)?).run(model)
             }
-
-            // (3) prune the six matrices
-            let layers = prunable_layers(block);
-            let mut results: Vec<(String, Matrix, LayerReport)> = Vec::new();
-            match engine {
-                PruneEngine::Native(name) => {
-                    // native methods are Send-free of PJRT: parallelize
-                    // across matrices with scoped threads
-                    let jobs: Vec<(String, ActivationTap)> = layers;
-                    let problems: Vec<(String, LayerProblem)> = jobs
-                        .iter()
-                        .map(|(lname, tap)| {
-                            let h = grams[tap].clone();
-                            let what = model.weights.matrix(lname)?;
-                            Ok((lname.clone(), LayerProblem::from_gram(h, what)?))
-                        })
-                        .collect::<Result<Vec<_>>>()?;
-                    let outs = std::thread::scope(|s| {
-                        let handles: Vec<_> = problems
-                            .iter()
-                            .map(|(lname, p)| {
-                                let method_name = name.clone();
-                                s.spawn(move || -> Result<(String, Matrix, f64, usize)> {
-                                    let t = Timer::start();
-                                    let method = method_by_name(&method_name)?;
-                                    let w = method.prune(p, target)?;
-                                    Ok((lname.clone(), w, t.elapsed_secs(), 0))
-                                })
-                            })
-                            .collect();
-                        handles
-                            .into_iter()
-                            .map(|h| h.join().expect("prune worker panicked"))
-                            .collect::<Result<Vec<_>>>()
-                    })?;
-                    for ((lname, p), (lname2, w, secs, iters)) in
-                        problems.iter().zip(outs)
-                    {
-                        debug_assert_eq!(lname, &lname2);
-                        results.push((
-                            lname.clone(),
-                            w.clone(),
-                            LayerReport {
-                                name: lname.clone(),
-                                n_in: p.n_in(),
-                                n_out: p.n_out(),
-                                kept: w.nnz(),
-                                total: p.n_in() * p.n_out(),
-                                rel_error: p.rel_error(&w),
-                                secs,
-                                admm_iters: iters,
-                            },
-                        ));
-                    }
-                }
-                PruneEngine::Hlo(rt, cfg) => {
-                    for (lname, tap) in &layers {
-                        let t = Timer::start();
-                        let h = grams[tap].clone();
-                        let what = model.weights.matrix(lname)?;
-                        let p = LayerProblem::from_gram(h, what)?;
-                        let hlo = AlpsHlo { rt, cfg: cfg.clone() };
-                        let (w, trace) = if hlo.supports(p.n_in(), p.n_out(), target) {
-                            hlo.prune_traced(&p, target)?
-                        } else {
-                            crate::pruning::alps::Alps::with_config(cfg.clone())
-                                .prune_traced(&p, target)?
-                        };
-                        results.push((
-                            lname.clone(),
-                            w.clone(),
-                            LayerReport {
-                                name: lname.clone(),
-                                n_in: p.n_in(),
-                                n_out: p.n_out(),
-                                kept: w.nnz(),
-                                total: p.n_in() * p.n_out(),
-                                rel_error: p.rel_error(&w),
-                                secs: t.elapsed_secs(),
-                                admm_iters: trace.admm_iters,
-                            },
-                        ));
-                    }
-                }
-            }
-
-            // (4) write back
-            for (lname, w, rep) in results {
-                model.weights.set_matrix(&lname, &w)?;
-                if self.verbose {
-                    println!(
-                        "  [{}] {} {}x{} kept={} err={:.4} ({:.2}s)",
-                        block, rep.name, rep.n_in, rep.n_out, rep.kept,
-                        rep.rel_error, rep.secs
-                    );
-                }
-                report.layers.push(rep);
+            PruneEngine::Hlo(rt, cfg) => {
+                builder.engine(Box::new(HloEngine::new(rt, cfg.clone()))).run(model)
             }
         }
-        report.total_secs = total_timer.elapsed_secs();
-        Ok(report)
     }
 }
 
-/// Build a single-layer problem from a model layer + calibration data
-/// (used by the Fig.2 / Table 1 single-layer experiments).
-pub fn single_layer_problem(
-    model: &Model,
-    calib: &[Vec<u16>],
-    block: usize,
-    layer: &str,
-) -> Result<LayerProblem> {
-    let inputs = model.forward_collect(calib, block)?;
-    let tap = prunable_layers(block)
-        .into_iter()
-        .find(|(n, _)| n.ends_with(layer))
-        .map(|(_, t)| t)
-        .ok_or_else(|| anyhow::anyhow!("no layer '{layer}' in block {block}"))?;
-    let x = &inputs.taps[&tap];
-    let h = gram(x);
-    let what = model.weights.matrix(&format!("blocks.{block}.{layer}"))?;
-    LayerProblem::from_gram(h, what)
-}
-
-/// Dense output of a layer on its calibration inputs — used by tests to
-/// cross-check the gram-based error against the direct definition.
-pub fn direct_rel_error(x: &Matrix, what: &Matrix, w: &Matrix) -> f64 {
-    let dense = matmul(x, what);
-    let pruned = matmul(x, w);
-    let diff = dense.sub(&pruned);
-    diff.fro_norm_sq() / dense.fro_norm_sq().max(1e-30)
-}
-
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::model::transformer::testutil::random_model;
@@ -210,64 +90,47 @@ mod tests {
     }
 
     #[test]
-    fn prunes_whole_model_native() {
-        let mut model = random_model(0);
+    fn deprecated_shim_matches_session() {
+        // the shim must produce exactly what the session produces
         let calib = calib_seqs(4, 8, 24, 1);
-        let sched = Scheduler::new(calib);
         let target = SparsityTarget::Unstructured(0.5);
+
+        let mut m_shim = random_model(0);
+        let sched = Scheduler::new(calib.clone());
         let report = sched
-            .prune_model(&mut model, target, &PruneEngine::Native("mp".into()))
+            .prune_model(&mut m_shim, target, &PruneEngine::Native("wanda".into()))
             .unwrap();
         assert_eq!(report.layers.len(), 2 * 6);
-        let s = report.overall_sparsity();
-        assert!((s - 0.5).abs() < 0.02, "sparsity {s}");
-        // weights actually written back
-        let names = model.prunable_names();
-        assert!(model.weights.sparsity_of(&names) > 0.45);
-    }
+        assert_eq!(report.method, "wanda");
 
-    #[test]
-    fn alps_native_beats_mp_through_pipeline() {
-        let calib = calib_seqs(4, 8, 24, 2);
-        let target = SparsityTarget::Unstructured(0.7);
-        let mut m_alps = random_model(3);
-        let mut m_mp = random_model(3);
-        let sched = Scheduler::new(calib);
-        let r_alps = sched
-            .prune_model(&mut m_alps, target, &PruneEngine::Native("alps".into()))
+        let mut m_sess = random_model(0);
+        PruneSession::builder()
+            .calib(calib)
+            .target(target)
+            .method(MethodSpec::Wanda)
+            .run(&mut m_sess)
             .unwrap();
-        let r_mp = sched
-            .prune_model(&mut m_mp, target, &PruneEngine::Native("mp".into()))
-            .unwrap();
-        assert!(
-            r_alps.mean_rel_error() < r_mp.mean_rel_error(),
-            "alps {} !< mp {}",
-            r_alps.mean_rel_error(),
-            r_mp.mean_rel_error()
-        );
+        for (name, t_shim) in &m_shim.weights.tensors {
+            assert_eq!(
+                t_shim.data,
+                m_sess.weights.tensors.get(name).unwrap().data,
+                "tensor '{name}' differs between shim and session"
+            );
+        }
     }
 
     #[test]
-    fn single_layer_problem_builds() {
-        let model = random_model(4);
-        let calib = calib_seqs(3, 8, 24, 5);
-        let p = single_layer_problem(&model, &calib, 0, "attn.wq").unwrap();
-        assert_eq!(p.n_in(), 16);
-        assert_eq!(p.n_out(), 16);
-        assert!(single_layer_problem(&model, &calib, 0, "nope").is_err());
-    }
-
-    #[test]
-    fn gram_error_matches_direct_error() {
-        let model = random_model(5);
-        let calib = calib_seqs(3, 8, 24, 6);
-        let inputs = model.forward_collect(&calib, 0).unwrap();
-        let x = &inputs.taps[&ActivationTap::AttnIn];
-        let what = model.weights.matrix("blocks.0.attn.wq").unwrap();
-        let p = LayerProblem::from_activations(x, &what).unwrap();
-        let w = crate::pruning::projection::topk_project(&what, 100);
-        let e1 = p.rel_error(&w);
-        let e2 = direct_rel_error(x, &what, &w);
-        assert!((e1 - e2).abs() < 1e-3, "{e1} vs {e2}");
+    fn shim_rejects_unknown_method() {
+        let mut model = random_model(2);
+        let sched = Scheduler::new(calib_seqs(2, 8, 24, 3));
+        let err = sched
+            .prune_model(
+                &mut model,
+                SparsityTarget::Unstructured(0.5),
+                &PruneEngine::Native("???".into()),
+            )
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown method"), "{err}");
     }
 }

@@ -27,6 +27,16 @@ pub fn eval_windows(ids: &[u16], len: usize) -> Vec<Vec<u16>> {
     ids.chunks_exact(len).map(|c| c.to_vec()).collect()
 }
 
+/// `n` windows of uniform-random token ids — calibration input for
+/// synthetic-model runs (`prune --random`, examples) where no corpus
+/// artifact has been built.
+pub fn synthetic_windows(n: usize, len: usize, vocab: usize, seed: u64) -> Vec<Vec<u16>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..len).map(|_| rng.below(vocab) as u16).collect())
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -58,5 +68,17 @@ mod tests {
         let w = eval_windows(&ids, 25);
         assert_eq!(w.len(), 4); // 105 / 25 = 4 full windows, tail dropped
         assert_eq!(w[1][0], 25);
+    }
+
+    #[test]
+    fn synthetic_windows_shape_and_determinism() {
+        let w = synthetic_windows(4, 16, 100, 3);
+        assert_eq!(w.len(), 4);
+        for win in &w {
+            assert_eq!(win.len(), 16);
+            assert!(win.iter().all(|&t| (t as usize) < 100));
+        }
+        assert_eq!(w, synthetic_windows(4, 16, 100, 3));
+        assert_ne!(w, synthetic_windows(4, 16, 100, 4));
     }
 }

@@ -2,8 +2,10 @@
 //! plus the serving stack that cashes in the sparsity.
 //!
 //! Three-layer architecture (see DESIGN.md):
-//! * Layer 3 (this crate): coordinator — config, data pipeline, layer-wise
-//!   pruning scheduler, all pruning methods, transformer inference, eval.
+//! * Layer 3 (this crate): coordinator — config, data pipeline, the
+//!   [`pruning::PruneSession`] pipeline (typed [`pruning::MethodSpec`]s,
+//!   pluggable [`pruning::Engine`] backends, streaming progress,
+//!   checkpoint/resume), all pruning methods, transformer inference, eval.
 //! * Layer 2: JAX graphs AOT-compiled to `artifacts/*.hlo.txt`.
 //! * Layer 1: Pallas kernels inside those graphs.
 //!

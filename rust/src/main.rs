@@ -12,12 +12,12 @@
 //!   info                                      artifact + model inventory
 //!   smoke  <file.hlo.txt>                     runtime smoke test
 
-use alps::config::{AlpsConfig, ModelConfig, SparsityTarget};
-use alps::coordinator::{PruneEngine, Scheduler};
-use alps::data::{sample_windows, tasks, Corpus};
+use alps::config::{ModelConfig, SparsityTarget};
+use alps::data::{sample_windows, synthetic_windows, tasks, Corpus};
 use alps::eval::{perplexity, zero_shot_accuracy};
 use alps::model::{Model, Weights};
-use alps::pruning::{all_methods, method_by_name};
+use alps::pruning::session::single_layer_problem;
+use alps::pruning::{HloEngine, MethodSpec, PruneSession};
 use alps::runtime::{artifact, Runtime};
 use alps::serve::tcp::{fmt_tokens, parse_prompt};
 use alps::serve::{Batcher, Engine, SamplingParams, TcpConfig};
@@ -26,7 +26,10 @@ use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
 
-/// Minimal flag parser: --key value pairs plus positional args.
+/// Minimal flag parser: `--key value` / `--key=value` pairs plus
+/// positional args. A `--key` followed by another `--flag` (or nothing)
+/// is boolean; values that themselves start with `--` must use the
+/// `--key=value` form.
 struct Args {
     flags: HashMap<String, String>,
     positional: Vec<String>,
@@ -39,7 +42,10 @@ impl Args {
         let mut i = 0;
         while i < argv.len() {
             if let Some(key) = argv[i].strip_prefix("--") {
-                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                    i += 1;
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
                     flags.insert(key.to_string(), argv[i + 1].clone());
                     i += 2;
                 } else {
@@ -85,34 +91,116 @@ fn load_calib(model: &Model, n: usize) -> Result<Vec<Vec<u16>>> {
     Ok(sample_windows(train, n, model.cfg.seq_len, 0xCA11B))
 }
 
+/// Apply per-method hyperparameter flags to the spec; rejects knobs that
+/// don't belong to the chosen method.
+fn apply_method_flags(spec: &mut MethodSpec, args: &Args) -> Result<()> {
+    const KNOBS: [&str; 6] =
+        ["rho0", "admm-iters", "pcg-iters", "sgpt-block", "sgpt-damp", "dsnot-cycles"];
+    let mut consumed: Vec<&str> = Vec::new();
+    match spec {
+        MethodSpec::Alps(cfg) | MethodSpec::AlpsStructured(cfg) => {
+            if args.has("rho0") {
+                cfg.rho0 = args.get("rho0", "").parse().context("--rho0")?;
+                consumed.push("rho0");
+            }
+            if args.has("admm-iters") {
+                cfg.max_iters = args.get("admm-iters", "").parse().context("--admm-iters")?;
+                consumed.push("admm-iters");
+            }
+            if args.has("pcg-iters") {
+                cfg.pcg_iters = args.get("pcg-iters", "").parse().context("--pcg-iters")?;
+                consumed.push("pcg-iters");
+            }
+        }
+        MethodSpec::SparseGpt(cfg) => {
+            if args.has("sgpt-block") {
+                cfg.block_size = args.get("sgpt-block", "").parse().context("--sgpt-block")?;
+                consumed.push("sgpt-block");
+            }
+            if args.has("sgpt-damp") {
+                cfg.percdamp = args.get("sgpt-damp", "").parse().context("--sgpt-damp")?;
+                consumed.push("sgpt-damp");
+            }
+        }
+        MethodSpec::DsNoT(cfg) => {
+            if args.has("dsnot-cycles") {
+                cfg.max_cycles =
+                    args.get("dsnot-cycles", "").parse().context("--dsnot-cycles")?;
+                consumed.push("dsnot-cycles");
+            }
+        }
+        MethodSpec::Magnitude | MethodSpec::Wanda => {}
+    }
+    for knob in KNOBS {
+        if args.has(knob) && !consumed.contains(&knob) {
+            bail!("--{knob} does not apply to method '{}'", spec.label());
+        }
+    }
+    Ok(())
+}
+
 fn cmd_prune(args: &Args) -> Result<()> {
-    let mut model = load_model(args)?;
+    let mut model = if args.has("random") {
+        // synthetic weights + calibration: exercises the full pipeline
+        // (and checkpoint/resume) without built artifacts
+        let name = args.get("model", "alps-tiny");
+        let seed = args.get("seed", "41253").parse::<u64>().context("--seed")?;
+        Model::random(ModelConfig::preset(&name)?, seed)?
+    } else {
+        load_model(args)?
+    };
     let target = SparsityTarget::parse(&args.get("sparsity", "0.7"))?;
-    let method = args.get("method", "alps");
+    let mut spec = MethodSpec::parse(&args.get("method", "alps"))?;
+    apply_method_flags(&mut spec, args)?;
     let n_calib = args.get("calib", "32").parse::<usize>()?;
-    let calib = load_calib(&model, n_calib)?;
-    let mut sched = Scheduler::new(calib);
-    sched.verbose = !args.has("quiet");
+    let calib = if args.has("random") {
+        synthetic_windows(n_calib, model.cfg.seq_len, model.cfg.vocab, 0xCA11B)
+    } else {
+        load_calib(&model, n_calib)?
+    };
 
     println!(
         "pruning {} ({} params) to {} with {}",
         model.cfg.name,
         model.weights.total_params(),
         target.label(),
-        method
+        spec.label()
     );
-    let report = if args.get("engine", "native") == "hlo" {
-        if method != "alps" {
-            bail!("--engine hlo only supports --method alps");
+    let rt = if args.get("engine", "native") == "hlo" {
+        Some(Runtime::new(&artifacts_dir())?)
+    } else {
+        None
+    };
+    let mut builder = PruneSession::builder()
+        .calib(calib)
+        .target(target)
+        .verbose(!args.has("quiet"));
+    if args.has("checkpoint-dir") {
+        let dir = args.get("checkpoint-dir", "");
+        // a bare `--checkpoint-dir` followed by another flag parses as the
+        // boolean value "true" — almost certainly a forgotten path
+        if dir.is_empty() || dir == "true" {
+            bail!("--checkpoint-dir requires a path (e.g. --checkpoint-dir=ck)");
         }
-        let rt = Runtime::new(&artifacts_dir())?;
-        let engine = PruneEngine::Hlo(&rt, AlpsConfig::default());
-        let r = sched.prune_model(&mut model, target, &engine)?;
+        builder = builder.checkpoint_dir(dir);
+    }
+    if args.has("resume") {
+        builder = builder.resume(true);
+    }
+    if args.has("stop-after") {
+        builder =
+            builder.stop_after(args.get("stop-after", "").parse().context("--stop-after")?);
+    }
+
+    let report = if let Some(rt) = &rt {
+        let MethodSpec::Alps(cfg) = spec else {
+            bail!("--engine hlo only supports --method alps");
+        };
+        let r = builder.engine(Box::new(HloEngine::new(rt, cfg))).run(&mut model)?;
         println!("(hlo engine: {} artifact executions)", rt.total_execs());
         r
     } else {
-        method_by_name(&method)?; // validate early
-        sched.prune_model(&mut model, target, &PruneEngine::Native(method.clone()))?
+        builder.method(spec).run(&mut model)?
     };
     println!("{}", report.summary());
 
@@ -155,7 +243,7 @@ fn cmd_layer(args: &Args) -> Result<()> {
     let layer = args.get("layer", "mlp.w2");
     let block = args.get("block", "0").parse::<usize>()?;
     let calib = load_calib(&model, args.get("calib", "32").parse()?)?;
-    let p = alps::coordinator::scheduler::single_layer_problem(&model, &calib, block, &layer)?;
+    let p = single_layer_problem(&model, &calib, block, &layer)?;
     let target = SparsityTarget::parse(&args.get("sparsity", "0.7"))?;
 
     println!(
@@ -165,20 +253,20 @@ fn cmd_layer(args: &Args) -> Result<()> {
         target.label()
     );
     let mut t = Table::new(&["method", "rel-error", "nnz", "secs"]);
-    let methods = if args.get("methods", "all") == "all" {
-        all_methods()
+    let specs = if args.get("methods", "all") == "all" {
+        MethodSpec::all()
     } else {
         args.get("methods", "alps")
             .split(',')
-            .map(method_by_name)
+            .map(MethodSpec::parse)
             .collect::<Result<Vec<_>>>()?
     };
-    for m in methods {
+    for spec in specs {
         let timer = alps::util::Timer::start();
-        let w = m.prune(&p, target)?;
+        let w = spec.prune(&p, target)?;
         let secs = timer.elapsed_secs();
         t.row(&[
-            m.name().to_string(),
+            spec.label().to_string(),
             fmt_sig(p.rel_error(&w)),
             w.nnz().to_string(),
             format!("{secs:.2}"),
@@ -350,6 +438,10 @@ fn usage() {
          usage: alps <prune|eval|layer|serve|info|smoke> [flags]\n\
            prune --model alps-base --sparsity 0.7|2:4 --method alps|mp|wanda|sparsegpt|dsnot\n\
                  [--engine native|hlo] [--calib 32] [--out pruned.bin] [--quiet]\n\
+                 [--checkpoint-dir ck] [--resume] [--stop-after N] [--random] [--seed N]\n\
+                 [--rho0 F] [--admm-iters N] [--pcg-iters N]   (alps)\n\
+                 [--sgpt-block N] [--sgpt-damp F]              (sparsegpt)\n\
+                 [--dsnot-cycles N]                            (dsnot)\n\
            eval  --model alps-base [--weights pruned.bin] [--items 50]\n\
            layer --model alps-base --block 0 --layer mlp.w2 --sparsity 0.7 [--methods all]\n\
            serve --model alps-base [--weights pruned.bin] [--sparse] [--random]\n\
@@ -378,5 +470,86 @@ fn main() -> Result<()> {
             usage();
             bail!("unknown command '{cmd}'");
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn args_key_value_pairs_and_positionals() {
+        let a = Args::parse(&argv(&["--model", "alps-tiny", "file.hlo", "--quiet"]));
+        assert_eq!(a.get("model", "x"), "alps-tiny");
+        assert!(a.has("quiet"));
+        assert_eq!(a.get("quiet", ""), "true");
+        assert_eq!(a.positional, vec!["file.hlo"]);
+        assert_eq!(a.get("missing", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn args_equals_syntax() {
+        let a = Args::parse(&argv(&["--sparsity=0.7", "--method=alps"]));
+        assert_eq!(a.get("sparsity", ""), "0.7");
+        assert_eq!(a.get("method", ""), "alps");
+    }
+
+    #[test]
+    fn args_equals_allows_dashed_values() {
+        // regression: a space-separated value starting with `--` used to be
+        // swallowed as a boolean flag; `--key=value` must carry it intact
+        let a = Args::parse(&argv(&["--stop=--weird", "--name=--x=y"]));
+        assert_eq!(a.get("stop", ""), "--weird");
+        // only the first '=' splits
+        assert_eq!(a.get("name", ""), "--x=y");
+    }
+
+    #[test]
+    fn args_flag_before_flag_is_boolean() {
+        let a = Args::parse(&argv(&["--resume", "--model", "alps-tiny"]));
+        assert!(a.has("resume"));
+        assert_eq!(a.get("model", ""), "alps-tiny");
+    }
+
+    #[test]
+    fn args_empty_equals_value() {
+        let a = Args::parse(&argv(&["--out="]));
+        assert!(a.has("out"));
+        assert_eq!(a.get("out", "x"), "");
+    }
+
+    #[test]
+    fn method_flags_reach_the_spec() {
+        let a = Args::parse(&argv(&["--rho0", "0.5", "--admm-iters", "33"]));
+        let mut spec = MethodSpec::parse("alps").unwrap();
+        apply_method_flags(&mut spec, &a).unwrap();
+        match spec {
+            MethodSpec::Alps(cfg) => {
+                assert_eq!(cfg.rho0, 0.5);
+                assert_eq!(cfg.max_iters, 33);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn method_flags_rejected_for_wrong_method() {
+        let a = Args::parse(&argv(&["--rho0", "0.5"]));
+        let mut spec = MethodSpec::parse("mp").unwrap();
+        let err = apply_method_flags(&mut spec, &a).unwrap_err().to_string();
+        assert!(err.contains("--rho0"), "{err}");
+        assert!(err.contains("'mp'"), "{err}");
+    }
+
+    #[test]
+    fn unknown_method_is_an_early_error() {
+        // regression for the old validate-then-rediscard path: the spec
+        // parse is the single point of failure for bad method names
+        let err = MethodSpec::parse("bogus").unwrap_err().to_string();
+        assert!(err.contains("unknown method"), "{err}");
     }
 }

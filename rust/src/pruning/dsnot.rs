@@ -12,22 +12,21 @@
 //! instantiated on the layer-wise objective (1).
 
 use super::{wanda::Wanda, LayerProblem, PruneMethod};
-use crate::config::SparsityTarget;
+use crate::config::{DsNoTConfig, SparsityTarget};
 use crate::linalg::matmul::matmul;
 use crate::linalg::Matrix;
 use anyhow::Result;
 
-/// Dynamic Sparse no Training.
+/// Dynamic Sparse no Training. Hyperparameters come from [`DsNoTConfig`]
+/// (see [`crate::pruning::MethodSpec`]).
+#[derive(Default)]
 pub struct DsNoT {
-    /// Maximum grow/prune cycles per column (paper default: 50).
-    pub max_cycles: usize,
-    /// Stop when the relative improvement of a swap falls below this.
-    pub min_gain: f64,
+    pub cfg: DsNoTConfig,
 }
 
-impl Default for DsNoT {
-    fn default() -> Self {
-        DsNoT { max_cycles: 50, min_gain: 1e-9 }
+impl DsNoT {
+    pub fn with_config(cfg: DsNoTConfig) -> Self {
+        DsNoT { cfg }
     }
 }
 
@@ -51,7 +50,7 @@ impl PruneMethod for DsNoT {
                 SparsityTarget::NM { m, .. } => Some(m),
                 _ => None,
             };
-            for _cycle in 0..self.max_cycles {
+            for _cycle in 0..self.cfg.max_cycles {
                 // grow candidate: zero entry with max r^2 / H_ii
                 let mut best_grow: Option<(usize, f64)> = None;
                 for i in 0..n_in {
@@ -84,7 +83,7 @@ impl PruneMethod for DsNoT {
                 let (Some((gi, gain)), Some((pi, cost))) = (best_grow, best_prune) else {
                     break;
                 };
-                if gi == pi || gain - cost <= self.min_gain {
+                if gi == pi || gain - cost <= self.cfg.min_gain {
                     break;
                 }
                 // respect N:M: the grown weight must not overfill its group
@@ -151,7 +150,7 @@ mod tests {
     fn zero_cycles_is_wanda() {
         let p = random_problem(12, 6, 50, 2);
         let t = SparsityTarget::Unstructured(0.5);
-        let d = DsNoT { max_cycles: 0, ..Default::default() };
+        let d = DsNoT::with_config(DsNoTConfig { max_cycles: 0, ..Default::default() });
         assert_eq!(d.prune(&p, t).unwrap(), Wanda.prune(&p, t).unwrap());
     }
 

@@ -1,22 +1,46 @@
-//! One-shot layer-wise pruning methods.
+//! One-shot layer-wise pruning: methods, engines, and the session API.
 //!
 //! Every method consumes a [`LayerProblem`] (the dense weights plus the
 //! calibration gram matrix) and a [`SparsityTarget`], and returns a sparse
 //! weight matrix. ALPS is the paper's contribution; MP / Wanda / SparseGPT /
 //! DSnoT are the competing baselines reimplemented from their papers;
 //! `backsolve` is the exact support-restricted solver used by Table 1.
+//!
+//! The pipeline layers on top of the methods:
+//! * [`MethodSpec`] — a typed method selector carrying each method's
+//!   hyperparameters ([`crate::config::AlpsConfig`], [`SparseGptConfig`],
+//!   [`DsNoTConfig`]), replacing the old stringly `method_by_name` dispatch.
+//!   `MethodSpec::parse("alps")` for CLI input, `spec.build()` for a
+//!   [`PruneMethod`] instance, `MethodSpec::all()` for the paper's
+//!   five-method comparison set.
+//! * [`engine::Engine`] — *where* a layer problem is solved:
+//!   [`engine::NativeEngine`] fans the block's matrices across a thread
+//!   pool, [`engine::HloEngine`] routes ALPS through the AOT HLO
+//!   artifacts. New backends (sharded, remote) implement the same trait.
+//! * [`session::PruneSession`] — the block-by-block pipeline: builder
+//!   configuration, streaming [`session::ProgressEvent`]s, and per-block
+//!   checkpoint/resume. See `session.rs` for the architecture.
+//!
+//! The old `method_by_name` / `all_methods` free functions and the
+//! coordinator's `PruneEngine` enum remain as deprecated shims for one
+//! release.
 
 pub mod alps;
 pub mod backsolve;
 pub mod dsnot;
+pub mod engine;
 pub mod magnitude;
 pub mod projection;
 pub mod quantize;
+pub mod session;
 pub mod sparsegpt;
 pub mod structured;
 pub mod wanda;
 
-use crate::config::SparsityTarget;
+pub use engine::{Engine, HloEngine, LayerJob, LayerResult, NativeEngine};
+pub use session::{ProgressEvent, PruneSession, PruneSessionBuilder};
+
+use crate::config::{AlpsConfig, DsNoTConfig, SparseGptConfig, SparsityTarget};
 use crate::linalg::matmul::{gram, matmul};
 use crate::linalg::Matrix;
 use anyhow::{bail, Result};
@@ -89,31 +113,101 @@ pub trait PruneMethod {
     fn prune(&self, problem: &LayerProblem, target: SparsityTarget) -> Result<Matrix>;
 }
 
+/// A typed method selector carrying the method's hyperparameters.
+///
+/// This replaces string dispatch: the spec is `Clone + Send + Sync` plain
+/// data, so engines can rebuild the method per worker thread, and callers
+/// can sweep solver hyperparameters (SparseGPT block size, DSnoT cycles,
+/// the full [`AlpsConfig`]) per run instead of being locked to defaults.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MethodSpec {
+    /// Magnitude pruning (MP) — no hyperparameters.
+    Magnitude,
+    /// Wanda — no hyperparameters.
+    Wanda,
+    /// SparseGPT with its mask-selection block size and damping.
+    SparseGpt(SparseGptConfig),
+    /// DSnoT grow/prune refinement on a Wanda mask.
+    DsNoT(DsNoTConfig),
+    /// ALPS (the paper's method) with the full ADMM + PCG config.
+    Alps(AlpsConfig),
+    /// Row-structured ALPS (input-neuron pruning; unstructured targets only).
+    AlpsStructured(AlpsConfig),
+}
+
+impl MethodSpec {
+    /// Parse a CLI method name into a spec with default hyperparameters.
+    pub fn parse(name: &str) -> Result<MethodSpec> {
+        Ok(match name {
+            "mp" | "magnitude" => MethodSpec::Magnitude,
+            "wanda" => MethodSpec::Wanda,
+            "sparsegpt" => MethodSpec::SparseGpt(SparseGptConfig::default()),
+            "dsnot" => MethodSpec::DsNoT(DsNoTConfig::default()),
+            "alps" => MethodSpec::Alps(AlpsConfig::default()),
+            "alps-struct" => MethodSpec::AlpsStructured(AlpsConfig::default()),
+            _ => bail!(
+                "unknown method '{name}' (mp|wanda|sparsegpt|dsnot|alps|alps-struct)"
+            ),
+        })
+    }
+
+    /// Short identifier used by the CLI, reports, and bench tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            MethodSpec::Magnitude => "mp",
+            MethodSpec::Wanda => "wanda",
+            MethodSpec::SparseGpt(_) => "sparsegpt",
+            MethodSpec::DsNoT(_) => "dsnot",
+            MethodSpec::Alps(_) => "alps",
+            MethodSpec::AlpsStructured(_) => "alps-struct",
+        }
+    }
+
+    /// Instantiate the method with this spec's hyperparameters.
+    pub fn build(&self) -> Box<dyn PruneMethod> {
+        match self {
+            MethodSpec::Magnitude => Box::new(magnitude::MagnitudePruning),
+            MethodSpec::Wanda => Box::new(wanda::Wanda),
+            MethodSpec::SparseGpt(cfg) => {
+                Box::new(sparsegpt::SparseGpt::with_config(cfg.clone()))
+            }
+            MethodSpec::DsNoT(cfg) => Box::new(dsnot::DsNoT::with_config(cfg.clone())),
+            MethodSpec::Alps(cfg) => Box::new(alps::Alps::with_config(cfg.clone())),
+            MethodSpec::AlpsStructured(cfg) => Box::new(structured::StructuredAlpsMethod(
+                structured::StructuredAlps { cfg: cfg.clone() },
+            )),
+        }
+    }
+
+    /// Build and run the method in one call — the common case for
+    /// single-layer experiments (benches, `alps layer`).
+    pub fn prune(&self, problem: &LayerProblem, target: SparsityTarget) -> Result<Matrix> {
+        self.build().prune(problem, target)
+    }
+
+    /// The paper's five-method comparison set, in paper order
+    /// (MP, Wanda, SparseGPT, DSnoT, ALPS), with default hyperparameters.
+    pub fn all() -> Vec<MethodSpec> {
+        vec![
+            MethodSpec::Magnitude,
+            MethodSpec::Wanda,
+            MethodSpec::SparseGpt(SparseGptConfig::default()),
+            MethodSpec::DsNoT(DsNoTConfig::default()),
+            MethodSpec::Alps(AlpsConfig::default()),
+        ]
+    }
+}
+
 /// All registered methods in paper order (MP, Wanda, SparseGPT, DSnoT, ALPS).
+#[deprecated(note = "use MethodSpec::all() and build() per spec")]
 pub fn all_methods() -> Vec<Box<dyn PruneMethod>> {
-    vec![
-        Box::new(magnitude::MagnitudePruning),
-        Box::new(wanda::Wanda),
-        Box::new(sparsegpt::SparseGpt::default()),
-        Box::new(dsnot::DsNoT::default()),
-        Box::new(alps::Alps::default()),
-    ]
+    MethodSpec::all().iter().map(MethodSpec::build).collect()
 }
 
 /// Look up a method by CLI name.
+#[deprecated(note = "use MethodSpec::parse(name)?.build()")]
 pub fn method_by_name(name: &str) -> Result<Box<dyn PruneMethod>> {
-    let m: Box<dyn PruneMethod> = match name {
-        "mp" | "magnitude" => Box::new(magnitude::MagnitudePruning),
-        "wanda" => Box::new(wanda::Wanda),
-        "sparsegpt" => Box::new(sparsegpt::SparseGpt::default()),
-        "dsnot" => Box::new(dsnot::DsNoT::default()),
-        "alps" => Box::new(alps::Alps::default()),
-        "alps-struct" => Box::new(structured::StructuredAlpsMethod(
-            structured::StructuredAlps::default(),
-        )),
-        _ => bail!("unknown method '{name}' (mp|wanda|sparsegpt|dsnot|alps|alps-struct)"),
-    };
-    Ok(m)
+    Ok(MethodSpec::parse(name)?.build())
 }
 
 /// Check a weight matrix satisfies the sparsity target.
@@ -186,16 +280,55 @@ mod tests {
 
     #[test]
     fn registry_has_five_methods() {
-        let ms = all_methods();
-        let names: Vec<&str> = ms.iter().map(|m| m.name()).collect();
-        assert_eq!(names, vec!["mp", "wanda", "sparsegpt", "dsnot", "alps"]);
+        let specs = MethodSpec::all();
+        let labels: Vec<&str> = specs.iter().map(MethodSpec::label).collect();
+        assert_eq!(labels, vec!["mp", "wanda", "sparsegpt", "dsnot", "alps"]);
+        // built methods agree with their spec labels
+        for spec in &specs {
+            assert_eq!(spec.build().name(), spec.label());
+        }
     }
 
     #[test]
-    fn method_lookup() {
+    fn method_spec_parse_roundtrip() {
+        for name in ["mp", "wanda", "sparsegpt", "dsnot", "alps", "alps-struct"] {
+            let spec = MethodSpec::parse(name).unwrap();
+            assert_eq!(spec.label(), name);
+        }
+        assert_eq!(MethodSpec::parse("magnitude").unwrap(), MethodSpec::Magnitude);
+        let err = MethodSpec::parse("???").unwrap_err().to_string();
+        assert!(err.contains("unknown method"), "{err}");
+        assert!(err.contains("alps"), "error should list valid names: {err}");
+    }
+
+    #[test]
+    fn method_spec_carries_config() {
+        let spec = MethodSpec::Alps(AlpsConfig { max_iters: 7, ..Default::default() });
+        match &spec {
+            MethodSpec::Alps(cfg) => assert_eq!(cfg.max_iters, 7),
+            _ => unreachable!(),
+        }
+        // config participates in equality
+        assert_ne!(spec, MethodSpec::Alps(AlpsConfig::default()));
+        // and a DSnoT spec with zero cycles builds a method that degenerates
+        // to Wanda (the configs really reach the solver)
+        let p = testutil::random_problem(12, 6, 50, 9);
+        let t = SparsityTarget::Unstructured(0.5);
+        let w_frozen = MethodSpec::DsNoT(DsNoTConfig { max_cycles: 0, ..Default::default() })
+            .build()
+            .prune(&p, t)
+            .unwrap();
+        let w_wanda = MethodSpec::Wanda.build().prune(&p, t).unwrap();
+        assert_eq!(w_frozen, w_wanda);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_lookup_shims_still_work() {
         assert!(method_by_name("alps").is_ok());
         assert!(method_by_name("magnitude").is_ok());
         assert!(method_by_name("???").is_err());
+        assert_eq!(all_methods().len(), 5);
     }
 
     #[test]

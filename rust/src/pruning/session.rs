@@ -1,0 +1,1044 @@
+//! `PruneSession` — the typed, builder-style API for the block-by-block
+//! pruning pipeline (paper Appendix B.1: prune sequentially; each block's
+//! calibration inputs are the outputs of the already-pruned prefix).
+//!
+//! One session = one end-to-end pruning run:
+//!
+//! ```text
+//! PruneSession::builder()
+//!     .calib(seqs)                      // calibration token windows
+//!     .target(SparsityTarget::parse("0.7")?)
+//!     .method(MethodSpec::Alps(cfg))    // or .engine(Box<dyn Engine>)
+//!     .observer(|ev| ...)               // streaming ProgressEvents
+//!     .checkpoint_dir("ck").resume(true)
+//!     .run(&mut model)?                 // -> RunReport
+//! ```
+//!
+//! Per block the session (1) re-runs the partially pruned model over the
+//! calibration set to capture the block's layer inputs, (2) builds one
+//! gram matrix per activation tap (wq/wk/wv share one), (3) hands the
+//! block's [`LayerJob`]s to the [`Engine`] (native thread-pool fan-out or
+//! HLO artifacts), (4) writes the sparse weights back, and (5) optionally
+//! checkpoints the full weights plus a JSON manifest so an interrupted
+//! run resumes bit-identically from the last finished block.
+//!
+//! Progress streams through a single observer channel shared by the CLI
+//! (verbose printing), benches, tests, and future TCP status endpoints.
+//!
+//! Crash-safety note: the checkpoint writes weights first, manifest
+//! second (each via tmp-file + rename). A kill between the two renames
+//! loses at most one block of work — the stale manifest re-prunes the
+//! block whose weights were already written, which keeps the run valid
+//! but can differ bitwise from an uninterrupted run in that window.
+
+use super::engine::{Engine, LayerJob, NativeEngine};
+use super::{LayerProblem, MethodSpec};
+use crate::config::{AlpsConfig, SparsityTarget};
+use crate::coordinator::report::{LayerReport, RunReport};
+use crate::linalg::matmul::{gram, matmul};
+use crate::linalg::Matrix;
+use crate::model::{prunable_layers, ActivationTap, Model, Weights};
+use crate::util::Timer;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Streaming progress from a pruning run. One channel feeds the CLI's
+/// verbose output, bench progress lines, and tests.
+#[derive(Clone, Debug)]
+pub enum ProgressEvent {
+    /// The run began: identity + total block count.
+    RunStarted { model: String, method: String, target: String, n_blocks: usize },
+    /// A block was skipped because the checkpoint already contains it.
+    BlockResumed { block: usize },
+    /// Calibration capture for this block is starting.
+    BlockStarted { block: usize, n_blocks: usize },
+    /// One matrix was solved and written back.
+    LayerSolved {
+        block: usize,
+        layer: String,
+        n_in: usize,
+        n_out: usize,
+        kept: usize,
+        total: usize,
+        rel_error: f64,
+        secs: f64,
+        admm_iters: usize,
+    },
+    /// The per-block checkpoint (weights + manifest) was persisted.
+    CheckpointWritten { block: usize, path: PathBuf },
+    /// The run finished (possibly early via `stop_after`).
+    RunFinished { blocks_done: usize, total_secs: f64 },
+}
+
+/// Builder for [`PruneSession`]. `calib` and `target` are required;
+/// the engine defaults to native ALPS with paper hyperparameters.
+pub struct PruneSessionBuilder<'a> {
+    calib: Vec<Vec<u16>>,
+    target: Option<SparsityTarget>,
+    engine: Option<Box<dyn Engine + 'a>>,
+    observer: Option<Box<dyn FnMut(&ProgressEvent) + 'a>>,
+    verbose: bool,
+    checkpoint_dir: Option<PathBuf>,
+    resume: bool,
+    stop_after: Option<usize>,
+}
+
+impl<'a> PruneSessionBuilder<'a> {
+    /// Calibration sequences (token ids, each `seq_len` long). Required.
+    pub fn calib(mut self, calib: Vec<Vec<u16>>) -> Self {
+        self.calib = calib;
+        self
+    }
+
+    /// Sparsity target. Required.
+    pub fn target(mut self, target: SparsityTarget) -> Self {
+        self.target = Some(target);
+        self
+    }
+
+    /// Solve natively with the given method spec (thread-pool fan-out).
+    pub fn method(self, spec: MethodSpec) -> Self {
+        self.engine(Box::new(NativeEngine::new(spec)))
+    }
+
+    /// Solve with an explicit engine (HLO, or any custom [`Engine`]).
+    pub fn engine(mut self, engine: Box<dyn Engine + 'a>) -> Self {
+        self.engine = Some(engine);
+        self
+    }
+
+    /// Streaming progress callback; receives every [`ProgressEvent`].
+    pub fn observer(mut self, f: impl FnMut(&ProgressEvent) + 'a) -> Self {
+        self.observer = Some(Box::new(f));
+        self
+    }
+
+    /// Print progress lines to stdout (the CLI's default observer).
+    pub fn verbose(mut self, verbose: bool) -> Self {
+        self.verbose = verbose;
+        self
+    }
+
+    /// Persist weights + manifest into this directory after every block.
+    pub fn checkpoint_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.checkpoint_dir = Some(dir.into());
+        self
+    }
+
+    /// Resume from the checkpoint in `checkpoint_dir` when one exists
+    /// (fresh run otherwise; mismatched checkpoints are an error).
+    pub fn resume(mut self, resume: bool) -> Self {
+        self.resume = resume;
+        self
+    }
+
+    /// Stop after the first `blocks` transformer blocks (testing /
+    /// simulated interruption; combine with `checkpoint_dir`).
+    pub fn stop_after(mut self, blocks: usize) -> Self {
+        self.stop_after = Some(blocks);
+        self
+    }
+
+    /// Validate and assemble the session.
+    pub fn build(self) -> Result<PruneSession<'a>> {
+        if self.calib.is_empty() {
+            bail!("PruneSession requires a non-empty calibration set");
+        }
+        let Some(target) = self.target else {
+            bail!("PruneSession requires a sparsity target");
+        };
+        if self.resume && self.checkpoint_dir.is_none() {
+            bail!("resume requires a checkpoint dir");
+        }
+        let engine = self
+            .engine
+            .unwrap_or_else(|| Box::new(NativeEngine::new(MethodSpec::Alps(AlpsConfig::default()))));
+        Ok(PruneSession {
+            calib: self.calib,
+            target,
+            engine,
+            observer: self.observer,
+            verbose: self.verbose,
+            checkpoint_dir: self.checkpoint_dir,
+            resume: self.resume,
+            stop_after: self.stop_after,
+        })
+    }
+
+    /// Build and run in one call.
+    pub fn run(self, model: &mut Model) -> Result<RunReport> {
+        self.build()?.run(model)
+    }
+}
+
+/// The block-by-block pruning pipeline. Construct via
+/// [`PruneSession::builder`].
+pub struct PruneSession<'a> {
+    calib: Vec<Vec<u16>>,
+    target: SparsityTarget,
+    engine: Box<dyn Engine + 'a>,
+    observer: Option<Box<dyn FnMut(&ProgressEvent) + 'a>>,
+    verbose: bool,
+    checkpoint_dir: Option<PathBuf>,
+    resume: bool,
+    stop_after: Option<usize>,
+}
+
+impl<'a> PruneSession<'a> {
+    pub fn builder() -> PruneSessionBuilder<'a> {
+        PruneSessionBuilder {
+            calib: Vec::new(),
+            target: None,
+            engine: None,
+            observer: None,
+            verbose: false,
+            checkpoint_dir: None,
+            resume: false,
+            stop_after: None,
+        }
+    }
+
+    /// Prune `model` in place; returns the per-layer run report.
+    pub fn run(&mut self, model: &mut Model) -> Result<RunReport> {
+        let total_timer = Timer::start();
+        let n_blocks = model.cfg.n_layers;
+        let mut report = RunReport {
+            method: self.engine.label(),
+            target: self.target.label(),
+            model: model.cfg.name.clone(),
+            ..Default::default()
+        };
+        self.emit(&ProgressEvent::RunStarted {
+            model: report.model.clone(),
+            method: report.method.clone(),
+            target: report.target.clone(),
+            n_blocks,
+        });
+
+        let engine_config = self.engine.config_digest();
+        let calib_dig = calib_digest(&self.calib);
+        // fingerprint of the *dense* starting weights, taken before any
+        // pruning or checkpoint restore (only needed when checkpointing)
+        let init_weights_dig = if self.checkpoint_dir.is_some() {
+            weights_digest(&model.weights)
+        } else {
+            String::new()
+        };
+        let mut start_block = 0usize;
+        if self.resume {
+            let dir = self.checkpoint_dir.clone().expect("validated in build()");
+            if let Some(ck) = CheckpointState::load(&dir)? {
+                ck.validate(&report, n_blocks, &engine_config, &calib_dig, &init_weights_dig)?;
+                let weights = Weights::load(&dir.join(CKPT_WEIGHTS))
+                    .context("loading checkpointed weights")?;
+                if weights.total_params() != model.weights.total_params() {
+                    bail!(
+                        "checkpoint weights have {} params, model has {}",
+                        weights.total_params(),
+                        model.weights.total_params()
+                    );
+                }
+                model.weights = weights;
+                report.layers = ck.layers;
+                start_block = ck.blocks_done;
+                for block in 0..start_block {
+                    self.emit(&ProgressEvent::BlockResumed { block });
+                }
+            }
+        }
+
+        let end_block = n_blocks.min(self.stop_after.unwrap_or(n_blocks));
+        for block in start_block..end_block {
+            self.emit(&ProgressEvent::BlockStarted { block, n_blocks });
+
+            // (1) capture this block's layer inputs under current weights
+            let inputs = model.forward_collect(&self.calib, block)?;
+
+            // (2) one gram per activation tap (wq/wk/wv share AttnIn)
+            let mut grams: HashMap<ActivationTap, Matrix> = HashMap::new();
+            for (tap, x) in &inputs.taps {
+                grams.insert(*tap, gram(x));
+            }
+
+            // (3) solve the block's matrices through the engine
+            let jobs = prunable_layers(block)
+                .into_iter()
+                .map(|(name, tap)| {
+                    let what = model.weights.matrix(&name)?;
+                    let problem = LayerProblem::from_gram(grams[&tap].clone(), what)?;
+                    Ok(LayerJob { name, problem })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let results = self.engine.solve_block(&jobs, self.target)?;
+
+            // (4) write back + report + stream progress
+            for (job, res) in jobs.iter().zip(results) {
+                model.weights.set_matrix(&job.name, &res.w)?;
+                let rep = LayerReport {
+                    name: job.name.clone(),
+                    n_in: job.problem.n_in(),
+                    n_out: job.problem.n_out(),
+                    kept: res.w.nnz(),
+                    total: job.problem.n_in() * job.problem.n_out(),
+                    rel_error: job.problem.rel_error(&res.w),
+                    secs: res.secs,
+                    admm_iters: res.admm_iters,
+                };
+                self.emit(&ProgressEvent::LayerSolved {
+                    block,
+                    layer: rep.name.clone(),
+                    n_in: rep.n_in,
+                    n_out: rep.n_out,
+                    kept: rep.kept,
+                    total: rep.total,
+                    rel_error: rep.rel_error,
+                    secs: rep.secs,
+                    admm_iters: rep.admm_iters,
+                });
+                report.layers.push(rep);
+            }
+
+            // (5) per-block checkpoint
+            if let Some(dir) = self.checkpoint_dir.clone() {
+                let state = CheckpointState {
+                    model: report.model.clone(),
+                    method: report.method.clone(),
+                    target: report.target.clone(),
+                    engine_config: engine_config.clone(),
+                    calib_digest: calib_dig.clone(),
+                    init_weights_digest: init_weights_dig.clone(),
+                    n_blocks,
+                    blocks_done: block + 1,
+                    layers: report.layers.clone(),
+                };
+                let path = state.save(&dir, model)?;
+                self.emit(&ProgressEvent::CheckpointWritten { block, path });
+            }
+        }
+
+        report.total_secs = total_timer.elapsed_secs();
+        self.emit(&ProgressEvent::RunFinished {
+            blocks_done: start_block.max(end_block),
+            total_secs: report.total_secs,
+        });
+        Ok(report)
+    }
+
+    fn emit(&mut self, ev: &ProgressEvent) {
+        if self.verbose {
+            match ev {
+                ProgressEvent::BlockResumed { block } => {
+                    println!("  [{block}] resumed from checkpoint");
+                }
+                ProgressEvent::LayerSolved {
+                    block, layer, n_in, n_out, kept, rel_error, secs, ..
+                } => {
+                    println!(
+                        "  [{block}] {layer} {n_in}x{n_out} kept={kept} \
+                         err={rel_error:.4} ({secs:.2}s)"
+                    );
+                }
+                ProgressEvent::CheckpointWritten { block, path } => {
+                    println!("  [{block}] checkpoint -> {}", path.display());
+                }
+                _ => {}
+            }
+        }
+        if let Some(obs) = &mut self.observer {
+            obs(ev);
+        }
+    }
+}
+
+// ---------------------------------------------------------------- checkpoint
+
+const CKPT_WEIGHTS: &str = "ckpt_weights.bin";
+const CKPT_MANIFEST: &str = "ckpt_manifest.json";
+
+/// What the per-block checkpoint manifest records: the run identity —
+/// model, method label, target, engine configuration, and a calibration
+/// digest, so a resume with different settings is rejected — plus the
+/// finished-block count and the per-layer reports accumulated so far.
+struct CheckpointState {
+    model: String,
+    method: String,
+    target: String,
+    engine_config: String,
+    calib_digest: String,
+    init_weights_digest: String,
+    n_blocks: usize,
+    blocks_done: usize,
+    layers: Vec<LayerReport>,
+}
+
+/// FNV-1a accumulator for the cheap run-identity fingerprints below.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf29ce484222325)
+    }
+
+    fn mix(&mut self, v: u64) {
+        self.0 ^= v;
+        self.0 = self.0.wrapping_mul(0x100000001b3);
+    }
+
+    fn hex(&self) -> String {
+        format!("{:016x}", self.0)
+    }
+}
+
+/// Fingerprint of the calibration token stream — catches a changed
+/// calibration set on resume.
+fn calib_digest(calib: &[Vec<u16>]) -> String {
+    let mut h = Fnv::new();
+    for seq in calib {
+        for &t in seq {
+            h.mix(t as u64);
+        }
+        h.mix(u64::MAX); // sequence boundary
+    }
+    h.hex()
+}
+
+/// Fingerprint of the model weights (names + exact f32 bits) — catches
+/// resuming on top of a different base model (different seed/--weights).
+fn weights_digest(w: &Weights) -> String {
+    let mut h = Fnv::new();
+    for (name, t) in &w.tensors {
+        for b in name.bytes() {
+            h.mix(b as u64);
+        }
+        h.mix(u64::MAX);
+        for v in &t.data {
+            h.mix(v.to_bits() as u64);
+        }
+    }
+    h.hex()
+}
+
+impl CheckpointState {
+    /// Persist weights then manifest (tmp + rename each); returns the
+    /// manifest path.
+    fn save(&self, dir: &Path, model: &Model) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating checkpoint dir {dir:?}"))?;
+        let wtmp = dir.join("ckpt_weights.tmp");
+        model.weights.save(&wtmp)?;
+        std::fs::rename(&wtmp, dir.join(CKPT_WEIGHTS))?;
+        let mtmp = dir.join("ckpt_manifest.tmp");
+        std::fs::write(&mtmp, self.render())?;
+        let mpath = dir.join(CKPT_MANIFEST);
+        std::fs::rename(&mtmp, &mpath)?;
+        Ok(mpath)
+    }
+
+    /// Load the manifest from `dir`; `None` when no checkpoint exists.
+    fn load(dir: &Path) -> Result<Option<CheckpointState>> {
+        let mpath = dir.join(CKPT_MANIFEST);
+        if !mpath.exists() {
+            return Ok(None);
+        }
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading checkpoint manifest {mpath:?}"))?;
+        let v = crate::config::json::Json::parse(&text)
+            .with_context(|| format!("parsing checkpoint manifest {mpath:?}"))?;
+        let mut layers = Vec::new();
+        for l in v.get("layers")?.as_arr()? {
+            layers.push(LayerReport {
+                name: l.get("name")?.as_str()?.to_string(),
+                n_in: l.get("n_in")?.as_usize()?,
+                n_out: l.get("n_out")?.as_usize()?,
+                kept: l.get("kept")?.as_usize()?,
+                total: l.get("total")?.as_usize()?,
+                rel_error: l.get("rel_error")?.as_f64()?,
+                secs: l.get("secs")?.as_f64()?,
+                admm_iters: l.get("admm_iters")?.as_usize()?,
+            });
+        }
+        Ok(Some(CheckpointState {
+            model: v.get("model")?.as_str()?.to_string(),
+            method: v.get("method")?.as_str()?.to_string(),
+            target: v.get("target")?.as_str()?.to_string(),
+            engine_config: v.get("engine_config")?.as_str()?.to_string(),
+            calib_digest: v.get("calib_digest")?.as_str()?.to_string(),
+            init_weights_digest: v.get("init_weights_digest")?.as_str()?.to_string(),
+            n_blocks: v.get("n_blocks")?.as_usize()?,
+            blocks_done: v.get("blocks_done")?.as_usize()?,
+            layers,
+        }))
+    }
+
+    /// Reject resuming a checkpoint written by a different run setup.
+    #[allow(clippy::too_many_arguments)]
+    fn validate(
+        &self,
+        report: &RunReport,
+        n_blocks: usize,
+        engine_config: &str,
+        calib_digest: &str,
+        init_weights_digest: &str,
+    ) -> Result<()> {
+        if self.model != report.model
+            || self.method != report.method
+            || self.target != report.target
+            || self.n_blocks != n_blocks
+        {
+            bail!(
+                "checkpoint mismatch: saved {}/{}/{} over {} blocks, \
+                 resuming {}/{}/{} over {} blocks",
+                self.model, self.method, self.target, self.n_blocks,
+                report.model, report.method, report.target, n_blocks
+            );
+        }
+        if self.engine_config != engine_config {
+            bail!(
+                "checkpoint mismatch: saved engine config `{}`, \
+                 resuming with `{}`",
+                self.engine_config,
+                engine_config
+            );
+        }
+        if self.calib_digest != calib_digest {
+            bail!(
+                "checkpoint mismatch: calibration set changed \
+                 (saved digest {}, current {})",
+                self.calib_digest,
+                calib_digest
+            );
+        }
+        if self.init_weights_digest != init_weights_digest {
+            bail!(
+                "checkpoint mismatch: initial model weights changed \
+                 (saved digest {}, current {}) — resume must start from \
+                 the same dense model",
+                self.init_weights_digest,
+                init_weights_digest
+            );
+        }
+        if self.blocks_done > self.n_blocks {
+            bail!("corrupt checkpoint: {} of {} blocks done", self.blocks_done, self.n_blocks);
+        }
+        Ok(())
+    }
+
+    fn render(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str("  \"version\": 1,\n");
+        out.push_str(&format!("  \"model\": \"{}\",\n", json_escape(&self.model)));
+        out.push_str(&format!("  \"method\": \"{}\",\n", json_escape(&self.method)));
+        out.push_str(&format!("  \"target\": \"{}\",\n", json_escape(&self.target)));
+        out.push_str(&format!(
+            "  \"engine_config\": \"{}\",\n",
+            json_escape(&self.engine_config)
+        ));
+        out.push_str(&format!(
+            "  \"calib_digest\": \"{}\",\n",
+            json_escape(&self.calib_digest)
+        ));
+        out.push_str(&format!(
+            "  \"init_weights_digest\": \"{}\",\n",
+            json_escape(&self.init_weights_digest)
+        ));
+        out.push_str(&format!("  \"n_blocks\": {},\n", self.n_blocks));
+        out.push_str(&format!("  \"blocks_done\": {},\n", self.blocks_done));
+        out.push_str("  \"layers\": [\n");
+        for (i, l) in self.layers.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"n_in\": {}, \"n_out\": {}, \
+                 \"kept\": {}, \"total\": {}, \"rel_error\": {}, \
+                 \"secs\": {}, \"admm_iters\": {}}}{}\n",
+                json_escape(&l.name),
+                l.n_in,
+                l.n_out,
+                l.kept,
+                l.total,
+                json_num(l.rel_error),
+                json_num(l.secs),
+                l.admm_iters,
+                if i + 1 < self.layers.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Finite floats as JSON numbers (Rust's `Display` round-trips f64);
+/// non-finite values (which JSON cannot represent) clamp to 0.
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+// ------------------------------------------------------- single-layer tools
+
+/// Build a single-layer problem from a model layer + calibration data
+/// (used by the Fig.2 / Table 1 single-layer experiments and `alps layer`).
+pub fn single_layer_problem(
+    model: &Model,
+    calib: &[Vec<u16>],
+    block: usize,
+    layer: &str,
+) -> Result<LayerProblem> {
+    let inputs = model.forward_collect(calib, block)?;
+    let tap = prunable_layers(block)
+        .into_iter()
+        .find(|(n, _)| n.ends_with(layer))
+        .map(|(_, t)| t)
+        .ok_or_else(|| anyhow::anyhow!("no layer '{layer}' in block {block}"))?;
+    let x = &inputs.taps[&tap];
+    let h = gram(x);
+    let what = model.weights.matrix(&format!("blocks.{block}.{layer}"))?;
+    LayerProblem::from_gram(h, what)
+}
+
+/// Dense output of a layer on its calibration inputs — used by tests to
+/// cross-check the gram-based error against the direct definition.
+pub fn direct_rel_error(x: &Matrix, what: &Matrix, w: &Matrix) -> f64 {
+    let dense = matmul(x, what);
+    let pruned = matmul(x, w);
+    let diff = dense.sub(&pruned);
+    diff.fro_norm_sq() / dense.fro_norm_sq().max(1e-30)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::transformer::testutil::random_model;
+    use crate::pruning::engine::LayerResult;
+    use crate::util::Rng;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    fn calib_seqs(n: usize, len: usize, vocab: usize, seed: u64) -> Vec<Vec<u16>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..len).map(|_| rng.below(vocab) as u16).collect())
+            .collect()
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("alps_session_{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn session_prunes_whole_model() {
+        let mut model = random_model(0);
+        let calib = calib_seqs(4, 8, 24, 1);
+        let target = SparsityTarget::Unstructured(0.5);
+        let report = PruneSession::builder()
+            .calib(calib)
+            .target(target)
+            .method(MethodSpec::Magnitude)
+            .run(&mut model)
+            .unwrap();
+        assert_eq!(report.layers.len(), 2 * 6);
+        assert_eq!(report.method, "mp");
+        let s = report.overall_sparsity();
+        assert!((s - 0.5).abs() < 0.02, "sparsity {s}");
+        let names = model.prunable_names();
+        assert!(model.weights.sparsity_of(&names) > 0.45);
+    }
+
+    #[test]
+    fn alps_beats_mp_through_session() {
+        let calib = calib_seqs(4, 8, 24, 2);
+        let target = SparsityTarget::Unstructured(0.7);
+        let mut m_alps = random_model(3);
+        let mut m_mp = random_model(3);
+        let r_alps = PruneSession::builder()
+            .calib(calib.clone())
+            .target(target)
+            .method(MethodSpec::Alps(AlpsConfig::default()))
+            .run(&mut m_alps)
+            .unwrap();
+        let r_mp = PruneSession::builder()
+            .calib(calib)
+            .target(target)
+            .method(MethodSpec::Magnitude)
+            .run(&mut m_mp)
+            .unwrap();
+        assert!(
+            r_alps.mean_rel_error() < r_mp.mean_rel_error(),
+            "alps {} !< mp {}",
+            r_alps.mean_rel_error(),
+            r_mp.mean_rel_error()
+        );
+        // ALPS through the session surfaces its ADMM iteration counts
+        assert!(r_alps.layers.iter().all(|l| l.admm_iters > 0));
+    }
+
+    #[test]
+    fn builder_validates_inputs() {
+        let t = SparsityTarget::Unstructured(0.5);
+        assert!(PruneSession::builder().target(t).build().is_err(), "empty calib");
+        let calib = calib_seqs(2, 8, 24, 0);
+        assert!(
+            PruneSession::builder().calib(calib.clone()).build().is_err(),
+            "missing target"
+        );
+        assert!(
+            PruneSession::builder().calib(calib.clone()).target(t).resume(true).build().is_err(),
+            "resume without checkpoint dir"
+        );
+        assert!(PruneSession::builder().calib(calib).target(t).build().is_ok());
+    }
+
+    #[test]
+    fn observer_receives_event_stream() {
+        let mut model = random_model(4);
+        let calib = calib_seqs(3, 8, 24, 5);
+        let dir = tmpdir("events");
+        let events: Rc<RefCell<Vec<String>>> = Rc::new(RefCell::new(Vec::new()));
+        let sink = events.clone();
+        PruneSession::builder()
+            .calib(calib)
+            .target(SparsityTarget::Unstructured(0.5))
+            .method(MethodSpec::Wanda)
+            .checkpoint_dir(&dir)
+            .observer(move |ev| {
+                sink.borrow_mut().push(
+                    match ev {
+                        ProgressEvent::RunStarted { .. } => "start",
+                        ProgressEvent::BlockResumed { .. } => "resumed",
+                        ProgressEvent::BlockStarted { .. } => "block",
+                        ProgressEvent::LayerSolved { .. } => "layer",
+                        ProgressEvent::CheckpointWritten { .. } => "ckpt",
+                        ProgressEvent::RunFinished { .. } => "finish",
+                    }
+                    .to_string(),
+                );
+            })
+            .run(&mut model)
+            .unwrap();
+        let evs = events.borrow();
+        assert_eq!(evs.first().map(String::as_str), Some("start"));
+        assert_eq!(evs.last().map(String::as_str), Some("finish"));
+        assert_eq!(evs.iter().filter(|e| *e == "block").count(), 2);
+        assert_eq!(evs.iter().filter(|e| *e == "layer").count(), 12);
+        assert_eq!(evs.iter().filter(|e| *e == "ckpt").count(), 2);
+        assert!(dir.join(CKPT_MANIFEST).exists());
+        assert!(dir.join(CKPT_WEIGHTS).exists());
+    }
+
+    #[test]
+    fn checkpoint_resume_is_bit_identical() {
+        let calib = calib_seqs(4, 8, 24, 6);
+        let target = SparsityTarget::Unstructured(0.6);
+        // Wanda scores depend on the gram, so block 1's solution depends on
+        // block 0's pruned weights — a wrong resume would show up here.
+        let spec = MethodSpec::Wanda;
+
+        // uninterrupted reference
+        let mut m_ref = random_model(7);
+        PruneSession::builder()
+            .calib(calib.clone())
+            .target(target)
+            .method(spec.clone())
+            .run(&mut m_ref)
+            .unwrap();
+
+        // interrupted after block 0, then resumed
+        let dir = tmpdir("resume");
+        let mut m_a = random_model(7);
+        PruneSession::builder()
+            .calib(calib.clone())
+            .target(target)
+            .method(spec.clone())
+            .checkpoint_dir(&dir)
+            .stop_after(1)
+            .run(&mut m_a)
+            .unwrap();
+        let mut m_b = random_model(7);
+        let resumed_report = PruneSession::builder()
+            .calib(calib)
+            .target(target)
+            .method(spec)
+            .checkpoint_dir(&dir)
+            .resume(true)
+            .run(&mut m_b)
+            .unwrap();
+
+        // the resumed report covers every layer (block 0 from the manifest)
+        assert_eq!(resumed_report.layers.len(), 12);
+        // and the weights are exactly the uninterrupted run's weights
+        for (name, t_ref) in &m_ref.weights.tensors {
+            let t_res = m_b.weights.tensors.get(name).unwrap();
+            assert_eq!(t_ref.shape, t_res.shape, "{name}");
+            assert_eq!(t_ref.data, t_res.data, "tensor '{name}' differs after resume");
+        }
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_checkpoint() {
+        let calib = calib_seqs(3, 8, 24, 8);
+        let target = SparsityTarget::Unstructured(0.5);
+        let dir = tmpdir("mismatch");
+        let mut m = random_model(9);
+        PruneSession::builder()
+            .calib(calib.clone())
+            .target(target)
+            .method(MethodSpec::Wanda)
+            .checkpoint_dir(&dir)
+            .stop_after(1)
+            .run(&mut m)
+            .unwrap();
+        // different method -> reject
+        let mut m2 = random_model(9);
+        let err = PruneSession::builder()
+            .calib(calib.clone())
+            .target(target)
+            .method(MethodSpec::Magnitude)
+            .checkpoint_dir(&dir)
+            .resume(true)
+            .run(&mut m2)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("checkpoint mismatch"), "{err}");
+        // different target -> reject
+        let err = PruneSession::builder()
+            .calib(calib.clone())
+            .target(SparsityTarget::Unstructured(0.9))
+            .method(MethodSpec::Wanda)
+            .checkpoint_dir(&dir)
+            .resume(true)
+            .run(&mut random_model(9))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("checkpoint mismatch"), "{err}");
+        // different calibration set -> reject
+        let err = PruneSession::builder()
+            .calib(calib_seqs(3, 8, 24, 999))
+            .target(target)
+            .method(MethodSpec::Wanda)
+            .checkpoint_dir(&dir)
+            .resume(true)
+            .run(&mut random_model(9))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("calibration set changed"), "{err}");
+    }
+
+    #[test]
+    fn resume_rejects_changed_base_weights() {
+        // same model config, different random seed -> different dense
+        // weights -> resume must refuse rather than silently discard them
+        let calib = calib_seqs(3, 8, 24, 30);
+        let target = SparsityTarget::Unstructured(0.5);
+        let dir = tmpdir("baseweights");
+        let mut m = random_model(31);
+        PruneSession::builder()
+            .calib(calib.clone())
+            .target(target)
+            .method(MethodSpec::Wanda)
+            .checkpoint_dir(&dir)
+            .stop_after(1)
+            .run(&mut m)
+            .unwrap();
+        let err = PruneSession::builder()
+            .calib(calib)
+            .target(target)
+            .method(MethodSpec::Wanda)
+            .checkpoint_dir(&dir)
+            .resume(true)
+            .run(&mut random_model(32))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("initial model weights changed"), "{err}");
+    }
+
+    #[test]
+    fn resume_rejects_changed_hyperparameters() {
+        // same method label, different solver config -> reject
+        let calib = calib_seqs(3, 8, 24, 20);
+        let target = SparsityTarget::Unstructured(0.5);
+        let dir = tmpdir("hyper");
+        let mut m = random_model(21);
+        PruneSession::builder()
+            .calib(calib.clone())
+            .target(target)
+            .method(MethodSpec::DsNoT(crate::config::DsNoTConfig::default()))
+            .checkpoint_dir(&dir)
+            .stop_after(1)
+            .run(&mut m)
+            .unwrap();
+        let err = PruneSession::builder()
+            .calib(calib)
+            .target(target)
+            .method(MethodSpec::DsNoT(crate::config::DsNoTConfig {
+                max_cycles: 1,
+                ..Default::default()
+            }))
+            .checkpoint_dir(&dir)
+            .resume(true)
+            .run(&mut random_model(21))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("engine config"), "{err}");
+    }
+
+    #[test]
+    fn resume_without_checkpoint_runs_fresh() {
+        let calib = calib_seqs(3, 8, 24, 10);
+        let dir = tmpdir("fresh");
+        let mut m = random_model(11);
+        let report = PruneSession::builder()
+            .calib(calib)
+            .target(SparsityTarget::Unstructured(0.5))
+            .method(MethodSpec::Magnitude)
+            .checkpoint_dir(&dir)
+            .resume(true)
+            .run(&mut m)
+            .unwrap();
+        assert_eq!(report.layers.len(), 12);
+    }
+
+    /// An engine that zeroes every layer — used to prove pruned weights
+    /// feed forward into later blocks' calibration statistics.
+    struct ZeroEngine;
+    impl Engine for ZeroEngine {
+        fn label(&self) -> String {
+            "zero".into()
+        }
+        fn solve_layer(
+            &self,
+            problem: &LayerProblem,
+            _target: SparsityTarget,
+        ) -> Result<LayerResult> {
+            Ok(LayerResult {
+                w: Matrix::zeros(problem.n_in(), problem.n_out()),
+                secs: 0.0,
+                admm_iters: 0,
+            })
+        }
+    }
+
+    #[test]
+    fn pruned_block_propagates_into_later_grams() {
+        let calib = calib_seqs(4, 8, 24, 12);
+        let dense = random_model(13);
+
+        // block 1's attention-input gram under dense weights (captured
+        // twice to confirm the forward pass itself is deterministic)
+        let g_dense = {
+            let inputs = dense.forward_collect(&calib, 1).unwrap();
+            gram(&inputs.taps[&ActivationTap::AttnIn])
+        };
+        let g_dense2 = {
+            let inputs = dense.forward_collect(&calib, 1).unwrap();
+            gram(&inputs.taps[&ActivationTap::AttnIn])
+        };
+        assert_eq!(g_dense, g_dense2, "forward_collect must be deterministic");
+
+        // zero out block 0 only; block 1's calibration inputs must change
+        let mut pruned = random_model(13);
+        PruneSession::builder()
+            .calib(calib.clone())
+            .target(SparsityTarget::Unstructured(0.5))
+            .engine(Box::new(ZeroEngine))
+            .stop_after(1)
+            .run(&mut pruned)
+            .unwrap();
+        let g_pruned = {
+            let inputs = pruned.forward_collect(&calib, 1).unwrap();
+            gram(&inputs.taps[&ActivationTap::AttnIn])
+        };
+        let max_diff = g_dense
+            .data
+            .iter()
+            .zip(&g_pruned.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(
+            max_diff > 1e-3,
+            "block 1 grams unchanged after zeroing block 0 (max diff {max_diff})"
+        );
+    }
+
+    #[test]
+    fn single_layer_problem_builds() {
+        let model = random_model(4);
+        let calib = calib_seqs(3, 8, 24, 5);
+        let p = single_layer_problem(&model, &calib, 0, "attn.wq").unwrap();
+        assert_eq!(p.n_in(), 16);
+        assert_eq!(p.n_out(), 16);
+        assert!(single_layer_problem(&model, &calib, 0, "nope").is_err());
+    }
+
+    #[test]
+    fn gram_error_matches_direct_error() {
+        let model = random_model(5);
+        let calib = calib_seqs(3, 8, 24, 6);
+        let inputs = model.forward_collect(&calib, 0).unwrap();
+        let x = &inputs.taps[&ActivationTap::AttnIn];
+        let what = model.weights.matrix("blocks.0.attn.wq").unwrap();
+        let p = LayerProblem::from_activations(x, &what).unwrap();
+        let w = crate::pruning::projection::topk_project(&what, 100);
+        let e1 = p.rel_error(&w);
+        let e2 = direct_rel_error(x, &what, &w);
+        assert!((e1 - e2).abs() < 1e-3, "{e1} vs {e2}");
+    }
+
+    #[test]
+    fn manifest_roundtrips() {
+        let st = CheckpointState {
+            model: "m\"x".into(),
+            method: "alps".into(),
+            target: "0.70".into(),
+            engine_config: "Alps(AlpsConfig { rho0: 0.1 })".into(),
+            calib_digest: "00ff00ff00ff00ff".into(),
+            init_weights_digest: "1234abcd1234abcd".into(),
+            n_blocks: 4,
+            blocks_done: 2,
+            layers: vec![LayerReport {
+                name: "blocks.0.attn.wq".into(),
+                n_in: 16,
+                n_out: 16,
+                kept: 128,
+                total: 256,
+                rel_error: 0.125,
+                secs: 1.5,
+                admm_iters: 42,
+            }],
+        };
+        let dir = tmpdir("manifest");
+        std::fs::write(dir.join(CKPT_MANIFEST), st.render()).unwrap();
+        let back = CheckpointState::load(&dir).unwrap().unwrap();
+        assert_eq!(back.model, "m\"x");
+        assert_eq!(back.engine_config, "Alps(AlpsConfig { rho0: 0.1 })");
+        assert_eq!(back.calib_digest, "00ff00ff00ff00ff");
+        assert_eq!(back.init_weights_digest, "1234abcd1234abcd");
+        assert_eq!(back.blocks_done, 2);
+        assert_eq!(back.n_blocks, 4);
+        assert_eq!(back.layers.len(), 1);
+        assert_eq!(back.layers[0].kept, 128);
+        assert_eq!(back.layers[0].rel_error, 0.125);
+        assert_eq!(back.layers[0].admm_iters, 42);
+        // no checkpoint at an empty dir
+        assert!(CheckpointState::load(&tmpdir("absent")).unwrap().is_none());
+    }
+}

@@ -9,21 +9,20 @@
 //! quantity SparseGPT reads off the Cholesky factor.
 
 use super::{LayerProblem, PruneMethod};
-use crate::config::SparsityTarget;
+use crate::config::{SparseGptConfig, SparsityTarget};
 use crate::linalg::{Cholesky, Matrix};
 use anyhow::Result;
 
-/// SparseGPT with adaptive blockwise mask selection.
+/// SparseGPT with adaptive blockwise mask selection. Hyperparameters come
+/// from [`SparseGptConfig`] (see [`crate::pruning::MethodSpec`]).
+#[derive(Default)]
 pub struct SparseGpt {
-    /// Mask-selection block size (paper: 128).
-    pub block_size: usize,
-    /// Ridge damping fraction of mean diag (paper's percdamp: 0.01).
-    pub percdamp: f32,
+    pub cfg: SparseGptConfig,
 }
 
-impl Default for SparseGpt {
-    fn default() -> Self {
-        SparseGpt { block_size: 64, percdamp: 0.01 }
+impl SparseGpt {
+    pub fn with_config(cfg: SparseGptConfig) -> Self {
+        SparseGpt { cfg }
     }
 }
 
@@ -39,7 +38,7 @@ impl PruneMethod for SparseGpt {
         // damped H, then full inverse (downdated as indices are fixed)
         let mut h = problem.h.clone();
         let mean_diag: f32 = h.diag().iter().sum::<f32>() / n_in as f32;
-        let damp = self.percdamp * mean_diag;
+        let damp = self.cfg.percdamp * mean_diag;
         for i in 0..n_in {
             *h.at_mut(i, i) += damp;
         }
@@ -49,8 +48,8 @@ impl PruneMethod for SparseGpt {
         let mut pruned = vec![false; n_in * n_out];
 
         let sparsity = target.sparsity_fraction();
-        for b0 in (0..n_in).step_by(self.block_size) {
-            let b1 = (b0 + self.block_size).min(n_in);
+        for b0 in (0..n_in).step_by(self.cfg.block_size) {
+            let b1 = (b0 + self.cfg.block_size).min(n_in);
             self.select_block_mask(&w, &hinv, b0, b1, n_out, sparsity, target, &mut pruned);
 
             // sequential OBS elimination within the block
@@ -182,7 +181,9 @@ mod tests {
     fn respects_nm_pattern() {
         let p = random_problem(16, 4, 64, 1);
         let t = SparsityTarget::NM { n: 2, m: 4 };
-        let w = SparseGpt { block_size: 16, ..Default::default() }.prune(&p, t).unwrap();
+        let w = SparseGpt::with_config(SparseGptConfig { block_size: 16, ..Default::default() })
+            .prune(&p, t)
+            .unwrap();
         assert!(check_target(&w, t));
     }
 
@@ -207,7 +208,7 @@ mod tests {
         let h = gram(&x);
         let what = Matrix::from_vec(n, 1, vec![1.0, 0.05, -0.8, 0.6]);
         let p = LayerProblem::from_gram(h, what).unwrap();
-        let sg = SparseGpt { block_size: n, percdamp: 0.0 };
+        let sg = SparseGpt::with_config(SparseGptConfig { block_size: n, percdamp: 0.0 });
         let w = sg.prune(&p, SparsityTarget::Unstructured(0.25)).unwrap();
         assert_eq!(w.nnz(), 3);
         // surviving weights must give lower error than naive zeroing

@@ -3,11 +3,21 @@
 //! paper's ordering. Skipped when artifacts have not been built.
 
 use alps::config::SparsityTarget;
-use alps::coordinator::{PruneEngine, Scheduler};
 use alps::data::{sample_windows, tasks, Corpus};
 use alps::eval::{perplexity, zero_shot_accuracy};
 use alps::model::Model;
+use alps::pruning::{MethodSpec, PruneSession};
 use std::path::Path;
+
+/// Prune through the session API with default method hyperparameters.
+fn prune(model: &mut Model, calib: Vec<Vec<u16>>, target: SparsityTarget, method: &str) {
+    PruneSession::builder()
+        .calib(calib)
+        .target(target)
+        .method(MethodSpec::parse(method).unwrap())
+        .run(model)
+        .unwrap();
+}
 
 fn have_artifacts() -> bool {
     let ok = Path::new("artifacts/model_alps-tiny.bin").exists()
@@ -45,16 +55,11 @@ fn e2e_alps_beats_mp_on_perplexity() {
     let (model, corpus, calib) = setup();
     let eval_ids = &corpus.split("wikitext2-like").unwrap()[..128 * 6];
     let target = SparsityTarget::Unstructured(0.7);
-    let sched = Scheduler::new(calib);
 
     let mut m_alps = Model::load(Path::new("artifacts"), "alps-tiny").unwrap();
     let mut m_mp = Model::load(Path::new("artifacts"), "alps-tiny").unwrap();
-    sched
-        .prune_model(&mut m_alps, target, &PruneEngine::Native("alps".into()))
-        .unwrap();
-    sched
-        .prune_model(&mut m_mp, target, &PruneEngine::Native("mp".into()))
-        .unwrap();
+    prune(&mut m_alps, calib.clone(), target, "alps");
+    prune(&mut m_mp, calib, target, "mp");
 
     let ppl_dense = perplexity(&model, eval_ids).unwrap();
     let ppl_alps = perplexity(&m_alps, eval_ids).unwrap();
@@ -73,9 +78,7 @@ fn e2e_sparsity_written_back() {
     }
     let (mut model, _, calib) = setup();
     let target = SparsityTarget::Unstructured(0.6);
-    Scheduler::new(calib)
-        .prune_model(&mut model, target, &PruneEngine::Native("wanda".into()))
-        .unwrap();
+    prune(&mut model, calib, target, "wanda");
     let names = model.prunable_names();
     let s = model.weights.sparsity_of(&names);
     assert!((s - 0.6).abs() < 0.03, "sparsity {s}");
@@ -94,9 +97,7 @@ fn e2e_nm_pipeline() {
     }
     let (mut model, corpus, calib) = setup();
     let target = SparsityTarget::NM { n: 2, m: 4 };
-    Scheduler::new(calib)
-        .prune_model(&mut model, target, &PruneEngine::Native("alps".into()))
-        .unwrap();
+    prune(&mut model, calib, target, "alps");
     for name in model.prunable_names() {
         let w = model.weights.matrix(&name).unwrap();
         assert!(alps::pruning::check_target(&w, target), "{name}");
@@ -117,13 +118,7 @@ fn e2e_zero_shot_degrades_gracefully() {
     let acc_dense = zero_shot_accuracy(&model, &task).unwrap();
 
     let mut m90 = Model::load(Path::new("artifacts"), "alps-tiny").unwrap();
-    Scheduler::new(calib)
-        .prune_model(
-            &mut m90,
-            SparsityTarget::Unstructured(0.9),
-            &PruneEngine::Native("mp".into()),
-        )
-        .unwrap();
+    prune(&mut m90, calib, SparsityTarget::Unstructured(0.9), "mp");
     let acc_90 = zero_shot_accuracy(&m90, &task).unwrap();
     assert!(
         acc_dense >= acc_90,
@@ -155,14 +150,7 @@ fn e2e_prune_then_quantize_small_ppl_cost() {
         return;
     }
     let (mut model, corpus, calib) = setup();
-    let sched = Scheduler::new(calib.clone());
-    sched
-        .prune_model(
-            &mut model,
-            SparsityTarget::Unstructured(0.5),
-            &PruneEngine::Native("alps".into()),
-        )
-        .unwrap();
+    prune(&mut model, calib.clone(), SparsityTarget::Unstructured(0.5), "alps");
     let ids = &corpus.split("wikitext2-like").unwrap()[..128 * 4];
     let ppl_pruned = perplexity(&model, ids).unwrap();
     for name in model.prunable_names() {
@@ -183,13 +171,7 @@ fn e2e_sparse_inference_matches_dense_ppl() {
         return;
     }
     let (mut model, corpus, calib) = setup();
-    Scheduler::new(calib)
-        .prune_model(
-            &mut model,
-            SparsityTarget::Unstructured(0.7),
-            &PruneEngine::Native("wanda".into()),
-        )
-        .unwrap();
+    prune(&mut model, calib, SparsityTarget::Unstructured(0.7), "wanda");
     let sm = alps::model::sparse_infer::SparseModel::from_model(&model).unwrap();
     let ids = &corpus.split("ptb-like").unwrap()[..128 * 2];
     for w in ids.chunks_exact(128) {
@@ -253,13 +235,7 @@ fn e2e_save_load_pruned_checkpoint() {
         return;
     }
     let (mut model, corpus, calib) = setup();
-    Scheduler::new(calib)
-        .prune_model(
-            &mut model,
-            SparsityTarget::Unstructured(0.5),
-            &PruneEngine::Native("sparsegpt".into()),
-        )
-        .unwrap();
+    prune(&mut model, calib, SparsityTarget::Unstructured(0.5), "sparsegpt");
     let path = std::env::temp_dir().join("alps_e2e_ckpt.bin");
     model.weights.save(&path).unwrap();
     let reloaded = alps::model::Weights::load(&path).unwrap();

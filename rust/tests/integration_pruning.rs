@@ -6,7 +6,7 @@ use alps::config::SparsityTarget;
 use alps::linalg::Matrix;
 use alps::pruning::{
     alps::Alps, backsolve, dsnot::DsNoT, magnitude::MagnitudePruning,
-    method_by_name, sparsegpt::SparseGpt, wanda::Wanda, LayerProblem, PruneMethod,
+    sparsegpt::SparseGpt, wanda::Wanda, LayerProblem, MethodSpec, PruneMethod,
 };
 use alps::util::Rng;
 
@@ -93,11 +93,12 @@ fn all_methods_respect_nm_patterns() {
     let p = problem(32, 8, 100, 3);
     for (n, m) in [(2usize, 4usize), (4, 8)] {
         let t = SparsityTarget::NM { n, m };
-        for name in ["mp", "wanda", "sparsegpt", "dsnot", "alps"] {
-            let w = method_by_name(name).unwrap().prune(&p, t).unwrap();
+        for spec in MethodSpec::all() {
+            let w = spec.prune(&p, t).unwrap();
             assert!(
                 alps::pruning::check_target(&w, t),
-                "{name} violates {n}:{m}"
+                "{} violates {n}:{m}",
+                spec.label()
             );
         }
     }
@@ -116,7 +117,7 @@ fn nm_alps_beats_nm_mp() {
 fn methods_monotone_in_sparsity() {
     let p = problem(24, 12, 90, 5);
     for name in ["mp", "wanda", "sparsegpt", "alps"] {
-        let method = method_by_name(name).unwrap();
+        let method = MethodSpec::parse(name).unwrap().build();
         let mut prev = -1.0f64;
         for s in [0.4, 0.6, 0.8] {
             let w = method.prune(&p, SparsityTarget::Unstructured(s)).unwrap();
@@ -160,11 +161,91 @@ fn near_degenerate_gram_handled() {
     let x = Matrix::randn(10, 24, &mut rng);
     let what = Matrix::randn(24, 8, &mut rng);
     let p = LayerProblem::from_activations(&x, &what).unwrap();
-    for name in ["mp", "wanda", "sparsegpt", "dsnot", "alps"] {
-        let w = method_by_name(name)
-            .unwrap()
-            .prune(&p, SparsityTarget::Unstructured(0.5))
-            .unwrap();
-        assert!(w.data.iter().all(|v| v.is_finite()), "{name} produced NaN/inf");
+    for spec in MethodSpec::all() {
+        let w = spec.prune(&p, SparsityTarget::Unstructured(0.5)).unwrap();
+        assert!(
+            w.data.iter().all(|v| v.is_finite()),
+            "{} produced NaN/inf",
+            spec.label()
+        );
+    }
+}
+
+#[test]
+fn unknown_method_error_path() {
+    // regression for the old validate-then-rediscard flow in cmd_prune:
+    // MethodSpec::parse is now the single authority on method names, and
+    // its error names the valid choices
+    let err = MethodSpec::parse("not-a-method").unwrap_err().to_string();
+    assert!(err.contains("unknown method 'not-a-method'"), "{err}");
+    for valid in ["mp", "wanda", "sparsegpt", "dsnot", "alps", "alps-struct"] {
+        assert!(err.contains(valid), "error should list '{valid}': {err}");
+    }
+}
+
+#[test]
+fn checkpoint_resume_round_trip_public_api() {
+    // the acceptance-criteria round trip, entirely through the public API:
+    // an interrupted-then-resumed run must be bit-identical to an
+    // uninterrupted one
+    use alps::config::ModelConfig;
+    use alps::model::Model;
+    use alps::pruning::PruneSession;
+
+    let cfg = ModelConfig {
+        name: "roundtrip".into(),
+        d_model: 16,
+        d_ff: 32,
+        n_layers: 3,
+        n_heads: 4,
+        vocab: 24,
+        seq_len: 12,
+    };
+    let mut rng = Rng::new(0x5E55);
+    let calib: Vec<Vec<u16>> = (0..4)
+        .map(|_| (0..8).map(|_| rng.below(24) as u16).collect())
+        .collect();
+    let target = SparsityTarget::Unstructured(0.6);
+    // sparsegpt compensates errors through the gram, so block k+1 depends
+    // on block k's pruned weights — a wrong resume point would diverge
+    let spec = MethodSpec::parse("sparsegpt").unwrap();
+
+    let mut m_ref = Model::random(cfg.clone(), 99).unwrap();
+    PruneSession::builder()
+        .calib(calib.clone())
+        .target(target)
+        .method(spec.clone())
+        .run(&mut m_ref)
+        .unwrap();
+
+    let dir = std::env::temp_dir().join("alps_it_resume");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut m_cut = Model::random(cfg.clone(), 99).unwrap();
+    PruneSession::builder()
+        .calib(calib.clone())
+        .target(target)
+        .method(spec.clone())
+        .checkpoint_dir(&dir)
+        .stop_after(2)
+        .run(&mut m_cut)
+        .unwrap();
+
+    let mut m_res = Model::random(cfg, 99).unwrap();
+    let report = PruneSession::builder()
+        .calib(calib)
+        .target(target)
+        .method(spec)
+        .checkpoint_dir(&dir)
+        .resume(true)
+        .run(&mut m_res)
+        .unwrap();
+
+    assert_eq!(report.layers.len(), 3 * 6, "resumed report covers all layers");
+    for (name, t_ref) in &m_ref.weights.tensors {
+        let t_res = m_res.weights.tensors.get(name).unwrap();
+        assert_eq!(
+            t_ref.data, t_res.data,
+            "tensor '{name}' not bit-identical after resume"
+        );
     }
 }
