@@ -1,0 +1,72 @@
+//! Distributed pruning tour: shard a `PruneSession` across a pool of
+//! workers and watch per-worker progress — all in one process over
+//! loopback, so no setup is needed.
+//!
+//!     cargo run --release --example sharded_prune
+//!
+//! Across machines the same topology is two shell commands:
+//!
+//! ```text
+//! hostA$ alps worker --addr 0.0.0.0:7979
+//! hostB$ alps worker --addr 0.0.0.0:7979
+//! coord$ alps prune --random --model alps-tiny --method alps --sparsity 0.7 \
+//!            --workers hostA:7979,hostB:7979 --status-addr 127.0.0.1:7878
+//! coord$ curl http://127.0.0.1:7878/status   # live JSON progress
+//! ```
+
+use alps::config::{AlpsConfig, ModelConfig, SparsityTarget};
+use alps::coordinator::ShardedEngine;
+use alps::data::synthetic_windows;
+use alps::model::Model;
+use alps::pruning::worker::{Worker, WorkerConfig};
+use alps::pruning::{MethodSpec, ProgressEvent, PruneSession};
+use std::net::TcpListener;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. a pool of two workers (each would be `alps worker` on its own
+    // host; here they share the process to stay runnable anywhere)
+    let mut workers = Vec::new();
+    let mut addrs = Vec::new();
+    for _ in 0..2 {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        addrs.push(listener.local_addr()?.to_string());
+        let worker = Arc::new(Worker::new(WorkerConfig::default()));
+        let w = worker.clone();
+        std::thread::spawn(move || {
+            let _ = w.serve(listener);
+        });
+        workers.push(worker);
+    }
+    println!("worker pool: {}", addrs.join(", "));
+
+    // --- 2. a sharded engine is just another `Engine` for the session
+    let cfg = ModelConfig::preset("alps-tiny")?;
+    let mut model = Model::random(cfg.clone(), 7)?;
+    let calib = synthetic_windows(8, cfg.seq_len, cfg.vocab, 0xCA11B);
+    let spec = MethodSpec::Alps(AlpsConfig { max_iters: 120, ..Default::default() });
+    let engine = ShardedEngine::new(spec, addrs)?;
+
+    // --- 3. the observer sees which pool member solved each layer (the
+    // same attribution `--status-addr` serves as JSON over TCP)
+    let report = PruneSession::builder()
+        .calib(calib)
+        .target(SparsityTarget::parse("0.7")?)
+        .engine(Box::new(engine))
+        .observer(|ev| {
+            if let ProgressEvent::LayerSolved { block, layer, worker, secs, .. } = ev {
+                println!(
+                    "  [{block}] {layer} solved by {} in {secs:.2}s",
+                    worker.as_deref().unwrap_or("local"),
+                );
+            }
+        })
+        .run(&mut model)?;
+    println!("-> {}", report.summary());
+
+    for (i, w) in workers.iter().enumerate() {
+        println!("worker {i}: {} layers solved", w.layers_solved());
+        w.request_shutdown();
+    }
+    Ok(())
+}

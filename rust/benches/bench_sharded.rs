@@ -1,0 +1,103 @@
+//! Distributed pruning benchmark: layer-solve throughput of the native
+//! in-process engine vs a [`ShardedEngine`] over loopback worker pools of
+//! 1 and 2 members, plus the wire/codec overhead per layer. Loopback
+//! makes the transport cost visible without hiding it behind real
+//! network latency — the point is to bound the protocol overhead, and to
+//! verify (every run) that sharded results stay bit-identical to native.
+//!
+//!     cargo bench --bench bench_sharded
+//!     cargo bench --bench bench_sharded -- --smoke   # reduced CI workload
+//!
+//! No artifacts required (synthetic layer problems).
+
+use alps::bench::synthetic_problem;
+use alps::config::{AlpsConfig, SparsityTarget};
+use alps::coordinator::{ShardedConfig, ShardedEngine};
+use alps::pruning::worker::{Worker, WorkerConfig};
+use alps::pruning::{Engine, LayerJob, MethodSpec, NativeEngine};
+use alps::util::table::Table;
+use alps::util::Timer;
+use std::net::TcpListener;
+use std::sync::Arc;
+
+fn spawn_worker() -> (String, Arc<Worker>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let worker = Arc::new(Worker::new(WorkerConfig::default()));
+    let w = worker.clone();
+    std::thread::spawn(move || {
+        let _ = w.serve(listener);
+    });
+    (addr, worker)
+}
+
+fn jobs(n: usize, n_in: usize, n_out: usize, rows: usize) -> Vec<LayerJob> {
+    (0..n)
+        .map(|i| LayerJob {
+            name: format!("bench.l{i}"),
+            problem: synthetic_problem(n_in, n_out, rows, 1000 + i as u64),
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mode = if smoke { " (smoke)" } else { "" };
+    println!("== bench_sharded: distributed layer solves{mode} ==");
+
+    let (n_layers, n_in, n_out, rows) =
+        if smoke { (6, 24, 12, 80) } else { (24, 64, 32, 256) };
+    let alps_iters = if smoke { 40 } else { 150 };
+    let spec = MethodSpec::Alps(AlpsConfig { max_iters: alps_iters, ..Default::default() });
+    let target = SparsityTarget::Unstructured(0.7);
+    let js = jobs(n_layers, n_in, n_out, rows);
+
+    // reference: in-process native engine
+    let native = NativeEngine::new(spec.clone());
+    let t = Timer::start();
+    let ref_results = native.solve_block(&js, target)?;
+    let native_secs = t.elapsed_secs();
+
+    let mut table = Table::new(&["engine", "layers", "secs", "layers/s", "bit-identical"]);
+    table.row(&[
+        "native".into(),
+        n_layers.to_string(),
+        format!("{native_secs:.3}"),
+        format!("{:.1}", n_layers as f64 / native_secs),
+        "-".into(),
+    ]);
+
+    for pool in [1usize, 2] {
+        let workers: Vec<(String, Arc<Worker>)> = (0..pool).map(|_| spawn_worker()).collect();
+        let addrs = workers.iter().map(|(a, _)| a.clone()).collect();
+        let engine = ShardedEngine::with_config(
+            spec.clone(),
+            addrs,
+            ShardedConfig::default(),
+        )?;
+        let t = Timer::start();
+        let results = engine.solve_block(&js, target)?;
+        let secs = t.elapsed_secs();
+        let identical = results
+            .iter()
+            .zip(&ref_results)
+            .all(|(r, l)| r.w == l.w);
+        assert!(identical, "sharded({pool}) diverged from native — transport bug");
+        table.row(&[
+            format!("sharded x{pool}"),
+            n_layers.to_string(),
+            format!("{secs:.3}"),
+            format!("{:.1}", n_layers as f64 / secs),
+            "yes".into(),
+        ]);
+        for (_, w) in &workers {
+            w.request_shutdown();
+        }
+    }
+    table.print();
+    println!(
+        "note: loopback workers share this machine's cores with the coordinator, so \
+         pool>1 shows protocol overhead, not speedup; the win is one pool member per host."
+    );
+    Ok(())
+}

@@ -1,0 +1,668 @@
+//! Coordinator-side dispatcher for distributed pruning: a
+//! [`ShardedEngine`] implementing [`crate::pruning::Engine`] that ships
+//! [`LayerProblem`]s to a pool of `alps worker` processes over the binary
+//! frame protocol ([`crate::pruning::wire`]) and reassembles results
+//! deterministically.
+//!
+//! Design:
+//!
+//! * **One dispatcher thread per worker**, all draining one shared job
+//!   queue — a fast worker naturally takes more layers (work stealing by
+//!   construction), and layer order never matters because results land in
+//!   a slot indexed by job position.
+//! * **Per-worker outstanding-request limit**
+//!   ([`ShardedConfig::max_outstanding`]): each connection pipelines a
+//!   bounded number of in-flight solves, enough to hide the round trip
+//!   without buffering a whole block on one worker.
+//! * **Retry on disconnect**: a failed connect, a broken connection, or a
+//!   hung worker ([`ShardedConfig::idle_timeout`]) requeues that worker's
+//!   in-flight jobs at the *front* of the queue (another worker picks
+//!   them up next) and the worker gets a bounded number of reconnect
+//!   attempts ([`ShardedConfig::max_attempts`]). The run completes as
+//!   long as one worker survives; only when every pool member is gone do
+//!   unsolved layers fail the block.
+//! * **Solver errors are not retried**: a worker answering `tag::ERROR`
+//!   for a job this connection owns hit a deterministic failure (bad
+//!   target for the method, degenerate problem) that would fail
+//!   identically anywhere, so the whole block aborts with that message.
+//!   Transport-level refusals (`tag::BUSY` at the connection cap, or an
+//!   ERROR carrying the worker's protocol sentinel instead of an owned
+//!   job id) stay retryable.
+//! * **Bit-identical results**: matrices travel bit-exactly
+//!   (`to_le_bytes` round-trip), the worker rebuilds the problem with the
+//!   same deterministic kernels, and reassembly is positional — a sharded
+//!   run equals a [`NativeEngine`] run to the last bit (proven by
+//!   `tests/integration_sharded.rs` and the CI smoke step).
+
+use crate::config::SparsityTarget;
+use crate::net::framing::{read_frame, write_frame, FrameRead};
+use crate::net::lock;
+use crate::pruning::engine::{Engine, LayerJob, LayerResult};
+use crate::pruning::wire::{self, tag};
+use crate::pruning::{LayerProblem, MethodSpec};
+use anyhow::{bail, Context as _, Result};
+use std::collections::VecDeque;
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Dispatcher tuning knobs.
+#[derive(Clone, Debug)]
+pub struct ShardedConfig {
+    /// Pipelined in-flight solves per worker connection.
+    pub max_outstanding: usize,
+    /// Connect/reconnect attempts per worker before it is written off.
+    pub max_attempts: usize,
+    /// Largest accepted response frame.
+    pub max_frame_bytes: usize,
+    /// Per-attempt connect timeout.
+    pub connect_timeout: Duration,
+    /// A worker sending nothing for this long counts as hung and its
+    /// in-flight jobs are rerouted. Generous: a big ALPS layer solve can
+    /// legitimately take minutes.
+    pub idle_timeout: Duration,
+    /// Pause between reconnect attempts.
+    pub retry_backoff: Duration,
+    /// How long to keep retrying a worker that answers BUSY (at its
+    /// connection cap) before writing it off. Separate from
+    /// `max_attempts`: a saturated worker is healthy and a slot may free
+    /// at any moment, so it gets far more patience than a broken one.
+    pub busy_patience: Duration,
+}
+
+impl Default for ShardedConfig {
+    fn default() -> Self {
+        ShardedConfig {
+            max_outstanding: 2,
+            max_attempts: 3,
+            max_frame_bytes: 1 << 30,
+            connect_timeout: Duration::from_secs(5),
+            idle_timeout: Duration::from_secs(600),
+            retry_backoff: Duration::from_millis(100),
+            busy_patience: Duration::from_secs(60),
+        }
+    }
+}
+
+/// Poll interval while a drained-queue worker waits for possible
+/// reroutes: a job is only truly gone once its result slot is filled, so
+/// survivors linger until the whole block is solved (or failed).
+const WAIT_POLL: Duration = Duration::from_millis(50);
+
+/// Shared dispatch state for one block solve. Holds borrowed problems —
+/// the dispatcher never copies a layer's matrices except into the wire
+/// encoding itself.
+struct Dispatch<'j> {
+    problems: &'j [&'j LayerProblem],
+    target: SparsityTarget,
+    /// Job indices not yet assigned (rerouted jobs return to the front).
+    pending: Mutex<VecDeque<usize>>,
+    /// One slot per job, positional — deterministic reassembly.
+    results: Mutex<Vec<Option<LayerResult>>>,
+    /// First deterministic solver error; aborts the block.
+    fatal: Mutex<Option<String>>,
+    /// Transport-level failure per written-off worker (diagnostics).
+    worker_errors: Mutex<Vec<String>>,
+}
+
+impl Dispatch<'_> {
+    fn all_solved(&self) -> bool {
+        !lock(&self.results).iter().any(|r| r.is_none())
+    }
+}
+
+/// A pruning [`Engine`] that fans layer solves across remote workers.
+pub struct ShardedEngine {
+    spec: MethodSpec,
+    workers: Vec<String>,
+    cfg: ShardedConfig,
+}
+
+impl ShardedEngine {
+    /// `workers` are `host:port` addresses of running `alps worker`
+    /// processes (at least one).
+    pub fn new(spec: MethodSpec, workers: Vec<String>) -> Result<ShardedEngine> {
+        Self::with_config(spec, workers, ShardedConfig::default())
+    }
+
+    pub fn with_config(
+        spec: MethodSpec,
+        workers: Vec<String>,
+        cfg: ShardedConfig,
+    ) -> Result<ShardedEngine> {
+        if workers.is_empty() {
+            bail!("ShardedEngine needs at least one worker address");
+        }
+        let cfg = ShardedConfig {
+            max_outstanding: cfg.max_outstanding.max(1),
+            max_attempts: cfg.max_attempts.max(1),
+            ..cfg
+        };
+        Ok(ShardedEngine { spec, workers, cfg })
+    }
+
+    /// Parse a CLI `host:port,host:port` list.
+    pub fn from_flag(spec: MethodSpec, flag: &str) -> Result<ShardedEngine> {
+        let workers: Vec<String> = flag
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect();
+        Self::new(spec, workers)
+    }
+
+    pub fn workers(&self) -> &[String] {
+        &self.workers
+    }
+
+    /// One worker's dispatch loop: connect, keep up to `max_outstanding`
+    /// solves in flight, reroute on failure.
+    fn worker_loop(&self, addr: &str, d: &Dispatch) {
+        let mut attempts = 0usize;
+        // set at the first BUSY answer; cleared by any successful solve
+        let mut busy_since: Option<std::time::Instant> = None;
+        'reconnect: loop {
+            if lock(&d.fatal).is_some() || d.all_solved() {
+                return;
+            }
+            if lock(&d.pending).is_empty() {
+                // unsolved layers are in flight on other workers; linger in
+                // case one dies and reroutes them here
+                std::thread::sleep(WAIT_POLL);
+                continue 'reconnect;
+            }
+            let stream = match connect(addr, self.cfg.connect_timeout) {
+                Ok(s) => s,
+                Err(e) => {
+                    attempts += 1;
+                    if attempts >= self.cfg.max_attempts {
+                        lock(&d.worker_errors).push(format!("{addr}: {e}"));
+                        return;
+                    }
+                    std::thread::sleep(self.cfg.retry_backoff);
+                    continue 'reconnect;
+                }
+            };
+            let mut reader = match stream.try_clone() {
+                Ok(r) => r,
+                Err(e) => {
+                    lock(&d.worker_errors).push(format!("{addr}: clone failed: {e}"));
+                    return;
+                }
+            };
+            let mut writer = stream;
+            // in-flight job indices, in send order
+            let mut in_flight: VecDeque<usize> = VecDeque::new();
+            // cleared when a pipelined send stalls: a busy worker only
+            // reads between solves, so a huge second frame can exceed the
+            // socket buffer and the write timeout without anything being
+            // wrong — stop sending, keep reading (the write may have been
+            // partial, so the channel can't carry further requests), and
+            // replace the connection once the in-flight drain completes
+            let mut can_send = true;
+            let requeue = |in_flight: &mut VecDeque<usize>| {
+                let mut pending = lock(&d.pending);
+                // front of the queue: a surviving worker reroutes these
+                // before taking fresh work
+                while let Some(idx) = in_flight.pop_back() {
+                    pending.push_front(idx);
+                }
+            };
+            loop {
+                if lock(&d.fatal).is_some() {
+                    requeue(&mut in_flight);
+                    return;
+                }
+                // top up the pipeline
+                while can_send && in_flight.len() < self.cfg.max_outstanding {
+                    let Some(idx) = lock(&d.pending).pop_front() else { break };
+                    let problem = d.problems[idx];
+                    // borrow-encode: no deep copy of the (possibly huge)
+                    // weight and gram matrices just to serialize them
+                    let payload = wire::encode_solve(
+                        idx as u64,
+                        d.target,
+                        &self.spec,
+                        &problem.what,
+                        &problem.h,
+                    );
+                    if let Err(e) = write_frame(&mut writer, tag::SOLVE, &payload) {
+                        lock(&d.pending).push_front(idx);
+                        if in_flight.is_empty() {
+                            // a saturated worker may have refused us with a
+                            // BUSY still sitting in our receive buffer (its
+                            // refusal drain is bounded, so a huge frame can
+                            // fail the write first) — prefer that
+                            // classification over a hard failure
+                            let refusal = read_frame(
+                                &mut reader,
+                                self.cfg.max_frame_bytes,
+                                None,
+                                Some(Duration::from_secs(1)),
+                            );
+                            if let Ok(FrameRead::Frame { tag: tag::BUSY, .. }) = refusal {
+                                let since = *busy_since
+                                    .get_or_insert_with(std::time::Instant::now);
+                                if since.elapsed() >= self.cfg.busy_patience {
+                                    lock(&d.worker_errors).push(format!(
+                                        "{addr}: busy (at capacity) for {:.1}s",
+                                        since.elapsed().as_secs_f64()
+                                    ));
+                                    return;
+                                }
+                                std::thread::sleep(self.cfg.retry_backoff);
+                                continue 'reconnect;
+                            }
+                            // nothing owed on this connection: a failed
+                            // write really is a broken worker link
+                            attempts += 1;
+                            if attempts >= self.cfg.max_attempts {
+                                lock(&d.worker_errors)
+                                    .push(format!("{addr}: send failed: {e}"));
+                                return;
+                            }
+                            std::thread::sleep(self.cfg.retry_backoff);
+                            continue 'reconnect;
+                        }
+                        // backpressure, not failure: the worker is solving
+                        // and not reading — drain its responses instead
+                        can_send = false;
+                        break;
+                    }
+                    in_flight.push_back(idx);
+                }
+                if in_flight.is_empty() {
+                    if !can_send {
+                        // write side poisoned (possibly partial frame) but
+                        // fully drained: replace the connection; attempts
+                        // was reset by the drained responses
+                        continue 'reconnect;
+                    }
+                    // queue drained and nothing owed to us — but jobs in
+                    // flight on *other* workers may still reroute here, so
+                    // only leave once every result slot is filled
+                    if d.all_solved() || lock(&d.fatal).is_some() {
+                        return;
+                    }
+                    if lock(&d.pending).is_empty() {
+                        std::thread::sleep(WAIT_POLL);
+                    }
+                    continue;
+                }
+                match read_frame(
+                    &mut reader,
+                    self.cfg.max_frame_bytes,
+                    None,
+                    Some(self.cfg.idle_timeout),
+                ) {
+                    Ok(FrameRead::Frame { tag: tag::RESULT, payload }) => {
+                        match wire::SolveResponse::decode(&payload) {
+                            Ok(resp) if in_flight.contains(&(resp.job as usize)) => {
+                                let idx = resp.job as usize;
+                                in_flight.retain(|&i| i != idx);
+                                lock(&d.results)[idx] = Some(LayerResult {
+                                    w: resp.w,
+                                    secs: resp.secs,
+                                    admm_iters: resp.admm_iters as usize,
+                                    worker: Some(addr.to_string()),
+                                });
+                                // a delivered solve proves the worker
+                                // healthy; give transient failures a fresh
+                                // retry budget
+                                attempts = 0;
+                                busy_since = None;
+                            }
+                            // desynced or corrupt response: drop the
+                            // connection and reroute everything in flight
+                            Ok(resp) => {
+                                requeue(&mut in_flight);
+                                attempts += 1;
+                                if attempts >= self.cfg.max_attempts {
+                                    lock(&d.worker_errors).push(format!(
+                                        "{addr}: answered unknown job {}",
+                                        resp.job
+                                    ));
+                                    return;
+                                }
+                                continue 'reconnect;
+                            }
+                            Err(e) => {
+                                requeue(&mut in_flight);
+                                attempts += 1;
+                                if attempts >= self.cfg.max_attempts {
+                                    lock(&d.worker_errors)
+                                        .push(format!("{addr}: bad response: {e}"));
+                                    return;
+                                }
+                                continue 'reconnect;
+                            }
+                        }
+                    }
+                    Ok(FrameRead::Frame { tag: tag::ERROR, payload }) => {
+                        // an ERROR echoing one of OUR in-flight jobs is a
+                        // deterministic solver failure: retrying on another
+                        // worker would fail identically — abort the block.
+                        // An ERROR for a job we don't own (the worker's
+                        // u64::MAX protocol sentinel, or a desynced peer)
+                        // is a transport fault: reroute and retry.
+                        match wire::decode_error(&payload) {
+                            Ok((job, m))
+                                if usize::try_from(job)
+                                    .map(|j| in_flight.contains(&j))
+                                    .unwrap_or(false) =>
+                            {
+                                let msg = format!("worker {addr}, job {job}: {m}");
+                                let mut fatal = lock(&d.fatal);
+                                if fatal.is_none() {
+                                    *fatal = Some(msg);
+                                }
+                                requeue(&mut in_flight);
+                                return;
+                            }
+                            Ok((_, m)) => {
+                                requeue(&mut in_flight);
+                                attempts += 1;
+                                if attempts >= self.cfg.max_attempts {
+                                    lock(&d.worker_errors)
+                                        .push(format!("{addr}: protocol error: {m}"));
+                                    return;
+                                }
+                                std::thread::sleep(self.cfg.retry_backoff);
+                                continue 'reconnect;
+                            }
+                            Err(e) => {
+                                requeue(&mut in_flight);
+                                lock(&d.worker_errors)
+                                    .push(format!("{addr}: undecodable error: {e}"));
+                                return;
+                            }
+                        }
+                    }
+                    Ok(FrameRead::Frame { tag: tag::BUSY, .. }) => {
+                        // worker at its connection cap: a healthy-but-full
+                        // pool member, so it spends its own (much longer)
+                        // patience budget, not the hard-failure attempts
+                        requeue(&mut in_flight);
+                        let since = *busy_since.get_or_insert_with(std::time::Instant::now);
+                        if since.elapsed() >= self.cfg.busy_patience {
+                            lock(&d.worker_errors).push(format!(
+                                "{addr}: busy (at capacity) for {:.1}s",
+                                since.elapsed().as_secs_f64()
+                            ));
+                            return;
+                        }
+                        std::thread::sleep(self.cfg.retry_backoff);
+                        continue 'reconnect;
+                    }
+                    Ok(FrameRead::Frame { tag, .. }) => {
+                        requeue(&mut in_flight);
+                        lock(&d.worker_errors)
+                            .push(format!("{addr}: unexpected frame tag {tag}"));
+                        return;
+                    }
+                    Ok(FrameRead::Eof) | Ok(FrameRead::Shutdown) | Err(_) => {
+                        // worker dropped mid-solve: reroute its jobs
+                        requeue(&mut in_flight);
+                        attempts += 1;
+                        if attempts >= self.cfg.max_attempts {
+                            lock(&d.worker_errors)
+                                .push(format!("{addr}: disconnected mid-solve"));
+                            return;
+                        }
+                        std::thread::sleep(self.cfg.retry_backoff);
+                        continue 'reconnect;
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Engine for ShardedEngine {
+    fn label(&self) -> String {
+        format!("sharded({})", self.spec.label())
+    }
+
+    fn config_digest(&self) -> String {
+        // identical to NativeEngine's digest for the same spec, and the
+        // worker list is deliberately excluded: neither the pool shape
+        // nor remoting changes a single bit of the results, so
+        // checkpoints resume across pool changes AND across the
+        // native/sharded boundary
+        format!("{:?}", self.spec)
+    }
+
+    fn solve_layer(
+        &self,
+        problem: &LayerProblem,
+        target: SparsityTarget,
+    ) -> Result<LayerResult> {
+        // borrowed straight through — no copy of the layer's matrices
+        Ok(self.dispatch(&[problem], target)?.remove(0))
+    }
+
+    fn solve_block(
+        &self,
+        jobs: &[LayerJob],
+        target: SparsityTarget,
+    ) -> Result<Vec<LayerResult>> {
+        let problems: Vec<&LayerProblem> = jobs.iter().map(|j| &j.problem).collect();
+        self.dispatch(&problems, target)
+    }
+}
+
+impl ShardedEngine {
+    /// Fan the borrowed problems across the pool; results are positional.
+    fn dispatch(
+        &self,
+        problems: &[&LayerProblem],
+        target: SparsityTarget,
+    ) -> Result<Vec<LayerResult>> {
+        if problems.is_empty() {
+            return Ok(Vec::new());
+        }
+        let d = Dispatch {
+            problems,
+            target,
+            pending: Mutex::new((0..problems.len()).collect()),
+            results: Mutex::new((0..problems.len()).map(|_| None).collect()),
+            fatal: Mutex::new(None),
+            worker_errors: Mutex::new(Vec::new()),
+        };
+        let d_ref = &d;
+        std::thread::scope(|s| {
+            for addr in &self.workers {
+                // `move` copies the three references; `addr` itself is a
+                // per-iteration binding the thread must not borrow
+                s.spawn(move || self.worker_loop(addr, d_ref));
+            }
+        });
+        if let Some(msg) = lock(&d.fatal).take() {
+            bail!("sharded solve failed: {msg}");
+        }
+        let results = d.results.into_inner().unwrap_or_else(|p| p.into_inner());
+        let errors = d.worker_errors.into_inner().unwrap_or_else(|p| p.into_inner());
+        let unsolved = results.iter().filter(|r| r.is_none()).count();
+        if unsolved > 0 {
+            bail!(
+                "{unsolved} of {} layers unsolved — every worker failed: [{}]",
+                problems.len(),
+                errors.join("; ")
+            );
+        }
+        if !errors.is_empty() {
+            // the run completed, but part of the pool died along the way
+            eprintln!("[sharded] degraded pool: {}", errors.join("; "));
+        }
+        Ok(results.into_iter().map(|r| r.expect("checked above")).collect())
+    }
+}
+
+/// `TcpStream::connect_timeout` needs a resolved `SocketAddr`; resolve
+/// through `ToSocketAddrs` first (hostnames allowed).
+fn connect(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    use std::net::ToSocketAddrs as _;
+    let resolved = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving worker address '{addr}'"))?
+        .next()
+        .with_context(|| format!("worker address '{addr}' resolved to nothing"))?;
+    let stream = TcpStream::connect_timeout(&resolved, timeout)
+        .with_context(|| format!("connecting to worker {addr}"))?;
+    let _ = stream.set_nodelay(true);
+    // short socket timeout: read_frame loops on ticks against idle_timeout
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(10)))?;
+    Ok(stream)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::testutil::random_problem;
+    use crate::pruning::worker::{Worker, WorkerConfig};
+    use crate::pruning::NativeEngine;
+    use std::net::TcpListener;
+
+    fn jobs(n: usize, seed: u64) -> Vec<LayerJob> {
+        (0..n)
+            .map(|i| LayerJob {
+                name: format!("blocks.0.l{i}"),
+                problem: random_problem(14, 7, 50, seed + i as u64),
+            })
+            .collect()
+    }
+
+    fn quick_cfg() -> ShardedConfig {
+        ShardedConfig {
+            max_attempts: 2,
+            connect_timeout: Duration::from_millis(500),
+            idle_timeout: Duration::from_secs(30),
+            retry_backoff: Duration::from_millis(10),
+            busy_patience: Duration::from_millis(80),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sharded_block_matches_native_bitwise() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let worker = Worker::new(WorkerConfig::default());
+        std::thread::scope(|s| {
+            let srv = s.spawn(|| worker.serve(listener));
+            let spec = MethodSpec::Wanda;
+            let js = jobs(5, 100);
+            let target = SparsityTarget::Unstructured(0.6);
+            let sharded =
+                ShardedEngine::with_config(spec.clone(), vec![addr.clone()], quick_cfg())
+                    .unwrap();
+            let remote = sharded.solve_block(&js, target).unwrap();
+            let local = NativeEngine::new(spec).solve_block(&js, target).unwrap();
+            assert_eq!(remote.len(), local.len());
+            for (i, (r, l)) in remote.iter().zip(&local).enumerate() {
+                assert_eq!(r.w, l.w, "job {i} differs from native");
+                assert_eq!(r.worker.as_deref(), Some(addr.as_str()));
+            }
+            worker.request_shutdown();
+            srv.join().unwrap().unwrap();
+        });
+    }
+
+    #[test]
+    fn all_workers_dead_is_an_error_not_a_hang() {
+        // bind then immediately drop: connection refused at that port
+        let dead = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let sharded =
+            ShardedEngine::with_config(MethodSpec::Magnitude, vec![dead], quick_cfg())
+                .unwrap();
+        let err = sharded
+            .solve_block(&jobs(2, 200), SparsityTarget::Unstructured(0.5))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("2 of 2 layers unsolved"), "{err}");
+    }
+
+    #[test]
+    fn solver_error_aborts_instead_of_retrying() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let worker = Worker::new(WorkerConfig::default());
+        std::thread::scope(|s| {
+            let srv = s.spawn(|| worker.serve(listener));
+            // structured ALPS rejects N:M targets deterministically
+            let sharded = ShardedEngine::with_config(
+                MethodSpec::AlpsStructured(Default::default()),
+                vec![addr],
+                quick_cfg(),
+            )
+            .unwrap();
+            let err = sharded
+                .solve_block(&jobs(2, 300), SparsityTarget::NM { n: 2, m: 4 })
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("sharded solve failed"), "{err}");
+            assert!(err.contains("N:M"), "{err}");
+            worker.request_shutdown();
+            srv.join().unwrap().unwrap();
+        });
+    }
+
+    #[test]
+    fn busy_worker_is_retryable_not_fatal() {
+        // a BUSY refusal must never abort the run the way a solver error
+        // does — it exhausts its own patience budget (not the hard-failure
+        // attempts) and the worker is written off, not the block failed
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let done = Arc::new(AtomicBool::new(false));
+        let done2 = done.clone();
+        let fake = std::thread::spawn(move || {
+            // a permanently-saturated worker: BUSY on every connection
+            listener.set_nonblocking(true).unwrap();
+            while !done2.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((mut conn, _)) => {
+                        let _ = conn.set_nonblocking(false);
+                        let _ = write_frame(
+                            &mut conn,
+                            tag::BUSY,
+                            &wire::encode_error(0, "worker connection limit reached (1)"),
+                        );
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        let sharded =
+            ShardedEngine::with_config(MethodSpec::Magnitude, vec![addr], quick_cfg())
+                .unwrap();
+        let err = sharded
+            .solve_block(&jobs(1, 400), SparsityTarget::Unstructured(0.5))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unsolved"), "not fatal, just written off: {err}");
+        assert!(err.contains("busy"), "{err}");
+        done.store(true, Ordering::SeqCst);
+        fake.join().unwrap();
+    }
+
+    #[test]
+    fn empty_workers_rejected_and_flag_parses() {
+        assert!(ShardedEngine::new(MethodSpec::Wanda, vec![]).is_err());
+        let e = ShardedEngine::from_flag(MethodSpec::Wanda, "a:1, b:2,,").unwrap();
+        let got: Vec<&str> = e.workers().iter().map(String::as_str).collect();
+        assert_eq!(got, vec!["a:1", "b:2"]);
+        assert_eq!(e.label(), "sharded(wanda)");
+        assert!(ShardedEngine::from_flag(MethodSpec::Wanda, " ,").is_err());
+    }
+}

@@ -10,6 +10,12 @@
 //!
 //! * [`report`] — the per-layer / whole-run records every engine and
 //!   session produces ([`LayerReport`], [`RunReport`]).
+//! * [`dispatch`] — the distributed coordinator: [`ShardedEngine`] fans a
+//!   block's layer solves across a pool of `alps worker` endpoints over
+//!   TCP (per-worker outstanding-request limits, retry-on-disconnect with
+//!   rerouting, deterministic positional reassembly) and plugs into the
+//!   session through the same [`crate::pruning::Engine`] trait as the
+//!   local backends — with bit-identical results.
 //! * [`scheduler`] — the deprecated [`Scheduler`] + [`PruneEngine`] shims
 //!   (one release of backwards compatibility) plus re-exports of the
 //!   single-layer experiment helpers.
@@ -29,9 +35,11 @@
 //! # Ok(()) }
 //! ```
 
+pub mod dispatch;
 pub mod report;
 pub mod scheduler;
 
+pub use dispatch::{ShardedConfig, ShardedEngine};
 pub use report::{LayerReport, RunReport};
 #[allow(deprecated)]
 pub use scheduler::PruneEngine;

@@ -27,6 +27,17 @@
 //!   architecture and wire protocol.
 //! * `linalg` — dense blocked/threaded matmul (thread count overridable
 //!   via `ALPS_THREADS`) and u32-indexed CSR kernels.
+//! * `net` — the shared TCP transport layer (bounded line reads,
+//!   length-prefixed binary frames, threaded accept loop with connection
+//!   cap and graceful shutdown drain) under both the serve front-end and
+//!   the distributed pruning endpoints.
+//!
+//! Pruning scales out horizontally: `alps worker` hosts the native
+//! solvers behind a binary frame protocol (`pruning::worker` +
+//! `pruning::wire`), `coordinator::ShardedEngine` fans a block's layer
+//! problems across a worker pool with retry and deterministic
+//! reassembly (bit-identical to a local run), and `pruning::status`
+//! serves live `ProgressEvent` snapshots over TCP.
 
 // CI runs `cargo clippy -- -D warnings`; the numeric kernels throughout
 // this crate deliberately use explicit index loops (they mirror the math
@@ -40,6 +51,7 @@ pub mod data;
 pub mod eval;
 pub mod linalg;
 pub mod model;
+pub mod net;
 pub mod pruning;
 pub mod runtime;
 pub mod serve;

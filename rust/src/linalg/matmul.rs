@@ -18,20 +18,57 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
-/// C = A^T @ B without materializing A^T.
+/// Below this many f32 multiply-adds the explicit-transpose copy is the
+/// dominant cost and the product runs single-threaded anyway (same
+/// threshold as the threading cutoff in [`matmul_into`]), so `matmul_tn`
+/// takes the allocation-free strided path. Above it, the transposed copy
+/// amortizes: A^T rows become contiguous for the register-blocked kernel
+/// and the row partition fans across the thread pool.
+const TN_STRIDED_CUTOFF: usize = 64 * 64 * 64;
+
+/// C = A^T @ B.
+///
+/// Small products go through [`matmul_tn_strided`] (no A^T is ever
+/// materialized); large ones take an explicit transpose + the blocked
+/// threaded [`matmul`]. Both accumulate over k in ascending order, so the
+/// two paths agree bitwise on finite inputs.
 pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.rows, b.rows, "matmul_tn dims");
-    // For the gram-sized problems here an explicit transpose + matmul is
-    // faster than a strided kernel (A^T reuse across the whole product).
+    assert_eq!(a.rows, b.rows, "matmul_tn dims: {}x{} vs {}x{}", a.rows, a.cols, b.rows, b.cols);
+    if a.rows * a.cols * b.cols <= TN_STRIDED_CUTOFF {
+        return matmul_tn_strided(a, b);
+    }
     let at = a.transpose();
     matmul(&at, b)
 }
 
-/// Gram matrix H = X^T X (symmetric; computes upper triangle and mirrors).
+/// Strided kernel for C = A^T @ B: for each shared row k, rank-1 update
+/// C[i, :] += A[k, i] * B[k, :]. Both operands stream row-contiguously —
+/// no transpose allocation, no strided inner loop.
+fn matmul_tn_strided(a: &Matrix, b: &Matrix) -> Matrix {
+    let n_dim = b.cols;
+    let mut c = Matrix::zeros(a.cols, n_dim);
+    for k in 0..a.rows {
+        let arow = a.row(k);
+        let brow = b.row(k);
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c.data[i * n_dim..(i + 1) * n_dim];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    c
+}
+
+/// Gram matrix H = X^T X via [`matmul_tn`] (one shared A^T-product
+/// implementation instead of the duplicated explicit-transpose pattern),
+/// then symmetrized.
 pub fn gram(x: &Matrix) -> Matrix {
     let n = x.cols;
-    let xt = x.transpose();
-    let mut h = matmul(&xt, x);
+    let mut h = matmul_tn(x, x);
     // enforce exact symmetry (floating point drift breaks eigh otherwise)
     for i in 0..n {
         for j in (i + 1)..n {
@@ -276,6 +313,41 @@ mod tests {
         let b = Matrix::randn(40, 9, &mut rng);
         let direct = matmul(&a.transpose(), &b);
         assert!(matmul_tn(&a, &b).max_abs_diff(&direct) < 1e-6);
+    }
+
+    #[test]
+    fn matmul_tn_strided_and_transpose_paths_agree() {
+        let mut rng = Rng::new(8);
+        // spans the cutoff: small goes strided, large goes transpose+matmul
+        for &(rows, k, n) in &[(10, 4, 3), (64, 64, 64), (70, 64, 64), (30, 90, 110)] {
+            let a = Matrix::randn(rows, k, &mut rng);
+            let b = Matrix::randn(rows, n, &mut rng);
+            let strided = matmul_tn_strided(&a, &b);
+            let transposed = matmul(&a.transpose(), &b);
+            // identical k-ascending accumulation order => tight agreement
+            assert!(
+                strided.max_abs_diff(&transposed) < 1e-5,
+                "{rows}x{k} ^T @ {rows}x{n}"
+            );
+            assert!(matmul_tn(&a, &b).max_abs_diff(&transposed) < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gram_matches_matmul_tn() {
+        // gram is matmul_tn(x, x) + exact symmetrization — the shared path
+        let mut rng = Rng::new(9);
+        for &(rows, n) in &[(50, 12), (80, 66)] {
+            let x = Matrix::randn(rows, n, &mut rng);
+            let h = gram(&x);
+            let tn = matmul_tn(&x, &x);
+            assert!(h.max_abs_diff(&tn) < 1e-5, "{rows}x{n}");
+            for i in 0..n {
+                for j in 0..n {
+                    assert_eq!(h.at(i, j), h.at(j, i));
+                }
+            }
+        }
     }
 
     #[test]

@@ -9,15 +9,22 @@
 //!          single-layer reconstruction-error comparison (Fig. 2 row)
 //!   serve  --model alps-base --weights pruned.bin [--sparse] [--stdin]
 //!          continuous-batching generation server (see serve/mod.rs)
+//!   worker --addr 127.0.0.1:7979              distributed-pruning worker
+//!          (prune with --workers host:port,... to shard layer solves;
+//!           --status-addr exposes live progress over TCP)
 //!   info                                      artifact + model inventory
 //!   smoke  <file.hlo.txt>                     runtime smoke test
 
 use alps::config::{ModelConfig, SparsityTarget};
+use alps::coordinator::{ShardedConfig, ShardedEngine};
 use alps::data::{sample_windows, synthetic_windows, tasks, Corpus};
 use alps::eval::{perplexity, zero_shot_accuracy};
 use alps::model::{Model, Weights};
 use alps::pruning::session::single_layer_problem;
-use alps::pruning::{HloEngine, MethodSpec, PruneSession};
+use alps::pruning::{
+    Engine as SolveEngine, HloEngine, MethodSpec, NativeEngine, PruneSession, StatusBoard,
+    StatusServer, Worker, WorkerConfig,
+};
 use alps::runtime::{artifact, Runtime};
 use alps::serve::tcp::{fmt_tokens, parse_prompt};
 use alps::serve::{Batcher, Engine, SamplingParams, TcpConfig};
@@ -192,16 +199,84 @@ fn cmd_prune(args: &Args) -> Result<()> {
             builder.stop_after(args.get("stop-after", "").parse().context("--stop-after")?);
     }
 
-    let report = if let Some(rt) = &rt {
+    // where layers get solved: a remote worker pool, the HLO runtime, or
+    // the in-process native engine
+    let workers_flag = args.get("workers", "");
+    let engine: Box<dyn SolveEngine + '_> = if !workers_flag.is_empty() && workers_flag != "true" {
+        if rt.is_some() {
+            bail!("--workers cannot combine with --engine hlo");
+        }
+        // pool tuning: long solves need a bigger idle allowance, flaky
+        // links a bigger retry budget — both reachable without recompiling
+        let mut shard_cfg = ShardedConfig::default();
+        if args.has("shard-idle") {
+            shard_cfg.idle_timeout = std::time::Duration::from_secs(
+                args.get("shard-idle", "").parse().context("--shard-idle (seconds)")?,
+            );
+        }
+        if args.has("shard-attempts") {
+            shard_cfg.max_attempts =
+                args.get("shard-attempts", "").parse().context("--shard-attempts")?;
+        }
+        if args.has("shard-outstanding") {
+            shard_cfg.max_outstanding =
+                args.get("shard-outstanding", "").parse().context("--shard-outstanding")?;
+        }
+        let workers: Vec<String> = workers_flag
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect();
+        let eng = ShardedEngine::with_config(spec, workers, shard_cfg)?;
+        println!("sharded across {} worker(s): {workers_flag}", eng.workers().len());
+        Box::new(eng)
+    } else if args.has("workers") {
+        bail!("--workers requires host:port[,host:port...]");
+    } else if let Some(rt) = &rt {
         let MethodSpec::Alps(cfg) = spec else {
             bail!("--engine hlo only supports --method alps");
         };
-        let r = builder.engine(Box::new(HloEngine::new(rt, cfg))).run(&mut model)?;
-        println!("(hlo engine: {} artifact executions)", rt.total_execs());
-        r
+        Box::new(HloEngine::new(rt, cfg))
     } else {
-        builder.method(spec).run(&mut model)?
+        Box::new(NativeEngine::new(spec))
     };
+    let builder = builder.engine(engine);
+
+    let report = if args.has("status-addr") {
+        let addr = args.get("status-addr", "");
+        if addr.is_empty() || addr == "true" {
+            bail!("--status-addr requires host:port (e.g. --status-addr=127.0.0.1:7878)");
+        }
+        let listener = std::net::TcpListener::bind(&addr)
+            .with_context(|| format!("binding status endpoint {addr}"))?;
+        println!("status endpoint on {addr} (GET /status, or a `status` line)");
+        let board = StatusBoard::new();
+        let status = StatusServer::new();
+        // stop the endpoint on unwind too: scope joins the server thread,
+        // so a panicking run must not leave it accepting forever
+        struct StopOnDrop<'a>(&'a StatusServer);
+        impl Drop for StopOnDrop<'_> {
+            fn drop(&mut self) {
+                self.0.request_shutdown();
+            }
+        }
+        std::thread::scope(|s| {
+            let _stop = StopOnDrop(&status);
+            let srv = s.spawn(|| status.serve(listener, &board));
+            let r = builder.observer(|ev| board.observe(ev)).run(&mut model);
+            status.request_shutdown();
+            if let Err(e) = srv.join().expect("status server panicked") {
+                eprintln!("status endpoint error: {e}");
+            }
+            r
+        })?
+    } else {
+        builder.run(&mut model)?
+    };
+    if let Some(rt) = &rt {
+        println!("(hlo engine: {} artifact executions)", rt.total_execs());
+    }
     println!("{}", report.summary());
 
     let out = args.get("out", "");
@@ -371,6 +446,37 @@ fn serve_tcp(
     Ok(())
 }
 
+/// Host the native layer solvers behind the pruning frame protocol so a
+/// coordinator (`alps prune --workers ...`) can shard blocks over here.
+/// Stateless: each request carries its method spec and target, so one
+/// worker serves any mix of runs. Runs until killed.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let addr = args.get("addr", "127.0.0.1:7979");
+    let cfg = WorkerConfig {
+        max_conns: args.get("max-conns", "8").parse().context("--max-conns")?,
+        // clamp before shifting: a huge MiB value must not wrap the
+        // byte count around to a tiny (or zero) frame cap
+        max_frame_bytes: args
+            .get("max-frame-mb", "1024")
+            .parse::<usize>()
+            .context("--max-frame-mb")?
+            .clamp(1, usize::MAX >> 20)
+            << 20,
+    };
+    let listener = std::net::TcpListener::bind(&addr)
+        .with_context(|| format!("binding worker address {addr}"))?;
+    println!(
+        "worker on {addr} — up to {} coordinator connections, frames to {} MiB; \
+         point a coordinator at it with `alps prune --workers {addr}`",
+        cfg.max_conns,
+        cfg.max_frame_bytes >> 20,
+    );
+    let worker = Worker::new(cfg);
+    worker.serve(listener)?;
+    println!("worker done — {} layers solved", worker.layers_solved());
+    Ok(())
+}
+
 fn cmd_info() -> Result<()> {
     let dir = artifacts_dir();
     println!("artifacts dir: {dir:?}");
@@ -435,10 +541,12 @@ fn cmd_smoke(args: &Args) -> Result<()> {
 fn usage() {
     println!(
         "alps — ADMM-based one-shot LLM pruning (NeurIPS 2024 reproduction)\n\
-         usage: alps <prune|eval|layer|serve|info|smoke> [flags]\n\
+         usage: alps <prune|eval|layer|serve|worker|info|smoke> [flags]\n\
            prune --model alps-base --sparsity 0.7|2:4 --method alps|mp|wanda|sparsegpt|dsnot\n\
                  [--engine native|hlo] [--calib 32] [--out pruned.bin] [--quiet]\n\
                  [--checkpoint-dir ck] [--resume] [--stop-after N] [--random] [--seed N]\n\
+                 [--workers host:port,host:port] [--status-addr 127.0.0.1:7878]\n\
+                 [--shard-idle SECS] [--shard-attempts N] [--shard-outstanding N]\n\
                  [--rho0 F] [--admm-iters N] [--pcg-iters N]   (alps)\n\
                  [--sgpt-block N] [--sgpt-damp F]              (sparsegpt)\n\
                  [--dsnot-cycles N]                            (dsnot)\n\
@@ -447,6 +555,8 @@ fn usage() {
            serve --model alps-base [--weights pruned.bin] [--sparse] [--random]\n\
                  [--addr 127.0.0.1:7878 | --stdin] [--max-batch 8] [--max-conns 64]\n\
                  [--max-line 65536] [--max-new 32] [--temperature 0] [--top-k 0] [--stop id]\n\
+           worker [--addr 127.0.0.1:7979] [--max-conns 8] [--max-frame-mb 1024]\n\
+                 hosts the native layer solvers for `prune --workers`\n\
            info\n\
            smoke [file.hlo.txt]"
     );
@@ -464,6 +574,7 @@ fn main() -> Result<()> {
         "eval" => cmd_eval(&args),
         "layer" => cmd_layer(&args),
         "serve" => cmd_serve(&args),
+        "worker" => cmd_worker(&args),
         "info" => cmd_info(),
         "smoke" => cmd_smoke(&args),
         _ => {

@@ -1,0 +1,415 @@
+//! Wire framing: bounded line reads (text protocols) and length-prefixed
+//! binary frames (the pruning worker protocol).
+//!
+//! Both readers share the same robustness contract:
+//!
+//! * **Bounded memory** — a line longer than `max` bytes is discarded as
+//!   it streams in and reported as [`LineRead::TooLong`]; a frame whose
+//!   declared length exceeds `max` is a hard error before any payload is
+//!   allocated. A malicious peer cannot grow an unbounded buffer.
+//! * **Shutdown-aware** — sockets are expected to carry a short read
+//!   timeout; every timeout tick re-checks the caller's shutdown flag so
+//!   blocked readers terminate promptly ([`LineRead::Shutdown`] /
+//!   [`FrameRead::Shutdown`]).
+//! * **EOF at a message boundary is clean** ([`LineRead::Eof`] /
+//!   [`FrameRead::Eof`]); EOF mid-frame is an error (the peer died mid
+//!   message).
+//!
+//! ## Binary frame layout
+//!
+//! ```text
+//! [b'A'][b'F'][u8 version][u8 tag][u32 payload_len le][payload ...]
+//! ```
+//!
+//! The 2-byte magic catches text-protocol clients (or plain port
+//! scanners) talking to a frame endpoint; the version byte rejects
+//! incompatible peers before any payload is interpreted. Tags are
+//! protocol-specific (see `crate::pruning::wire`).
+
+use anyhow::{bail, Result};
+use std::io::{BufRead, Read, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+/// Frame protocol magic + version (bumped on incompatible layout changes).
+pub const FRAME_MAGIC: [u8; 2] = *b"AF";
+pub const FRAME_VERSION: u8 = 1;
+/// Fixed frame header size: magic(2) + version(1) + tag(1) + len(4).
+pub const FRAME_HEADER: usize = 8;
+
+/// Outcome of one bounded line read.
+pub enum LineRead {
+    Line(String),
+    TooLong,
+    Eof,
+    Shutdown,
+}
+
+/// Read one `\n`-terminated line, holding at most `max` bytes of it in
+/// memory. Oversized lines are discarded as they stream in and reported
+/// as [`LineRead::TooLong`]. Read-timeout ticks re-check the shutdown
+/// flag so blocked readers terminate promptly.
+pub fn read_line_bounded<R: BufRead>(
+    r: &mut R,
+    max: usize,
+    shutdown: &AtomicBool,
+) -> std::io::Result<LineRead> {
+    read_line_bounded_inner(r, max, shutdown, None)
+}
+
+/// [`read_line_bounded`] with a wall-clock deadline: gives up with a
+/// `TimedOut` error if no complete line arrives in time. For one-shot
+/// query endpoints, where a connected-but-silent client must not pin a
+/// handler thread for the life of the server.
+pub fn read_line_deadline<R: BufRead>(
+    r: &mut R,
+    max: usize,
+    shutdown: &AtomicBool,
+    deadline: Duration,
+) -> std::io::Result<LineRead> {
+    read_line_bounded_inner(r, max, shutdown, Some(Instant::now() + deadline))
+}
+
+fn read_line_bounded_inner<R: BufRead>(
+    r: &mut R,
+    max: usize,
+    shutdown: &AtomicBool,
+    deadline: Option<Instant>,
+) -> std::io::Result<LineRead> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut too_long = false;
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return Ok(LineRead::Shutdown);
+        }
+        if let Some(d) = deadline {
+            if Instant::now() > d {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::TimedOut,
+                    "no line before the read deadline",
+                ));
+            }
+        }
+        let (consumed, done) = {
+            let chunk = match r.fill_buf() {
+                Ok(c) => c,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock
+                            | std::io::ErrorKind::TimedOut
+                            | std::io::ErrorKind::Interrupted
+                    ) =>
+                {
+                    continue
+                }
+                Err(e) => return Err(e),
+            };
+            if chunk.is_empty() {
+                // EOF: a non-empty partial line still counts as a line
+                let done = if too_long {
+                    LineRead::TooLong
+                } else if buf.is_empty() {
+                    LineRead::Eof
+                } else {
+                    LineRead::Line(String::from_utf8_lossy(&buf).into_owned())
+                };
+                (0, Some(done))
+            } else {
+                match chunk.iter().position(|&b| b == b'\n') {
+                    Some(p) => {
+                        if !too_long && buf.len() + p > max {
+                            too_long = true;
+                        }
+                        if !too_long {
+                            buf.extend_from_slice(&chunk[..p]);
+                        }
+                        let done = if too_long {
+                            LineRead::TooLong
+                        } else {
+                            LineRead::Line(String::from_utf8_lossy(&buf).into_owned())
+                        };
+                        (p + 1, Some(done))
+                    }
+                    None => {
+                        if buf.len() + chunk.len() > max {
+                            too_long = true;
+                            buf.clear(); // cap memory; the line is rejected
+                        } else {
+                            buf.extend_from_slice(chunk);
+                        }
+                        (chunk.len(), None)
+                    }
+                }
+            }
+        };
+        r.consume(consumed);
+        if let Some(l) = done {
+            return Ok(l);
+        }
+    }
+}
+
+/// Write one tagged frame (header + payload) and flush. Payloads beyond
+/// the u32 length field are rejected up front — a wrapped length would
+/// silently desync the stream.
+pub fn write_frame(w: &mut impl Write, tag: u8, payload: &[u8]) -> std::io::Result<()> {
+    if payload.len() > u32::MAX as usize {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            format!("frame payload of {} bytes exceeds the u32 length field", payload.len()),
+        ));
+    }
+    let mut header = [0u8; FRAME_HEADER];
+    header[..2].copy_from_slice(&FRAME_MAGIC);
+    header[2] = FRAME_VERSION;
+    header[3] = tag;
+    header[4..8].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Outcome of one frame read.
+pub enum FrameRead {
+    Frame { tag: u8, payload: Vec<u8> },
+    /// Clean EOF at a frame boundary (peer closed between messages).
+    Eof,
+    /// The caller's shutdown flag was raised while waiting.
+    Shutdown,
+}
+
+/// How a blocking frame read ended below the message layer.
+enum Fill {
+    Done,
+    Eof,
+    Shutdown,
+}
+
+/// Read exactly `buf.len()` bytes, looping over read-timeout ticks.
+/// `eof_ok` permits a clean EOF *before the first byte* (frame boundary);
+/// EOF after partial progress is always an error. `idle` bounds how long
+/// to wait with no bytes arriving at all (a hung peer) — progress resets
+/// the clock.
+fn read_full(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    eof_ok: bool,
+    shutdown: Option<&AtomicBool>,
+    idle: Option<Duration>,
+) -> Result<Fill> {
+    let mut have = 0usize;
+    let mut last_progress = Instant::now();
+    while have < buf.len() {
+        if let Some(flag) = shutdown {
+            if flag.load(Ordering::SeqCst) {
+                return Ok(Fill::Shutdown);
+            }
+        }
+        match r.read(&mut buf[have..]) {
+            Ok(0) => {
+                if have == 0 && eof_ok {
+                    return Ok(Fill::Eof);
+                }
+                bail!("peer closed mid-frame ({} of {} bytes)", have, buf.len());
+            }
+            Ok(n) => {
+                have += n;
+                last_progress = Instant::now();
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                if let Some(limit) = idle {
+                    if last_progress.elapsed() > limit {
+                        bail!("peer idle for {:.1}s mid-read", limit.as_secs_f64());
+                    }
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(Fill::Done)
+}
+
+/// Read one frame. `max` bounds the accepted payload size; `shutdown`
+/// (when given) is re-checked on every read-timeout tick; `idle` (when
+/// given) fails the read if the peer sends nothing at all for that long —
+/// used by the coordinator so a hung worker surfaces as a reroutable
+/// error instead of a stuck run.
+pub fn read_frame(
+    r: &mut impl Read,
+    max: usize,
+    shutdown: Option<&AtomicBool>,
+    idle: Option<Duration>,
+) -> Result<FrameRead> {
+    let mut header = [0u8; FRAME_HEADER];
+    match read_full(r, &mut header, true, shutdown, idle)? {
+        Fill::Eof => return Ok(FrameRead::Eof),
+        Fill::Shutdown => return Ok(FrameRead::Shutdown),
+        Fill::Done => {}
+    }
+    if header[..2] != FRAME_MAGIC {
+        bail!("bad frame magic {:?} (text client on a frame port?)", &header[..2]);
+    }
+    if header[2] != FRAME_VERSION {
+        bail!("frame version {} unsupported (want {})", header[2], FRAME_VERSION);
+    }
+    let tag = header[3];
+    let len = u32::from_le_bytes([header[4], header[5], header[6], header[7]]) as usize;
+    if len > max {
+        bail!("frame of {len} bytes exceeds the {max}-byte limit");
+    }
+    let mut payload = vec![0u8; len];
+    match read_full(r, &mut payload, false, shutdown, idle)? {
+        Fill::Shutdown => Ok(FrameRead::Shutdown),
+        Fill::Eof => unreachable!("eof_ok is false for payload reads"),
+        Fill::Done => Ok(FrameRead::Frame { tag, payload }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufReader, Cursor};
+
+    fn no_shutdown() -> AtomicBool {
+        AtomicBool::new(false)
+    }
+
+    #[test]
+    fn line_read_basic_and_eof_partial() {
+        let flag = no_shutdown();
+        let mut r = BufReader::new(Cursor::new(b"hello\nworld".to_vec()));
+        match read_line_bounded(&mut r, 64, &flag).unwrap() {
+            LineRead::Line(l) => assert_eq!(l, "hello"),
+            _ => panic!("expected line"),
+        }
+        // EOF with a non-empty partial line still yields the line
+        match read_line_bounded(&mut r, 64, &flag).unwrap() {
+            LineRead::Line(l) => assert_eq!(l, "world"),
+            _ => panic!("expected partial line"),
+        }
+        assert!(matches!(read_line_bounded(&mut r, 64, &flag).unwrap(), LineRead::Eof));
+    }
+
+    #[test]
+    fn line_read_rejects_oversized_with_bounded_memory() {
+        let flag = no_shutdown();
+        let mut big = vec![b'x'; 10_000];
+        big.push(b'\n');
+        big.extend_from_slice(b"ok\n");
+        let mut r = BufReader::new(Cursor::new(big));
+        assert!(matches!(read_line_bounded(&mut r, 16, &flag).unwrap(), LineRead::TooLong));
+        // the oversized line was consumed; the stream continues cleanly
+        match read_line_bounded(&mut r, 16, &flag).unwrap() {
+            LineRead::Line(l) => assert_eq!(l, "ok"),
+            _ => panic!("expected line after oversized reject"),
+        }
+    }
+
+    #[test]
+    fn line_deadline_gives_up_on_silent_reader() {
+        // a socket that only ever times out must not pin the caller past
+        // its deadline (the status endpoint's one-shot query contract)
+        struct Silent;
+        impl std::io::Read for Silent {
+            fn read(&mut self, _: &mut [u8]) -> std::io::Result<usize> {
+                Err(std::io::ErrorKind::WouldBlock.into())
+            }
+        }
+        let flag = no_shutdown();
+        let mut r = BufReader::new(Silent);
+        let err = read_line_deadline(&mut r, 64, &flag, Duration::from_millis(20))
+            .unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::TimedOut);
+    }
+
+    #[test]
+    fn line_read_observes_shutdown() {
+        let flag = AtomicBool::new(true);
+        let mut r = BufReader::new(Cursor::new(b"never read\n".to_vec()));
+        assert!(matches!(read_line_bounded(&mut r, 64, &flag).unwrap(), LineRead::Shutdown));
+    }
+
+    #[test]
+    fn frame_roundtrip_multiple() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 7, b"payload one").unwrap();
+        write_frame(&mut buf, 9, b"").unwrap();
+        write_frame(&mut buf, 1, &[0xFF; 300]).unwrap();
+        let mut r = Cursor::new(buf);
+        match read_frame(&mut r, 1024, None, None).unwrap() {
+            FrameRead::Frame { tag, payload } => {
+                assert_eq!(tag, 7);
+                assert_eq!(payload, b"payload one");
+            }
+            _ => panic!("expected frame"),
+        }
+        match read_frame(&mut r, 1024, None, None).unwrap() {
+            FrameRead::Frame { tag, payload } => {
+                assert_eq!(tag, 9);
+                assert!(payload.is_empty());
+            }
+            _ => panic!("expected empty frame"),
+        }
+        match read_frame(&mut r, 1024, None, None).unwrap() {
+            FrameRead::Frame { tag, payload } => {
+                assert_eq!(tag, 1);
+                assert_eq!(payload.len(), 300);
+            }
+            _ => panic!("expected frame"),
+        }
+        assert!(matches!(read_frame(&mut r, 1024, None, None).unwrap(), FrameRead::Eof));
+    }
+
+    #[test]
+    fn frame_rejects_bad_magic_version_and_oversize() {
+        // wrong magic
+        let mut r = Cursor::new(b"GET /healthz\r\n\r\n".to_vec());
+        let err = read_frame(&mut r, 1024, None, None).unwrap_err().to_string();
+        assert!(err.contains("bad frame magic"), "{err}");
+        // wrong version
+        let mut bad = Vec::new();
+        write_frame(&mut bad, 1, b"x").unwrap();
+        bad[2] = 99;
+        let err = read_frame(&mut Cursor::new(bad), 1024, None, None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("version 99"), "{err}");
+        // declared length over the cap: rejected before allocation
+        let mut big = Vec::new();
+        write_frame(&mut big, 1, &vec![0u8; 64]).unwrap();
+        let err = read_frame(&mut Cursor::new(big), 16, None, None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn frame_eof_mid_payload_is_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 2, &[1, 2, 3, 4]).unwrap();
+        buf.truncate(FRAME_HEADER + 2); // cut the payload short
+        let err = read_frame(&mut Cursor::new(buf), 1024, None, None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("mid-frame"), "{err}");
+    }
+
+    #[test]
+    fn frame_observes_shutdown_flag() {
+        let flag = AtomicBool::new(true);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 2, b"x").unwrap();
+        assert!(matches!(
+            read_frame(&mut Cursor::new(buf), 1024, Some(&flag), None).unwrap(),
+            FrameRead::Shutdown
+        ));
+    }
+}

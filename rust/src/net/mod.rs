@@ -1,0 +1,41 @@
+//! `net` — the shared TCP transport layer.
+//!
+//! Extracted from the serve front-end (`serve/tcp.rs`) so every network
+//! endpoint in the crate builds on one audited implementation instead of
+//! re-growing its own accept loop and framing code. Three consumers:
+//!
+//! * the **serve front-end** (`crate::serve::tcp`) — line protocol over
+//!   [`framing::read_line_bounded`], connections managed by
+//!   [`server::NetServer`];
+//! * the **pruning worker** (`crate::pruning::worker`) — length-prefixed
+//!   binary frames ([`framing::read_frame`] / [`framing::write_frame`])
+//!   carrying serialized layer problems (`crate::pruning::wire`);
+//! * the **status endpoint** (`crate::pruning::status`) — one-shot
+//!   line/HTTP queries answering with a progress snapshot.
+//!
+//! Split of responsibilities:
+//!
+//! * [`framing`] — message boundaries: bounded `\n`-terminated line reads
+//!   and `[magic][version][tag][len][payload]` binary frames. Both are
+//!   shutdown-aware (read-timeout ticks re-check a caller flag) and hold
+//!   bounded memory against malicious peers.
+//! * [`server`] — connection lifecycle: per-connection threads behind a
+//!   connection cap, a bounded refusal pool for over-cap clients, and a
+//!   graceful shutdown drain (flag + accept-loop poke + scoped join).
+//!
+//! Protocol logic stays with the endpoints; this layer never interprets
+//! payloads.
+
+pub mod framing;
+pub mod server;
+
+pub use framing::{read_frame, read_line_bounded, write_frame, FrameRead, LineRead};
+pub use server::{ConnHandler, NetServer, ServerConfig, READ_POLL, WRITE_TIMEOUT};
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Poison-tolerant lock: a panicked handler thread must not take the
+/// whole server down with it.
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}

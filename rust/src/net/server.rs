@@ -1,0 +1,339 @@
+//! Generic threaded TCP accept loop — the connection plumbing shared by
+//! the serve front-end, the pruning worker, and the status endpoint.
+//!
+//! [`NetServer::run`] owns the lifecycle that `serve/tcp.rs` used to
+//! implement inline:
+//!
+//! * one scoped thread per accepted connection, handed to a
+//!   [`ConnHandler`];
+//! * a connection cap ([`ServerConfig::max_conns`]): over-cap connections
+//!   go to [`ConnHandler::refuse`] on a separate bounded refusal pool
+//!   ([`ServerConfig::max_refusals`]), and a connect flood beyond that
+//!   pool is dropped outright so the cap actually bounds server
+//!   resources;
+//! * graceful shutdown: [`NetServer::shutdown`] raises a flag every
+//!   handler can poll (via [`NetServer::shutdown_flag`], designed to pair
+//!   with the timeout-tick readers in [`crate::net::framing`]) and pokes
+//!   the blocking accept loop with a loopback connection so it observes
+//!   the flag; `run` returns only after every connection thread has been
+//!   joined — the drain.
+//!
+//! The server itself never reads or writes client sockets (except the
+//! default refusal line); protocol logic lives entirely in the handler.
+
+use super::lock;
+use anyhow::{Context as _, Result};
+use std::io::Write as _;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Suggested read timeout for handler sockets: how quickly an idle reader
+/// notices a server shutdown.
+pub const READ_POLL: Duration = Duration::from_millis(200);
+/// Suggested write timeout: a client that stops reading (full TCP window)
+/// fails its handler instead of wedging the drain join at shutdown.
+pub const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Accept-loop configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Concurrent connection cap; excess connections are refused.
+    pub max_conns: usize,
+    /// Concurrent refusal threads; connections beyond this during a
+    /// connect flood are dropped without ceremony.
+    pub max_refusals: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { max_conns: 64, max_refusals: 8 }
+    }
+}
+
+/// Finish a refusal reply: half-close the write side, then drain
+/// pipelined inbound data until EOF or a deadline — closing with unread
+/// data still buffered can RST the just-written reply away before the
+/// peer reads it. The drain is sized for real pipelines (a refused
+/// pruning coordinator may already have megabytes of solve frames in
+/// flight), while the deadline keeps a malicious firehose from pinning a
+/// refusal thread. The caller must have set a short read timeout so a
+/// silent peer cannot stall the thread either. Shared by the default
+/// [`ConnHandler::refuse`] and the protocol-specific overrides (serve
+/// healthz, worker BUSY frame).
+pub fn finish_refusal(stream: &TcpStream) {
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    let mut st = stream;
+    let mut sink = [0u8; 64 * 1024];
+    let deadline = std::time::Instant::now() + Duration::from_secs(2);
+    while std::time::Instant::now() < deadline {
+        match std::io::Read::read(&mut st, &mut sink) {
+            Ok(0) | Err(_) => break, // EOF, timeout, or reset: done either way
+            Ok(_) => continue,
+        }
+    }
+}
+
+/// Write a minimal one-shot `HTTP/1.1 200 OK` JSON response (the shape
+/// every probe endpoint in this crate serves).
+pub fn write_http_json(w: &mut impl std::io::Write, body: &str) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 200 OK\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    )
+}
+
+/// Answer a `GET` probe on a line-protocol connection: drain the request
+/// headers first (closing with unread inbound data buffered can RST the
+/// response away), then write the JSON reply. Shared by the serve
+/// healthz and the pruning status endpoint.
+pub fn respond_http_json<R: std::io::BufRead>(
+    reader: &mut R,
+    stream: &mut impl std::io::Write,
+    max_line: usize,
+    shutdown: &AtomicBool,
+    body: &str,
+) -> std::io::Result<()> {
+    loop {
+        match crate::net::framing::read_line_bounded(reader, max_line, shutdown)? {
+            crate::net::framing::LineRead::Line(h) if !h.trim().is_empty() => continue,
+            _ => break,
+        }
+    }
+    write_http_json(stream, body)
+}
+
+/// Per-connection protocol logic plugged into [`NetServer::run`].
+pub trait ConnHandler: Sync {
+    /// Serve one accepted connection until it closes. The handler is
+    /// responsible for socket timeouts (pair [`READ_POLL`] reads with the
+    /// server's [`NetServer::shutdown_flag`] so shutdown drains promptly).
+    fn handle(&self, stream: TcpStream) -> Result<()>;
+
+    /// Answer an over-cap connection. The default writes one refusal line,
+    /// half-closes, and briefly drains pipelined input — closing with
+    /// unread inbound data buffered can RST the refusal away before the
+    /// client reads it. Protocol-specific servers override this (the
+    /// serve front-end still answers health probes at capacity, the
+    /// worker replies with a binary busy frame).
+    fn refuse(&self, stream: TcpStream, cap: usize) {
+        let mut st = stream;
+        let _ = st.set_read_timeout(Some(Duration::from_millis(500)));
+        let _ = st.set_write_timeout(Some(WRITE_TIMEOUT));
+        let _ = writeln!(st, "err - connection limit reached ({cap})");
+        finish_refusal(&st);
+    }
+}
+
+/// A threaded multi-connection TCP server: accept loop + connection cap +
+/// graceful shutdown drain. One instance serves one listener at a time.
+pub struct NetServer {
+    cfg: ServerConfig,
+    shutdown: AtomicBool,
+    conns: AtomicUsize,
+    refusing: AtomicUsize,
+    /// Bound address, recorded by `run` so `shutdown` can poke the
+    /// blocking accept loop.
+    addr: Mutex<Option<SocketAddr>>,
+}
+
+impl NetServer {
+    pub fn new(cfg: ServerConfig) -> NetServer {
+        let cfg = ServerConfig { max_conns: cfg.max_conns.max(1), ..cfg };
+        NetServer {
+            cfg,
+            shutdown: AtomicBool::new(false),
+            conns: AtomicUsize::new(0),
+            refusing: AtomicUsize::new(0),
+            addr: Mutex::new(None),
+        }
+    }
+
+    /// Currently live connection handlers.
+    pub fn connections(&self) -> usize {
+        self.conns.load(Ordering::SeqCst)
+    }
+
+    /// The configured connection cap.
+    pub fn max_conns(&self) -> usize {
+        self.cfg.max_conns
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// The raw flag, for the timeout-tick readers in
+    /// [`crate::net::framing`].
+    pub fn shutdown_flag(&self) -> &AtomicBool {
+        &self.shutdown
+    }
+
+    /// Flag shutdown and poke the blocking accept loop with a dummy
+    /// connection so it observes the flag. A wildcard bind (0.0.0.0 / ::)
+    /// is not a connectable address, so the poke targets loopback on the
+    /// same port. Best-effort: if the connect fails anyway, the accept
+    /// loop still exits on the next inbound connection attempt.
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let addr = *lock(&self.addr);
+        if let Some(mut addr) = addr {
+            if addr.ip().is_unspecified() {
+                addr.set_ip(match addr {
+                    SocketAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+                    SocketAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+                });
+            }
+            let _ = TcpStream::connect(addr);
+        }
+    }
+
+    /// Serve connections on `listener` until [`NetServer::shutdown`] is
+    /// called (by a handler or another thread). Returns after all
+    /// connection threads have been joined; the shutdown flag is always
+    /// raised on return so handler loops and companion threads can rely
+    /// on it.
+    pub fn run<H: ConnHandler>(&self, listener: TcpListener, handler: &H) -> Result<()> {
+        let addr = listener.local_addr().context("reading bound address")?;
+        *lock(&self.addr) = Some(addr);
+        // shutdown() may have raced ahead of this thread: it either saw
+        // the address just stored (and pokes the accept loop) or ran
+        // before our lock (mutex ordering then guarantees we see its flag
+        // here) — never enter a poke-less blocking accept
+        if self.is_shutdown() {
+            return Ok(());
+        }
+        std::thread::scope(|s| {
+            for stream in listener.incoming() {
+                if self.is_shutdown() {
+                    break;
+                }
+                let stream = match stream {
+                    Ok(st) => st,
+                    Err(e) => {
+                        eprintln!("[net] accept error: {e}");
+                        continue;
+                    }
+                };
+                if self.conns.load(Ordering::SeqCst) >= self.cfg.max_conns {
+                    // refusal drains briefly; keep the accept loop free by
+                    // doing it off-thread, with the refusal pool itself
+                    // capped so a connect flood can't mint unbounded threads
+                    if self.refusing.load(Ordering::SeqCst) < self.cfg.max_refusals {
+                        self.refusing.fetch_add(1, Ordering::SeqCst);
+                        s.spawn(move || {
+                            handler.refuse(stream, self.cfg.max_conns);
+                            self.refusing.fetch_sub(1, Ordering::SeqCst);
+                        });
+                    }
+                    continue; // beyond the refusal pool: dropped without ceremony
+                }
+                // incremented here (not in the spawned thread) so the cap
+                // check on the next accept already sees this connection
+                self.conns.fetch_add(1, Ordering::SeqCst);
+                s.spawn(move || {
+                    if let Err(e) = handler.handle(stream) {
+                        eprintln!("[net] connection error: {e}");
+                    }
+                    self.conns.fetch_sub(1, Ordering::SeqCst);
+                });
+            }
+            // accept loop done: raise the flag so handler read loops (and
+            // any companion threads polling it) terminate, then the scope
+            // join drains every in-flight connection
+            self.shutdown.store(true, Ordering::SeqCst);
+        });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::framing::{read_line_bounded, LineRead};
+    use std::io::{BufRead, BufReader, Read, Write};
+
+    /// Echoes each line back prefixed with `echo `; `quit` shuts the
+    /// server down.
+    struct EchoHandler<'a> {
+        net: &'a NetServer,
+    }
+
+    impl ConnHandler for EchoHandler<'_> {
+        fn handle(&self, stream: TcpStream) -> Result<()> {
+            stream.set_read_timeout(Some(READ_POLL))?;
+            stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
+            let mut reader = BufReader::new(stream.try_clone()?);
+            let mut stream = stream;
+            loop {
+                match read_line_bounded(&mut reader, 1024, self.net.shutdown_flag())? {
+                    LineRead::Line(l) if l.trim() == "quit" => {
+                        writeln!(stream, "bye")?;
+                        self.net.shutdown();
+                        return Ok(());
+                    }
+                    LineRead::Line(l) => writeln!(stream, "echo {l}")?,
+                    _ => return Ok(()),
+                }
+            }
+        }
+    }
+
+    fn connect(addr: SocketAddr) -> (BufReader<TcpStream>, TcpStream) {
+        let s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        (BufReader::new(s.try_clone().unwrap()), s)
+    }
+
+    #[test]
+    fn serves_concurrent_connections_and_drains_on_shutdown() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let net = NetServer::new(ServerConfig::default());
+        std::thread::scope(|s| {
+            let server = s.spawn(|| net.run(listener, &EchoHandler { net: &net }));
+            let mut clients: Vec<_> = (0..3).map(|_| connect(addr)).collect();
+            for (i, (r, w)) in clients.iter_mut().enumerate() {
+                writeln!(w, "hello {i}").unwrap();
+                let mut l = String::new();
+                r.read_line(&mut l).unwrap();
+                assert_eq!(l.trim(), format!("echo hello {i}"));
+            }
+            let (mut r, mut w) = connect(addr);
+            writeln!(w, "quit").unwrap();
+            let mut l = String::new();
+            r.read_line(&mut l).unwrap();
+            assert_eq!(l.trim(), "bye");
+            server.join().unwrap().unwrap();
+            assert!(net.is_shutdown());
+            assert_eq!(net.connections(), 0);
+        });
+    }
+
+    #[test]
+    fn over_cap_connection_gets_default_refusal() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let net = NetServer::new(ServerConfig { max_conns: 1, ..Default::default() });
+        std::thread::scope(|s| {
+            let server = s.spawn(|| net.run(listener, &EchoHandler { net: &net }));
+            // first client occupies the only slot
+            let (mut r1, mut w1) = connect(addr);
+            writeln!(w1, "hi").unwrap();
+            let mut l = String::new();
+            r1.read_line(&mut l).unwrap();
+            assert_eq!(l.trim(), "echo hi");
+            // second client is refused with the default error line
+            let (mut r2, _w2) = connect(addr);
+            let mut resp = String::new();
+            r2.read_to_string(&mut resp).unwrap();
+            assert!(resp.starts_with("err - connection limit reached (1)"), "got: {resp}");
+            writeln!(w1, "quit").unwrap();
+            server.join().unwrap().unwrap();
+        });
+    }
+}

@@ -34,6 +34,10 @@ pub struct LayerResult {
     pub secs: f64,
     /// ADMM iterations (ALPS engines only, 0 otherwise).
     pub admm_iters: usize,
+    /// Which worker solved it (`None` for in-process engines). Flows into
+    /// [`super::session::ProgressEvent::LayerSolved`] so the status
+    /// endpoint can attribute layers to pool members.
+    pub worker: Option<String>,
 }
 
 /// A backend that solves layer-pruning problems.
@@ -103,11 +107,12 @@ impl Engine for NativeEngine {
                     w,
                     secs: timer.elapsed_secs(),
                     admm_iters: trace.admm_iters,
+                    worker: None,
                 })
             }
             spec => {
                 let w = spec.prune(problem, target)?;
-                Ok(LayerResult { w, secs: timer.elapsed_secs(), admm_iters: 0 })
+                Ok(LayerResult { w, secs: timer.elapsed_secs(), admm_iters: 0, worker: None })
             }
         }
     }
@@ -170,6 +175,7 @@ impl Engine for HloEngine<'_> {
             w,
             secs: timer.elapsed_secs(),
             admm_iters: trace.admm_iters,
+            worker: None,
         })
     }
 }
@@ -250,6 +256,7 @@ mod tests {
                     w: Matrix::zeros(problem.n_in(), problem.n_out()),
                     secs: 0.0,
                     admm_iters: 0,
+                    worker: None,
                 })
             }
         }

@@ -16,10 +16,16 @@
 //! * [`engine::Engine`] — *where* a layer problem is solved:
 //!   [`engine::NativeEngine`] fans the block's matrices across a thread
 //!   pool, [`engine::HloEngine`] routes ALPS through the AOT HLO
-//!   artifacts. New backends (sharded, remote) implement the same trait.
+//!   artifacts, and [`crate::coordinator::ShardedEngine`] fans them
+//!   across a TCP worker pool with bit-identical results.
 //! * [`session::PruneSession`] — the block-by-block pipeline: builder
 //!   configuration, streaming [`session::ProgressEvent`]s, and per-block
 //!   checkpoint/resume. See `session.rs` for the architecture.
+//! * Distribution: [`wire`] (the layer-solve frame codec), [`worker`]
+//!   (the `alps worker` endpoint hosting `NativeEngine` behind that
+//!   protocol), and [`status`] (a TCP endpoint streaming the session's
+//!   progress snapshot with per-worker attribution) — all built on the
+//!   shared [`crate::net`] transport layer.
 //!
 //! The old `method_by_name` / `all_methods` free functions and the
 //! coordinator's `PruneEngine` enum remain as deprecated shims for one
@@ -34,11 +40,16 @@ pub mod projection;
 pub mod quantize;
 pub mod session;
 pub mod sparsegpt;
+pub mod status;
 pub mod structured;
 pub mod wanda;
+pub mod wire;
+pub mod worker;
 
 pub use engine::{Engine, HloEngine, LayerJob, LayerResult, NativeEngine};
 pub use session::{ProgressEvent, PruneSession, PruneSessionBuilder};
+pub use status::{StatusBoard, StatusServer};
+pub use worker::{Worker, WorkerConfig};
 
 use crate::config::{AlpsConfig, DsNoTConfig, SparseGptConfig, SparsityTarget};
 use crate::linalg::matmul::{gram, matmul};
@@ -76,7 +87,10 @@ impl LayerProblem {
     /// the PJRT device and hands it over here).
     pub fn from_gram(h: Matrix, what: Matrix) -> Result<Self> {
         if h.rows != h.cols || h.rows != what.rows {
-            bail!("gram {}x{} incompatible with weights {}x{}", h.rows, h.cols, what.rows, what.cols);
+            bail!(
+                "gram {}x{} incompatible with weights {}x{}",
+                h.rows, h.cols, what.rows, what.cols
+            );
         }
         let g = matmul(&h, &what);
         let denom = what.dot(&g).max(1e-30);

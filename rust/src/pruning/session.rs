@@ -64,6 +64,8 @@ pub enum ProgressEvent {
         rel_error: f64,
         secs: f64,
         admm_iters: usize,
+        /// Pool member that solved it (sharded engines); `None` locally.
+        worker: Option<String>,
     },
     /// The per-block checkpoint (weights + manifest) was persisted.
     CheckpointWritten { block: usize, path: PathBuf },
@@ -153,7 +155,9 @@ impl<'a> PruneSessionBuilder<'a> {
         }
         let engine = self
             .engine
-            .unwrap_or_else(|| Box::new(NativeEngine::new(MethodSpec::Alps(AlpsConfig::default()))));
+            .unwrap_or_else(|| {
+                Box::new(NativeEngine::new(MethodSpec::Alps(AlpsConfig::default())))
+            });
         Ok(PruneSession {
             calib: self.calib,
             target,
@@ -295,6 +299,7 @@ impl<'a> PruneSession<'a> {
                     rel_error: rep.rel_error,
                     secs: rep.secs,
                     admm_iters: rep.admm_iters,
+                    worker: res.worker.clone(),
                 });
                 report.layers.push(rep);
             }
@@ -472,6 +477,11 @@ impl CheckpointState {
     }
 
     /// Reject resuming a checkpoint written by a different run setup.
+    /// The engine's identity is its *config digest*, not its display
+    /// label: backends with identical solver configuration produce
+    /// bit-identical blocks (NativeEngine vs ShardedEngine), so a run
+    /// may resume a checkpoint across that boundary; the saved `method`
+    /// label stays informational.
     #[allow(clippy::too_many_arguments)]
     fn validate(
         &self,
@@ -482,7 +492,6 @@ impl CheckpointState {
         init_weights_digest: &str,
     ) -> Result<()> {
         if self.model != report.model
-            || self.method != report.method
             || self.target != report.target
             || self.n_blocks != n_blocks
         {
@@ -566,7 +575,7 @@ impl CheckpointState {
     }
 }
 
-fn json_escape(s: &str) -> String {
+pub(crate) fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
         match c {
@@ -933,6 +942,7 @@ mod tests {
                 w: Matrix::zeros(problem.n_in(), problem.n_out()),
                 secs: 0.0,
                 admm_iters: 0,
+                worker: None,
             })
         }
     }

@@ -1,0 +1,332 @@
+//! Live pruning progress over TCP: a [`StatusBoard`] accumulates the
+//! session's [`ProgressEvent`] stream (including per-worker attribution
+//! from a sharded run) and a [`StatusServer`] answers one-shot queries
+//! with a JSON snapshot — the "surfacing `ProgressEvent`s on a TCP status
+//! endpoint" follow-up from the PR 3 roadmap.
+//!
+//! Wiring: pass `StatusBoard::observe` as (part of) the session observer
+//! and serve the board on a listener; the CLI does exactly this for
+//! `alps prune --status-addr 127.0.0.1:7878`:
+//!
+//! ```text
+//! curl http://127.0.0.1:7878/status       # HTTP JSON snapshot
+//! printf 'status\n' | nc 127.0.0.1 7878   # same JSON as one line
+//! ```
+//!
+//! The endpoint is read-only and stateless per connection (one query, one
+//! answer, close), served by the shared [`crate::net`] accept loop, so a
+//! monitoring scrape can never interfere with the run it watches.
+
+use super::session::{json_escape, ProgressEvent};
+use crate::net::framing::{read_line_deadline, LineRead};
+use crate::net::server::{finish_refusal, respond_http_json, write_http_json};
+use crate::net::{lock, ConnHandler, NetServer, ServerConfig, READ_POLL, WRITE_TIMEOUT};
+use anyhow::{Context as _, Result};
+use std::collections::BTreeMap;
+use std::io::{BufReader, Write as _};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Mutex;
+
+/// Longest accepted query line (a status query is one short word; HTTP
+/// request lines from probes stay well under this).
+const MAX_QUERY_LINE: usize = 4096;
+
+/// A connected client gets this long to send its query; a silent
+/// connection is dropped so it cannot pin a handler slot for the whole
+/// (possibly hours-long) pruning run.
+const QUERY_DEADLINE: Duration = Duration::from_secs(10);
+
+/// Attribution key for layers solved by the in-process engine.
+const LOCAL_WORKER: &str = "local";
+
+/// Snapshot of a pruning run as seen through its progress events.
+#[derive(Clone, Default)]
+pub struct StatusSnapshot {
+    pub model: String,
+    pub method: String,
+    pub target: String,
+    pub n_blocks: usize,
+    /// Blocks fully finished (resumed blocks count).
+    pub blocks_done: usize,
+    pub layers_solved: usize,
+    pub checkpoints_written: usize,
+    pub last_layer: String,
+    pub running: bool,
+    pub finished: bool,
+    pub total_secs: f64,
+    /// Layers solved per pool member (`"local"` for in-process solves).
+    pub workers: BTreeMap<String, usize>,
+}
+
+impl StatusSnapshot {
+    /// Render as a single JSON object (one line, newline-terminated).
+    pub fn to_json(&self) -> String {
+        let workers = self
+            .workers
+            .iter()
+            .map(|(w, n)| format!("\"{}\":{}", json_escape(w), n))
+            .collect::<Vec<_>>()
+            .join(",");
+        format!(
+            "{{\"model\":\"{}\",\"method\":\"{}\",\"target\":\"{}\",\
+             \"n_blocks\":{},\"blocks_done\":{},\"layers_solved\":{},\
+             \"checkpoints_written\":{},\"last_layer\":\"{}\",\
+             \"running\":{},\"finished\":{},\"total_secs\":{},\
+             \"workers\":{{{}}}}}\n",
+            json_escape(&self.model),
+            json_escape(&self.method),
+            json_escape(&self.target),
+            self.n_blocks,
+            self.blocks_done,
+            self.layers_solved,
+            self.checkpoints_written,
+            json_escape(&self.last_layer),
+            self.running,
+            self.finished,
+            if self.total_secs.is_finite() { self.total_secs } else { 0.0 },
+            workers,
+        )
+    }
+}
+
+/// Shared accumulator between the session observer and the status server.
+#[derive(Default)]
+pub struct StatusBoard {
+    state: Mutex<StatusSnapshot>,
+}
+
+impl StatusBoard {
+    pub fn new() -> StatusBoard {
+        StatusBoard::default()
+    }
+
+    /// Fold one progress event into the snapshot. Designed to be called
+    /// from a [`super::session::PruneSession`] observer closure.
+    pub fn observe(&self, ev: &ProgressEvent) {
+        let mut st = lock(&self.state);
+        match ev {
+            ProgressEvent::RunStarted { model, method, target, n_blocks } => {
+                *st = StatusSnapshot {
+                    model: model.clone(),
+                    method: method.clone(),
+                    target: target.clone(),
+                    n_blocks: *n_blocks,
+                    running: true,
+                    ..Default::default()
+                };
+            }
+            ProgressEvent::BlockResumed { .. } => {
+                st.blocks_done += 1;
+            }
+            // starting block k means blocks 0..k are finished — this is
+            // what keeps `blocks_done` moving on runs without
+            // `--checkpoint-dir` (no CheckpointWritten events)
+            ProgressEvent::BlockStarted { block, .. } => {
+                st.blocks_done = st.blocks_done.max(*block);
+            }
+            ProgressEvent::LayerSolved { layer, worker, .. } => {
+                st.layers_solved += 1;
+                st.last_layer = layer.clone();
+                let key = worker.as_deref().unwrap_or(LOCAL_WORKER).to_string();
+                *st.workers.entry(key).or_insert(0) += 1;
+            }
+            ProgressEvent::CheckpointWritten { block, .. } => {
+                st.checkpoints_written += 1;
+                // a checkpoint marks the block complete
+                st.blocks_done = st.blocks_done.max(block + 1);
+            }
+            ProgressEvent::RunFinished { blocks_done, total_secs } => {
+                st.blocks_done = st.blocks_done.max(*blocks_done);
+                st.total_secs = *total_secs;
+                st.running = false;
+                st.finished = true;
+            }
+        }
+    }
+
+    pub fn snapshot(&self) -> StatusSnapshot {
+        lock(&self.state).clone()
+    }
+}
+
+/// One-shot status endpoint over the shared net layer.
+pub struct StatusServer {
+    net: NetServer,
+}
+
+impl Default for StatusServer {
+    fn default() -> Self {
+        StatusServer::new()
+    }
+}
+
+impl StatusServer {
+    pub fn new() -> StatusServer {
+        StatusServer { net: NetServer::new(ServerConfig::default()) }
+    }
+
+    /// Stop the endpoint (the CLI calls this when the run finishes; the
+    /// final snapshot has already been served to anyone connected).
+    pub fn request_shutdown(&self) {
+        self.net.shutdown();
+    }
+
+    /// Answer status queries on `listener` until
+    /// [`StatusServer::request_shutdown`]. Blocks; run it on its own
+    /// thread next to the pruning session.
+    pub fn serve(&self, listener: TcpListener, board: &StatusBoard) -> Result<()> {
+        let handler = StatusHandler { net: &self.net, board };
+        self.net.run(listener, &handler)
+    }
+}
+
+struct StatusHandler<'a> {
+    net: &'a NetServer,
+    board: &'a StatusBoard,
+}
+
+impl ConnHandler for StatusHandler<'_> {
+    fn handle(&self, stream: TcpStream) -> Result<()> {
+        stream.set_read_timeout(Some(READ_POLL)).context("setting read timeout")?;
+        stream.set_write_timeout(Some(WRITE_TIMEOUT)).context("setting write timeout")?;
+        let mut reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+        let mut stream = stream;
+        let first = match read_line_deadline(
+            &mut reader,
+            MAX_QUERY_LINE,
+            self.net.shutdown_flag(),
+            QUERY_DEADLINE,
+        ) {
+            Ok(LineRead::Line(l)) => l,
+            Ok(_) => return Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::TimedOut => return Ok(()),
+            Err(e) => return Err(e.into()),
+        };
+        let body = self.board.snapshot().to_json();
+        if first.starts_with("GET ") {
+            respond_http_json(
+                &mut reader,
+                &mut stream,
+                MAX_QUERY_LINE,
+                self.net.shutdown_flag(),
+                &body,
+            )?;
+        } else {
+            // any plain line (canonically `status`) gets the JSON line
+            stream.write_all(body.as_bytes())?;
+        }
+        let _ = stream.shutdown(std::net::Shutdown::Write);
+        Ok(())
+    }
+
+    /// Monitoring must stay live even when idle clients exhaust the
+    /// connection cap: an over-cap `GET` probe still gets the snapshot.
+    fn refuse(&self, stream: TcpStream, cap: usize) {
+        let mut st = stream;
+        let _ = st.set_read_timeout(Some(READ_POLL));
+        let _ = st.set_write_timeout(Some(WRITE_TIMEOUT));
+        let mut first = [0u8; 8];
+        let have = std::io::Read::read(&mut st, &mut first).unwrap_or(0);
+        if first[..have].starts_with(b"GET ") {
+            let _ = write_http_json(&mut st, &self.board.snapshot().to_json());
+        } else {
+            let _ = writeln!(st, "err - connection limit reached ({cap})");
+        }
+        finish_refusal(&st);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, Read, Write};
+    use std::path::PathBuf;
+    use std::time::Duration;
+
+    fn sample_events(board: &StatusBoard) {
+        board.observe(&ProgressEvent::RunStarted {
+            model: "alps-tiny".into(),
+            method: "sharded(alps)".into(),
+            target: "0.70".into(),
+            n_blocks: 2,
+        });
+        board.observe(&ProgressEvent::BlockStarted { block: 0, n_blocks: 2 });
+        for (i, w) in [Some("127.0.0.1:1"), Some("127.0.0.1:2"), None].iter().enumerate() {
+            board.observe(&ProgressEvent::LayerSolved {
+                block: 0,
+                layer: format!("blocks.0.l{i}"),
+                n_in: 8,
+                n_out: 8,
+                kept: 32,
+                total: 64,
+                rel_error: 0.1,
+                secs: 0.5,
+                admm_iters: 3,
+                worker: w.map(str::to_string),
+            });
+        }
+        board.observe(&ProgressEvent::CheckpointWritten {
+            block: 0,
+            path: PathBuf::from("ck"),
+        });
+        // checkpoint-free runs advance blocks_done through BlockStarted
+        board.observe(&ProgressEvent::BlockStarted { block: 1, n_blocks: 2 });
+    }
+
+    #[test]
+    fn board_accumulates_events_with_worker_attribution() {
+        let board = StatusBoard::new();
+        sample_events(&board);
+        let st = board.snapshot();
+        assert_eq!(st.model, "alps-tiny");
+        assert_eq!(st.n_blocks, 2);
+        assert_eq!(st.blocks_done, 1);
+        assert_eq!(st.layers_solved, 3);
+        assert_eq!(st.checkpoints_written, 1);
+        assert_eq!(st.last_layer, "blocks.0.l2");
+        assert!(st.running && !st.finished);
+        assert_eq!(st.workers.get("127.0.0.1:1"), Some(&1));
+        assert_eq!(st.workers.get("127.0.0.1:2"), Some(&1));
+        assert_eq!(st.workers.get("local"), Some(&1));
+
+        board.observe(&ProgressEvent::RunFinished { blocks_done: 2, total_secs: 1.5 });
+        let st = board.snapshot();
+        assert!(st.finished && !st.running);
+        assert_eq!(st.blocks_done, 2);
+        let json = st.to_json();
+        assert!(json.contains("\"layers_solved\":3"), "{json}");
+        assert!(json.contains("\"127.0.0.1:1\":1"), "{json}");
+        assert!(json.contains("\"finished\":true"), "{json}");
+    }
+
+    #[test]
+    fn status_server_answers_http_and_line_queries() {
+        let board = StatusBoard::new();
+        sample_events(&board);
+        let server = StatusServer::new();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::scope(|s| {
+            let srv = s.spawn(|| server.serve(listener, &board));
+            // line query
+            let mut st = TcpStream::connect(addr).unwrap();
+            st.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            writeln!(st, "status").unwrap();
+            let mut r = BufReader::new(st);
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            assert!(line.starts_with('{'), "line query: {line}");
+            assert!(line.contains("\"model\":\"alps-tiny\""), "{line}");
+            // HTTP query
+            let mut st = TcpStream::connect(addr).unwrap();
+            st.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            write!(st, "GET /status HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+            let mut resp = String::new();
+            st.read_to_string(&mut resp).unwrap();
+            assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+            assert!(resp.contains("\"workers\":{"), "{resp}");
+            server.request_shutdown();
+            srv.join().unwrap().unwrap();
+        });
+    }
+}

@@ -1,0 +1,489 @@
+//! Wire codec for the distributed pruning protocol.
+//!
+//! One [`SolveRequest`] carries everything a stateless worker needs to
+//! solve one layer: the dense weights, the calibration gram matrix, the
+//! full [`MethodSpec`] (hyperparameters included), and the
+//! [`SparsityTarget`]. The worker rebuilds the [`LayerProblem`] with
+//! [`LayerProblem::from_gram`] — the derived quantities (`G = H What`,
+//! the normalizer) are recomputed from bit-identical inputs by the same
+//! deterministic kernels, so a remote solve is bit-identical to a local
+//! one.
+//!
+//! Encoding is little-endian and versioned at the frame layer
+//! ([`crate::net::framing`]); payload tags:
+//!
+//! * [`tag::SOLVE`] — coordinator -> worker, a [`SolveRequest`];
+//! * [`tag::RESULT`] — worker -> coordinator, a [`SolveResponse`];
+//! * [`tag::ERROR`] — worker -> coordinator, `[u64 job][string msg]`
+//!   (solver-level failure: deterministic, so the coordinator aborts the
+//!   block instead of retrying elsewhere; protocol-level failures carry
+//!   the `u64::MAX` sentinel instead of a job id);
+//! * [`tag::BUSY`] — worker -> coordinator, same payload shape: the
+//!   worker is at its connection cap; retry after a backoff.
+//!
+//! f32/f64 round-trip through `to_le_bytes`/`from_le_bytes` exactly, so
+//! the transport never perturbs a single bit of the matrices.
+
+use super::{LayerProblem, MethodSpec};
+use crate::config::{AlpsConfig, DsNoTConfig, SparseGptConfig, SparsityTarget};
+use crate::linalg::Matrix;
+use anyhow::{bail, Result};
+
+/// Payload tags inside the `net` frame header.
+pub mod tag {
+    /// Coordinator -> worker: solve one layer.
+    pub const SOLVE: u8 = 1;
+    /// Worker -> coordinator: solved layer.
+    pub const RESULT: u8 = 2;
+    /// Worker -> coordinator: solver error (job id + message). Solver
+    /// failures are deterministic — the coordinator aborts the block
+    /// rather than retrying the job elsewhere.
+    pub const ERROR: u8 = 3;
+    /// Worker -> coordinator: transient transport-level refusal
+    /// (connection cap reached). Retryable — the coordinator backs off
+    /// and reconnects instead of aborting the run.
+    pub const BUSY: u8 = 4;
+}
+
+/// One layer-solve job shipped to a worker.
+pub struct SolveRequest {
+    /// Coordinator-side job index; echoed back in the response so
+    /// pipelined requests reassemble deterministically.
+    pub job: u64,
+    pub target: SparsityTarget,
+    pub spec: MethodSpec,
+    /// Dense weights What `[n_in, n_out]`.
+    pub what: Matrix,
+    /// Calibration gram H = X^T X `[n_in, n_in]`.
+    pub h: Matrix,
+}
+
+/// Encode a solve request from borrowed parts — the coordinator's send
+/// path, which must not deep-copy a layer's matrices just to serialize
+/// them (a wide layer's gram alone can be gigabytes).
+pub fn encode_solve(
+    job: u64,
+    target: SparsityTarget,
+    spec: &MethodSpec,
+    what: &Matrix,
+    h: &Matrix,
+) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u64(job);
+    put_target(&mut e, target);
+    put_spec(&mut e, spec);
+    put_matrix(&mut e, what);
+    put_matrix(&mut e, h);
+    e.0
+}
+
+impl SolveRequest {
+    pub fn encode(&self) -> Vec<u8> {
+        encode_solve(self.job, self.target, &self.spec, &self.what, &self.h)
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<SolveRequest> {
+        let mut d = Dec::new(buf);
+        let req = SolveRequest {
+            job: d.u64()?,
+            target: get_target(&mut d)?,
+            spec: get_spec(&mut d)?,
+            what: get_matrix(&mut d)?,
+            h: get_matrix(&mut d)?,
+        };
+        d.finish()?;
+        Ok(req)
+    }
+
+    /// Rebuild the layer problem exactly as the coordinator had it.
+    pub fn problem(&self) -> Result<LayerProblem> {
+        LayerProblem::from_gram(self.h.clone(), self.what.clone())
+    }
+}
+
+/// A solved layer coming back from a worker.
+pub struct SolveResponse {
+    pub job: u64,
+    /// Worker-side wall-clock seconds for the solve.
+    pub secs: f64,
+    /// ADMM iterations (ALPS specs only, 0 otherwise).
+    pub admm_iters: u64,
+    /// Pruned weights `[n_in, n_out]`.
+    pub w: Matrix,
+}
+
+impl SolveResponse {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.u64(self.job);
+        e.f64(self.secs);
+        e.u64(self.admm_iters);
+        put_matrix(&mut e, &self.w);
+        e.0
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<SolveResponse> {
+        let mut d = Dec::new(buf);
+        let resp = SolveResponse {
+            job: d.u64()?,
+            secs: d.f64()?,
+            admm_iters: d.u64()?,
+            w: get_matrix(&mut d)?,
+        };
+        d.finish()?;
+        Ok(resp)
+    }
+}
+
+/// Encode a worker-side solver failure for `tag::ERROR`.
+pub fn encode_error(job: u64, msg: &str) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u64(job);
+    e.str(msg);
+    e.0
+}
+
+/// Decode a `tag::ERROR` payload into (job, message).
+pub fn decode_error(buf: &[u8]) -> Result<(u64, String)> {
+    let mut d = Dec::new(buf);
+    let job = d.u64()?;
+    let msg = d.str()?;
+    d.finish()?;
+    Ok((job, msg))
+}
+
+// ------------------------------------------------------------ primitives
+
+/// Append-only little-endian encoder.
+struct Enc(Vec<u8>);
+
+impl Enc {
+    fn new() -> Enc {
+        Enc(Vec::new())
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f32(&mut self, v: f32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.0.extend_from_slice(s.as_bytes());
+    }
+}
+
+/// Bounds-checked little-endian decoder.
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            bail!(
+                "truncated payload: wanted {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        Ok(String::from_utf8_lossy(self.take(len)?).into_owned())
+    }
+
+    /// Reject trailing garbage — catches desynced peers early.
+    fn finish(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("{} trailing bytes after payload", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------- domain types
+
+fn put_matrix(e: &mut Enc, m: &Matrix) {
+    e.u32(m.rows as u32);
+    e.u32(m.cols as u32);
+    // one up-front reservation: a gigabyte-scale gram must not be built
+    // through doubling reallocations that memcpy the whole buffer
+    e.0.reserve(m.data.len() * 4);
+    for &v in &m.data {
+        e.0.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn get_matrix(d: &mut Dec) -> Result<Matrix> {
+    let rows = d.u32()? as usize;
+    let cols = d.u32()? as usize;
+    // overflow-proof size check before any allocation
+    let bytes = rows.checked_mul(cols).and_then(|n| n.checked_mul(4));
+    let Some(bytes) = bytes.filter(|&b| b <= d.buf.len() - d.pos) else {
+        bail!("matrix {rows}x{cols} larger than remaining payload");
+    };
+    let raw = d.take(bytes)?;
+    let data = raw
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+fn put_target(e: &mut Enc, t: SparsityTarget) {
+    match t {
+        SparsityTarget::Unstructured(s) => {
+            e.u8(0);
+            e.f64(s);
+        }
+        SparsityTarget::NM { n, m } => {
+            e.u8(1);
+            e.u32(n as u32);
+            e.u32(m as u32);
+        }
+    }
+}
+
+fn get_target(d: &mut Dec) -> Result<SparsityTarget> {
+    match d.u8()? {
+        0 => Ok(SparsityTarget::Unstructured(d.f64()?)),
+        1 => Ok(SparsityTarget::NM { n: d.u32()? as usize, m: d.u32()? as usize }),
+        k => bail!("unknown sparsity-target kind {k}"),
+    }
+}
+
+fn put_alps(e: &mut Enc, c: &AlpsConfig) {
+    e.f32(c.rho0);
+    e.u32(c.update_every as u32);
+    e.f32(c.rho_factors.0);
+    e.f32(c.rho_factors.1);
+    e.f32(c.rho_factors.2);
+    e.f64(c.support_bands.0);
+    e.f64(c.support_bands.1);
+    e.u32(c.max_iters as u32);
+    e.u32(c.pcg_iters as u32);
+    e.u8(c.diag_scaling as u8);
+    e.f32(c.damp);
+}
+
+fn get_alps(d: &mut Dec) -> Result<AlpsConfig> {
+    Ok(AlpsConfig {
+        rho0: d.f32()?,
+        update_every: d.u32()? as usize,
+        rho_factors: (d.f32()?, d.f32()?, d.f32()?),
+        support_bands: (d.f64()?, d.f64()?),
+        max_iters: d.u32()? as usize,
+        pcg_iters: d.u32()? as usize,
+        diag_scaling: d.u8()? != 0,
+        damp: d.f32()?,
+    })
+}
+
+fn put_spec(e: &mut Enc, spec: &MethodSpec) {
+    match spec {
+        MethodSpec::Magnitude => e.u8(0),
+        MethodSpec::Wanda => e.u8(1),
+        MethodSpec::SparseGpt(c) => {
+            e.u8(2);
+            e.u32(c.block_size as u32);
+            e.f32(c.percdamp);
+        }
+        MethodSpec::DsNoT(c) => {
+            e.u8(3);
+            e.u32(c.max_cycles as u32);
+            e.f64(c.min_gain);
+        }
+        MethodSpec::Alps(c) => {
+            e.u8(4);
+            put_alps(e, c);
+        }
+        MethodSpec::AlpsStructured(c) => {
+            e.u8(5);
+            put_alps(e, c);
+        }
+    }
+}
+
+fn get_spec(d: &mut Dec) -> Result<MethodSpec> {
+    Ok(match d.u8()? {
+        0 => MethodSpec::Magnitude,
+        1 => MethodSpec::Wanda,
+        2 => MethodSpec::SparseGpt(SparseGptConfig {
+            block_size: d.u32()? as usize,
+            percdamp: d.f32()?,
+        }),
+        3 => MethodSpec::DsNoT(DsNoTConfig {
+            max_cycles: d.u32()? as usize,
+            min_gain: d.f64()?,
+        }),
+        4 => MethodSpec::Alps(get_alps(d)?),
+        5 => MethodSpec::AlpsStructured(get_alps(d)?),
+        k => bail!("unknown method-spec kind {k}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn specimen_specs() -> Vec<MethodSpec> {
+        vec![
+            MethodSpec::Magnitude,
+            MethodSpec::Wanda,
+            MethodSpec::SparseGpt(SparseGptConfig { block_size: 48, percdamp: 0.03 }),
+            MethodSpec::DsNoT(DsNoTConfig { max_cycles: 17, min_gain: 1e-7 }),
+            MethodSpec::Alps(AlpsConfig { rho0: 0.25, max_iters: 123, ..Default::default() }),
+            MethodSpec::AlpsStructured(AlpsConfig { pcg_iters: 3, ..Default::default() }),
+        ]
+    }
+
+    #[test]
+    fn request_roundtrips_bit_exact() {
+        let mut rng = Rng::new(1);
+        for (i, spec) in specimen_specs().into_iter().enumerate() {
+            let what = Matrix::randn(12, 6, &mut rng);
+            let h = Matrix::randn(12, 12, &mut rng);
+            let target = if i % 2 == 0 {
+                SparsityTarget::Unstructured(0.65)
+            } else {
+                SparsityTarget::NM { n: 2, m: 4 }
+            };
+            let req = SolveRequest {
+                job: 41 + i as u64,
+                target,
+                spec: spec.clone(),
+                what: what.clone(),
+                h: h.clone(),
+            };
+            let back = SolveRequest::decode(&req.encode()).unwrap();
+            assert_eq!(back.job, 41 + i as u64);
+            assert_eq!(back.target, target);
+            assert_eq!(back.spec, spec);
+            // bit-exact matrices: compare the raw f32 bit patterns
+            let bits = |m: &Matrix| m.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&back.what), bits(&what));
+            assert_eq!(bits(&back.h), bits(&h));
+        }
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::randn(8, 4, &mut rng);
+        let resp =
+            SolveResponse { job: 7, secs: 0.125, admm_iters: 42, w: w.clone() };
+        let back = SolveResponse::decode(&resp.encode()).unwrap();
+        assert_eq!(back.job, 7);
+        assert_eq!(back.secs, 0.125);
+        assert_eq!(back.admm_iters, 42);
+        assert_eq!(back.w, w);
+    }
+
+    #[test]
+    fn error_payload_roundtrips() {
+        let buf = encode_error(3, "structured ALPS does not support N:M targets");
+        let (job, msg) = decode_error(&buf).unwrap();
+        assert_eq!(job, 3);
+        assert!(msg.contains("N:M"));
+    }
+
+    #[test]
+    fn truncated_and_trailing_payloads_rejected() {
+        let mut rng = Rng::new(3);
+        let req = SolveRequest {
+            job: 1,
+            target: SparsityTarget::Unstructured(0.5),
+            spec: MethodSpec::Wanda,
+            what: Matrix::randn(4, 4, &mut rng),
+            h: Matrix::randn(4, 4, &mut rng),
+        };
+        let buf = req.encode();
+        // truncation at every prefix must error, never panic
+        for cut in [0, 1, 8, 9, buf.len() / 2, buf.len() - 1] {
+            assert!(SolveRequest::decode(&buf[..cut]).is_err(), "cut at {cut}");
+        }
+        // trailing garbage rejected
+        let mut long = buf.clone();
+        long.push(0);
+        assert!(SolveRequest::decode(&long).is_err());
+        // oversized matrix header rejected before allocation
+        let mut huge = Vec::new();
+        let mut e = Enc::new();
+        e.u64(1);
+        put_target(&mut e, SparsityTarget::Unstructured(0.5));
+        put_spec(&mut e, &MethodSpec::Wanda);
+        e.u32(u32::MAX);
+        e.u32(u32::MAX);
+        huge.extend_from_slice(&e.0);
+        let err = SolveRequest::decode(&huge).unwrap_err().to_string();
+        assert!(err.contains("larger than remaining"), "{err}");
+    }
+
+    #[test]
+    fn rebuilt_problem_matches_local_construction() {
+        use crate::pruning::testutil::random_problem;
+        let p = random_problem(10, 5, 40, 9);
+        let req = SolveRequest {
+            job: 0,
+            target: SparsityTarget::Unstructured(0.5),
+            spec: MethodSpec::Magnitude,
+            what: p.what.clone(),
+            h: p.h.clone(),
+        };
+        let back = SolveRequest::decode(&req.encode()).unwrap();
+        let q = back.problem().unwrap();
+        // the derived quantities are recomputed bit-identically
+        assert_eq!(q.g, p.g);
+        assert_eq!(q.denom, p.denom);
+    }
+}

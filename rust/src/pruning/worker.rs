@@ -1,0 +1,255 @@
+//! The pruning worker: hosts [`NativeEngine`] behind the binary frame
+//! protocol so a coordinator ([`crate::coordinator::ShardedEngine`]) can
+//! fan layer solves across machines.
+//!
+//! The worker is **stateless and method-agnostic**: every
+//! [`wire::SolveRequest`] carries its own [`MethodSpec`]
+//! (hyperparameters included) and sparsity target, so one worker pool
+//! serves ALPS, SparseGPT, Wanda, … runs concurrently, and a worker that
+//! restarts loses nothing but its in-flight solves (the coordinator
+//! reroutes those).
+//!
+//! Connections come through the shared [`crate::net`] layer: the accept
+//! loop, connection cap, and shutdown drain are [`NetServer`]'s; this
+//! module only decodes [`tag::SOLVE`] frames, solves, and answers
+//! [`tag::RESULT`] (or [`tag::ERROR`] with the job id when the solver
+//! itself fails — a deterministic failure the coordinator must not
+//! retry). Requests on one connection are processed in order; the
+//! coordinator pipelines a bounded number of them to keep the worker
+//! busy without unbounded buffering.
+//!
+//! CLI: `alps worker --addr 127.0.0.1:7979 [--max-conns 8]
+//! [--max-frame-mb 1024]`.
+
+use super::engine::{Engine as _, NativeEngine};
+use super::wire::{self, tag};
+use crate::net::framing::{read_frame, write_frame, FrameRead};
+use crate::net::server::finish_refusal;
+use crate::net::{ConnHandler, NetServer, ServerConfig, READ_POLL, WRITE_TIMEOUT};
+use anyhow::{Context as _, Result};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Worker endpoint configuration.
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    /// Concurrent coordinator connections (each coordinator opens one).
+    pub max_conns: usize,
+    /// Largest accepted request frame in bytes (bounds a layer's
+    /// weights + gram: ~1 GiB covers a 16k x 16k f32 gram).
+    pub max_frame_bytes: usize,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        WorkerConfig { max_conns: 8, max_frame_bytes: 1 << 30 }
+    }
+}
+
+/// A running worker endpoint. Construct, then [`Worker::serve`] on a
+/// bound listener; call [`Worker::request_shutdown`] from another thread
+/// (tests, signal handlers) to drain and stop.
+pub struct Worker {
+    net: NetServer,
+    cfg: WorkerConfig,
+    solved: AtomicUsize,
+}
+
+impl Worker {
+    pub fn new(cfg: WorkerConfig) -> Worker {
+        Worker {
+            net: NetServer::new(ServerConfig {
+                max_conns: cfg.max_conns,
+                ..Default::default()
+            }),
+            cfg,
+            solved: AtomicUsize::new(0),
+        }
+    }
+
+    /// Layers solved over this worker's lifetime.
+    pub fn layers_solved(&self) -> usize {
+        self.solved.load(Ordering::SeqCst)
+    }
+
+    /// Flag shutdown: in-flight solves finish and their results are
+    /// delivered, then `serve` returns.
+    pub fn request_shutdown(&self) {
+        self.net.shutdown();
+    }
+
+    /// Serve solve requests until [`Worker::request_shutdown`]. Blocks.
+    pub fn serve(&self, listener: TcpListener) -> Result<()> {
+        self.net.run(listener, &WorkerHandler { worker: self })
+    }
+}
+
+struct WorkerHandler<'w> {
+    worker: &'w Worker,
+}
+
+impl ConnHandler for WorkerHandler<'_> {
+    fn handle(&self, stream: TcpStream) -> Result<()> {
+        stream.set_read_timeout(Some(READ_POLL)).context("setting read timeout")?;
+        stream.set_write_timeout(Some(WRITE_TIMEOUT)).context("setting write timeout")?;
+        let _ = stream.set_nodelay(true);
+        let mut reader = stream.try_clone().context("cloning stream")?;
+        let mut writer = stream;
+        let max = self.worker.cfg.max_frame_bytes;
+        let shutdown = self.worker.net.shutdown_flag();
+        loop {
+            let (tag, payload) = match read_frame(&mut reader, max, Some(shutdown), None) {
+                Ok(FrameRead::Frame { tag, payload }) => (tag, payload),
+                Ok(FrameRead::Eof) | Ok(FrameRead::Shutdown) => return Ok(()),
+                Err(e) => {
+                    // an unreadable request (oversized frame, bad magic) is
+                    // deterministic — tell the coordinator why before
+                    // dropping the desynced connection, so its retry loop
+                    // reports the real cause instead of a network fault
+                    let _ = write_frame(
+                        &mut writer,
+                        tag::ERROR,
+                        &wire::encode_error(u64::MAX, &format!("request rejected: {e}")),
+                    );
+                    return Err(e);
+                }
+            };
+            // protocol-level failures carry the u64::MAX sentinel, never a
+            // real job id: the coordinator treats an ERROR for a job it
+            // does not own as a transport fault (reroute), not a solver
+            // verdict (abort)
+            if tag != tag::SOLVE {
+                write_frame(
+                    &mut writer,
+                    tag::ERROR,
+                    &wire::encode_error(u64::MAX, &format!("unexpected frame tag {tag}")),
+                )?;
+                continue;
+            }
+            let req = match wire::SolveRequest::decode(&payload) {
+                Ok(r) => r,
+                Err(e) => {
+                    write_frame(
+                        &mut writer,
+                        tag::ERROR,
+                        &wire::encode_error(u64::MAX, &format!("bad solve request: {e}")),
+                    )?;
+                    continue;
+                }
+            };
+            match solve(&req) {
+                Ok(resp) => {
+                    self.worker.solved.fetch_add(1, Ordering::SeqCst);
+                    write_frame(&mut writer, tag::RESULT, &resp.encode())?;
+                }
+                Err(e) => write_frame(
+                    &mut writer,
+                    tag::ERROR,
+                    &wire::encode_error(req.job, &e.to_string()),
+                )?,
+            }
+        }
+    }
+
+    /// Over-cap coordinators get a frame-level BUSY (retryable — the
+    /// dispatcher backs off and reconnects; only solver failures abort a
+    /// run), then a brief inbound drain so the reply isn't RST away.
+    fn refuse(&self, stream: TcpStream, cap: usize) {
+        let mut st = stream;
+        let _ = st.set_read_timeout(Some(READ_POLL));
+        let _ = st.set_write_timeout(Some(WRITE_TIMEOUT));
+        let _ = write_frame(
+            &mut st,
+            tag::BUSY,
+            &wire::encode_error(0, &format!("worker connection limit reached ({cap})")),
+        );
+        finish_refusal(&st);
+    }
+}
+
+/// Solve one request through the native engine — the exact code path a
+/// local run takes, so results are bit-identical.
+fn solve(req: &wire::SolveRequest) -> Result<wire::SolveResponse> {
+    let problem = req.problem()?;
+    let engine = NativeEngine::new(req.spec.clone());
+    let res = engine.solve_layer(&problem, req.target)?;
+    Ok(wire::SolveResponse {
+        job: req.job,
+        secs: res.secs,
+        admm_iters: res.admm_iters as u64,
+        w: res.w,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SparsityTarget;
+    use crate::pruning::testutil::random_problem;
+    use crate::pruning::MethodSpec;
+    use std::time::Duration;
+
+    fn roundtrip_solve(
+        stream: &mut TcpStream,
+        req: &wire::SolveRequest,
+    ) -> Result<wire::SolveResponse> {
+        write_frame(stream, tag::SOLVE, &req.encode())?;
+        match read_frame(stream, 1 << 30, None, Some(Duration::from_secs(30)))? {
+            FrameRead::Frame { tag: tag::RESULT, payload } => {
+                wire::SolveResponse::decode(&payload)
+            }
+            FrameRead::Frame { tag: tag::ERROR, payload } => {
+                let (job, msg) = wire::decode_error(&payload)?;
+                anyhow::bail!("worker error on job {job}: {msg}")
+            }
+            _ => anyhow::bail!("unexpected reply"),
+        }
+    }
+
+    #[test]
+    fn worker_solves_layers_bit_identically_over_loopback() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let worker = Worker::new(WorkerConfig::default());
+        std::thread::scope(|s| {
+            let srv = s.spawn(|| worker.serve(listener));
+            let mut stream = TcpStream::connect(addr).unwrap();
+            stream.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+
+            let target = SparsityTarget::Unstructured(0.5);
+            for (job, spec) in
+                [MethodSpec::Magnitude, MethodSpec::Wanda].into_iter().enumerate()
+            {
+                let p = random_problem(12, 6, 50, job as u64);
+                let req = wire::SolveRequest {
+                    job: job as u64,
+                    target,
+                    spec: spec.clone(),
+                    what: p.what.clone(),
+                    h: p.h.clone(),
+                };
+                let resp = roundtrip_solve(&mut stream, &req).unwrap();
+                assert_eq!(resp.job, job as u64);
+                let local = NativeEngine::new(spec).solve_layer(&p, target).unwrap();
+                assert_eq!(resp.w, local.w, "remote solve must be bit-identical");
+            }
+            assert_eq!(worker.layers_solved(), 2);
+
+            // a deterministic solver failure comes back as a tagged error
+            let p = random_problem(8, 4, 30, 7);
+            let req = wire::SolveRequest {
+                job: 9,
+                target: SparsityTarget::NM { n: 2, m: 4 },
+                spec: MethodSpec::AlpsStructured(Default::default()),
+                what: p.what.clone(),
+                h: p.h.clone(),
+            };
+            let err = roundtrip_solve(&mut stream, &req).unwrap_err().to_string();
+            assert!(err.contains("job 9"), "{err}");
+
+            drop(stream);
+            worker.request_shutdown();
+            srv.join().unwrap().unwrap();
+        });
+    }
+}

@@ -100,6 +100,26 @@ impl<'e, 'm> Batcher<'e, 'm> {
         self.queue.is_empty() && self.active.is_empty()
     }
 
+    /// Cancel a request whose client is gone: a queued request is dropped
+    /// before admission, an active sequence is evicted mid-decode (its KV
+    /// slot frees immediately instead of decoding to completion for
+    /// nobody). No [`Response`] is produced. Returns whether the id was
+    /// still in flight — `false` means it had already completed (or never
+    /// existed) and there was nothing to cancel.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if let Some(pos) = self.queue.iter().position(|(r, _)| r.id == id) {
+            self.queue.remove(pos);
+            self.metrics.record_cancelled();
+            return true;
+        }
+        if let Some(pos) = self.active.iter().position(|s| s.id == id) {
+            self.active.remove(pos);
+            self.metrics.record_cancelled();
+            return true;
+        }
+        false
+    }
+
     fn seq_finished(&self, s: &SeqState) -> bool {
         // `out` can be empty for a sequence evicted before emitting any
         // token (max_new == 0, prefill rejection); an empty output never
@@ -397,6 +417,37 @@ mod tests {
             assert_eq!(r.tokens, solo.tokens, "req {}", r.id);
         }
         assert_eq!(b.metrics.prompts_prefilled(), prompts.len());
+    }
+
+    #[test]
+    fn cancel_evicts_queued_and_active_requests() {
+        // client-disconnect eviction: a cancelled sequence stops decoding
+        // (no response is ever produced for it), the batch slot frees for
+        // waiting work, and survivors are unaffected
+        let m = random_model(37);
+        let e = Engine::dense(&m).unwrap();
+        let mut b = Batcher::new(&e, 2);
+        let id0 = b.submit(vec![1, 2], params(50)); // long generation
+        let id1 = b.submit(vec![3, 4], params(3));
+        let id2 = b.submit(vec![5], params(2)); // queued behind the cap
+        b.step().unwrap(); // admits id0 + id1
+        assert_eq!(b.active_ids(), vec![id0, id1]);
+
+        // cancel the long-running active sequence and the queued one
+        assert!(b.cancel(id0), "active sequence must be cancellable");
+        assert!(b.cancel(id2), "queued request must be cancellable");
+        assert_eq!(b.active_ids(), vec![id1]);
+        assert_eq!(b.pending(), 0);
+
+        let got = b.run_to_completion().unwrap();
+        // only the surviving request completes; nothing stray from id0/id2
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![id1]);
+        assert!(got[0].error.is_none());
+        assert_eq!(b.metrics.requests_cancelled(), 2);
+        // a finished (or unknown) id has nothing to cancel
+        assert!(!b.cancel(id1));
+        assert!(!b.cancel(999));
+        assert_eq!(b.metrics.requests_cancelled(), 2);
     }
 
     #[test]

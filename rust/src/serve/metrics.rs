@@ -26,6 +26,7 @@ pub struct ServeMetrics {
     prefill_secs: VecDeque<f64>,
     tokens_generated: usize,
     requests_completed: usize,
+    requests_cancelled: usize,
     prompts_prefilled: usize,
     prompt_tokens: usize,
     decode_wall_secs: f64,
@@ -90,6 +91,15 @@ impl ServeMetrics {
         self.requests_completed
     }
 
+    /// Record one request evicted because its client disconnected.
+    pub fn record_cancelled(&mut self) {
+        self.requests_cancelled += 1;
+    }
+
+    pub fn requests_cancelled(&self) -> usize {
+        self.requests_cancelled
+    }
+
     pub fn steps(&self) -> usize {
         self.steps_total
     }
@@ -147,6 +157,7 @@ impl ServeMetrics {
         t.row(&["tokens/s (decode)".to_string(), format!("{:.1}", self.tokens_per_sec())]);
         t.row(&["tokens generated".to_string(), self.tokens_generated.to_string()]);
         t.row(&["requests completed".to_string(), self.requests_completed.to_string()]);
+        t.row(&["requests cancelled".to_string(), self.requests_cancelled.to_string()]);
         t.row(&["decode steps".to_string(), self.steps().to_string()]);
         t.row(&["mean batch".to_string(), format!("{:.2}", self.mean_batch())]);
         for q in [50.0, 95.0, 99.0] {
@@ -200,9 +211,11 @@ mod tests {
         m.record_step(1, 0.030);
         m.record_request(0.5);
         m.record_request(1.5);
+        m.record_cancelled();
         assert_eq!(m.tokens_generated(), 7);
         assert_eq!(m.steps(), 3);
         assert_eq!(m.requests_completed(), 2);
+        assert_eq!(m.requests_cancelled(), 1);
         assert!((m.tokens_per_sec() - 7.0 / 0.060).abs() < 1e-9);
         assert!((m.mean_batch() - 7.0 / 3.0).abs() < 1e-9);
         // token multiset (ms): 10,10,20,20,20,20,30 — weighted nearest-rank

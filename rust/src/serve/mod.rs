@@ -23,11 +23,14 @@
 //!   runs the whole batch's linear layers as one `[batch, d_model]`
 //!   product, fanning across the matmul thread pool (`ALPS_THREADS` pins
 //!   the pool width for reproducible benches).
-//! * [`tcp`] — the threaded multi-connection TCP front-end: one thread
-//!   per connection (bounded by a connection cap) feeding a shared
-//!   `Mutex<Batcher>`, a scheduler thread driving decode steps, lock-free
-//!   `GET /healthz`, bounded request-line reads, and graceful
-//!   drain-on-shutdown. See its module docs for the wire protocol.
+//! * [`tcp`] — the serve wire protocol over the shared [`crate::net`]
+//!   transport layer: the accept loop, connection cap, bounded line
+//!   reads, and graceful drain-on-shutdown live in `net`; this module
+//!   adds the line protocol, the scheduler thread driving decode steps
+//!   over a shared `Mutex<Batcher>`, lock-free `GET /healthz`, and
+//!   client-disconnect cancellation (a connection that dies with
+//!   generations in flight evicts them from the batcher instead of
+//!   decoding to completion). See its module docs for the wire protocol.
 //! * [`metrics`] — throughput and latency accounting on
 //!   [`crate::util::Stats`]: tokens/s, per-step and per-token latency
 //!   p50/p95/p99, per-request latency, admission prefill latency, mean
@@ -62,9 +65,11 @@
 //!
 //! ## Known limits (open items)
 //!
-//! * No request cancellation or per-request deadlines: a flushing client
-//!   that disconnects still has its generations decoded to completion
-//!   (results are then discarded).
+//! * No per-request deadlines. Disconnect cancellation is in: a
+//!   connection that tears down with requests in flight cancels them in
+//!   the batcher ([`batcher::Batcher::cancel`]). A half-closed client
+//!   that is still reading keeps the EOF-flush contract — its work
+//!   decodes to completion and is delivered.
 //! * One scheduler thread drives decode; the parallelism inside a step
 //!   comes from the matmul pool. Multiple model replicas (one batcher
 //!   per replica) would scale further.

@@ -1,28 +1,27 @@
-//! Threaded multi-connection TCP front-end (std-only).
+//! Serve front-end: the line-oriented generation protocol over the shared
+//! [`crate::net`] transport layer.
 //!
-//! PR 1's front-end served one connection at a time: an idle connected
-//! client delayed every later client, including health probes. This
-//! module replaces it with one thread per connection feeding a **shared**
-//! continuous batcher:
+//! PR 2 grew this module into a full threaded TCP server; PR 4 extracted
+//! the reusable transport half (accept loop, connection cap, refusal
+//! pool, bounded line reads, graceful shutdown drain) into
+//! [`crate::net`], so this file now owns only the serve *protocol*:
 //!
-//! * The accept loop spawns a scoped thread per connection, bounded by
-//!   [`TcpConfig::max_conns`]. Excess connections get `err - connection
-//!   limit reached` and are closed — except `GET` health probes, which
-//!   are still answered (with `"at_capacity":true`) so monitoring works
-//!   when it matters most; the refusal pool itself is capped, and a
-//!   connect flood beyond it is dropped outright.
 //! * All connections submit into one `Mutex<Batcher>`; a dedicated
 //!   scheduler thread runs decode steps whenever work is queued (woken by
 //!   a condvar on submit), so requests from different connections share
 //!   the decode batch. Finished responses are routed back to the owning
 //!   connection over per-connection mpsc channels.
-//! * `GET /healthz` is answered from static model info plus atomics —
-//!   never touching the batcher lock — so probes stay responsive while
-//!   decode steps run.
+//! * `GET /healthz` is answered from static model info plus the
+//!   [`crate::net::NetServer`] connection gauge — never touching the
+//!   batcher lock — so probes stay responsive while decode steps run.
+//! * A disconnected client's outstanding generations are **cancelled**:
+//!   when a connection tears down with requests still in flight (read or
+//!   write error — the client is gone), their sequences are evicted from
+//!   the batcher instead of decoding to completion for nobody.
 //! * Graceful shutdown: the `shutdown` protocol line (or an accept-loop
-//!   exit) sets a flag; the scheduler drains all in-flight generations,
-//!   reader loops notice within one read-timeout tick, and `serve`
-//!   returns the final metrics report.
+//!   exit) triggers the net-layer shutdown; the scheduler drains all
+//!   in-flight generations, reader loops notice within one read-timeout
+//!   tick, and `serve` returns the final metrics report.
 //!
 //! ## Wire protocol (line-oriented)
 //!
@@ -40,26 +39,20 @@
 //! * A first line starting with `GET ` gets a minimal HTTP 200 health
 //!   response (so `curl http://addr/healthz` works) and closes.
 //! * Lines longer than [`TcpConfig::max_line_bytes`] get `err - line too
-//!   long` and the connection is closed — a malicious client cannot grow
-//!   an unbounded buffer.
+//!   long` and the connection is closed.
 
 use super::batcher::{Batcher, Response};
 use super::engine::{Engine, SamplingParams};
+use crate::net::framing::{read_line_bounded, LineRead};
+use crate::net::server::{finish_refusal, respond_http_json, write_http_json};
+use crate::net::{lock, ConnHandler, NetServer, ServerConfig, READ_POLL, WRITE_TIMEOUT};
 use anyhow::{Context as _, Result};
 use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{mpsc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// Read timeout on client sockets: how quickly an idle reader notices a
-/// server shutdown.
-const READ_POLL: Duration = Duration::from_millis(200);
-/// Write timeout on client sockets: a client that stops reading (full TCP
-/// window) fails its handler instead of wedging the scope join at
-/// shutdown.
-const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
 /// Scheduler condvar timeout while idle (also bounds shutdown latency).
 const IDLE_POLL: Duration = Duration::from_millis(50);
 /// Slice for response-wait polling during a flush.
@@ -71,10 +64,6 @@ const SHUTDOWN_DRAIN: Duration = Duration::from_secs(5);
 /// How long an over-cap refusal waits to classify the client (healthz
 /// probe vs line-protocol client) before giving up on it.
 const REFUSE_READ_TIMEOUT: Duration = Duration::from_millis(500);
-/// Concurrent refusal threads; connections beyond this during a connect
-/// flood are dropped without ceremony so the cap actually bounds server
-/// resources.
-const MAX_REFUSALS: usize = 8;
 
 /// Front-end configuration (CLI flags `--max-batch`, `--max-conns`,
 /// `--max-line`).
@@ -106,14 +95,7 @@ pub fn fmt_tokens(tokens: &[u16]) -> String {
     tokens.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(" ")
 }
 
-/// Poison-tolerant lock: a panicked connection thread must not take the
-/// whole server down with it.
-fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(PoisonError::into_inner)
-}
-
-/// State shared between the accept loop, connection threads, and the
-/// scheduler thread.
+/// State shared between the connection threads and the scheduler thread.
 struct Shared<'e, 'm> {
     engine: &'e Engine<'m>,
     batcher: Mutex<Batcher<'e, 'm>>,
@@ -121,32 +103,68 @@ struct Shared<'e, 'm> {
     work: Condvar,
     /// Reply route per in-flight request id.
     replies: Mutex<HashMap<u64, mpsc::Sender<Response>>>,
-    shutdown: AtomicBool,
-    conns: AtomicUsize,
-    /// Live over-cap refusal threads (bounded by [`MAX_REFUSALS`]).
-    refusing: AtomicUsize,
-    addr: SocketAddr,
-    max_conns: usize,
+    /// Connection lifecycle + shutdown flag live in the net layer.
+    net: NetServer,
 }
 
 impl Shared<'_, '_> {
-    /// Flag shutdown, wake the scheduler, and poke the blocking accept
-    /// loop with a dummy connection so it observes the flag. A wildcard
-    /// bind (0.0.0.0 / ::) is not a connectable address, so the poke
-    /// targets loopback on the same port. Best-effort: if the connect
-    /// fails anyway, the accept loop still exits on the next inbound
-    /// connection attempt.
     fn begin_shutdown(&self) {
-        self.shutdown.store(true, Ordering::SeqCst);
+        self.net.shutdown();
         self.work.notify_all();
-        let mut addr = self.addr;
-        if addr.ip().is_unspecified() {
-            addr.set_ip(match addr {
-                SocketAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
-                SocketAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
-            });
+    }
+}
+
+/// The serve protocol plugged into the net accept loop.
+struct FrontEnd<'a, 'e, 'm> {
+    shared: &'a Shared<'e, 'm>,
+    params: &'a SamplingParams,
+    cfg: &'a TcpConfig,
+}
+
+impl ConnHandler for FrontEnd<'_, '_, '_> {
+    fn handle(&self, stream: TcpStream) -> Result<()> {
+        handle_conn(stream, self.shared, self.params, self.cfg)
+    }
+
+    /// Over-cap connections: `GET` health probes are still answered
+    /// (monitoring matters most when the server is saturated); everything
+    /// else gets the refusal line. One bounded read with a short deadline
+    /// classifies the client, then the write side is half-closed and
+    /// pipelined input briefly drained — closing with unread inbound data
+    /// buffered can RST the reply away before the client reads it.
+    fn refuse(&self, stream: TcpStream, cap: usize) {
+        let mut st = stream;
+        let _ = st.set_read_timeout(Some(REFUSE_READ_TIMEOUT));
+        let _ = st.set_write_timeout(Some(WRITE_TIMEOUT));
+        let mut first = [0u8; 512];
+        let mut have = 0usize;
+        // classify from up to a few bounded reads: "GET " can arrive split
+        // across TCP segments; stop once 4 bytes or a newline are in hand,
+        // or the client stalls past the read deadline (silent => refuse)
+        for _ in 0..4 {
+            match std::io::Read::read(&mut st, &mut first[have..]) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => {
+                    have += n;
+                    if have >= 4 || first[..have].contains(&b'\n') {
+                        break;
+                    }
+                }
+            }
         }
-        let _ = TcpStream::connect(addr);
+        if first[..have].starts_with(b"GET ") {
+            let m = self.shared.engine.model();
+            let body = format!(
+                "{{\"model\":\"{}\",\"backend\":\"{}\",\"connections\":{},\"at_capacity\":true}}\n",
+                m.cfg.name,
+                self.shared.engine.label(),
+                self.shared.net.connections(),
+            );
+            let _ = write_http_json(&mut st, &body);
+        } else {
+            let _ = writeln!(st, "err - connection limit reached ({cap})");
+        }
+        finish_refusal(&st);
     }
 }
 
@@ -160,118 +178,28 @@ pub fn serve(
     params: &SamplingParams,
     cfg: &TcpConfig,
 ) -> Result<String> {
-    let addr = listener.local_addr().context("reading bound address")?;
     let shared = Shared {
         engine,
         batcher: Mutex::new(Batcher::new(engine, cfg.max_batch)),
         work: Condvar::new(),
         replies: Mutex::new(HashMap::new()),
-        shutdown: AtomicBool::new(false),
-        conns: AtomicUsize::new(0),
-        refusing: AtomicUsize::new(0),
-        addr,
-        max_conns: cfg.max_conns.max(1),
+        net: NetServer::new(ServerConfig {
+            max_conns: cfg.max_conns,
+            ..Default::default()
+        }),
     };
+    let front = FrontEnd { shared: &shared, params, cfg };
     std::thread::scope(|s| {
         s.spawn(|| scheduler(&shared));
-        for stream in listener.incoming() {
-            if shared.shutdown.load(Ordering::SeqCst) {
-                break;
-            }
-            let stream = match stream {
-                Ok(st) => st,
-                Err(e) => {
-                    eprintln!("[serve] accept error: {e}");
-                    continue;
-                }
-            };
-            if shared.conns.load(Ordering::SeqCst) >= shared.max_conns {
-                // refusal drains briefly; keep the accept loop free by
-                // doing it off-thread, with the refusal pool itself capped
-                // so a connect flood can't mint unbounded threads
-                if shared.refusing.load(Ordering::SeqCst) < MAX_REFUSALS {
-                    shared.refusing.fetch_add(1, Ordering::SeqCst);
-                    let shared_ref = &shared;
-                    s.spawn(move || {
-                        refuse_conn(stream, shared_ref);
-                        shared_ref.refusing.fetch_sub(1, Ordering::SeqCst);
-                    });
-                }
-                continue; // beyond the refusal pool: dropped without ceremony
-            }
-            // incremented here (not in the spawned thread) so the cap check
-            // on the next accept already sees this connection
-            shared.conns.fetch_add(1, Ordering::SeqCst);
-            let shared_ref = &shared;
-            s.spawn(move || {
-                if let Err(e) = handle_conn(stream, shared_ref, params, cfg) {
-                    eprintln!("[serve] connection error: {e}");
-                }
-                shared_ref.conns.fetch_sub(1, Ordering::SeqCst);
-            });
+        if let Err(e) = shared.net.run(listener, &front) {
+            eprintln!("[serve] front-end error: {e}");
         }
-        // accept loop done: let the scheduler drain and exit, readers
-        // notice within one READ_POLL tick, then the scope joins everyone
-        shared.shutdown.store(true, Ordering::SeqCst);
-        shared.work.notify_all();
+        // net.run raised the shutdown flag; wake the scheduler so it
+        // drains and exits, then the scope joins it
+        shared.begin_shutdown();
     });
     let report = lock(&shared.batcher).metrics.render();
     Ok(report)
-}
-
-/// Handle an over-cap connection. `GET` health probes are still answered
-/// (monitoring matters most when the server is saturated); everything
-/// else is refused with an error line. One bounded read with a short
-/// deadline classifies the client, then the write side is half-closed and
-/// pipelined input briefly drained — closing with unread inbound data
-/// buffered can RST the reply away before the client reads it (same
-/// hazard the healthz header drain avoids).
-fn refuse_conn(stream: TcpStream, shared: &Shared) {
-    let mut st = stream;
-    let _ = st.set_read_timeout(Some(REFUSE_READ_TIMEOUT));
-    let _ = st.set_write_timeout(Some(WRITE_TIMEOUT));
-    let mut first = [0u8; 512];
-    let mut have = 0usize;
-    // classify from up to a few bounded reads: "GET " can arrive split
-    // across TCP segments; stop once 4 bytes or a newline are in hand, or
-    // the client stalls past the read deadline (silent client => refuse)
-    for _ in 0..4 {
-        match std::io::Read::read(&mut st, &mut first[have..]) {
-            Ok(0) | Err(_) => break,
-            Ok(n) => {
-                have += n;
-                if have >= 4 || first[..have].contains(&b'\n') {
-                    break;
-                }
-            }
-        }
-    }
-    if first[..have].starts_with(b"GET ") {
-        let m = shared.engine.model();
-        let body = format!(
-            "{{\"model\":\"{}\",\"backend\":\"{}\",\"connections\":{},\"at_capacity\":true}}\n",
-            m.cfg.name,
-            shared.engine.label(),
-            shared.conns.load(Ordering::SeqCst),
-        );
-        let _ = write!(
-            st,
-            "HTTP/1.1 200 OK\r\nContent-Type: application/json\r\n\
-             Content-Length: {}\r\nConnection: close\r\n\r\n{}",
-            body.len(),
-            body
-        );
-    } else {
-        let _ = writeln!(st, "err - connection limit reached ({})", shared.max_conns);
-    }
-    let _ = st.shutdown(std::net::Shutdown::Write);
-    let mut sink = [0u8; 512];
-    for _ in 0..8 {
-        match std::io::Read::read(&mut st, &mut sink) {
-            Ok(0) | Err(_) => break, // EOF, timeout, or reset: done either way
-            Ok(_) => continue,
-        }
-    }
 }
 
 /// Scheduler thread: run decode steps whenever work is queued, route
@@ -281,7 +209,7 @@ fn scheduler(shared: &Shared) {
     loop {
         let mut b = lock(&shared.batcher);
         while b.is_idle() {
-            if shared.shutdown.load(Ordering::SeqCst) {
+            if shared.net.is_shutdown() {
                 return;
             }
             b = match shared.work.wait_timeout(b, IDLE_POLL) {
@@ -313,89 +241,6 @@ fn scheduler(shared: &Shared) {
     }
 }
 
-/// Outcome of one bounded line read.
-enum LineRead {
-    Line(String),
-    TooLong,
-    Eof,
-    Shutdown,
-}
-
-/// Read one `\n`-terminated line, holding at most `max` bytes of it in
-/// memory. Oversized lines are discarded as they stream in and reported
-/// as [`LineRead::TooLong`]. Read-timeout ticks re-check the shutdown
-/// flag so blocked readers terminate promptly.
-fn read_line_bounded<R: BufRead>(
-    r: &mut R,
-    max: usize,
-    shutdown: &AtomicBool,
-) -> std::io::Result<LineRead> {
-    let mut buf: Vec<u8> = Vec::new();
-    let mut too_long = false;
-    loop {
-        if shutdown.load(Ordering::SeqCst) {
-            return Ok(LineRead::Shutdown);
-        }
-        let (consumed, done) = {
-            let chunk = match r.fill_buf() {
-                Ok(c) => c,
-                Err(e)
-                    if matches!(
-                        e.kind(),
-                        std::io::ErrorKind::WouldBlock
-                            | std::io::ErrorKind::TimedOut
-                            | std::io::ErrorKind::Interrupted
-                    ) =>
-                {
-                    continue
-                }
-                Err(e) => return Err(e),
-            };
-            if chunk.is_empty() {
-                // EOF: a non-empty partial line still counts as a line
-                let done = if too_long {
-                    LineRead::TooLong
-                } else if buf.is_empty() {
-                    LineRead::Eof
-                } else {
-                    LineRead::Line(String::from_utf8_lossy(&buf).into_owned())
-                };
-                (0, Some(done))
-            } else {
-                match chunk.iter().position(|&b| b == b'\n') {
-                    Some(p) => {
-                        if !too_long && buf.len() + p > max {
-                            too_long = true;
-                        }
-                        if !too_long {
-                            buf.extend_from_slice(&chunk[..p]);
-                        }
-                        let done = if too_long {
-                            LineRead::TooLong
-                        } else {
-                            LineRead::Line(String::from_utf8_lossy(&buf).into_owned())
-                        };
-                        (p + 1, Some(done))
-                    }
-                    None => {
-                        if buf.len() + chunk.len() > max {
-                            too_long = true;
-                            buf.clear(); // cap memory; the line is rejected
-                        } else {
-                            buf.extend_from_slice(chunk);
-                        }
-                        (chunk.len(), None)
-                    }
-                }
-            }
-        };
-        r.consume(consumed);
-        if let Some(l) = done {
-            return Ok(l);
-        }
-    }
-}
-
 /// Wait for all of this connection's outstanding generations and write
 /// one result line per request (sorted by id). Requests not done by the
 /// deadline (shortened once a server shutdown begins) are reported as
@@ -413,7 +258,7 @@ fn flush_results(
     let mut drain_deadline: Option<Instant> = None;
     while !outstanding.is_empty() {
         let now = Instant::now();
-        if shared.shutdown.load(Ordering::SeqCst) && drain_deadline.is_none() {
+        if shared.net.is_shutdown() && drain_deadline.is_none() {
             drain_deadline = Some(now + SHUTDOWN_DRAIN);
         }
         let until = drain_deadline.map_or(deadline, |d| d.min(deadline));
@@ -437,30 +282,72 @@ fn flush_results(
             None => writeln!(stream, "ok {} {}", r.id, fmt_tokens(&r.tokens))?,
         }
     }
-    for id in outstanding.drain() {
+    // timed-out requests are cancelled outright — nobody is waiting for
+    // them anymore, so their sequences must not keep decoding to
+    // completion in a batch slot. Cancel before writing the error lines:
+    // a failed write must not leave the generations running (the ids are
+    // already out of `outstanding`, so the teardown won't see them).
+    let timed_out: Vec<u64> = outstanding.drain().collect();
+    if !timed_out.is_empty() {
+        let mut b = lock(&shared.batcher);
+        let mut replies = lock(&shared.replies);
+        for id in &timed_out {
+            replies.remove(id);
+            b.cancel(*id);
+        }
+    }
+    for id in timed_out {
         writeln!(stream, "err {id} timed out waiting for generation")?;
-        lock(&shared.replies).remove(&id);
     }
     println!("[serve] {}", lock(&shared.batcher).metrics.summary());
     Ok(())
 }
 
+/// One connection: protocol loop + guaranteed teardown. Any request still
+/// outstanding when the loop ends — a write error means the client is
+/// gone, a read error means it vanished mid-line — is cancelled in the
+/// batcher so its sequence stops decoding, and its reply route dropped so
+/// the shared map does not accumulate dead entries.
 fn handle_conn(
     stream: TcpStream,
     shared: &Shared,
     params: &SamplingParams,
     cfg: &TcpConfig,
 ) -> Result<()> {
+    let (tx, rx) = mpsc::channel::<Response>();
+    let mut outstanding: HashSet<u64> = HashSet::new();
+    let res = conn_loop(stream, shared, params, cfg, &tx, &rx, &mut outstanding);
+    if !outstanding.is_empty() {
+        // lock order matches the submit path: batcher, then replies
+        let mut b = lock(&shared.batcher);
+        let mut replies = lock(&shared.replies);
+        for id in outstanding.drain() {
+            replies.remove(&id);
+            b.cancel(id);
+        }
+    }
+    res
+}
+
+#[allow(clippy::too_many_arguments)]
+fn conn_loop(
+    stream: TcpStream,
+    shared: &Shared,
+    params: &SamplingParams,
+    cfg: &TcpConfig,
+    tx: &mpsc::Sender<Response>,
+    rx: &mpsc::Receiver<Response>,
+    outstanding: &mut HashSet<u64>,
+) -> Result<()> {
     stream.set_read_timeout(Some(READ_POLL)).context("setting read timeout")?;
     stream.set_write_timeout(Some(WRITE_TIMEOUT)).context("setting write timeout")?;
     let _ = stream.set_nodelay(true);
     let mut reader = BufReader::new(stream.try_clone().context("cloning stream")?);
     let mut stream = stream;
-    let (tx, rx) = mpsc::channel::<Response>();
-    let mut outstanding: HashSet<u64> = HashSet::new();
     let mut first = true;
     loop {
-        let line = match read_line_bounded(&mut reader, cfg.max_line_bytes, &shared.shutdown)? {
+        let shutdown_flag = shared.net.shutdown_flag();
+        let line = match read_line_bounded(&mut reader, cfg.max_line_bytes, shutdown_flag)? {
             LineRead::Line(l) => l,
             LineRead::TooLong => {
                 writeln!(stream, "err - line too long (max {} bytes)", cfg.max_line_bytes)?;
@@ -472,23 +359,16 @@ fn handle_conn(
             // too: the drain decodes acked work to completion, so deliver
             // it instead of dropping it (flush_results shortens its
             // deadline once shutdown is flagged). Best-effort either way:
-            // a fully-gone client just fails the writes.
+            // a fully-gone client fails the writes, and the teardown in
+            // `handle_conn` cancels whatever is then still outstanding.
             LineRead::Eof | LineRead::Shutdown => {
                 if !outstanding.is_empty() {
-                    let _ = flush_results(&mut stream, &rx, &mut outstanding, shared);
+                    let _ = flush_results(&mut stream, rx, outstanding, shared);
                 }
                 break;
             }
         };
         if first && line.starts_with("GET ") {
-            // drain the request headers before replying: closing with
-            // unread data still buffered can RST the response away
-            loop {
-                match read_line_bounded(&mut reader, cfg.max_line_bytes, &shared.shutdown)? {
-                    LineRead::Line(h) if !h.trim().is_empty() => continue,
-                    _ => break,
-                }
-            }
             let m = shared.engine.model();
             let body = format!(
                 "{{\"model\":\"{}\",\"backend\":\"{}\",\"vocab\":{},\"seq_len\":{},\
@@ -497,16 +377,10 @@ fn handle_conn(
                 shared.engine.label(),
                 m.cfg.vocab,
                 m.cfg.seq_len,
-                shared.conns.load(Ordering::SeqCst),
+                shared.net.connections(),
                 cfg.max_batch,
             );
-            write!(
-                stream,
-                "HTTP/1.1 200 OK\r\nContent-Type: application/json\r\n\
-                 Content-Length: {}\r\nConnection: close\r\n\r\n{}",
-                body.len(),
-                body
-            )?;
+            respond_http_json(&mut reader, &mut stream, cfg.max_line_bytes, shutdown_flag, &body)?;
             break;
         }
         first = false;
@@ -545,15 +419,7 @@ fn handle_conn(
             // answer rather than leaving a client blocked on read
             writeln!(stream, "err - no pending requests")?;
         } else {
-            flush_results(&mut stream, &rx, &mut outstanding, shared)?;
-        }
-    }
-    // connection over: drop reply routes for anything still outstanding so
-    // the shared map does not accumulate dead entries
-    if !outstanding.is_empty() {
-        let mut replies = lock(&shared.replies);
-        for id in outstanding {
-            replies.remove(&id);
+            flush_results(&mut stream, rx, outstanding, shared)?;
         }
     }
     Ok(())
@@ -565,6 +431,7 @@ mod tests {
     use crate::model::transformer::testutil::random_model;
     use crate::util::Timer;
     use std::io::Read;
+    use std::net::SocketAddr;
 
     fn connect(addr: SocketAddr) -> (BufReader<TcpStream>, TcpStream) {
         let s = TcpStream::connect(addr).unwrap();

@@ -246,3 +246,65 @@ fn e2e_save_load_pruned_checkpoint() {
     let p2 = perplexity(&m2, ids).unwrap();
     assert!((p1 - p2).abs() < 1e-9, "{p1} vs {p2}");
 }
+
+#[test]
+fn e2e_sharded_prune_matches_native_end_to_end() {
+    // no artifacts needed: the whole pipeline (calibration capture ->
+    // gram -> sharded solve over a loopback worker -> write-back) on a
+    // synthetic model must be bit-identical to the in-process engine
+    use alps::config::ModelConfig;
+    use alps::coordinator::{ShardedConfig, ShardedEngine};
+    use alps::pruning::worker::{Worker, WorkerConfig};
+    use std::net::TcpListener;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let cfg = ModelConfig {
+        name: "sharded-e2e".into(),
+        d_model: 16,
+        d_ff: 32,
+        n_layers: 2,
+        n_heads: 4,
+        vocab: 24,
+        seq_len: 12,
+    };
+    let mut rng = alps::util::Rng::new(0xD157);
+    let calib: Vec<Vec<u16>> = (0..4)
+        .map(|_| (0..8).map(|_| rng.below(24) as u16).collect())
+        .collect();
+    let target = SparsityTarget::Unstructured(0.6);
+    let spec = MethodSpec::parse("sparsegpt").unwrap();
+
+    let mut m_native = Model::random(cfg.clone(), 1234).unwrap();
+    prune(&mut m_native, calib.clone(), target, "sparsegpt");
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let worker = Arc::new(Worker::new(WorkerConfig::default()));
+    let w = worker.clone();
+    std::thread::spawn(move || {
+        let _ = w.serve(listener);
+    });
+    let engine = ShardedEngine::with_config(
+        spec,
+        vec![addr],
+        ShardedConfig { retry_backoff: Duration::from_millis(10), ..Default::default() },
+    )
+    .unwrap();
+    let mut m_sharded = Model::random(cfg, 1234).unwrap();
+    PruneSession::builder()
+        .calib(calib)
+        .target(target)
+        .engine(Box::new(engine))
+        .run(&mut m_sharded)
+        .unwrap();
+    worker.request_shutdown();
+
+    for (name, t_native) in &m_native.weights.tensors {
+        let t_sharded = m_sharded.weights.tensors.get(name).unwrap();
+        assert_eq!(
+            t_native.data, t_sharded.data,
+            "tensor '{name}' differs between native and sharded e2e runs"
+        );
+    }
+}
