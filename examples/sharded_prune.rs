@@ -1,6 +1,10 @@
 //! Distributed pruning tour: shard a `PruneSession` across a pool of
 //! workers and watch per-worker progress — all in one process over
-//! loopback, so no setup is needed.
+//! loopback, so no setup is needed. Exercises the v2 protocol: the
+//! engine keeps its worker connections alive across blocks, ships raw
+//! activations instead of grams (the workers build H themselves), and
+//! the workers heartbeat while solving so a dead pool member is detected
+//! in seconds.
 //!
 //!     cargo run --release --example sharded_prune
 //!
@@ -10,12 +14,13 @@
 //! hostA$ alps worker --addr 0.0.0.0:7979
 //! hostB$ alps worker --addr 0.0.0.0:7979
 //! coord$ alps prune --random --model alps-tiny --method alps --sparsity 0.7 \
-//!            --workers hostA:7979,hostB:7979 --status-addr 127.0.0.1:7878
+//!            --workers hostA:7979,hostB:7979 --ship-activations \
+//!            --status-addr 127.0.0.1:7878
 //! coord$ curl http://127.0.0.1:7878/status   # live JSON progress
 //! ```
 
 use alps::config::{AlpsConfig, ModelConfig, SparsityTarget};
-use alps::coordinator::ShardedEngine;
+use alps::coordinator::{ShardedConfig, ShardedEngine};
 use alps::data::synthetic_windows;
 use alps::model::Model;
 use alps::pruning::worker::{Worker, WorkerConfig};
@@ -40,12 +45,23 @@ fn main() -> anyhow::Result<()> {
     }
     println!("worker pool: {}", addrs.join(", "));
 
-    // --- 2. a sharded engine is just another `Engine` for the session
+    // --- 2. a sharded engine is just another `Engine` for the session;
+    // `ship_activations` sends a layer's calibration rows X instead of
+    // the O(n_in^2) gram whenever X is strictly smaller — with 2
+    // calibration windows (256 rows) that's the wide mlp.w2 layers
+    // (n_in = d_ff = 512), while the square 128-input layers keep the
+    // smaller gram: the engine picks the cheaper encoding per layer.
+    // The pool's connections persist across the model's blocks (one
+    // dial per worker for the whole run).
     let cfg = ModelConfig::preset("alps-tiny")?;
     let mut model = Model::random(cfg.clone(), 7)?;
-    let calib = synthetic_windows(8, cfg.seq_len, cfg.vocab, 0xCA11B);
+    let calib = synthetic_windows(2, cfg.seq_len, cfg.vocab, 0xCA11B);
     let spec = MethodSpec::Alps(AlpsConfig { max_iters: 120, ..Default::default() });
-    let engine = ShardedEngine::new(spec, addrs)?;
+    let engine = ShardedEngine::with_config(
+        spec,
+        addrs,
+        ShardedConfig { ship_activations: true, ..Default::default() },
+    )?;
 
     // --- 3. the observer sees which pool member solved each layer (the
     // same attribution `--status-addr` serves as JSON over TCP)
@@ -65,7 +81,11 @@ fn main() -> anyhow::Result<()> {
     println!("-> {}", report.summary());
 
     for (i, w) in workers.iter().enumerate() {
-        println!("worker {i}: {} layers solved", w.layers_solved());
+        println!(
+            "worker {i}: {} layers solved over {} connection(s)",
+            w.layers_solved(),
+            w.connections_accepted(),
+        );
         w.request_shutdown();
     }
     Ok(())

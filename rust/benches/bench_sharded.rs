@@ -1,9 +1,12 @@
 //! Distributed pruning benchmark: layer-solve throughput of the native
 //! in-process engine vs a [`ShardedEngine`] over loopback worker pools of
-//! 1 and 2 members, plus the wire/codec overhead per layer. Loopback
-//! makes the transport cost visible without hiding it behind real
-//! network latency — the point is to bound the protocol overhead, and to
-//! verify (every run) that sharded results stay bit-identical to native.
+//! 1 and 2 members, plus the wire/codec cost per layer — including the
+//! protocol-v2 comparison of gram-on-coordinator vs gram-on-worker
+//! (`--ship-activations`) payload sizes and wall time. Loopback makes the
+//! transport cost visible without hiding it behind real network latency —
+//! the point is to bound the protocol overhead, and to verify (every run)
+//! that sharded results stay bit-identical to native on both calibration
+//! paths.
 //!
 //!     cargo bench --bench bench_sharded
 //!     cargo bench --bench bench_sharded -- --smoke   # reduced CI workload
@@ -13,6 +16,7 @@
 use alps::bench::synthetic_problem;
 use alps::config::{AlpsConfig, SparsityTarget};
 use alps::coordinator::{ShardedConfig, ShardedEngine};
+use alps::pruning::wire::{encode_solve, CalibRef};
 use alps::pruning::worker::{Worker, WorkerConfig};
 use alps::pruning::{Engine, LayerJob, MethodSpec, NativeEngine};
 use alps::util::table::Table;
@@ -45,6 +49,7 @@ fn main() -> anyhow::Result<()> {
     let mode = if smoke { " (smoke)" } else { "" };
     println!("== bench_sharded: distributed layer solves{mode} ==");
 
+    // ---------------------------------------------- (a) engine throughput
     let (n_layers, n_in, n_out, rows) =
         if smoke { (6, 24, 12, 80) } else { (24, 64, 32, 256) };
     let alps_iters = if smoke { 40 } else { 150 };
@@ -90,11 +95,85 @@ fn main() -> anyhow::Result<()> {
             format!("{:.1}", n_layers as f64 / secs),
             "yes".into(),
         ]);
+        engine.close();
         for (_, w) in &workers {
             w.request_shutdown();
         }
     }
     table.print();
+
+    // ------------------- (b) gram-on-coordinator vs gram-on-worker (wide)
+    // wide-layer fixture: calibration rows < n_in, where shipping
+    // X [rows, n_in] beats shipping H [n_in, n_in]
+    let (wn_layers, wn_in, wn_out, wrows) =
+        if smoke { (6, 48, 16, 20) } else { (16, 192, 64, 96) };
+    assert!(wrows < wn_in, "fixture must be wide for the byte comparison");
+    let wspec = MethodSpec::Alps(AlpsConfig {
+        max_iters: if smoke { 30 } else { 100 },
+        ..Default::default()
+    });
+    let wjs = jobs(wn_layers, wn_in, wn_out, wrows);
+
+    // per-layer wire bytes, both encodings of the same request
+    let p = &wjs[0].problem;
+    let x = p.x.as_deref().expect("synthetic problems retain activations");
+    let bytes_gram =
+        encode_solve(0, target, &wspec, &p.what, CalibRef::Gram(&p.h)).len();
+    let bytes_acts =
+        encode_solve(0, target, &wspec, &p.what, CalibRef::Activations(x)).len();
+    assert!(
+        bytes_acts < bytes_gram,
+        "activation shipping must cut wire bytes when rows < n_in \
+         ({bytes_acts}B !< {bytes_gram}B)"
+    );
+
+    let w_native = NativeEngine::new(wspec.clone());
+    let t = Timer::start();
+    let w_ref = w_native.solve_block(&wjs, target)?;
+    let w_native_secs = t.elapsed_secs();
+
+    let mut wtable =
+        Table::new(&["calibration", "bytes/layer", "secs", "layers/s", "bit-identical"]);
+    wtable.row(&[
+        "(native)".into(),
+        "-".into(),
+        format!("{w_native_secs:.3}"),
+        format!("{:.1}", wn_layers as f64 / w_native_secs),
+        "-".into(),
+    ]);
+    for ship in [false, true] {
+        let (addr, worker) = spawn_worker();
+        let engine = ShardedEngine::with_config(
+            wspec.clone(),
+            vec![addr],
+            ShardedConfig { ship_activations: ship, ..Default::default() },
+        )?;
+        let t = Timer::start();
+        let results = engine.solve_block(&wjs, target)?;
+        let secs = t.elapsed_secs();
+        let identical = results.iter().zip(&w_ref).all(|(r, l)| r.w == l.w);
+        assert!(
+            identical,
+            "sharded (ship_activations={ship}) diverged from native — transport bug"
+        );
+        let calib_label =
+            if ship { "activations (worker gram)" } else { "gram (coordinator)" };
+        wtable.row(&[
+            calib_label.to_string(),
+            (if ship { bytes_acts } else { bytes_gram }).to_string(),
+            format!("{secs:.3}"),
+            format!("{:.1}", wn_layers as f64 / secs),
+            "yes".into(),
+        ]);
+        engine.close();
+        worker.request_shutdown();
+    }
+    wtable.print();
+    println!(
+        "wide fixture [{wn_in}x{wn_out}, {wrows} calib rows]: shipping activations moves \
+         {bytes_gram}B -> {bytes_acts}B per layer ({:.1}x smaller)",
+        bytes_gram as f64 / bytes_acts as f64
+    );
     println!(
         "note: loopback workers share this machine's cores with the coordinator, so \
          pool>1 shows protocol overhead, not speedup; the win is one pool member per host."

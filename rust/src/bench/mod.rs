@@ -27,6 +27,8 @@ pub fn bench<T>(warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> Stats {
 }
 
 /// Synthetic anisotropic layer problem (used when artifacts are absent).
+/// X is attached (moved, no copy) so the sharded benches can exercise
+/// activation shipping on these problems.
 pub fn synthetic_problem(n_in: usize, n_out: usize, rows: usize, seed: u64) -> LayerProblem {
     let mut rng = Rng::new(seed);
     let mut x = Matrix::randn(rows, n_in, &mut rng);
@@ -37,7 +39,9 @@ pub fn synthetic_problem(n_in: usize, n_out: usize, rows: usize, seed: u64) -> L
         }
     }
     let what = Matrix::randn(n_in, n_out, &mut rng);
-    LayerProblem::from_activations(&x, &what).unwrap()
+    let mut p = LayerProblem::from_activations(&x, &what).unwrap();
+    p.attach_activations(std::sync::Arc::new(x)).unwrap();
+    p
 }
 
 /// Are the build artifacts present?

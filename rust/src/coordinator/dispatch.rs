@@ -1,26 +1,56 @@
 //! Coordinator-side dispatcher for distributed pruning: a
 //! [`ShardedEngine`] implementing [`crate::pruning::Engine`] that ships
 //! [`LayerProblem`]s to a pool of `alps worker` processes over the binary
-//! frame protocol ([`crate::pruning::wire`]) and reassembles results
-//! deterministically.
+//! frame protocol ([`crate::pruning::wire`], version 2) and reassembles
+//! results deterministically.
 //!
 //! Design:
 //!
 //! * **One dispatcher thread per worker**, all draining one shared job
 //!   queue — a fast worker naturally takes more layers (work stealing by
 //!   construction), and layer order never matters because results land in
-//!   a slot indexed by job position.
+//!   a slot indexed by job position. The threads are scoped per block
+//!   solve (they borrow the block's problems — zero copies); what
+//!   persists across blocks is the expensive part, the **connections**.
+//! * **Persistent worker pool**: each worker's TCP connection is parked
+//!   in a per-slot cache when a block finishes and picked up again by the
+//!   next block's dispatcher, so an N-block run dials each worker once,
+//!   not N times. A parked connection that went stale between blocks
+//!   (worker restarted, NAT timeout) gets one free redial — staleness is
+//!   not a worker failure and never burns a retry attempt.
+//!   [`ShardedEngine::close`] drops the cached connections explicitly
+//!   (the session calls it when a run finishes; dropping the engine does
+//!   the same).
+//! * **Heartbeat liveness**: protocol-v2 workers emit a
+//!   [`tag::HEARTBEAT`] frame every couple of seconds while solving, so
+//!   *any* silence longer than [`ShardedConfig::heartbeat_grace`]
+//!   (default 30 s) means the worker is gone — not merely slow — and its
+//!   in-flight jobs reroute immediately instead of waiting out the
+//!   [`ShardedConfig::idle_timeout`] (default 600 s, kept as the
+//!   wall-clock ceiling on any single frame transfer, which also defeats
+//!   byte-dribbling peers). Beats renew the silence clock (only a
+//!   delivered result renews the reconnect-attempt budget, so a
+//!   beat-then-crash worker still exhausts its attempts), and they
+//!   surface on the status endpoint when a [`StatusBoard`] is attached.
 //! * **Per-worker outstanding-request limit**
 //!   ([`ShardedConfig::max_outstanding`]): each connection pipelines a
 //!   bounded number of in-flight solves, enough to hide the round trip
 //!   without buffering a whole block on one worker.
+//! * **Activation shipping** ([`ShardedConfig::ship_activations`]): when
+//!   the layer problem retains its calibration rows X `[n, n_in]` and X
+//!   is strictly smaller than the gram (`n < n_in`), the request ships X
+//!   instead of H `[n_in, n_in]` and the worker builds H itself with the
+//!   same deterministic kernel — O(n·n_in) wire bytes instead of
+//!   O(n_in^2), a large cut for wide layers pruned from modest
+//!   calibration sets, and never an inflation for narrow ones (the
+//!   cheaper encoding is chosen per layer).
 //! * **Retry on disconnect**: a failed connect, a broken connection, or a
-//!   hung worker ([`ShardedConfig::idle_timeout`]) requeues that worker's
-//!   in-flight jobs at the *front* of the queue (another worker picks
-//!   them up next) and the worker gets a bounded number of reconnect
-//!   attempts ([`ShardedConfig::max_attempts`]). The run completes as
-//!   long as one worker survives; only when every pool member is gone do
-//!   unsolved layers fail the block.
+//!   hung worker requeues that worker's in-flight jobs at the *front* of
+//!   the queue (another worker picks them up next) and the worker gets a
+//!   bounded number of reconnect attempts
+//!   ([`ShardedConfig::max_attempts`]). The run completes as long as one
+//!   worker survives; only when every pool member is gone do unsolved
+//!   layers fail the block.
 //! * **Solver errors are not retried**: a worker answering `tag::ERROR`
 //!   for a job this connection owns hit a deterministic failure (bad
 //!   target for the method, degenerate problem) that would fail
@@ -30,20 +60,22 @@
 //!   job id) stay retryable.
 //! * **Bit-identical results**: matrices travel bit-exactly
 //!   (`to_le_bytes` round-trip), the worker rebuilds the problem with the
-//!   same deterministic kernels, and reassembly is positional — a sharded
-//!   run equals a [`NativeEngine`] run to the last bit (proven by
+//!   same deterministic kernels (including the gram, when activations are
+//!   shipped), and reassembly is positional — a sharded run equals a
+//!   [`NativeEngine`] run to the last bit (proven by
 //!   `tests/integration_sharded.rs` and the CI smoke step).
 
 use crate::config::SparsityTarget;
-use crate::net::framing::{read_frame, write_frame, FrameRead};
+use crate::net::framing::{read_frame_deadline, write_frame, FrameRead};
 use crate::net::lock;
 use crate::pruning::engine::{Engine, LayerJob, LayerResult};
-use crate::pruning::wire::{self, tag};
+use crate::pruning::status::StatusBoard;
+use crate::pruning::wire::{self, tag, CalibRef};
 use crate::pruning::{LayerProblem, MethodSpec};
 use anyhow::{bail, Context as _, Result};
 use std::collections::VecDeque;
-use std::net::TcpStream;
-use std::sync::Mutex;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Dispatcher tuning knobs.
@@ -57,10 +89,20 @@ pub struct ShardedConfig {
     pub max_frame_bytes: usize,
     /// Per-attempt connect timeout.
     pub connect_timeout: Duration,
-    /// A worker sending nothing for this long counts as hung and its
-    /// in-flight jobs are rerouted. Generous: a big ALPS layer solve can
-    /// legitimately take minutes.
+    /// Legacy silence ceiling (`--shard-idle`). The read loop waits
+    /// `heartbeat_grace.min(idle_timeout)` for the next byte, so with v2
+    /// heartbeats the grace is the effective budget and this only still
+    /// bites when configured *below* the grace; it survives so operators
+    /// who tuned `--shard-idle` down keep their tighter bound.
     pub idle_timeout: Duration,
+    /// A worker owing us results that sends *nothing* — no result, no
+    /// heartbeat — for this long is dead; its in-flight jobs reroute
+    /// immediately. Must comfortably exceed the pool's worker-side beat
+    /// interval (`alps worker --heartbeat-secs`, default 2 s — the CLI
+    /// enforces grace >= 15 s and beat <= 5 s so no legal pair can
+    /// cross); a grace below the beat interval declares every healthy
+    /// worker dead mid-solve.
+    pub heartbeat_grace: Duration,
     /// Pause between reconnect attempts.
     pub retry_backoff: Duration,
     /// How long to keep retrying a worker that answers BUSY (at its
@@ -68,6 +110,12 @@ pub struct ShardedConfig {
     /// `max_attempts`: a saturated worker is healthy and a slot may free
     /// at any moment, so it gets far more patience than a broken one.
     pub busy_patience: Duration,
+    /// Ship calibration activations X instead of the gram H whenever the
+    /// layer problem retains them *and* X is strictly smaller
+    /// (`rows < n_in`) — O(n·n_in) wire bytes instead of O(n_in^2) for
+    /// wide layers, with the gram kept for layers where it wins; the
+    /// worker rebuilds the identical H either way.
+    pub ship_activations: bool,
 }
 
 impl Default for ShardedConfig {
@@ -78,8 +126,10 @@ impl Default for ShardedConfig {
             max_frame_bytes: 1 << 30,
             connect_timeout: Duration::from_secs(5),
             idle_timeout: Duration::from_secs(600),
+            heartbeat_grace: Duration::from_secs(30),
             retry_backoff: Duration::from_millis(100),
             busy_patience: Duration::from_secs(60),
+            ship_activations: false,
         }
     }
 }
@@ -111,11 +161,17 @@ impl Dispatch<'_> {
     }
 }
 
-/// A pruning [`Engine`] that fans layer solves across remote workers.
+/// A pruning [`Engine`] that fans layer solves across remote workers,
+/// keeping its per-worker connections alive across block solves.
 pub struct ShardedEngine {
     spec: MethodSpec,
     workers: Vec<String>,
     cfg: ShardedConfig,
+    /// Per-worker parked connection, reused by the next block's
+    /// dispatcher (same index as `workers`).
+    conns: Vec<Mutex<Option<TcpStream>>>,
+    /// Live-progress sink: heartbeats are reported here when attached.
+    board: Option<Arc<StatusBoard>>,
 }
 
 impl ShardedEngine {
@@ -138,7 +194,8 @@ impl ShardedEngine {
             max_attempts: cfg.max_attempts.max(1),
             ..cfg
         };
-        Ok(ShardedEngine { spec, workers, cfg })
+        let conns = workers.iter().map(|_| Mutex::new(None)).collect();
+        Ok(ShardedEngine { spec, workers, cfg, conns, board: None })
     }
 
     /// Parse a CLI `host:port,host:port` list.
@@ -156,9 +213,45 @@ impl ShardedEngine {
         &self.workers
     }
 
-    /// One worker's dispatch loop: connect, keep up to `max_outstanding`
-    /// solves in flight, reroute on failure.
-    fn worker_loop(&self, addr: &str, d: &Dispatch) {
+    /// Surface worker heartbeats on a status board (the `--status-addr`
+    /// endpoint includes per-worker beat counts in its snapshot).
+    pub fn set_status_board(&mut self, board: Arc<StatusBoard>) {
+        self.board = Some(board);
+    }
+
+    /// Shared failure epilogue for every retryable connection-level
+    /// fault in [`ShardedEngine::worker_loop`]: a stale parked connection
+    /// redials for free; otherwise one reconnect attempt is consumed
+    /// (with the configured backoff before the retry) and the worker is
+    /// written off — `true` — once the budget is gone. Keeping the policy
+    /// in one place keeps the six failure sites from drifting.
+    fn written_off(
+        &self,
+        d: &Dispatch,
+        attempts: &mut usize,
+        from_cache: bool,
+        error: impl FnOnce() -> String,
+    ) -> bool {
+        if from_cache {
+            // stale parked connection (worker restarted or link timed out
+            // between blocks): one free redial, no attempt burned
+            return false;
+        }
+        *attempts += 1;
+        if *attempts >= self.cfg.max_attempts {
+            lock(&d.worker_errors).push(error());
+            return true;
+        }
+        std::thread::sleep(self.cfg.retry_backoff);
+        false
+    }
+
+    /// One worker's dispatch loop: connect (or reuse the parked
+    /// connection), keep up to `max_outstanding` solves in flight,
+    /// reroute on failure, park the connection again when the block is
+    /// done.
+    fn worker_loop(&self, widx: usize, d: &Dispatch) {
+        let addr = &self.workers[widx];
         let mut attempts = 0usize;
         // set at the first BUSY answer; cleared by any successful solve
         let mut busy_since: Option<std::time::Instant> = None;
@@ -172,17 +265,22 @@ impl ShardedEngine {
                 std::thread::sleep(WAIT_POLL);
                 continue 'reconnect;
             }
-            let stream = match connect(addr, self.cfg.connect_timeout) {
-                Ok(s) => s,
-                Err(e) => {
-                    attempts += 1;
-                    if attempts >= self.cfg.max_attempts {
-                        lock(&d.worker_errors).push(format!("{addr}: {e}"));
-                        return;
+            // a connection parked by a previous block is reused; if it
+            // went stale in between, its failure below redials for free
+            // (`from_cache`) instead of burning an attempt
+            let (stream, mut from_cache) = match lock(&self.conns[widx]).take() {
+                Some(s) => (s, true),
+                None => match connect(addr, self.cfg.connect_timeout) {
+                    Ok(s) => (s, false),
+                    Err(e) => {
+                        if self.written_off(d, &mut attempts, false, || {
+                            format!("{addr}: {e}")
+                        }) {
+                            return;
+                        }
+                        continue 'reconnect;
                     }
-                    std::thread::sleep(self.cfg.retry_backoff);
-                    continue 'reconnect;
-                }
+                },
             };
             let mut reader = match stream.try_clone() {
                 Ok(r) => r,
@@ -194,6 +292,13 @@ impl ShardedEngine {
             let mut writer = stream;
             // in-flight job indices, in send order
             let mut in_flight: VecDeque<usize> = VecDeque::new();
+            // last moment this worker proved it is working *for us*: a
+            // successful send, an owned RESULT, or an owned HEARTBEAT.
+            // Frames for jobs we don't own (a desynced or hostile peer
+            // echoing someone else's beats) deliberately do NOT renew it —
+            // otherwise such a peer could pin our in-flight jobs forever
+            // without ever tripping the grace.
+            let mut last_owned_signal = std::time::Instant::now();
             // cleared when a pipelined send stalls: a busy worker only
             // reads between solves, so a huge second frame can exceed the
             // socket buffer and the write timeout without anything being
@@ -202,6 +307,14 @@ impl ShardedEngine {
             // replace the connection once the in-flight drain completes
             let mut can_send = true;
             let requeue = |in_flight: &mut VecDeque<usize>| {
+                if !in_flight.is_empty() {
+                    if let Some(board) = &self.board {
+                        // whatever this worker was live-reporting is now
+                        // abandoned: clear its "solving" status entry so a
+                        // dead worker doesn't show as forever in-progress
+                        board.note_worker_stalled(addr);
+                    }
+                }
                 let mut pending = lock(&d.pending);
                 // front of the queue: a surviving worker reroutes these
                 // before taking fresh work
@@ -211,6 +324,12 @@ impl ShardedEngine {
             };
             loop {
                 if lock(&d.fatal).is_some() {
+                    if in_flight.is_empty() {
+                        // clean connection, nothing owed: park it for the
+                        // next block (the run may continue past this
+                        // block's failure handling)
+                        *lock(&self.conns[widx]) = Some(writer);
+                    }
                     requeue(&mut in_flight);
                     return;
                 }
@@ -219,27 +338,45 @@ impl ShardedEngine {
                     let Some(idx) = lock(&d.pending).pop_front() else { break };
                     let problem = d.problems[idx];
                     // borrow-encode: no deep copy of the (possibly huge)
-                    // weight and gram matrices just to serialize them
+                    // weight and calibration matrices just to serialize
+                    // them; ship raw activations instead of the gram when
+                    // configured, retained, and *strictly smaller* — for
+                    // rows >= n_in the gram is the cheaper payload, so the
+                    // flag picks the winning encoding per layer instead of
+                    // inflating narrow layers
+                    let calib = match (self.cfg.ship_activations, &problem.x) {
+                        (true, Some(x)) if x.rows < problem.h.rows => {
+                            CalibRef::Activations(x.as_ref())
+                        }
+                        _ => CalibRef::Gram(&problem.h),
+                    };
                     let payload = wire::encode_solve(
                         idx as u64,
                         d.target,
                         &self.spec,
                         &problem.what,
-                        &problem.h,
+                        calib,
                     );
                     if let Err(e) = write_frame(&mut writer, tag::SOLVE, &payload) {
                         lock(&d.pending).push_front(idx);
                         if in_flight.is_empty() {
+                            if from_cache {
+                                // stale parked connection (worker restarted
+                                // or link timed out between blocks): one
+                                // free redial, no attempt burned
+                                continue 'reconnect;
+                            }
                             // a saturated worker may have refused us with a
                             // BUSY still sitting in our receive buffer (its
                             // refusal drain is bounded, so a huge frame can
                             // fail the write first) — prefer that
                             // classification over a hard failure
-                            let refusal = read_frame(
+                            let refusal = read_frame_deadline(
                                 &mut reader,
                                 self.cfg.max_frame_bytes,
                                 None,
                                 Some(Duration::from_secs(1)),
+                                Some(Duration::from_secs(5)),
                             );
                             if let Ok(FrameRead::Frame { tag: tag::BUSY, .. }) = refusal {
                                 let since = *busy_since
@@ -256,13 +393,11 @@ impl ShardedEngine {
                             }
                             // nothing owed on this connection: a failed
                             // write really is a broken worker link
-                            attempts += 1;
-                            if attempts >= self.cfg.max_attempts {
-                                lock(&d.worker_errors)
-                                    .push(format!("{addr}: send failed: {e}"));
+                            if self.written_off(d, &mut attempts, false, || {
+                                format!("{addr}: send failed: {e}")
+                            }) {
                                 return;
                             }
-                            std::thread::sleep(self.cfg.retry_backoff);
                             continue 'reconnect;
                         }
                         // backpressure, not failure: the worker is solving
@@ -271,6 +406,7 @@ impl ShardedEngine {
                         break;
                     }
                     in_flight.push_back(idx);
+                    last_owned_signal = std::time::Instant::now();
                 }
                 if in_flight.is_empty() {
                     if !can_send {
@@ -283,6 +419,8 @@ impl ShardedEngine {
                     // flight on *other* workers may still reroute here, so
                     // only leave once every result slot is filled
                     if d.all_solved() || lock(&d.fatal).is_some() {
+                        // park the healthy connection for the next block
+                        *lock(&self.conns[widx]) = Some(writer);
                         return;
                     }
                     if lock(&d.pending).is_empty() {
@@ -290,12 +428,35 @@ impl ShardedEngine {
                     }
                     continue;
                 }
-                match read_frame(
-                    &mut reader,
-                    self.cfg.max_frame_bytes,
-                    None,
-                    Some(self.cfg.idle_timeout),
-                ) {
+                // heartbeats arrive every couple of seconds during a solve,
+                // so owned-signal silence beyond the grace means a dead
+                // worker — far tighter than the idle ceiling kept for
+                // v1-era links. The budget is the *remaining* grace since
+                // the last owned signal, so unowned frames (which complete
+                // a read without renewing the clock) cannot stretch it;
+                // the per-frame wall-clock deadline (at least the idle
+                // ceiling, so a huge legitimate RESULT still has the full
+                // `--shard-idle` window to transfer) stops a peer from
+                // pinning us with one never-completing dribbled frame.
+                let silence_budget = self.cfg.heartbeat_grace.min(self.cfg.idle_timeout);
+                let remaining = silence_budget.saturating_sub(last_owned_signal.elapsed());
+                let read = if remaining.is_zero() {
+                    // grace exhausted across reads (e.g. a stream of
+                    // unowned heartbeats): same as a mid-solve hang
+                    Err(anyhow::anyhow!(
+                        "no owned result/heartbeat for {:.1}s",
+                        silence_budget.as_secs_f64()
+                    ))
+                } else {
+                    read_frame_deadline(
+                        &mut reader,
+                        self.cfg.max_frame_bytes,
+                        None,
+                        Some(remaining),
+                        Some(self.cfg.idle_timeout.max(remaining)),
+                    )
+                };
+                match read {
                     Ok(FrameRead::Frame { tag: tag::RESULT, payload }) => {
                         match wire::SolveResponse::decode(&payload) {
                             Ok(resp) if in_flight.contains(&(resp.job as usize)) => {
@@ -309,33 +470,55 @@ impl ShardedEngine {
                                 });
                                 // a delivered solve proves the worker
                                 // healthy; give transient failures a fresh
-                                // retry budget
+                                // retry budget and treat the connection as
+                                // established (no longer a stale-cache
+                                // suspect)
                                 attempts = 0;
                                 busy_since = None;
+                                from_cache = false;
+                                last_owned_signal = std::time::Instant::now();
                             }
                             // desynced or corrupt response: drop the
                             // connection and reroute everything in flight
                             Ok(resp) => {
                                 requeue(&mut in_flight);
-                                attempts += 1;
-                                if attempts >= self.cfg.max_attempts {
-                                    lock(&d.worker_errors).push(format!(
-                                        "{addr}: answered unknown job {}",
-                                        resp.job
-                                    ));
+                                if self.written_off(d, &mut attempts, from_cache, || {
+                                    format!("{addr}: answered unknown job {}", resp.job)
+                                }) {
                                     return;
                                 }
                                 continue 'reconnect;
                             }
                             Err(e) => {
                                 requeue(&mut in_flight);
-                                attempts += 1;
-                                if attempts >= self.cfg.max_attempts {
-                                    lock(&d.worker_errors)
-                                        .push(format!("{addr}: bad response: {e}"));
+                                if self.written_off(d, &mut attempts, from_cache, || {
+                                    format!("{addr}: bad response: {e}")
+                                }) {
                                     return;
                                 }
                                 continue 'reconnect;
+                            }
+                        }
+                    }
+                    Ok(FrameRead::Frame { tag: tag::HEARTBEAT, payload }) => {
+                        // liveness beacon: the solve is progressing. Only a
+                        // beat for a job we own proves *our* channel (a
+                        // desynced peer echoing someone else's beat does
+                        // not). A beat renews the silence clock and clears
+                        // the stale-cache/busy suspicion, but deliberately
+                        // NOT the reconnect-attempt budget — only a
+                        // *delivered result* does that, so a worker that
+                        // beats once and crashes on every connection still
+                        // exhausts `max_attempts` instead of looping
+                        // forever.
+                        if let Ok(hb) = wire::decode_heartbeat(&payload) {
+                            if in_flight.contains(&(hb.job as usize)) {
+                                busy_since = None;
+                                from_cache = false;
+                                last_owned_signal = std::time::Instant::now();
+                                if let Some(board) = &self.board {
+                                    board.note_heartbeat(addr, &hb);
+                                }
                             }
                         }
                     }
@@ -362,13 +545,11 @@ impl ShardedEngine {
                             }
                             Ok((_, m)) => {
                                 requeue(&mut in_flight);
-                                attempts += 1;
-                                if attempts >= self.cfg.max_attempts {
-                                    lock(&d.worker_errors)
-                                        .push(format!("{addr}: protocol error: {m}"));
+                                if self.written_off(d, &mut attempts, from_cache, || {
+                                    format!("{addr}: protocol error: {m}")
+                                }) {
                                     return;
                                 }
-                                std::thread::sleep(self.cfg.retry_backoff);
                                 continue 'reconnect;
                             }
                             Err(e) => {
@@ -401,16 +582,27 @@ impl ShardedEngine {
                             .push(format!("{addr}: unexpected frame tag {tag}"));
                         return;
                     }
-                    Ok(FrameRead::Eof) | Ok(FrameRead::Shutdown) | Err(_) => {
-                        // worker dropped mid-solve: reroute its jobs
+                    Ok(FrameRead::Eof) | Ok(FrameRead::Shutdown) => {
+                        // worker closed the connection mid-solve: reroute
                         requeue(&mut in_flight);
-                        attempts += 1;
-                        if attempts >= self.cfg.max_attempts {
-                            lock(&d.worker_errors)
-                                .push(format!("{addr}: disconnected mid-solve"));
+                        if self.written_off(d, &mut attempts, from_cache, || {
+                            format!("{addr}: disconnected mid-solve")
+                        }) {
                             return;
                         }
-                        std::thread::sleep(self.cfg.retry_backoff);
+                        continue 'reconnect;
+                    }
+                    Err(e) => {
+                        // keep the real cause: "no owned result/heartbeat
+                        // for Ns" (missed-beat detection on a still-open
+                        // connection) reads very differently from a
+                        // dropped connection when debugging a pool
+                        requeue(&mut in_flight);
+                        if self.written_off(d, &mut attempts, from_cache, || {
+                            format!("{addr}: {e}")
+                        }) {
+                            return;
+                        }
                         continue 'reconnect;
                     }
                 }
@@ -427,9 +619,9 @@ impl Engine for ShardedEngine {
     fn config_digest(&self) -> String {
         // identical to NativeEngine's digest for the same spec, and the
         // worker list is deliberately excluded: neither the pool shape
-        // nor remoting changes a single bit of the results, so
-        // checkpoints resume across pool changes AND across the
-        // native/sharded boundary
+        // nor remoting (nor where the gram is computed) changes a single
+        // bit of the results, so checkpoints resume across pool changes
+        // AND across the native/sharded boundary
         format!("{:?}", self.spec)
     }
 
@@ -450,9 +642,23 @@ impl Engine for ShardedEngine {
         let problems: Vec<&LayerProblem> = jobs.iter().map(|j| &j.problem).collect();
         self.dispatch(&problems, target)
     }
+
+    fn close(&self) {
+        ShardedEngine::close(self)
+    }
 }
 
 impl ShardedEngine {
+    /// Drop every parked worker connection. Subsequent solves redial
+    /// (reconnect-on-reuse), so `close` is safe at any point; the session
+    /// calls it when a run finishes so worker slots free immediately
+    /// instead of waiting for the engine to drop.
+    pub fn close(&self) {
+        for conn in &self.conns {
+            lock(conn).take();
+        }
+    }
+
     /// Fan the borrowed problems across the pool; results are positional.
     fn dispatch(
         &self,
@@ -472,10 +678,8 @@ impl ShardedEngine {
         };
         let d_ref = &d;
         std::thread::scope(|s| {
-            for addr in &self.workers {
-                // `move` copies the three references; `addr` itself is a
-                // per-iteration binding the thread must not borrow
-                s.spawn(move || self.worker_loop(addr, d_ref));
+            for widx in 0..self.workers.len() {
+                s.spawn(move || self.worker_loop(widx, d_ref));
             }
         });
         if let Some(msg) = lock(&d.fatal).take() {
@@ -499,22 +703,42 @@ impl ShardedEngine {
     }
 }
 
-/// `TcpStream::connect_timeout` needs a resolved `SocketAddr`; resolve
-/// through `ToSocketAddrs` first (hostnames allowed).
+/// Resolve `addr` and try **every** candidate address before giving up —
+/// a dual-stack hostname that resolves IPv6-first must still reach a
+/// worker listening on IPv4 (and vice versa) without burning a reconnect
+/// attempt per address family.
 fn connect(addr: &str, timeout: Duration) -> Result<TcpStream> {
     use std::net::ToSocketAddrs as _;
-    let resolved = addr
+    let candidates: Vec<SocketAddr> = addr
         .to_socket_addrs()
         .with_context(|| format!("resolving worker address '{addr}'"))?
-        .next()
-        .with_context(|| format!("worker address '{addr}' resolved to nothing"))?;
-    let stream = TcpStream::connect_timeout(&resolved, timeout)
-        .with_context(|| format!("connecting to worker {addr}"))?;
-    let _ = stream.set_nodelay(true);
-    // short socket timeout: read_frame loops on ticks against idle_timeout
-    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
-    stream.set_write_timeout(Some(Duration::from_secs(10)))?;
-    Ok(stream)
+        .collect();
+    connect_candidates(&candidates, timeout)
+        .with_context(|| format!("connecting to worker {addr}"))
+}
+
+/// Dial the candidates in resolution order; first success wins, the last
+/// failure is reported when none do.
+fn connect_candidates(candidates: &[SocketAddr], timeout: Duration) -> Result<TcpStream> {
+    if candidates.is_empty() {
+        bail!("address resolved to nothing");
+    }
+    let mut last: Option<(SocketAddr, std::io::Error)> = None;
+    for sa in candidates {
+        match TcpStream::connect_timeout(sa, timeout) {
+            Ok(stream) => {
+                let _ = stream.set_nodelay(true);
+                // short socket timeout: read_frame loops on ticks against
+                // the heartbeat-grace / idle budgets
+                stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+                stream.set_write_timeout(Some(Duration::from_secs(10)))?;
+                return Ok(stream);
+            }
+            Err(e) => last = Some((*sa, e)),
+        }
+    }
+    let (sa, e) = last.expect("non-empty candidates");
+    bail!("no candidate reachable ({} tried, last {sa}: {e})", candidates.len())
 }
 
 #[cfg(test)]
@@ -539,10 +763,22 @@ mod tests {
             max_attempts: 2,
             connect_timeout: Duration::from_millis(500),
             idle_timeout: Duration::from_secs(30),
+            heartbeat_grace: Duration::from_secs(30),
             retry_backoff: Duration::from_millis(10),
             busy_patience: Duration::from_millis(80),
             ..Default::default()
         }
+    }
+
+    fn spawn_worker() -> (String, std::sync::Arc<Worker>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let worker = std::sync::Arc::new(Worker::new(WorkerConfig::default()));
+        let w = worker.clone();
+        std::thread::spawn(move || {
+            let _ = w.serve(listener);
+        });
+        (addr, worker)
     }
 
     #[test]
@@ -565,9 +801,104 @@ mod tests {
                 assert_eq!(r.w, l.w, "job {i} differs from native");
                 assert_eq!(r.worker.as_deref(), Some(addr.as_str()));
             }
+            sharded.close();
             worker.request_shutdown();
             srv.join().unwrap().unwrap();
         });
+    }
+
+    #[test]
+    fn shipped_activations_match_native_bitwise() {
+        // --ship-activations path: X travels, the worker grams it. The
+        // problems must be wide (rows < n_in) or the dispatcher would
+        // rightly pick the smaller gram encoding instead.
+        let (addr, worker) = spawn_worker();
+        let spec = MethodSpec::SparseGpt(Default::default());
+        let js: Vec<LayerJob> = (0..4)
+            .map(|i| LayerJob {
+                name: format!("blocks.0.wide{i}"),
+                problem: random_problem(24, 8, 10, 500 + i as u64),
+            })
+            .collect();
+        let target = SparsityTarget::Unstructured(0.55);
+        let sharded = ShardedEngine::with_config(
+            spec.clone(),
+            vec![addr],
+            ShardedConfig { ship_activations: true, ..quick_cfg() },
+        )
+        .unwrap();
+        let remote = sharded.solve_block(&js, target).unwrap();
+        let local = NativeEngine::new(spec).solve_block(&js, target).unwrap();
+        for (i, (r, l)) in remote.iter().zip(&local).enumerate() {
+            assert_eq!(r.w, l.w, "job {i} differs with worker-side gram");
+        }
+        sharded.close();
+        worker.request_shutdown();
+    }
+
+    #[test]
+    fn connections_persist_across_block_solves_until_close() {
+        let (addr, worker) = spawn_worker();
+        let sharded = ShardedEngine::with_config(
+            MethodSpec::Magnitude,
+            vec![addr],
+            quick_cfg(),
+        )
+        .unwrap();
+        let target = SparsityTarget::Unstructured(0.5);
+        // three "blocks" through one engine: one dial total
+        for seed in [0u64, 10, 20] {
+            sharded.solve_block(&jobs(3, seed), target).unwrap();
+        }
+        assert_eq!(
+            worker.connections_accepted(),
+            1,
+            "persistent pool must reuse its connection across blocks"
+        );
+        // close() drops the parked connection; the next solve redials
+        sharded.close();
+        sharded.solve_block(&jobs(2, 30), target).unwrap();
+        assert_eq!(worker.connections_accepted(), 2);
+        sharded.close();
+        worker.request_shutdown();
+    }
+
+    #[test]
+    fn stale_parked_connection_gets_a_free_redial() {
+        // a parked connection whose peer died between blocks must not
+        // burn a retry attempt: with max_attempts=1 the solve still
+        // succeeds because staleness redials for free
+        let (addr, worker) = spawn_worker();
+        let sharded = ShardedEngine::with_config(
+            MethodSpec::Magnitude,
+            vec![addr],
+            ShardedConfig {
+                max_attempts: 1,
+                // if the dead peer never RSTs, the grace (not a hang)
+                // converts its silence into the free redial
+                heartbeat_grace: Duration::from_millis(300),
+                ..quick_cfg()
+            },
+        )
+        .unwrap();
+        let target = SparsityTarget::Unstructured(0.5);
+        sharded.solve_block(&jobs(2, 40), target).unwrap();
+        // sabotage the parked connection: swap in a stream whose peer is
+        // already gone (bound listener dropped after the connect)
+        let dead = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            let peer = l.local_addr().unwrap();
+            let s = TcpStream::connect(peer).unwrap();
+            s.set_read_timeout(Some(Duration::from_millis(200))).unwrap();
+            s.set_write_timeout(Some(Duration::from_secs(1))).unwrap();
+            drop(l);
+            s
+        };
+        *lock(&sharded.conns[0]) = Some(dead);
+        // would fail with max_attempts=1 if staleness cost an attempt
+        sharded.solve_block(&jobs(2, 50), target).unwrap();
+        sharded.close();
+        worker.request_shutdown();
     }
 
     #[test]
@@ -585,6 +916,28 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("2 of 2 layers unsolved"), "{err}");
+    }
+
+    #[test]
+    fn connect_tries_every_resolved_candidate() {
+        // first candidate dead, second alive: the dial must fall through
+        // to the live one instead of failing the attempt outright (the
+        // dual-stack hostname case, pinned here with explicit addresses)
+        let dead = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let live_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let live = live_listener.local_addr().unwrap();
+        let stream =
+            connect_candidates(&[dead, live], Duration::from_millis(500)).unwrap();
+        assert_eq!(stream.peer_addr().unwrap(), live);
+        // no candidates / all dead errors mention the count
+        assert!(connect_candidates(&[], Duration::from_millis(100)).is_err());
+        let err = connect_candidates(&[dead], Duration::from_millis(100))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("1 tried"), "{err}");
     }
 
     #[test]

@@ -12,10 +12,13 @@
 //!   session produces ([`LayerReport`], [`RunReport`]).
 //! * [`dispatch`] — the distributed coordinator: [`ShardedEngine`] fans a
 //!   block's layer solves across a pool of `alps worker` endpoints over
-//!   TCP (per-worker outstanding-request limits, retry-on-disconnect with
-//!   rerouting, deterministic positional reassembly) and plugs into the
-//!   session through the same [`crate::pruning::Engine`] trait as the
-//!   local backends — with bit-identical results.
+//!   TCP (persistent per-worker connections reused across blocks,
+//!   heartbeat-based dead-worker detection, per-worker
+//!   outstanding-request limits, retry-on-disconnect with rerouting,
+//!   optional activation shipping for worker-side gram computation,
+//!   deterministic positional reassembly) and plugs into the session
+//!   through the same [`crate::pruning::Engine`] trait as the local
+//!   backends — with bit-identical results.
 //! * [`scheduler`] — the deprecated [`Scheduler`] + [`PruneEngine`] shims
 //!   (one release of backwards compatibility) plus re-exports of the
 //!   single-layer experiment helpers.

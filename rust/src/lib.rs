@@ -34,8 +34,11 @@
 //!
 //! Pruning scales out horizontally: `alps worker` hosts the native
 //! solvers behind a binary frame protocol (`pruning::worker` +
-//! `pruning::wire`), `coordinator::ShardedEngine` fans a block's layer
-//! problems across a worker pool with retry and deterministic
+//! `pruning::wire`, protocol v2: gram-or-activations calibration
+//! payloads and keepalive heartbeats while solving),
+//! `coordinator::ShardedEngine` fans a block's layer problems across a
+//! persistent worker pool (connections reused across blocks) with
+//! heartbeat-based dead-worker detection, retry, and deterministic
 //! reassembly (bit-identical to a local run), and `pruning::status`
 //! serves live `ProgressEvent` snapshots over TCP.
 

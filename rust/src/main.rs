@@ -199,6 +199,14 @@ fn cmd_prune(args: &Args) -> Result<()> {
             builder.stop_after(args.get("stop-after", "").parse().context("--stop-after")?);
     }
 
+    // the status board outlives the engine selection: a sharded engine
+    // feeds worker heartbeats into the same board the endpoint serves
+    let board: Option<std::sync::Arc<StatusBoard>> = if args.has("status-addr") {
+        Some(std::sync::Arc::new(StatusBoard::new()))
+    } else {
+        None
+    };
+
     // where layers get solved: a remote worker pool, the HLO runtime, or
     // the in-process native engine
     let workers_flag = args.get("workers", "");
@@ -214,6 +222,23 @@ fn cmd_prune(args: &Args) -> Result<()> {
                 args.get("shard-idle", "").parse().context("--shard-idle (seconds)")?,
             );
         }
+        if args.has("shard-heartbeat") {
+            let grace: u64 = args
+                .get("shard-heartbeat", "")
+                .parse()
+                .context("--shard-heartbeat (seconds)")?;
+            // workers beat every --heartbeat-secs (default 2, capped at
+            // 5); the 15s floor keeps >= 3 beat intervals inside every
+            // legal grace, so healthy workers can never be declared dead
+            if grace < 15 {
+                bail!(
+                    "--shard-heartbeat must be >= 15 seconds: workers send a \
+                     keepalive every `--heartbeat-secs` (default 2, max 5), and \
+                     the grace must cover several beat intervals"
+                );
+            }
+            shard_cfg.heartbeat_grace = std::time::Duration::from_secs(grace);
+        }
         if args.has("shard-attempts") {
             shard_cfg.max_attempts =
                 args.get("shard-attempts", "").parse().context("--shard-attempts")?;
@@ -222,14 +247,26 @@ fn cmd_prune(args: &Args) -> Result<()> {
             shard_cfg.max_outstanding =
                 args.get("shard-outstanding", "").parse().context("--shard-outstanding")?;
         }
+        if args.has("ship-activations") {
+            // worker-side gram: ship X [n, n_in] once per layer instead of
+            // the O(n_in^2) gram — a large wire saving for wide layers
+            shard_cfg.ship_activations = true;
+        }
         let workers: Vec<String> = workers_flag
             .split(',')
             .map(str::trim)
             .filter(|s| !s.is_empty())
             .map(str::to_string)
             .collect();
-        let eng = ShardedEngine::with_config(spec, workers, shard_cfg)?;
-        println!("sharded across {} worker(s): {workers_flag}", eng.workers().len());
+        let mut eng = ShardedEngine::with_config(spec, workers, shard_cfg)?;
+        if let Some(board) = &board {
+            eng.set_status_board(board.clone());
+        }
+        println!(
+            "sharded across {} worker(s): {workers_flag}{}",
+            eng.workers().len(),
+            if args.has("ship-activations") { " (shipping activations)" } else { "" }
+        );
         Box::new(eng)
     } else if args.has("workers") {
         bail!("--workers requires host:port[,host:port...]");
@@ -243,7 +280,7 @@ fn cmd_prune(args: &Args) -> Result<()> {
     };
     let builder = builder.engine(engine);
 
-    let report = if args.has("status-addr") {
+    let report = if let Some(board) = &board {
         let addr = args.get("status-addr", "");
         if addr.is_empty() || addr == "true" {
             bail!("--status-addr requires host:port (e.g. --status-addr=127.0.0.1:7878)");
@@ -251,7 +288,6 @@ fn cmd_prune(args: &Args) -> Result<()> {
         let listener = std::net::TcpListener::bind(&addr)
             .with_context(|| format!("binding status endpoint {addr}"))?;
         println!("status endpoint on {addr} (GET /status, or a `status` line)");
-        let board = StatusBoard::new();
         let status = StatusServer::new();
         // stop the endpoint on unwind too: scope joins the server thread,
         // so a panicking run must not leave it accepting forever
@@ -263,7 +299,7 @@ fn cmd_prune(args: &Args) -> Result<()> {
         }
         std::thread::scope(|s| {
             let _stop = StopOnDrop(&status);
-            let srv = s.spawn(|| status.serve(listener, &board));
+            let srv = s.spawn(|| status.serve(listener, board));
             let r = builder.observer(|ev| board.observe(ev)).run(&mut model);
             status.request_shutdown();
             if let Err(e) = srv.join().expect("status server panicked") {
@@ -452,6 +488,20 @@ fn serve_tcp(
 /// worker serves any mix of runs. Runs until killed.
 fn cmd_worker(args: &Args) -> Result<()> {
     let addr = args.get("addr", "127.0.0.1:7979");
+    let heartbeat_secs = args
+        .get("heartbeat-secs", "2")
+        .parse::<f64>()
+        .context("--heartbeat-secs")?;
+    // coordinators reroute after `--shard-heartbeat` (default 30 s, CLI
+    // floor 15 s) of silence; capping beats at 5 s keeps >= 3 intervals
+    // inside every legal grace, so the two knobs can never cross
+    if !(heartbeat_secs > 0.0 && heartbeat_secs <= 5.0) {
+        bail!(
+            "--heartbeat-secs must be in (0, 5]: coordinators treat silence \
+             past their --shard-heartbeat grace (>= 15s, default 30s) as a \
+             dead worker, so beats must stay comfortably inside that window"
+        );
+    }
     let cfg = WorkerConfig {
         max_conns: args.get("max-conns", "8").parse().context("--max-conns")?,
         // clamp before shifting: a huge MiB value must not wrap the
@@ -462,14 +512,18 @@ fn cmd_worker(args: &Args) -> Result<()> {
             .context("--max-frame-mb")?
             .clamp(1, usize::MAX >> 20)
             << 20,
+        // keep well under the coordinator's heartbeat grace (default 30s)
+        heartbeat_every: std::time::Duration::from_secs_f64(heartbeat_secs),
     };
     let listener = std::net::TcpListener::bind(&addr)
         .with_context(|| format!("binding worker address {addr}"))?;
     println!(
-        "worker on {addr} — up to {} coordinator connections, frames to {} MiB; \
-         point a coordinator at it with `alps prune --workers {addr}`",
+        "worker on {addr} — up to {} coordinator connections, frames to {} MiB, \
+         heartbeat every {:.1}s while solving; point a coordinator at it with \
+         `alps prune --workers {addr}`",
         cfg.max_conns,
         cfg.max_frame_bytes >> 20,
+        cfg.heartbeat_every.as_secs_f64(),
     );
     let worker = Worker::new(cfg);
     worker.serve(listener)?;
@@ -545,8 +599,9 @@ fn usage() {
            prune --model alps-base --sparsity 0.7|2:4 --method alps|mp|wanda|sparsegpt|dsnot\n\
                  [--engine native|hlo] [--calib 32] [--out pruned.bin] [--quiet]\n\
                  [--checkpoint-dir ck] [--resume] [--stop-after N] [--random] [--seed N]\n\
-                 [--workers host:port,host:port] [--status-addr 127.0.0.1:7878]\n\
-                 [--shard-idle SECS] [--shard-attempts N] [--shard-outstanding N]\n\
+                 [--workers host:port,host:port] [--ship-activations]\n\
+                 [--status-addr 127.0.0.1:7878] [--shard-idle SECS] [--shard-heartbeat SECS]\n\
+                 [--shard-attempts N] [--shard-outstanding N]\n\
                  [--rho0 F] [--admm-iters N] [--pcg-iters N]   (alps)\n\
                  [--sgpt-block N] [--sgpt-damp F]              (sparsegpt)\n\
                  [--dsnot-cycles N]                            (dsnot)\n\
@@ -556,6 +611,7 @@ fn usage() {
                  [--addr 127.0.0.1:7878 | --stdin] [--max-batch 8] [--max-conns 64]\n\
                  [--max-line 65536] [--max-new 32] [--temperature 0] [--top-k 0] [--stop id]\n\
            worker [--addr 127.0.0.1:7979] [--max-conns 8] [--max-frame-mb 1024]\n\
+                 [--heartbeat-secs 2]\n\
                  hosts the native layer solvers for `prune --workers`\n\
            info\n\
            smoke [file.hlo.txt]"

@@ -32,8 +32,15 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::{Duration, Instant};
 
 /// Frame protocol magic + version (bumped on incompatible layout changes).
+///
+/// Version history:
+/// * 1 — initial pruning protocol (SOLVE/RESULT/ERROR/BUSY; SOLVE always
+///   carries the precomputed gram).
+/// * 2 — distributed pruning v2: SOLVE payloads carry a calibration
+///   discriminant (gram *or* raw activations, see `crate::pruning::wire`)
+///   and workers emit periodic HEARTBEAT frames while solving.
 pub const FRAME_MAGIC: [u8; 2] = *b"AF";
-pub const FRAME_VERSION: u8 = 1;
+pub const FRAME_VERSION: u8 = 2;
 /// Fixed frame header size: magic(2) + version(1) + tag(1) + len(4).
 pub const FRAME_HEADER: usize = 8;
 
@@ -190,13 +197,16 @@ enum Fill {
 /// `eof_ok` permits a clean EOF *before the first byte* (frame boundary);
 /// EOF after partial progress is always an error. `idle` bounds how long
 /// to wait with no bytes arriving at all (a hung peer) — progress resets
-/// the clock.
+/// the clock. `deadline` bounds the read in wall-clock time regardless of
+/// progress — the defence against a peer dribbling one byte per tick to
+/// stay under the idle bound forever.
 fn read_full(
     r: &mut impl Read,
     buf: &mut [u8],
     eof_ok: bool,
     shutdown: Option<&AtomicBool>,
     idle: Option<Duration>,
+    deadline: Option<Instant>,
 ) -> Result<Fill> {
     let mut have = 0usize;
     let mut last_progress = Instant::now();
@@ -204,6 +214,15 @@ fn read_full(
         if let Some(flag) = shutdown {
             if flag.load(Ordering::SeqCst) {
                 return Ok(Fill::Shutdown);
+            }
+        }
+        if let Some(d) = deadline {
+            if Instant::now() > d {
+                bail!(
+                    "frame read exceeded its deadline ({} of {} bytes)",
+                    have,
+                    buf.len()
+                );
             }
         }
         match r.read(&mut buf[have..]) {
@@ -248,8 +267,24 @@ pub fn read_frame(
     shutdown: Option<&AtomicBool>,
     idle: Option<Duration>,
 ) -> Result<FrameRead> {
+    read_frame_deadline(r, max, shutdown, idle, None)
+}
+
+/// [`read_frame`] with an additional wall-clock bound on the *whole*
+/// frame, progress or not. The idle bound alone can be gamed by a peer
+/// dribbling one byte per tick; a total deadline cannot. Used by the
+/// coordinator's response reads, where a never-completing frame would
+/// otherwise pin that worker's in-flight jobs forever.
+pub fn read_frame_deadline(
+    r: &mut impl Read,
+    max: usize,
+    shutdown: Option<&AtomicBool>,
+    idle: Option<Duration>,
+    total: Option<Duration>,
+) -> Result<FrameRead> {
+    let deadline = total.map(|t| Instant::now() + t);
     let mut header = [0u8; FRAME_HEADER];
-    match read_full(r, &mut header, true, shutdown, idle)? {
+    match read_full(r, &mut header, true, shutdown, idle, deadline)? {
         Fill::Eof => return Ok(FrameRead::Eof),
         Fill::Shutdown => return Ok(FrameRead::Shutdown),
         Fill::Done => {}
@@ -266,7 +301,7 @@ pub fn read_frame(
         bail!("frame of {len} bytes exceeds the {max}-byte limit");
     }
     let mut payload = vec![0u8; len];
-    match read_full(r, &mut payload, false, shutdown, idle)? {
+    match read_full(r, &mut payload, false, shutdown, idle, deadline)? {
         Fill::Shutdown => Ok(FrameRead::Shutdown),
         Fill::Eof => unreachable!("eof_ok is false for payload reads"),
         Fill::Done => Ok(FrameRead::Frame { tag, payload }),
@@ -400,6 +435,42 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("mid-frame"), "{err}");
+    }
+
+    #[test]
+    fn dribbled_frame_trips_the_total_deadline() {
+        // one byte per read keeps the idle clock happy forever; only the
+        // wall-clock deadline can end a never-completing frame
+        struct Dribble {
+            frame: Vec<u8>,
+            pos: usize,
+        }
+        impl std::io::Read for Dribble {
+            fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+                std::thread::sleep(Duration::from_millis(1));
+                // never run out: repeat the last payload byte forever
+                let b = *self.frame.get(self.pos).unwrap_or(&0);
+                self.pos += 1;
+                buf[0] = b;
+                Ok(1)
+            }
+        }
+        // a valid header declaring a payload the peer will never finish
+        let mut frame = Vec::new();
+        write_frame(&mut frame, 2, &[0u8; 8]).unwrap();
+        frame[4..8].copy_from_slice(&(1u32 << 20).to_le_bytes());
+        frame.truncate(FRAME_HEADER + 4);
+        let mut r = Dribble { frame, pos: 0 };
+        let err = read_frame_deadline(
+            &mut r,
+            2 << 20,
+            None,
+            Some(Duration::from_secs(60)),
+            Some(Duration::from_millis(50)),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("deadline"), "{err}");
     }
 
     #[test]

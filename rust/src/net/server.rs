@@ -136,6 +136,7 @@ pub struct NetServer {
     shutdown: AtomicBool,
     conns: AtomicUsize,
     refusing: AtomicUsize,
+    accepted: AtomicUsize,
     /// Bound address, recorded by `run` so `shutdown` can poke the
     /// blocking accept loop.
     addr: Mutex<Option<SocketAddr>>,
@@ -149,6 +150,7 @@ impl NetServer {
             shutdown: AtomicBool::new(false),
             conns: AtomicUsize::new(0),
             refusing: AtomicUsize::new(0),
+            accepted: AtomicUsize::new(0),
             addr: Mutex::new(None),
         }
     }
@@ -156,6 +158,14 @@ impl NetServer {
     /// Currently live connection handlers.
     pub fn connections(&self) -> usize {
         self.conns.load(Ordering::SeqCst)
+    }
+
+    /// Connections handed to the handler over this server's lifetime
+    /// (refusals excluded). Lets callers observe connection churn — e.g.
+    /// the sharded-pruning tests proving the coordinator's persistent
+    /// pool reuses connections across blocks instead of redialing.
+    pub fn total_accepted(&self) -> usize {
+        self.accepted.load(Ordering::SeqCst)
     }
 
     /// The configured connection cap.
@@ -235,6 +245,7 @@ impl NetServer {
                 // incremented here (not in the spawned thread) so the cap
                 // check on the next accept already sees this connection
                 self.conns.fetch_add(1, Ordering::SeqCst);
+                self.accepted.fetch_add(1, Ordering::SeqCst);
                 s.spawn(move || {
                     if let Err(e) = handler.handle(stream) {
                         eprintln!("[net] connection error: {e}");

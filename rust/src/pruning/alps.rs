@@ -103,6 +103,19 @@ impl Alps {
         problem: &LayerProblem,
         target: SparsityTarget,
     ) -> Result<(Matrix, AlpsTrace)> {
+        self.prune_traced_observed(problem, target, None)
+    }
+
+    /// [`Alps::prune_traced`] with a live iteration counter: after each
+    /// ADMM iteration the count is stored into `progress` (relaxed — it
+    /// is a monitoring side channel, e.g. the distributed worker's
+    /// heartbeat frames, and never feeds back into the solve).
+    pub fn prune_traced_observed(
+        &self,
+        problem: &LayerProblem,
+        target: SparsityTarget,
+        progress: Option<&std::sync::atomic::AtomicU64>,
+    ) -> Result<(Matrix, AlpsTrace)> {
         let cfg = &self.cfg;
         let n_in = problem.n_in();
         let n_out = problem.n_out();
@@ -163,6 +176,9 @@ impl Alps {
                 wd = wd.scale(rho);
                 v = v.add(&wd);
                 t += 1;
+                if let Some(p) = progress {
+                    p.store(t as u64, std::sync::atomic::Ordering::Relaxed);
+                }
             }
             let supp = d.support_mask();
             let s_t = supp

@@ -69,6 +69,12 @@ pub trait Engine {
     ) -> Result<Vec<LayerResult>> {
         jobs.iter().map(|j| self.solve_layer(&j.problem, target)).collect()
     }
+
+    /// Release any long-lived resources the engine holds across block
+    /// solves (the sharded backend's persistent worker connections). The
+    /// session calls this when a run finishes; in-process engines have
+    /// nothing to release.
+    fn close(&self) {}
 }
 
 /// Pure-rust engine: builds the method from a [`MethodSpec`] per worker
@@ -80,6 +86,37 @@ pub struct NativeEngine {
 impl NativeEngine {
     pub fn new(spec: MethodSpec) -> Self {
         NativeEngine { spec }
+    }
+
+    /// [`Engine::solve_layer`] with a live ADMM iteration counter (ALPS
+    /// specs store their progress into it; other methods leave it at 0).
+    /// The distributed worker reads the counter from its heartbeat
+    /// thread; the solve itself is bit-identical with or without the
+    /// observer.
+    pub fn solve_layer_observed(
+        &self,
+        problem: &LayerProblem,
+        target: SparsityTarget,
+        progress: Option<&std::sync::atomic::AtomicU64>,
+    ) -> Result<LayerResult> {
+        let timer = Timer::start();
+        match &self.spec {
+            // ALPS exposes its trace — keep the iteration count in reports
+            MethodSpec::Alps(cfg) => {
+                let (w, trace) = Alps::with_config(cfg.clone())
+                    .prune_traced_observed(problem, target, progress)?;
+                Ok(LayerResult {
+                    w,
+                    secs: timer.elapsed_secs(),
+                    admm_iters: trace.admm_iters,
+                    worker: None,
+                })
+            }
+            spec => {
+                let w = spec.prune(problem, target)?;
+                Ok(LayerResult { w, secs: timer.elapsed_secs(), admm_iters: 0, worker: None })
+            }
+        }
     }
 }
 
@@ -97,24 +134,7 @@ impl Engine for NativeEngine {
         problem: &LayerProblem,
         target: SparsityTarget,
     ) -> Result<LayerResult> {
-        let timer = Timer::start();
-        match &self.spec {
-            // ALPS exposes its trace — keep the iteration count in reports
-            MethodSpec::Alps(cfg) => {
-                let (w, trace) =
-                    Alps::with_config(cfg.clone()).prune_traced(problem, target)?;
-                Ok(LayerResult {
-                    w,
-                    secs: timer.elapsed_secs(),
-                    admm_iters: trace.admm_iters,
-                    worker: None,
-                })
-            }
-            spec => {
-                let w = spec.prune(problem, target)?;
-                Ok(LayerResult { w, secs: timer.elapsed_secs(), admm_iters: 0, worker: None })
-            }
-        }
+        self.solve_layer_observed(problem, target, None)
     }
 
     fn solve_block(
@@ -211,6 +231,21 @@ mod tests {
         assert!(check_target(&r.w, t));
         assert!(r.secs >= 0.0);
         assert_eq!(r.admm_iters, 0);
+    }
+
+    #[test]
+    fn observed_solve_is_bit_identical_and_reports_progress() {
+        // the heartbeat progress counter must be a pure side channel
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let p = random_problem(16, 8, 60, 3);
+        let t = SparsityTarget::Unstructured(0.6);
+        let eng = NativeEngine::new(MethodSpec::Alps(AlpsConfig::default()));
+        let progress = AtomicU64::new(0);
+        let observed = eng.solve_layer_observed(&p, t, Some(&progress)).unwrap();
+        let plain = eng.solve_layer(&p, t).unwrap();
+        assert_eq!(observed.w, plain.w, "observer must not perturb the solve");
+        assert_eq!(progress.load(Ordering::Relaxed), observed.admm_iters as u64);
+        assert!(observed.admm_iters > 0);
     }
 
     #[test]

@@ -21,11 +21,14 @@
 //! * [`session::PruneSession`] — the block-by-block pipeline: builder
 //!   configuration, streaming [`session::ProgressEvent`]s, and per-block
 //!   checkpoint/resume. See `session.rs` for the architecture.
-//! * Distribution: [`wire`] (the layer-solve frame codec), [`worker`]
+//! * Distribution: [`wire`] (the layer-solve frame codec, protocol v2:
+//!   calibration ships as a gram or as raw activations for worker-side
+//!   gram computation, plus worker keepalive heartbeats), [`worker`]
 //!   (the `alps worker` endpoint hosting `NativeEngine` behind that
-//!   protocol), and [`status`] (a TCP endpoint streaming the session's
-//!   progress snapshot with per-worker attribution) — all built on the
-//!   shared [`crate::net`] transport layer.
+//!   protocol, heartbeating while it solves), and [`status`] (a TCP
+//!   endpoint streaming the session's progress snapshot with per-worker
+//!   attribution and live heartbeat progress) — all built on the shared
+//!   [`crate::net`] transport layer.
 //!
 //! The old `method_by_name` / `all_methods` free functions and the
 //! coordinator's `PruneEngine` enum remain as deprecated shims for one
@@ -61,6 +64,15 @@ use anyhow::{bail, Result};
 /// Stores H = X^T X and G = H What rather than X itself — the
 /// reconstruction objective depends on X only through H:
 ///   ||X What - X W||_F^2 = tr((What - W)^T H (What - W)).
+///
+/// The raw activations `x` ride along as an optional shared handle when
+/// the owner opts in via [`LayerProblem::attach_activations`] (the
+/// session pipeline does, sharing one tap's rows across several layers
+/// at zero copy). Distribution uses them: shipping X `[n, n_in]` instead
+/// of H `[n_in, n_in]` shrinks a wide layer's wire payload whenever
+/// `n < n_in`, with the worker rebuilding the same H from the same bits.
+/// Retention is opt-in precisely because it pins X for the problem's
+/// lifetime — paths that only need H should not pay that memory.
 #[derive(Clone)]
 pub struct LayerProblem {
     /// Dense weights What, [n_in, n_out].
@@ -71,10 +83,17 @@ pub struct LayerProblem {
     pub g: Matrix,
     /// tr(What^T H What) = ||X What||_F^2 (cached normalizer).
     pub denom: f64,
+    /// Calibration activations X [n, n_in] when the caller attached them
+    /// (shared, so wq/wk/wv carry the same rows without copies). `None`
+    /// unless [`LayerProblem::attach_activations`] was called.
+    pub x: Option<std::sync::Arc<Matrix>>,
 }
 
 impl LayerProblem {
-    /// Build from explicit activations X and dense weights.
+    /// Build from explicit activations X and dense weights. X is *not*
+    /// retained (most callers only ever need H); owners that want
+    /// activation-shipping distribution attach their copy afterwards via
+    /// [`LayerProblem::attach_activations`].
     pub fn from_activations(x: &Matrix, what: &Matrix) -> Result<Self> {
         if x.cols != what.rows {
             bail!("activation dim {} != weight n_in {}", x.cols, what.rows);
@@ -94,7 +113,19 @@ impl LayerProblem {
         }
         let g = matmul(&h, &what);
         let denom = what.dot(&g).max(1e-30);
-        Ok(LayerProblem { what, h, g, denom })
+        Ok(LayerProblem { what, h, g, denom, x: None })
+    }
+
+    /// Retain a shared handle to the calibration activations behind this
+    /// problem's gram. The caller asserts `gram(x) == h` bit-for-bit (the
+    /// session computes H from exactly these rows); the dimension check
+    /// here catches wiring mistakes.
+    pub fn attach_activations(&mut self, x: std::sync::Arc<Matrix>) -> Result<()> {
+        if x.cols != self.what.rows {
+            bail!("activation dim {} != weight n_in {}", x.cols, self.what.rows);
+        }
+        self.x = Some(x);
+        Ok(())
     }
 
     pub fn n_in(&self) -> usize {
@@ -251,7 +282,9 @@ pub(crate) mod testutil {
     use super::*;
     use crate::util::Rng;
 
-    /// Random layer problem with a mildly anisotropic X (so methods differ).
+    /// Random layer problem with a mildly anisotropic X (so methods
+    /// differ). X is attached (moved, no copy) so activation-shipping
+    /// tests find it on the problem, as session-built problems do.
     pub fn random_problem(n_in: usize, n_out: usize, rows: usize, seed: u64) -> LayerProblem {
         let mut rng = Rng::new(seed);
         let mut x = Matrix::randn(rows, n_in, &mut rng);
@@ -263,7 +296,9 @@ pub(crate) mod testutil {
             }
         }
         let what = Matrix::randn(n_in, n_out, &mut rng);
-        LayerProblem::from_activations(&x, &what).unwrap()
+        let mut p = LayerProblem::from_activations(&x, &what).unwrap();
+        p.attach_activations(std::sync::Arc::new(x)).unwrap();
+        p
     }
 }
 

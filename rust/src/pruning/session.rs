@@ -16,9 +16,12 @@
 //!
 //! Per block the session (1) re-runs the partially pruned model over the
 //! calibration set to capture the block's layer inputs, (2) builds one
-//! gram matrix per activation tap (wq/wk/wv share one), (3) hands the
-//! block's [`LayerJob`]s to the [`Engine`] (native thread-pool fan-out or
-//! HLO artifacts), (4) writes the sparse weights back, and (5) optionally
+//! gram matrix per activation tap (wq/wk/wv share one) and retains the
+//! tap's raw rows on the problems as shared handles (so an
+//! activation-shipping sharded engine can put X on the wire instead of
+//! the gram), (3) hands the block's [`LayerJob`]s to the [`Engine`]
+//! (native thread-pool fan-out, HLO artifacts, or a persistent remote
+//! worker pool), (4) writes the sparse weights back, and (5) optionally
 //! checkpoints the full weights plus a JSON manifest so an interrupted
 //! run resumes bit-identically from the last finished block.
 //!
@@ -42,6 +45,7 @@ use crate::util::Timer;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 /// Streaming progress from a pruning run. One channel feeds the CLI's
 /// verbose output, bench progress lines, and tests.
@@ -205,6 +209,16 @@ impl<'a> PruneSession<'a> {
 
     /// Prune `model` in place; returns the per-layer run report.
     pub fn run(&mut self, model: &mut Model) -> Result<RunReport> {
+        let result = self.run_inner(model);
+        // release engine-held resources (a sharded engine's persistent
+        // worker connections) whether the run finished or aborted — an
+        // early error must not leave parked connections pinning worker
+        // slots for the life of the process
+        self.engine.close();
+        result
+    }
+
+    fn run_inner(&mut self, model: &mut Model) -> Result<RunReport> {
         let total_timer = Timer::start();
         let n_blocks = model.cfg.n_layers;
         let mut report = RunReport {
@@ -259,10 +273,15 @@ impl<'a> PruneSession<'a> {
             // (1) capture this block's layer inputs under current weights
             let inputs = model.forward_collect(&self.calib, block)?;
 
-            // (2) one gram per activation tap (wq/wk/wv share AttnIn)
+            // (2) one gram per activation tap (wq/wk/wv share AttnIn); the
+            // tap rows themselves move into shared handles so the problems
+            // can retain them at zero copy — activation-shipping engines
+            // put X on the wire instead of the O(n_in^2) gram
             let mut grams: HashMap<ActivationTap, Matrix> = HashMap::new();
-            for (tap, x) in &inputs.taps {
-                grams.insert(*tap, gram(x));
+            let mut acts: HashMap<ActivationTap, Arc<Matrix>> = HashMap::new();
+            for (tap, x) in inputs.taps {
+                grams.insert(tap, gram(&x));
+                acts.insert(tap, Arc::new(x));
             }
 
             // (3) solve the block's matrices through the engine
@@ -270,7 +289,8 @@ impl<'a> PruneSession<'a> {
                 .into_iter()
                 .map(|(name, tap)| {
                     let what = model.weights.matrix(&name)?;
-                    let problem = LayerProblem::from_gram(grams[&tap].clone(), what)?;
+                    let mut problem = LayerProblem::from_gram(grams[&tap].clone(), what)?;
+                    problem.attach_activations(acts[&tap].clone())?;
                     Ok(LayerJob { name, problem })
                 })
                 .collect::<Result<Vec<_>>>()?;

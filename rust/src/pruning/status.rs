@@ -4,6 +4,13 @@
 //! with a JSON snapshot — the "surfacing `ProgressEvent`s on a TCP status
 //! endpoint" follow-up from the PR 3 roadmap.
 //!
+//! Sharded runs additionally feed worker keepalives into the board
+//! ([`StatusBoard::note_heartbeat`], wired up by
+//! `ShardedEngine::set_status_board`): the snapshot's `heartbeats` map
+//! counts beats per pool member and `solving` carries each member's live
+//! in-solve progress (job, ADMM iteration, elapsed ms) — so an operator
+//! can tell a worker grinding a long ALPS layer from one that died.
+//!
 //! Wiring: pass `StatusBoard::observe` as (part of) the session observer
 //! and serve the board on a listener; the CLI does exactly this for
 //! `alps prune --status-addr 127.0.0.1:7878`:
@@ -18,6 +25,7 @@
 //! monitoring scrape can never interfere with the run it watches.
 
 use super::session::{json_escape, ProgressEvent};
+use super::wire::Heartbeat;
 use crate::net::framing::{read_line_deadline, LineRead};
 use crate::net::server::{finish_refusal, respond_http_json, write_http_json};
 use crate::net::{lock, ConnHandler, NetServer, ServerConfig, READ_POLL, WRITE_TIMEOUT};
@@ -26,6 +34,7 @@ use std::collections::BTreeMap;
 use std::io::{BufReader, Write as _};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Mutex;
+use std::time::Duration;
 
 /// Longest accepted query line (a status query is one short word; HTTP
 /// request lines from probes stay well under this).
@@ -56,6 +65,13 @@ pub struct StatusSnapshot {
     pub total_secs: f64,
     /// Layers solved per pool member (`"local"` for in-process solves).
     pub workers: BTreeMap<String, usize>,
+    /// Keepalive frames received per pool member while it was solving —
+    /// a worker with a climbing beat count and a flat solve count is
+    /// alive but grinding through a long ALPS layer (sharded runs only).
+    pub heartbeats: BTreeMap<String, u64>,
+    /// Latest in-solve progress per pool member:
+    /// `(job, admm_iter, elapsed_ms)` from its most recent heartbeat.
+    pub solving: BTreeMap<String, (u64, u64, u64)>,
 }
 
 impl StatusSnapshot {
@@ -67,12 +83,29 @@ impl StatusSnapshot {
             .map(|(w, n)| format!("\"{}\":{}", json_escape(w), n))
             .collect::<Vec<_>>()
             .join(",");
+        let heartbeats = self
+            .heartbeats
+            .iter()
+            .map(|(w, n)| format!("\"{}\":{}", json_escape(w), n))
+            .collect::<Vec<_>>()
+            .join(",");
+        let solving = self
+            .solving
+            .iter()
+            .map(|(w, (job, iter, ms))| {
+                format!(
+                    "\"{}\":{{\"job\":{job},\"admm_iter\":{iter},\"elapsed_ms\":{ms}}}",
+                    json_escape(w)
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",");
         format!(
             "{{\"model\":\"{}\",\"method\":\"{}\",\"target\":\"{}\",\
              \"n_blocks\":{},\"blocks_done\":{},\"layers_solved\":{},\
              \"checkpoints_written\":{},\"last_layer\":\"{}\",\
              \"running\":{},\"finished\":{},\"total_secs\":{},\
-             \"workers\":{{{}}}}}\n",
+             \"workers\":{{{}}},\"heartbeats\":{{{}}},\"solving\":{{{}}}}}\n",
             json_escape(&self.model),
             json_escape(&self.method),
             json_escape(&self.target),
@@ -85,6 +118,8 @@ impl StatusSnapshot {
             self.finished,
             if self.total_secs.is_finite() { self.total_secs } else { 0.0 },
             workers,
+            heartbeats,
+            solving,
         )
     }
 }
@@ -128,6 +163,9 @@ impl StatusBoard {
                 st.layers_solved += 1;
                 st.last_layer = layer.clone();
                 let key = worker.as_deref().unwrap_or(LOCAL_WORKER).to_string();
+                // the delivered layer supersedes that worker's live
+                // in-solve progress entry
+                st.solving.remove(&key);
                 *st.workers.entry(key).or_insert(0) += 1;
             }
             ProgressEvent::CheckpointWritten { block, .. } => {
@@ -142,6 +180,24 @@ impl StatusBoard {
                 st.finished = true;
             }
         }
+    }
+
+    /// Record one worker keepalive frame (called by the sharded
+    /// dispatcher as beats arrive): bumps the per-worker beat count and
+    /// replaces that worker's live solve-progress entry.
+    pub fn note_heartbeat(&self, worker: &str, hb: &Heartbeat) {
+        let mut st = lock(&self.state);
+        *st.heartbeats.entry(worker.to_string()).or_insert(0) += 1;
+        st.solving
+            .insert(worker.to_string(), (hb.job, hb.admm_iter, hb.elapsed_ms));
+    }
+
+    /// Drop a worker's live solve-progress entry (called by the sharded
+    /// dispatcher when it abandons that worker's in-flight jobs): a dead
+    /// or rerouted-away worker must not keep showing as "solving" with a
+    /// frozen progress reading. The beat count history stays.
+    pub fn note_worker_stalled(&self, worker: &str) {
+        lock(&self.state).solving.remove(worker);
     }
 
     pub fn snapshot(&self) -> StatusSnapshot {
@@ -297,6 +353,44 @@ mod tests {
         assert!(json.contains("\"layers_solved\":3"), "{json}");
         assert!(json.contains("\"127.0.0.1:1\":1"), "{json}");
         assert!(json.contains("\"finished\":true"), "{json}");
+    }
+
+    #[test]
+    fn board_surfaces_worker_heartbeats() {
+        let board = StatusBoard::new();
+        sample_events(&board);
+        let beat = |job, iter, ms| Heartbeat { job, admm_iter: iter, elapsed_ms: ms };
+        board.note_heartbeat("127.0.0.1:1", &beat(7, 120, 900));
+        board.note_heartbeat("127.0.0.1:1", &beat(7, 260, 1900));
+        board.note_heartbeat("127.0.0.1:2", &beat(8, 0, 40));
+        let st = board.snapshot();
+        assert_eq!(st.heartbeats.get("127.0.0.1:1"), Some(&2));
+        assert_eq!(st.heartbeats.get("127.0.0.1:2"), Some(&1));
+        // latest beat wins the live-progress slot
+        assert_eq!(st.solving.get("127.0.0.1:1"), Some(&(7, 260, 1900)));
+        let json = st.to_json();
+        assert!(json.contains("\"heartbeats\":{"), "{json}");
+        assert!(json.contains("\"admm_iter\":260"), "{json}");
+        // a delivered layer clears that worker's live-progress entry
+        board.observe(&ProgressEvent::LayerSolved {
+            block: 0,
+            layer: "blocks.0.l9".into(),
+            n_in: 8,
+            n_out: 8,
+            kept: 32,
+            total: 64,
+            rel_error: 0.1,
+            secs: 0.5,
+            admm_iters: 3,
+            worker: Some("127.0.0.1:1".into()),
+        });
+        assert!(board.snapshot().solving.get("127.0.0.1:1").is_none());
+        // a dead/rerouted worker's entry clears too (dispatcher requeue
+        // path), while its beat history survives
+        board.note_worker_stalled("127.0.0.1:2");
+        let st = board.snapshot();
+        assert!(st.solving.get("127.0.0.1:2").is_none());
+        assert_eq!(st.heartbeats.get("127.0.0.1:2"), Some(&1));
     }
 
     #[test]

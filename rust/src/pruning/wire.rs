@@ -1,16 +1,27 @@
-//! Wire codec for the distributed pruning protocol.
+//! Wire codec for the distributed pruning protocol (frame version 2).
 //!
 //! One [`SolveRequest`] carries everything a stateless worker needs to
-//! solve one layer: the dense weights, the calibration gram matrix, the
+//! solve one layer: the dense weights, the calibration statistics, the
 //! full [`MethodSpec`] (hyperparameters included), and the
-//! [`SparsityTarget`]. The worker rebuilds the [`LayerProblem`] with
-//! [`LayerProblem::from_gram`] — the derived quantities (`G = H What`,
-//! the normalizer) are recomputed from bit-identical inputs by the same
-//! deterministic kernels, so a remote solve is bit-identical to a local
-//! one.
+//! [`SparsityTarget`]. Calibration travels in one of two forms
+//! ([`Calib`]):
+//!
+//! * **Gram** — the precomputed `H = X^T X` `[n_in, n_in]`, the v1
+//!   layout; the worker rebuilds the problem with
+//!   [`LayerProblem::from_gram`].
+//! * **Activations** — the raw calibration rows `X [n, n_in]`; the worker
+//!   builds the gram itself with the same deterministic
+//!   `linalg::matmul::gram` kernel, then proceeds through
+//!   [`LayerProblem::from_gram`] exactly as the gram path does. For wide
+//!   layers this cuts the per-layer wire payload from O(n_in^2) to
+//!   O(n·n_in) whenever `n < n_in`.
+//!
+//! Either way the derived quantities (`G = H What`, the normalizer) are
+//! recomputed from bit-identical inputs by the same deterministic
+//! kernels, so a remote solve is bit-identical to a local one.
 //!
 //! Encoding is little-endian and versioned at the frame layer
-//! ([`crate::net::framing`]); payload tags:
+//! ([`crate::net::framing`], `FRAME_VERSION = 2`); payload tags:
 //!
 //! * [`tag::SOLVE`] — coordinator -> worker, a [`SolveRequest`];
 //! * [`tag::RESULT`] — worker -> coordinator, a [`SolveResponse`];
@@ -19,7 +30,15 @@
 //!   block instead of retrying elsewhere; protocol-level failures carry
 //!   the `u64::MAX` sentinel instead of a job id);
 //! * [`tag::BUSY`] — worker -> coordinator, same payload shape: the
-//!   worker is at its connection cap; retry after a backoff.
+//!   worker is at its connection cap; retry after a backoff;
+//! * [`tag::HEARTBEAT`] — worker -> coordinator, a [`Heartbeat`]: emitted
+//!   periodically while a solve is in progress so the coordinator can
+//!   tell a slow solve from a dead worker and reroute on missed beats
+//!   instead of waiting out its (much longer) idle timeout.
+//!
+//! Every decoder is bounds-checked: truncated or corrupt payloads come
+//! back as a `malformed frame` error, never a panic — a desynced or
+//! hostile peer cannot crash the reader.
 //!
 //! f32/f64 round-trip through `to_le_bytes`/`from_le_bytes` exactly, so
 //! the transport never perturbs a single bit of the matrices.
@@ -27,7 +46,7 @@
 use super::{LayerProblem, MethodSpec};
 use crate::config::{AlpsConfig, DsNoTConfig, SparseGptConfig, SparsityTarget};
 use crate::linalg::Matrix;
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 /// Payload tags inside the `net` frame header.
 pub mod tag {
@@ -43,6 +62,39 @@ pub mod tag {
     /// (connection cap reached). Retryable — the coordinator backs off
     /// and reconnects instead of aborting the run.
     pub const BUSY: u8 = 4;
+    /// Worker -> coordinator: periodic liveness beacon while a solve is
+    /// in progress, carrying the job id plus ADMM iteration / elapsed
+    /// progress. Purely advisory: the coordinator uses the *absence* of
+    /// beats to declare a worker dead.
+    pub const HEARTBEAT: u8 = 5;
+}
+
+/// Calibration statistics of one solve request (owned form).
+#[derive(Clone)]
+pub enum Calib {
+    /// Precomputed gram `H = X^T X` `[n_in, n_in]`.
+    Gram(Matrix),
+    /// Raw calibration activations `X [n, n_in]`; the worker computes
+    /// the gram with the same deterministic kernel the coordinator uses.
+    Activations(Matrix),
+}
+
+/// Borrowed form of [`Calib`] for the coordinator's send path, which must
+/// not deep-copy a layer's matrices just to serialize them (a wide
+/// layer's gram alone can be gigabytes).
+#[derive(Clone, Copy)]
+pub enum CalibRef<'a> {
+    Gram(&'a Matrix),
+    Activations(&'a Matrix),
+}
+
+impl Calib {
+    fn borrowed(&self) -> CalibRef<'_> {
+        match self {
+            Calib::Gram(h) => CalibRef::Gram(h),
+            Calib::Activations(x) => CalibRef::Activations(x),
+        }
+    }
 }
 
 /// One layer-solve job shipped to a worker.
@@ -54,50 +106,75 @@ pub struct SolveRequest {
     pub spec: MethodSpec,
     /// Dense weights What `[n_in, n_out]`.
     pub what: Matrix,
-    /// Calibration gram H = X^T X `[n_in, n_in]`.
-    pub h: Matrix,
+    /// Calibration statistics: gram, or activations for worker-side gram.
+    pub calib: Calib,
 }
 
 /// Encode a solve request from borrowed parts — the coordinator's send
-/// path, which must not deep-copy a layer's matrices just to serialize
-/// them (a wide layer's gram alone can be gigabytes).
+/// path (no deep copies of the possibly huge matrices).
 pub fn encode_solve(
     job: u64,
     target: SparsityTarget,
     spec: &MethodSpec,
     what: &Matrix,
-    h: &Matrix,
+    calib: CalibRef<'_>,
 ) -> Vec<u8> {
     let mut e = Enc::new();
     e.u64(job);
     put_target(&mut e, target);
     put_spec(&mut e, spec);
     put_matrix(&mut e, what);
-    put_matrix(&mut e, h);
+    match calib {
+        CalibRef::Gram(h) => {
+            e.u8(0);
+            put_matrix(&mut e, h);
+        }
+        CalibRef::Activations(x) => {
+            e.u8(1);
+            put_matrix(&mut e, x);
+        }
+    }
     e.0
 }
 
 impl SolveRequest {
     pub fn encode(&self) -> Vec<u8> {
-        encode_solve(self.job, self.target, &self.spec, &self.what, &self.h)
+        encode_solve(self.job, self.target, &self.spec, &self.what, self.calib.borrowed())
     }
 
     pub fn decode(buf: &[u8]) -> Result<SolveRequest> {
-        let mut d = Dec::new(buf);
-        let req = SolveRequest {
-            job: d.u64()?,
-            target: get_target(&mut d)?,
-            spec: get_spec(&mut d)?,
-            what: get_matrix(&mut d)?,
-            h: get_matrix(&mut d)?,
-        };
-        d.finish()?;
-        Ok(req)
+        Self::decode_inner(buf).map_err(|e| anyhow!("malformed frame: {e}"))
     }
 
-    /// Rebuild the layer problem exactly as the coordinator had it.
+    fn decode_inner(buf: &[u8]) -> Result<SolveRequest> {
+        let mut d = Dec::new(buf);
+        let job = d.u64()?;
+        let target = get_target(&mut d)?;
+        let spec = get_spec(&mut d)?;
+        let what = get_matrix(&mut d)?;
+        let calib = match d.u8()? {
+            0 => Calib::Gram(get_matrix(&mut d)?),
+            1 => Calib::Activations(get_matrix(&mut d)?),
+            k => bail!("unknown calibration kind {k}"),
+        };
+        d.finish()?;
+        Ok(SolveRequest { job, target, spec, what, calib })
+    }
+
+    /// Rebuild the layer problem exactly as the coordinator had it: a
+    /// shipped gram feeds [`LayerProblem::from_gram`]; shipped
+    /// activations go through the same `gram` kernel the coordinator's
+    /// session uses, so the resulting H is bit-identical. Deliberately
+    /// NOT [`LayerProblem::from_activations`]: that constructor retains a
+    /// deep copy of X on the problem, which the worker (already holding X
+    /// in the request) has no use for.
     pub fn problem(&self) -> Result<LayerProblem> {
-        LayerProblem::from_gram(self.h.clone(), self.what.clone())
+        match &self.calib {
+            Calib::Gram(h) => LayerProblem::from_gram(h.clone(), self.what.clone()),
+            Calib::Activations(x) => {
+                LayerProblem::from_gram(crate::linalg::matmul::gram(x), self.what.clone())
+            }
+        }
     }
 }
 
@@ -123,6 +200,10 @@ impl SolveResponse {
     }
 
     pub fn decode(buf: &[u8]) -> Result<SolveResponse> {
+        Self::decode_inner(buf).map_err(|e| anyhow!("malformed frame: {e}"))
+    }
+
+    fn decode_inner(buf: &[u8]) -> Result<SolveResponse> {
         let mut d = Dec::new(buf);
         let resp = SolveResponse {
             job: d.u64()?,
@@ -135,6 +216,40 @@ impl SolveResponse {
     }
 }
 
+/// Worker liveness beacon, emitted every `heartbeat_every` while a solve
+/// runs on the connection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Heartbeat {
+    /// The job currently being solved on this connection.
+    pub job: u64,
+    /// ADMM iterations completed so far (0 for non-ALPS methods and
+    /// during problem rebuild / gram computation).
+    pub admm_iter: u64,
+    /// Milliseconds since this solve started on the worker.
+    pub elapsed_ms: u64,
+}
+
+/// Encode a [`Heartbeat`] for `tag::HEARTBEAT`.
+pub fn encode_heartbeat(hb: Heartbeat) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u64(hb.job);
+    e.u64(hb.admm_iter);
+    e.u64(hb.elapsed_ms);
+    e.0
+}
+
+/// Decode a `tag::HEARTBEAT` payload.
+pub fn decode_heartbeat(buf: &[u8]) -> Result<Heartbeat> {
+    fn inner(buf: &[u8]) -> Result<Heartbeat> {
+        let mut d = Dec::new(buf);
+        let hb =
+            Heartbeat { job: d.u64()?, admm_iter: d.u64()?, elapsed_ms: d.u64()? };
+        d.finish()?;
+        Ok(hb)
+    }
+    inner(buf).map_err(|e| anyhow!("malformed frame: {e}"))
+}
+
 /// Encode a worker-side solver failure for `tag::ERROR`.
 pub fn encode_error(job: u64, msg: &str) -> Vec<u8> {
     let mut e = Enc::new();
@@ -145,11 +260,14 @@ pub fn encode_error(job: u64, msg: &str) -> Vec<u8> {
 
 /// Decode a `tag::ERROR` payload into (job, message).
 pub fn decode_error(buf: &[u8]) -> Result<(u64, String)> {
-    let mut d = Dec::new(buf);
-    let job = d.u64()?;
-    let msg = d.str()?;
-    d.finish()?;
-    Ok((job, msg))
+    fn inner(buf: &[u8]) -> Result<(u64, String)> {
+        let mut d = Dec::new(buf);
+        let job = d.u64()?;
+        let msg = d.str()?;
+        d.finish()?;
+        Ok((job, msg))
+    }
+    inner(buf).map_err(|e| anyhow!("malformed frame: {e}"))
 }
 
 // ------------------------------------------------------------ primitives
@@ -188,7 +306,9 @@ impl Enc {
     }
 }
 
-/// Bounds-checked little-endian decoder.
+/// Bounds-checked little-endian decoder: every read validates the
+/// remaining length first, so truncation and corrupt length fields
+/// surface as errors, never slice panics.
 struct Dec<'a> {
     buf: &'a [u8],
     pos: usize,
@@ -387,6 +507,10 @@ mod tests {
         ]
     }
 
+    fn bits(m: &Matrix) -> Vec<u32> {
+        m.data.iter().map(|v| v.to_bits()).collect()
+    }
+
     #[test]
     fn request_roundtrips_bit_exact() {
         let mut rng = Rng::new(1);
@@ -403,17 +527,58 @@ mod tests {
                 target,
                 spec: spec.clone(),
                 what: what.clone(),
-                h: h.clone(),
+                calib: Calib::Gram(h.clone()),
             };
             let back = SolveRequest::decode(&req.encode()).unwrap();
             assert_eq!(back.job, 41 + i as u64);
             assert_eq!(back.target, target);
             assert_eq!(back.spec, spec);
             // bit-exact matrices: compare the raw f32 bit patterns
-            let bits = |m: &Matrix| m.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
             assert_eq!(bits(&back.what), bits(&what));
-            assert_eq!(bits(&back.h), bits(&h));
+            let Calib::Gram(back_h) = back.calib else {
+                panic!("calib kind changed in transit")
+            };
+            assert_eq!(bits(&back_h), bits(&h));
         }
+    }
+
+    #[test]
+    fn activation_request_roundtrips_bit_exact() {
+        let mut rng = Rng::new(4);
+        let what = Matrix::randn(12, 6, &mut rng);
+        let x = Matrix::randn(8, 12, &mut rng);
+        let req = SolveRequest {
+            job: 9,
+            target: SparsityTarget::Unstructured(0.7),
+            spec: MethodSpec::Alps(AlpsConfig::default()),
+            what: what.clone(),
+            calib: Calib::Activations(x.clone()),
+        };
+        let back = SolveRequest::decode(&req.encode()).unwrap();
+        assert_eq!(bits(&back.what), bits(&what));
+        let Calib::Activations(back_x) = back.calib else {
+            panic!("calib kind changed in transit")
+        };
+        assert_eq!(bits(&back_x), bits(&x));
+    }
+
+    #[test]
+    fn activation_payload_smaller_than_gram_for_wide_layers() {
+        // the whole point of shipping activations: when the calibration
+        // row count is below n_in, X [n, n_in] beats H [n_in, n_in]
+        let mut rng = Rng::new(5);
+        let (n, n_in, n_out) = (16, 64, 8);
+        let what = Matrix::randn(n_in, n_out, &mut rng);
+        let x = Matrix::randn(n, n_in, &mut rng);
+        let h = crate::linalg::matmul::gram(&x);
+        let spec = MethodSpec::Wanda;
+        let t = SparsityTarget::Unstructured(0.5);
+        let by_gram = encode_solve(0, t, &spec, &what, CalibRef::Gram(&h)).len();
+        let by_acts = encode_solve(0, t, &spec, &what, CalibRef::Activations(&x)).len();
+        assert!(
+            by_acts < by_gram,
+            "activations {by_acts}B should undercut gram {by_gram}B"
+        );
     }
 
     #[test]
@@ -438,35 +603,110 @@ mod tests {
     }
 
     #[test]
-    fn truncated_and_trailing_payloads_rejected() {
+    fn heartbeat_roundtrips() {
+        let hb = Heartbeat { job: 11, admm_iter: 250, elapsed_ms: 1234 };
+        assert_eq!(decode_heartbeat(&encode_heartbeat(hb)).unwrap(), hb);
+    }
+
+    /// Every strict prefix of every payload type must decode to an error
+    /// (`malformed frame`), never panic — the per-field regression sweep
+    /// for the truncation-hardening guarantee.
+    #[test]
+    fn every_truncation_of_every_payload_errors() {
         let mut rng = Rng::new(3);
+        let solve_gram = SolveRequest {
+            job: 1,
+            target: SparsityTarget::Unstructured(0.5),
+            spec: MethodSpec::Wanda,
+            what: Matrix::randn(4, 4, &mut rng),
+            calib: Calib::Gram(Matrix::randn(4, 4, &mut rng)),
+        }
+        .encode();
+        let solve_acts = SolveRequest {
+            job: 2,
+            target: SparsityTarget::NM { n: 2, m: 4 },
+            spec: MethodSpec::Alps(AlpsConfig::default()),
+            what: Matrix::randn(4, 2, &mut rng),
+            calib: Calib::Activations(Matrix::randn(3, 4, &mut rng)),
+        }
+        .encode();
+        let response = SolveResponse {
+            job: 3,
+            secs: 0.5,
+            admm_iters: 9,
+            w: Matrix::randn(4, 2, &mut rng),
+        }
+        .encode();
+        let error = encode_error(4, "boom");
+        let heartbeat =
+            encode_heartbeat(Heartbeat { job: 5, admm_iter: 6, elapsed_ms: 7 });
+
+        for (name, buf) in [
+            ("solve/gram", &solve_gram),
+            ("solve/acts", &solve_acts),
+            ("response", &response),
+            ("error", &error),
+            ("heartbeat", &heartbeat),
+        ] {
+            for cut in 0..buf.len() {
+                let err = match name {
+                    "response" => SolveResponse::decode(&buf[..cut]).err(),
+                    "error" => decode_error(&buf[..cut]).err(),
+                    "heartbeat" => decode_heartbeat(&buf[..cut]).err(),
+                    _ => SolveRequest::decode(&buf[..cut]).err(),
+                };
+                let err = err.unwrap_or_else(|| {
+                    panic!("{name}: truncation at {cut} decoded cleanly")
+                });
+                assert!(
+                    err.to_string().contains("malformed frame"),
+                    "{name} cut {cut}: {err}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_and_oversized_headers_rejected() {
+        let mut rng = Rng::new(6);
         let req = SolveRequest {
             job: 1,
             target: SparsityTarget::Unstructured(0.5),
             spec: MethodSpec::Wanda,
             what: Matrix::randn(4, 4, &mut rng),
-            h: Matrix::randn(4, 4, &mut rng),
+            calib: Calib::Gram(Matrix::randn(4, 4, &mut rng)),
         };
-        let buf = req.encode();
-        // truncation at every prefix must error, never panic
-        for cut in [0, 1, 8, 9, buf.len() / 2, buf.len() - 1] {
-            assert!(SolveRequest::decode(&buf[..cut]).is_err(), "cut at {cut}");
-        }
-        // trailing garbage rejected
-        let mut long = buf.clone();
-        long.push(0);
-        assert!(SolveRequest::decode(&long).is_err());
-        // oversized matrix header rejected before allocation
-        let mut huge = Vec::new();
+        // trailing garbage rejected on every payload type
+        let with_junk = |mut v: Vec<u8>| {
+            v.push(0);
+            v
+        };
+        assert!(SolveRequest::decode(&with_junk(req.encode())).is_err());
+        let resp =
+            SolveResponse { job: 1, secs: 0.0, admm_iters: 0, w: Matrix::zeros(2, 2) };
+        assert!(SolveResponse::decode(&with_junk(resp.encode())).is_err());
+        assert!(decode_error(&with_junk(encode_error(1, "x"))).is_err());
+        let hb = Heartbeat { job: 1, admm_iter: 0, elapsed_ms: 0 };
+        assert!(decode_heartbeat(&with_junk(encode_heartbeat(hb))).is_err());
+        // oversized matrix header rejected before allocation (u32::MAX
+        // rows/cols would overflow rows*cols*4 without the checked_mul)
         let mut e = Enc::new();
         e.u64(1);
         put_target(&mut e, SparsityTarget::Unstructured(0.5));
         put_spec(&mut e, &MethodSpec::Wanda);
         e.u32(u32::MAX);
         e.u32(u32::MAX);
-        huge.extend_from_slice(&e.0);
-        let err = SolveRequest::decode(&huge).unwrap_err().to_string();
+        let err = SolveRequest::decode(&e.0).unwrap_err().to_string();
         assert!(err.contains("larger than remaining"), "{err}");
+        // unknown calibration kind rejected
+        let mut e = Enc::new();
+        e.u64(1);
+        put_target(&mut e, SparsityTarget::Unstructured(0.5));
+        put_spec(&mut e, &MethodSpec::Wanda);
+        put_matrix(&mut e, &Matrix::zeros(2, 2));
+        e.u8(9);
+        let err = SolveRequest::decode(&e.0).unwrap_err().to_string();
+        assert!(err.contains("calibration kind"), "{err}");
     }
 
     #[test]
@@ -478,12 +718,34 @@ mod tests {
             target: SparsityTarget::Unstructured(0.5),
             spec: MethodSpec::Magnitude,
             what: p.what.clone(),
-            h: p.h.clone(),
+            calib: Calib::Gram(p.h.clone()),
         };
         let back = SolveRequest::decode(&req.encode()).unwrap();
         let q = back.problem().unwrap();
         // the derived quantities are recomputed bit-identically
         assert_eq!(q.g, p.g);
         assert_eq!(q.denom, p.denom);
+    }
+
+    #[test]
+    fn shipped_activations_rebuild_the_same_gram() {
+        // worker-side gram computation must land on the exact bits the
+        // coordinator's own `gram(x)` produced — same kernel, same input
+        use crate::linalg::matmul::gram;
+        let mut rng = Rng::new(10);
+        let x = Matrix::randn(20, 12, &mut rng);
+        let what = Matrix::randn(12, 5, &mut rng);
+        let local = LayerProblem::from_gram(gram(&x), what.clone()).unwrap();
+        let req = SolveRequest {
+            job: 0,
+            target: SparsityTarget::Unstructured(0.5),
+            spec: MethodSpec::Magnitude,
+            what,
+            calib: Calib::Activations(x),
+        };
+        let remote = SolveRequest::decode(&req.encode()).unwrap().problem().unwrap();
+        assert_eq!(bits(&remote.h), bits(&local.h));
+        assert_eq!(bits(&remote.g), bits(&local.g));
+        assert_eq!(remote.denom, local.denom);
     }
 }

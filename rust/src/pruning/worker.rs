@@ -1,6 +1,7 @@
 //! The pruning worker: hosts [`NativeEngine`] behind the binary frame
-//! protocol so a coordinator ([`crate::coordinator::ShardedEngine`]) can
-//! fan layer solves across machines.
+//! protocol (version 2) so a coordinator
+//! ([`crate::coordinator::ShardedEngine`]) can fan layer solves across
+//! machines.
 //!
 //! The worker is **stateless and method-agnostic**: every
 //! [`wire::SolveRequest`] carries its own [`MethodSpec`]
@@ -8,6 +9,22 @@
 //! serves ALPS, SparseGPT, Wanda, … runs concurrently, and a worker that
 //! restarts loses nothing but its in-flight solves (the coordinator
 //! reroutes those).
+//!
+//! Protocol-v2 behaviours hosted here:
+//!
+//! * **Heartbeats** — while a solve runs, a sidecar thread writes a
+//!   [`wire::tag::HEARTBEAT`] frame every
+//!   [`WorkerConfig::heartbeat_every`] carrying the job id, the live ADMM
+//!   iteration count (ALPS), and elapsed milliseconds. The coordinator
+//!   uses missed beats to tell a dead worker from a slow solve and
+//!   reroutes within its (short) heartbeat grace instead of its (long)
+//!   idle timeout. Both threads share the socket through a mutex, so
+//!   frames never interleave.
+//! * **Worker-side gram** — a request whose calibration arrives as raw
+//!   activations ([`wire::Calib::Activations`]) has its gram computed
+//!   here with the same deterministic `linalg` kernels the coordinator
+//!   uses, so results stay bit-identical while wide layers ship O(n·n_in)
+//!   bytes instead of O(n_in^2).
 //!
 //! Connections come through the shared [`crate::net`] layer: the accept
 //! loop, connection cap, and shutdown drain are [`NetServer`]'s; this
@@ -19,16 +36,22 @@
 //! busy without unbounded buffering.
 //!
 //! CLI: `alps worker --addr 127.0.0.1:7979 [--max-conns 8]
-//! [--max-frame-mb 1024]`.
+//! [--max-frame-mb 1024] [--heartbeat-secs 2]`.
 
-use super::engine::{Engine as _, NativeEngine};
+use super::engine::NativeEngine;
 use super::wire::{self, tag};
 use crate::net::framing::{read_frame, write_frame, FrameRead};
 use crate::net::server::finish_refusal;
-use crate::net::{ConnHandler, NetServer, ServerConfig, READ_POLL, WRITE_TIMEOUT};
+use crate::net::{lock, ConnHandler, NetServer, ServerConfig, READ_POLL, WRITE_TIMEOUT};
 use anyhow::{Context as _, Result};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// How often the heartbeat thread wakes to check for work/shutdown —
+/// bounds how long a finished solve waits for its sidecar to exit.
+const HEARTBEAT_TICK: Duration = Duration::from_millis(20);
 
 /// Worker endpoint configuration.
 #[derive(Clone, Debug)]
@@ -38,11 +61,18 @@ pub struct WorkerConfig {
     /// Largest accepted request frame in bytes (bounds a layer's
     /// weights + gram: ~1 GiB covers a 16k x 16k f32 gram).
     pub max_frame_bytes: usize,
+    /// Interval between HEARTBEAT frames while a solve is in progress.
+    /// Must sit well below the coordinator's heartbeat grace.
+    pub heartbeat_every: Duration,
 }
 
 impl Default for WorkerConfig {
     fn default() -> Self {
-        WorkerConfig { max_conns: 8, max_frame_bytes: 1 << 30 }
+        WorkerConfig {
+            max_conns: 8,
+            max_frame_bytes: 1 << 30,
+            heartbeat_every: Duration::from_secs(2),
+        }
     }
 }
 
@@ -72,6 +102,13 @@ impl Worker {
         self.solved.load(Ordering::SeqCst)
     }
 
+    /// Coordinator connections accepted over this worker's lifetime —
+    /// lets tests prove the persistent pool really reuses connections
+    /// across block solves instead of redialing.
+    pub fn connections_accepted(&self) -> usize {
+        self.net.total_accepted()
+    }
+
     /// Flag shutdown: in-flight solves finish and their results are
     /// delivered, then `serve` returns.
     pub fn request_shutdown(&self) {
@@ -94,7 +131,8 @@ impl ConnHandler for WorkerHandler<'_> {
         stream.set_write_timeout(Some(WRITE_TIMEOUT)).context("setting write timeout")?;
         let _ = stream.set_nodelay(true);
         let mut reader = stream.try_clone().context("cloning stream")?;
-        let mut writer = stream;
+        // the heartbeat sidecar and the request loop share the write side
+        let writer = Mutex::new(stream);
         let max = self.worker.cfg.max_frame_bytes;
         let shutdown = self.worker.net.shutdown_flag();
         loop {
@@ -107,7 +145,7 @@ impl ConnHandler for WorkerHandler<'_> {
                     // dropping the desynced connection, so its retry loop
                     // reports the real cause instead of a network fault
                     let _ = write_frame(
-                        &mut writer,
+                        &mut *lock(&writer),
                         tag::ERROR,
                         &wire::encode_error(u64::MAX, &format!("request rejected: {e}")),
                     );
@@ -120,7 +158,7 @@ impl ConnHandler for WorkerHandler<'_> {
             // verdict (abort)
             if tag != tag::SOLVE {
                 write_frame(
-                    &mut writer,
+                    &mut *lock(&writer),
                     tag::ERROR,
                     &wire::encode_error(u64::MAX, &format!("unexpected frame tag {tag}")),
                 )?;
@@ -130,20 +168,20 @@ impl ConnHandler for WorkerHandler<'_> {
                 Ok(r) => r,
                 Err(e) => {
                     write_frame(
-                        &mut writer,
+                        &mut *lock(&writer),
                         tag::ERROR,
                         &wire::encode_error(u64::MAX, &format!("bad solve request: {e}")),
                     )?;
                     continue;
                 }
             };
-            match solve(&req) {
+            match solve_with_heartbeat(&req, &writer, self.worker.cfg.heartbeat_every) {
                 Ok(resp) => {
                     self.worker.solved.fetch_add(1, Ordering::SeqCst);
-                    write_frame(&mut writer, tag::RESULT, &resp.encode())?;
+                    write_frame(&mut *lock(&writer), tag::RESULT, &resp.encode())?;
                 }
                 Err(e) => write_frame(
-                    &mut writer,
+                    &mut *lock(&writer),
                     tag::ERROR,
                     &wire::encode_error(req.job, &e.to_string()),
                 )?,
@@ -168,11 +206,59 @@ impl ConnHandler for WorkerHandler<'_> {
 }
 
 /// Solve one request through the native engine — the exact code path a
-/// local run takes, so results are bit-identical.
-fn solve(req: &wire::SolveRequest) -> Result<wire::SolveResponse> {
+/// local run takes, so results are bit-identical — while a sidecar thread
+/// writes periodic HEARTBEAT frames so the coordinator can tell this
+/// (possibly minutes-long) solve from a dead worker. The heartbeat covers
+/// the whole span the coordinator is waiting on: problem rebuild
+/// (including worker-side gram computation) plus the solve itself — and
+/// deliberately does NOT watch the shutdown flag: a graceful drain
+/// promises to finish and deliver in-flight solves, so the beats must
+/// keep flowing until the solve is done or the coordinator would discard
+/// the very result the drain guarantees.
+fn solve_with_heartbeat(
+    req: &wire::SolveRequest,
+    writer: &Mutex<TcpStream>,
+    every: Duration,
+) -> Result<wire::SolveResponse> {
+    let progress = AtomicU64::new(0);
+    let done = AtomicBool::new(false);
+    let started = Instant::now();
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            let mut last_beat = Instant::now();
+            while !done.load(Ordering::Relaxed) {
+                std::thread::sleep(HEARTBEAT_TICK);
+                if last_beat.elapsed() < every {
+                    continue;
+                }
+                let beat = wire::encode_heartbeat(wire::Heartbeat {
+                    job: req.job,
+                    admm_iter: progress.load(Ordering::Relaxed),
+                    elapsed_ms: started.elapsed().as_millis() as u64,
+                });
+                // write failures end the beats, not the solve: the request
+                // loop will surface the broken socket when it answers
+                if write_frame(&mut *lock(writer), tag::HEARTBEAT, &beat).is_err() {
+                    return;
+                }
+                last_beat = Instant::now();
+            }
+        });
+        let result = solve(req, &progress);
+        // stop the sidecar before returning so the RESULT frame can never
+        // race a final heartbeat (the scope join makes this a barrier)
+        done.store(true, Ordering::Relaxed);
+        result
+    })
+}
+
+/// Rebuild the problem (computing the gram locally when the request
+/// shipped activations) and solve it through [`NativeEngine`], storing
+/// live ADMM progress into `progress` for the heartbeat sidecar.
+fn solve(req: &wire::SolveRequest, progress: &AtomicU64) -> Result<wire::SolveResponse> {
     let problem = req.problem()?;
     let engine = NativeEngine::new(req.spec.clone());
-    let res = engine.solve_layer(&problem, req.target)?;
+    let res = engine.solve_layer_observed(&problem, req.target, Some(progress))?;
     Ok(wire::SolveResponse {
         job: req.job,
         secs: res.secs,
@@ -185,24 +271,34 @@ fn solve(req: &wire::SolveRequest) -> Result<wire::SolveResponse> {
 mod tests {
     use super::*;
     use crate::config::SparsityTarget;
+    use crate::pruning::engine::Engine as _;
     use crate::pruning::testutil::random_problem;
     use crate::pruning::MethodSpec;
-    use std::time::Duration;
 
+    /// Send one request and collect frames until a RESULT/ERROR arrives,
+    /// returning the response plus how many heartbeats preceded it.
     fn roundtrip_solve(
         stream: &mut TcpStream,
         req: &wire::SolveRequest,
-    ) -> Result<wire::SolveResponse> {
+    ) -> Result<(wire::SolveResponse, usize)> {
         write_frame(stream, tag::SOLVE, &req.encode())?;
-        match read_frame(stream, 1 << 30, None, Some(Duration::from_secs(30)))? {
-            FrameRead::Frame { tag: tag::RESULT, payload } => {
-                wire::SolveResponse::decode(&payload)
+        let mut beats = 0usize;
+        loop {
+            match read_frame(stream, 1 << 30, None, Some(Duration::from_secs(30)))? {
+                FrameRead::Frame { tag: tag::RESULT, payload } => {
+                    return Ok((wire::SolveResponse::decode(&payload)?, beats));
+                }
+                FrameRead::Frame { tag: tag::HEARTBEAT, payload } => {
+                    let hb = wire::decode_heartbeat(&payload)?;
+                    assert_eq!(hb.job, req.job, "heartbeat for the wrong job");
+                    beats += 1;
+                }
+                FrameRead::Frame { tag: tag::ERROR, payload } => {
+                    let (job, msg) = wire::decode_error(&payload)?;
+                    anyhow::bail!("worker error on job {job}: {msg}")
+                }
+                _ => anyhow::bail!("unexpected reply"),
             }
-            FrameRead::Frame { tag: tag::ERROR, payload } => {
-                let (job, msg) = wire::decode_error(&payload)?;
-                anyhow::bail!("worker error on job {job}: {msg}")
-            }
-            _ => anyhow::bail!("unexpected reply"),
         }
     }
 
@@ -226,9 +322,9 @@ mod tests {
                     target,
                     spec: spec.clone(),
                     what: p.what.clone(),
-                    h: p.h.clone(),
+                    calib: wire::Calib::Gram(p.h.clone()),
                 };
-                let resp = roundtrip_solve(&mut stream, &req).unwrap();
+                let (resp, _) = roundtrip_solve(&mut stream, &req).unwrap();
                 assert_eq!(resp.job, job as u64);
                 let local = NativeEngine::new(spec).solve_layer(&p, target).unwrap();
                 assert_eq!(resp.w, local.w, "remote solve must be bit-identical");
@@ -242,10 +338,84 @@ mod tests {
                 target: SparsityTarget::NM { n: 2, m: 4 },
                 spec: MethodSpec::AlpsStructured(Default::default()),
                 what: p.what.clone(),
-                h: p.h.clone(),
+                calib: wire::Calib::Gram(p.h.clone()),
             };
             let err = roundtrip_solve(&mut stream, &req).unwrap_err().to_string();
             assert!(err.contains("job 9"), "{err}");
+
+            drop(stream);
+            worker.request_shutdown();
+            srv.join().unwrap().unwrap();
+        });
+    }
+
+    #[test]
+    fn shipped_activations_solve_bit_identically() {
+        // worker-side gram: the request carries X, the worker builds H
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let worker = Worker::new(WorkerConfig::default());
+        std::thread::scope(|s| {
+            let srv = s.spawn(|| worker.serve(listener));
+            let mut stream = TcpStream::connect(addr).unwrap();
+            stream.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+
+            let target = SparsityTarget::Unstructured(0.6);
+            let p = random_problem(14, 7, 9, 3); // 9 rows < 14 n_in: wide
+            let x = p.x.as_deref().expect("random_problem attaches X").clone();
+            let req = wire::SolveRequest {
+                job: 1,
+                target,
+                spec: MethodSpec::Wanda,
+                what: p.what.clone(),
+                calib: wire::Calib::Activations(x),
+            };
+            let (resp, _) = roundtrip_solve(&mut stream, &req).unwrap();
+            let local = NativeEngine::new(MethodSpec::Wanda)
+                .solve_layer(&p, target)
+                .unwrap();
+            assert_eq!(resp.w, local.w, "worker-side gram must not change a bit");
+
+            drop(stream);
+            worker.request_shutdown();
+            srv.join().unwrap().unwrap();
+        });
+    }
+
+    #[test]
+    fn long_solves_emit_heartbeats_with_progress() {
+        // a worker configured with a (sub-tick) heartbeat interval beats
+        // while solving; four back-to-back ALPS solves on 96-dim problems
+        // give the sidecar a comfortably-long span to beat in
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let worker = Worker::new(WorkerConfig {
+            heartbeat_every: Duration::from_millis(1),
+            ..Default::default()
+        });
+        std::thread::scope(|s| {
+            let srv = s.spawn(|| worker.serve(listener));
+            let mut stream = TcpStream::connect(addr).unwrap();
+            stream.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+
+            let mut total_beats = 0usize;
+            for job in 0..4u64 {
+                let p = random_problem(96, 48, 200, job);
+                let req = wire::SolveRequest {
+                    job,
+                    target: SparsityTarget::Unstructured(0.7),
+                    spec: MethodSpec::Alps(crate::config::AlpsConfig {
+                        max_iters: 5000,
+                        ..Default::default()
+                    }),
+                    what: p.what.clone(),
+                    calib: wire::Calib::Gram(p.h.clone()),
+                };
+                let (resp, beats) = roundtrip_solve(&mut stream, &req).unwrap();
+                assert!(resp.admm_iters > 0);
+                total_beats += beats;
+            }
+            assert!(total_beats > 0, "no heartbeat across four ALPS solves");
 
             drop(stream);
             worker.request_shutdown();

@@ -268,8 +268,11 @@ fn e2e_sharded_prune_matches_native_end_to_end() {
         vocab: 24,
         seq_len: 12,
     };
+    // one 8-token sequence keeps the activation rows (8) below every
+    // layer's n_in (16/32), so the ship-activations engine below really
+    // ships X instead of falling back to the smaller-gram encoding
     let mut rng = alps::util::Rng::new(0xD157);
-    let calib: Vec<Vec<u16>> = (0..4)
+    let calib: Vec<Vec<u16>> = (0..1)
         .map(|_| (0..8).map(|_| rng.below(24) as u16).collect())
         .collect();
     let target = SparsityTarget::Unstructured(0.6);
@@ -285,10 +288,16 @@ fn e2e_sharded_prune_matches_native_end_to_end() {
     std::thread::spawn(move || {
         let _ = w.serve(listener);
     });
+    // ship activations end-to-end: the worker builds the grams itself,
+    // which must not change a single bit of the result
     let engine = ShardedEngine::with_config(
         spec,
         vec![addr],
-        ShardedConfig { retry_backoff: Duration::from_millis(10), ..Default::default() },
+        ShardedConfig {
+            retry_backoff: Duration::from_millis(10),
+            ship_activations: true,
+            ..Default::default()
+        },
     )
     .unwrap();
     let mut m_sharded = Model::random(cfg, 1234).unwrap();

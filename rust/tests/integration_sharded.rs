@@ -1,14 +1,17 @@
 //! Distributed pruning integration: a worker pool and a coordinator in
 //! one process over 127.0.0.1, proving the acceptance criteria —
 //! a [`ShardedEngine`] run is **bit-identical** to a [`NativeEngine`]
-//! run for the same `MethodSpec`, a dropped worker's layers are rerouted
-//! and the run still completes, and the status endpoint reports
-//! per-worker attribution.
+//! run for the same `MethodSpec` (with grams computed on either side of
+//! the wire), a dropped or silent worker's layers are rerouted (within
+//! the heartbeat grace, not the idle timeout) and the run still
+//! completes, the persistent pool reuses connections across blocks, and
+//! the status endpoint reports per-worker attribution.
 
 use alps::config::{AlpsConfig, ModelConfig, SparsityTarget};
 use alps::coordinator::{ShardedConfig, ShardedEngine};
 use alps::model::Model;
-use alps::net::framing::read_frame;
+use alps::net::framing::{read_frame, write_frame, FrameRead};
+use alps::pruning::wire::{self, tag};
 use alps::pruning::worker::{Worker, WorkerConfig};
 use alps::pruning::{
     Engine, LayerJob, LayerProblem, MethodSpec, NativeEngine, PruneSession, StatusBoard,
@@ -206,6 +209,226 @@ fn worker_drop_reroutes_layers_and_run_completes() {
     assert_eq!(live.layers_solved(), jobs.len(), "survivor solved everything");
     saboteur.join().unwrap();
     live.request_shutdown();
+}
+
+/// Keepalive reroute (the heartbeat acceptance criterion): a saboteur
+/// accepts a job then goes **silent mid-solve** — the connection stays
+/// open, so only missed heartbeats can expose it. With an idle timeout of
+/// an hour and a sub-second heartbeat grace, the run must reroute to the
+/// live worker and finish bit-identically in seconds, not hours.
+#[test]
+fn silent_worker_detected_by_missed_heartbeats_not_idle_timeout() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    let jobs = random_problems(6, 61);
+    let target = SparsityTarget::Unstructured(0.6);
+    let spec = MethodSpec::Wanda;
+
+    // live worker with a fast beat, comfortably inside the grace
+    let live_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let live_addr = live_listener.local_addr().unwrap().to_string();
+    let live = Arc::new(Worker::new(WorkerConfig {
+        heartbeat_every: Duration::from_millis(100),
+        ..Default::default()
+    }));
+    let live2 = live.clone();
+    std::thread::spawn(move || {
+        let _ = live2.serve(live_listener);
+    });
+
+    // saboteur: accepts every (re)dial, swallows one solve request, then
+    // holds the connection open in silence — no EOF, no frames, nothing
+    let sab_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let sab_addr = sab_listener.local_addr().unwrap().to_string();
+    let done = Arc::new(AtomicBool::new(false));
+    let done2 = done.clone();
+    let saboteur = std::thread::spawn(move || {
+        sab_listener.set_nonblocking(true).unwrap();
+        let mut parked: Vec<TcpStream> = Vec::new();
+        while !done2.load(Ordering::SeqCst) {
+            match sab_listener.accept() {
+                Ok((mut conn, _)) => {
+                    let _ = conn.set_nonblocking(false);
+                    let _ = conn.set_read_timeout(Some(Duration::from_millis(100)));
+                    let _ =
+                        read_frame(&mut conn, 1 << 30, None, Some(Duration::from_secs(5)));
+                    parked.push(conn); // held open, silent
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(_) => break,
+            }
+        }
+    });
+
+    let started = std::time::Instant::now();
+    let engine = ShardedEngine::with_config(
+        spec.clone(),
+        vec![sab_addr, live_addr.clone()],
+        ShardedConfig {
+            max_attempts: 2,
+            connect_timeout: Duration::from_secs(1),
+            // the point of the test: silence detection must come from the
+            // heartbeat grace, with the idle ceiling out of reach
+            idle_timeout: Duration::from_secs(3600),
+            heartbeat_grace: Duration::from_millis(700),
+            retry_backoff: Duration::from_millis(10),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let remote = engine.solve_block(&jobs, target).unwrap();
+    let elapsed = started.elapsed();
+    done.store(true, Ordering::SeqCst);
+
+    let local = NativeEngine::new(spec).solve_block(&jobs, target).unwrap();
+    for (i, (r, l)) in remote.iter().zip(&local).enumerate() {
+        assert_eq!(r.w, l.w, "layer {i} differs after heartbeat reroute");
+        assert_eq!(r.worker.as_deref(), Some(live_addr.as_str()), "layer {i}");
+    }
+    // two grace windows (+ slack for loaded CI) — nowhere near the hour
+    // the idle timeout would have cost
+    assert!(
+        elapsed < Duration::from_secs(120),
+        "reroute took {elapsed:?}; heartbeat grace not in effect"
+    );
+    saboteur.join().unwrap();
+    live.request_shutdown();
+}
+
+/// The flip side of the keepalive: a worker that is merely *slow* — it
+/// stalls far past the heartbeat grace but keeps beating — must NOT be
+/// rerouted. With `max_attempts: 1` and no other pool member, any false
+/// positive fails the run.
+#[test]
+fn slow_but_beating_worker_is_not_rerouted() {
+    let jobs = random_problems(2, 71);
+    let target = SparsityTarget::Unstructured(0.55);
+    let spec = MethodSpec::Wanda;
+    let grace = Duration::from_millis(500);
+
+    // a hand-rolled worker that sits on each request for 4 grace windows,
+    // heartbeating, before solving it for real (bit-identically)
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let slow = std::thread::spawn(move || {
+        let (mut conn, _) = listener.accept().unwrap();
+        conn.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+        let mut served = 0usize;
+        while served < 2 {
+            let req = match read_frame(&mut conn, 1 << 30, None, Some(Duration::from_secs(30)))
+            {
+                Ok(FrameRead::Frame { tag: tag::SOLVE, payload }) => {
+                    wire::SolveRequest::decode(&payload).unwrap()
+                }
+                other => panic!("expected a solve frame, got {:?}", other.is_ok()),
+            };
+            let stall_until = std::time::Instant::now() + 4 * grace;
+            while std::time::Instant::now() < stall_until {
+                let beat = wire::encode_heartbeat(wire::Heartbeat {
+                    job: req.job,
+                    admm_iter: 0,
+                    elapsed_ms: 1,
+                });
+                write_frame(&mut conn, tag::HEARTBEAT, &beat).unwrap();
+                std::thread::sleep(Duration::from_millis(100));
+            }
+            let problem = req.problem().unwrap();
+            let res = NativeEngine::new(req.spec.clone())
+                .solve_layer(&problem, req.target)
+                .unwrap();
+            let resp = wire::SolveResponse {
+                job: req.job,
+                secs: res.secs,
+                admm_iters: res.admm_iters as u64,
+                w: res.w,
+            };
+            write_frame(&mut conn, tag::RESULT, &resp.encode()).unwrap();
+            served += 1;
+        }
+    });
+
+    let engine = ShardedEngine::with_config(
+        spec.clone(),
+        vec![addr.clone()],
+        ShardedConfig {
+            max_attempts: 1, // any false reroute is fatal
+            max_outstanding: 1,
+            connect_timeout: Duration::from_secs(1),
+            idle_timeout: Duration::from_secs(3600),
+            heartbeat_grace: grace,
+            retry_backoff: Duration::from_millis(10),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let remote = engine.solve_block(&jobs, target).unwrap();
+    let local = NativeEngine::new(spec).solve_block(&jobs, target).unwrap();
+    for (i, (r, l)) in remote.iter().zip(&local).enumerate() {
+        assert_eq!(r.w, l.w, "layer {i}");
+        assert_eq!(r.worker.as_deref(), Some(addr.as_str()));
+    }
+    slow.join().unwrap();
+}
+
+/// Persistent pool + activation shipping at the session level: a
+/// multi-block run over one engine dials each worker once (connections
+/// are parked between blocks), ships X instead of the gram, and still
+/// lands bit-identically on the native result.
+#[test]
+fn persistent_pool_ships_activations_across_blocks_bit_identically() {
+    // one 8-token calibration sequence: 8 activation rows < n_in (16/32),
+    // so every layer genuinely takes the activation-shipping encoding
+    let calib = calib_seqs(1, 8, 24, 51);
+    let target = SparsityTarget::Unstructured(0.6);
+    let spec = MethodSpec::Alps(AlpsConfig { max_iters: 60, ..Default::default() });
+
+    let mut m_native = Model::random(tiny_cfg("shard-persist"), 99).unwrap();
+    PruneSession::builder()
+        .calib(calib.clone())
+        .target(target)
+        .method(spec.clone())
+        .run(&mut m_native)
+        .unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let worker = std::sync::Arc::new(Worker::new(WorkerConfig::default()));
+    let w2 = worker.clone();
+    std::thread::spawn(move || {
+        let _ = w2.serve(listener);
+    });
+    let engine = ShardedEngine::with_config(
+        spec,
+        vec![addr],
+        ShardedConfig { ship_activations: true, ..quick_cfg() },
+    )
+    .unwrap();
+    let mut m_sharded = Model::random(tiny_cfg("shard-persist"), 99).unwrap();
+    PruneSession::builder()
+        .calib(calib)
+        .target(target)
+        .engine(Box::new(engine))
+        .run(&mut m_sharded)
+        .unwrap();
+
+    for (name, t_native) in &m_native.weights.tensors {
+        let t_sharded = m_sharded.weights.tensors.get(name).unwrap();
+        let bits_n: Vec<u32> = t_native.data.iter().map(|v| v.to_bits()).collect();
+        let bits_s: Vec<u32> = t_sharded.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits_n, bits_s, "tensor '{name}' differs with shipped activations");
+    }
+    // a 2-block run = 2 solve_block calls; the parked connection must
+    // have been reused, and the session's engine.close() released it
+    assert_eq!(
+        worker.connections_accepted(),
+        1,
+        "persistent pool dialed more than once across blocks"
+    );
+    assert_eq!(worker.layers_solved(), 12);
+    worker.request_shutdown();
 }
 
 /// A checkpoint written by a native run resumes under a sharded engine
