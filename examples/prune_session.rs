@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
         .target(SparsityTarget::parse("0.6")?)
         .method(MethodSpec::Wanda)
         .observer(|ev| match ev {
-            ProgressEvent::BlockStarted { block, n_blocks } => {
+            ProgressEvent::BlockStarted { block, n_blocks, .. } => {
                 println!("   block {}/{} ...", block + 1, n_blocks);
             }
             ProgressEvent::LayerSolved { layer, rel_error, .. } => {

@@ -58,6 +58,15 @@
 //!   Transport-level refusals (`tag::BUSY` at the connection cap, or an
 //!   ERROR carrying the worker's protocol sentinel instead of an owned
 //!   job id) stay retryable.
+//! * **Observability**: the dispatcher feeds the process-global
+//!   [`crate::obs`] registry — per-worker RPC latency histograms
+//!   (`alps_coord_rpc_seconds{worker=...}`), burned reconnect attempts
+//!   (`alps_coord_retries_total`), rerouted in-flight jobs
+//!   (`alps_coord_reroutes_total`), and request payload bytes split by
+//!   calibration encoding (`alps_coord_wire_tx_bytes_total{calib=...}` —
+//!   the live measure of what activation shipping saves). All recording
+//!   is lock-free and off the result path: instrumentation cannot change
+//!   a bit of the reassembled weights.
 //! * **Bit-identical results**: matrices travel bit-exactly
 //!   (`to_le_bytes` round-trip), the worker rebuilds the problem with the
 //!   same deterministic kernels (including the gram, when activations are
@@ -68,6 +77,7 @@
 use crate::config::SparsityTarget;
 use crate::net::framing::{read_frame_deadline, write_frame, FrameRead};
 use crate::net::lock;
+use crate::obs::Counter;
 use crate::pruning::engine::{Engine, LayerJob, LayerResult};
 use crate::pruning::status::StatusBoard;
 use crate::pruning::wire::{self, tag, CalibRef};
@@ -138,6 +148,27 @@ impl Default for ShardedConfig {
 /// reroutes: a job is only truly gone once its result slot is filled, so
 /// survivors linger until the whole block is solved (or failed).
 const WAIT_POLL: Duration = Duration::from_millis(50);
+
+/// Process-global coordinator counters: `(retries, reroutes, tx_gram,
+/// tx_activations)`. Retries are burned reconnect attempts, reroutes are
+/// in-flight jobs requeued off a failed worker, and the tx counters split
+/// solve-request payload bytes by calibration encoding — the live view of
+/// the activation-shipping trade the module doc describes.
+fn coord_metrics() -> &'static (Counter, Counter, Counter, Counter) {
+    static M: std::sync::OnceLock<(Counter, Counter, Counter, Counter)> =
+        std::sync::OnceLock::new();
+    M.get_or_init(|| {
+        let r = crate::obs::global();
+        let tx = "alps_coord_wire_tx_bytes_total";
+        let tx_help = "solve-request payload bytes sent, by calibration encoding";
+        (
+            r.counter("alps_coord_retries_total", "worker reconnect attempts burned", &[]),
+            r.counter("alps_coord_reroutes_total", "in-flight jobs requeued off a worker", &[]),
+            r.counter(tx, tx_help, &[("calib", "gram")]),
+            r.counter(tx, tx_help, &[("calib", "activations")]),
+        )
+    })
+}
 
 /// Shared dispatch state for one block solve. Holds borrowed problems —
 /// the dispatcher never copies a layer's matrices except into the wire
@@ -238,6 +269,7 @@ impl ShardedEngine {
             return false;
         }
         *attempts += 1;
+        coord_metrics().0.inc();
         if *attempts >= self.cfg.max_attempts {
             lock(&d.worker_errors).push(error());
             return true;
@@ -252,6 +284,13 @@ impl ShardedEngine {
     /// done.
     fn worker_loop(&self, widx: usize, d: &Dispatch) {
         let addr = &self.workers[widx];
+        // registered once per worker address; lock-free to observe
+        let rpc_secs = crate::obs::global().histogram(
+            "alps_coord_rpc_seconds",
+            "send-to-result latency of a remote layer solve",
+            &[("worker", addr)],
+            &crate::obs::LATENCY_EDGES,
+        );
         let mut attempts = 0usize;
         // set at the first BUSY answer; cleared by any successful solve
         let mut busy_since: Option<std::time::Instant> = None;
@@ -292,6 +331,11 @@ impl ShardedEngine {
             let mut writer = stream;
             // in-flight job indices, in send order
             let mut in_flight: VecDeque<usize> = VecDeque::new();
+            // send instants for the RPC-latency histogram, keyed by job
+            // index (tiny: bounded by max_outstanding). Dropped wholesale
+            // with the connection on reroute — a rerouted job's latency
+            // would measure the failure, not the solve.
+            let mut sent_at: Vec<(usize, std::time::Instant)> = Vec::new();
             // last moment this worker proved it is working *for us*: a
             // successful send, an owned RESULT, or an owned HEARTBEAT.
             // Frames for jobs we don't own (a desynced or hostile peer
@@ -308,6 +352,7 @@ impl ShardedEngine {
             let mut can_send = true;
             let requeue = |in_flight: &mut VecDeque<usize>| {
                 if !in_flight.is_empty() {
+                    coord_metrics().1.add(in_flight.len() as u64);
                     if let Some(board) = &self.board {
                         // whatever this worker was live-reporting is now
                         // abandoned: clear its "solving" status entry so a
@@ -350,6 +395,7 @@ impl ShardedEngine {
                         }
                         _ => CalibRef::Gram(&problem.h),
                     };
+                    let shipped_x = matches!(calib, CalibRef::Activations(_));
                     let payload = wire::encode_solve(
                         idx as u64,
                         d.target,
@@ -357,6 +403,9 @@ impl ShardedEngine {
                         &problem.what,
                         calib,
                     );
+                    let met = coord_metrics();
+                    let tx_bytes = if shipped_x { &met.3 } else { &met.2 };
+                    tx_bytes.add(payload.len() as u64);
                     if let Err(e) = write_frame(&mut writer, tag::SOLVE, &payload) {
                         lock(&d.pending).push_front(idx);
                         if in_flight.is_empty() {
@@ -406,6 +455,7 @@ impl ShardedEngine {
                         break;
                     }
                     in_flight.push_back(idx);
+                    sent_at.push((idx, std::time::Instant::now()));
                     last_owned_signal = std::time::Instant::now();
                 }
                 if in_flight.is_empty() {
@@ -462,6 +512,9 @@ impl ShardedEngine {
                             Ok(resp) if in_flight.contains(&(resp.job as usize)) => {
                                 let idx = resp.job as usize;
                                 in_flight.retain(|&i| i != idx);
+                                if let Some(p) = sent_at.iter().position(|(i, _)| *i == idx) {
+                                    rpc_secs.observe(sent_at.remove(p).1.elapsed().as_secs_f64());
+                                }
                                 lock(&d.results)[idx] = Some(LayerResult {
                                     w: resp.w,
                                     secs: resp.secs,

@@ -18,7 +18,9 @@
 //!   optional activation shipping for worker-side gram computation,
 //!   deterministic positional reassembly) and plugs into the session
 //!   through the same [`crate::pruning::Engine`] trait as the local
-//!   backends — with bit-identical results.
+//!   backends — with bit-identical results. It reports per-worker RPC
+//!   latency, retries, reroutes, and wire bytes into the process-global
+//!   [`crate::obs`] registry (`alps_coord_*` series).
 //! * [`scheduler`] — the deprecated [`Scheduler`] + [`PruneEngine`] shims
 //!   (one release of backwards compatibility) plus re-exports of the
 //!   single-layer experiment helpers.

@@ -31,6 +31,11 @@
 //!   length-prefixed binary frames, threaded accept loop with connection
 //!   cap and graceful shutdown drain) under both the serve front-end and
 //!   the distributed pruning endpoints.
+//! * `obs` — the unified observability layer: a process-global metrics
+//!   registry (lock-free counters/gauges/histograms) plus tracing spans
+//!   with an optional `--trace-out` JSONL sink, exported as Prometheus
+//!   text on `GET /metrics` by every TCP endpoint (serve front-end,
+//!   `alps worker`, `--status-addr`).
 //!
 //! Pruning scales out horizontally: `alps worker` hosts the native
 //! solvers behind a binary frame protocol (`pruning::worker` +
@@ -55,6 +60,7 @@ pub mod eval;
 pub mod linalg;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod pruning;
 pub mod runtime;
 pub mod serve;

@@ -14,6 +14,11 @@
 //!           --status-addr exposes live progress over TCP)
 //!   info                                      artifact + model inventory
 //!   smoke  <file.hlo.txt>                     runtime smoke test
+//!
+//! Observability: every TCP endpoint (serve front-end, worker port,
+//! `--status-addr`) answers `GET /metrics` with the process-global
+//! Prometheus exposition from `alps::obs`; `--trace-out PATH` (prune,
+//! serve) streams spans/events as JSONL.
 
 use alps::config::{ModelConfig, SparsityTarget};
 use alps::coordinator::{ShardedConfig, ShardedEngine};
@@ -146,7 +151,24 @@ fn apply_method_flags(spec: &mut MethodSpec, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--trace-out PATH`: stream [`alps::obs`] spans and events as JSONL to
+/// `PATH` for the lifetime of the process (one sink per process; the
+/// records carry seconds since process start, so lines merge cleanly).
+fn install_trace(args: &Args) -> Result<()> {
+    if !args.has("trace-out") {
+        return Ok(());
+    }
+    let path = args.get("trace-out", "");
+    if path.is_empty() || path == "true" {
+        bail!("--trace-out requires a file path (e.g. --trace-out=trace.jsonl)");
+    }
+    alps::obs::trace::install_sink(&path).with_context(|| format!("opening trace sink {path}"))?;
+    println!("tracing spans/events to {path} (JSONL)");
+    Ok(())
+}
+
 fn cmd_prune(args: &Args) -> Result<()> {
+    install_trace(args)?;
     let mut model = if args.has("random") {
         // synthetic weights + calibration: exercises the full pipeline
         // (and checkpoint/resume) without built artifacts
@@ -388,6 +410,7 @@ fn cmd_layer(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    install_trace(args)?;
     let name = args.get("model", "alps-tiny");
     let model = if args.has("random") {
         // synthetic weights: lets the server run without built artifacts
@@ -601,7 +624,7 @@ fn usage() {
                  [--checkpoint-dir ck] [--resume] [--stop-after N] [--random] [--seed N]\n\
                  [--workers host:port,host:port] [--ship-activations]\n\
                  [--status-addr 127.0.0.1:7878] [--shard-idle SECS] [--shard-heartbeat SECS]\n\
-                 [--shard-attempts N] [--shard-outstanding N]\n\
+                 [--shard-attempts N] [--shard-outstanding N] [--trace-out trace.jsonl]\n\
                  [--rho0 F] [--admm-iters N] [--pcg-iters N]   (alps)\n\
                  [--sgpt-block N] [--sgpt-damp F]              (sparsegpt)\n\
                  [--dsnot-cycles N]                            (dsnot)\n\
@@ -610,6 +633,7 @@ fn usage() {
            serve --model alps-base [--weights pruned.bin] [--sparse] [--random]\n\
                  [--addr 127.0.0.1:7878 | --stdin] [--max-batch 8] [--max-conns 64]\n\
                  [--max-line 65536] [--max-new 32] [--temperature 0] [--top-k 0] [--stop id]\n\
+                 [--trace-out trace.jsonl]\n\
            worker [--addr 127.0.0.1:7979] [--max-conns 8] [--max-frame-mb 1024]\n\
                  [--heartbeat-secs 2]\n\
                  hosts the native layer solvers for `prune --workers`\n\

@@ -44,6 +44,30 @@ pub const FRAME_VERSION: u8 = 2;
 /// Fixed frame header size: magic(2) + version(1) + tag(1) + len(4).
 pub const FRAME_HEADER: usize = 8;
 
+/// Lazily-registered transport counters (`alps_net_frames_total` /
+/// `alps_net_frame_bytes_total`, labelled by direction). Free functions
+/// like [`write_frame`] have no struct to park handles on, so they are
+/// process-global `OnceLock`s — one registry lock on first use, lock-free
+/// after.
+fn frame_metrics(dir: &'static str) -> &'static (crate::obs::Counter, crate::obs::Counter) {
+    static TX: std::sync::OnceLock<(crate::obs::Counter, crate::obs::Counter)> =
+        std::sync::OnceLock::new();
+    static RX: std::sync::OnceLock<(crate::obs::Counter, crate::obs::Counter)> =
+        std::sync::OnceLock::new();
+    let cell = if dir == "tx" { &TX } else { &RX };
+    cell.get_or_init(|| {
+        let r = crate::obs::global();
+        (
+            r.counter("alps_net_frames_total", "binary frames by direction", &[("dir", dir)]),
+            r.counter(
+                "alps_net_frame_bytes_total",
+                "binary frame bytes (header + payload) by direction",
+                &[("dir", dir)],
+            ),
+        )
+    })
+}
+
 /// Outcome of one bounded line read.
 pub enum LineRead {
     Line(String),
@@ -174,7 +198,11 @@ pub fn write_frame(w: &mut impl Write, tag: u8, payload: &[u8]) -> std::io::Resu
     header[4..8].copy_from_slice(&(payload.len() as u32).to_le_bytes());
     w.write_all(&header)?;
     w.write_all(payload)?;
-    w.flush()
+    w.flush()?;
+    let (frames, bytes) = frame_metrics("tx");
+    frames.inc();
+    bytes.add((FRAME_HEADER + payload.len()) as u64);
+    Ok(())
 }
 
 /// Outcome of one frame read.
@@ -304,7 +332,12 @@ pub fn read_frame_deadline(
     match read_full(r, &mut payload, false, shutdown, idle, deadline)? {
         Fill::Shutdown => Ok(FrameRead::Shutdown),
         Fill::Eof => unreachable!("eof_ok is false for payload reads"),
-        Fill::Done => Ok(FrameRead::Frame { tag, payload }),
+        Fill::Done => {
+            let (frames, bytes) = frame_metrics("rx");
+            frames.inc();
+            bytes.add((FRAME_HEADER + payload.len()) as u64);
+            Ok(FrameRead::Frame { tag, payload })
+        }
     }
 }
 

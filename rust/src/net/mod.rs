@@ -25,6 +25,15 @@
 //!
 //! Protocol logic stays with the endpoints; this layer never interprets
 //! payloads.
+//!
+//! The transport reports into the [`crate::obs`] registry: frame/byte
+//! counters by direction in [`framing`] (`alps_net_frames_total`,
+//! `alps_net_frame_bytes_total`) and accept/close/refusal counters in
+//! [`server`] (`alps_net_connections_total` & co.) — recording is
+//! lock-free, so the counters cost nothing observable on the wire path.
+//! [`server`] also hosts the shared one-shot HTTP reply helpers
+//! ([`server::respond_http`] / [`server::write_http_response`]) that the
+//! `GET /healthz`, `GET /status`, and `GET /metrics` probes are built on.
 
 pub mod framing;
 pub mod server;

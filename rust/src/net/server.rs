@@ -75,27 +75,39 @@ pub fn finish_refusal(stream: &TcpStream) {
     }
 }
 
-/// Write a minimal one-shot `HTTP/1.1 200 OK` JSON response (the shape
-/// every probe endpoint in this crate serves).
-pub fn write_http_json(w: &mut impl std::io::Write, body: &str) -> std::io::Result<()> {
+/// Write a minimal one-shot `HTTP/1.1 200 OK` response with the given
+/// content type (the shape every probe endpoint in this crate serves:
+/// JSON snapshots and the Prometheus `/metrics` text).
+pub fn write_http_response(
+    w: &mut impl std::io::Write,
+    content_type: &str,
+    body: &str,
+) -> std::io::Result<()> {
     write!(
         w,
-        "HTTP/1.1 200 OK\r\nContent-Type: application/json\r\n\
+        "HTTP/1.1 200 OK\r\nContent-Type: {}\r\n\
          Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+        content_type,
         body.len(),
         body
     )
 }
 
+/// [`write_http_response`] specialized to `application/json`.
+pub fn write_http_json(w: &mut impl std::io::Write, body: &str) -> std::io::Result<()> {
+    write_http_response(w, "application/json", body)
+}
+
 /// Answer a `GET` probe on a line-protocol connection: drain the request
 /// headers first (closing with unread inbound data buffered can RST the
-/// response away), then write the JSON reply. Shared by the serve
-/// healthz and the pruning status endpoint.
-pub fn respond_http_json<R: std::io::BufRead>(
+/// response away), then write the reply. Shared by the serve healthz,
+/// the pruning status endpoint, and every `/metrics` exposition.
+pub fn respond_http<R: std::io::BufRead>(
     reader: &mut R,
     stream: &mut impl std::io::Write,
     max_line: usize,
     shutdown: &AtomicBool,
+    content_type: &str,
     body: &str,
 ) -> std::io::Result<()> {
     loop {
@@ -104,7 +116,46 @@ pub fn respond_http_json<R: std::io::BufRead>(
             _ => break,
         }
     }
-    write_http_json(stream, body)
+    write_http_response(stream, content_type, body)
+}
+
+/// [`respond_http`] specialized to `application/json`.
+pub fn respond_http_json<R: std::io::BufRead>(
+    reader: &mut R,
+    stream: &mut impl std::io::Write,
+    max_line: usize,
+    shutdown: &AtomicBool,
+    body: &str,
+) -> std::io::Result<()> {
+    respond_http(reader, stream, max_line, shutdown, "application/json", body)
+}
+
+/// Path of an HTTP request line (`"GET /metrics HTTP/1.1"` ->
+/// `"/metrics"`). Query strings are dropped; a malformed line yields
+/// `"/"` so callers fall through to their default probe response.
+pub fn request_path(request_line: &str) -> &str {
+    let path = request_line.split_whitespace().nth(1).unwrap_or("/");
+    path.split('?').next().unwrap_or("/")
+}
+
+/// Process-global accept-loop counters, shared by every [`NetServer`] in
+/// the process (`accepted`, `closed`, `refused`; live connections are
+/// `accepted - closed` on the scraper side, which composes across
+/// servers where a per-server gauge would stomp).
+fn conn_metrics() -> &'static (crate::obs::Counter, crate::obs::Counter, crate::obs::Counter) {
+    static M: std::sync::OnceLock<(
+        crate::obs::Counter,
+        crate::obs::Counter,
+        crate::obs::Counter,
+    )> = std::sync::OnceLock::new();
+    M.get_or_init(|| {
+        let r = crate::obs::global();
+        (
+            r.counter("alps_net_connections_total", "connections handed to a handler", &[]),
+            r.counter("alps_net_connections_closed_total", "handler connections finished", &[]),
+            r.counter("alps_net_refusals_total", "connections refused over the cap", &[]),
+        )
+    })
 }
 
 /// Per-connection protocol logic plugged into [`NetServer::run`].
@@ -233,6 +284,7 @@ impl NetServer {
                     // refusal drains briefly; keep the accept loop free by
                     // doing it off-thread, with the refusal pool itself
                     // capped so a connect flood can't mint unbounded threads
+                    conn_metrics().2.inc();
                     if self.refusing.load(Ordering::SeqCst) < self.cfg.max_refusals {
                         self.refusing.fetch_add(1, Ordering::SeqCst);
                         s.spawn(move || {
@@ -246,11 +298,13 @@ impl NetServer {
                 // check on the next accept already sees this connection
                 self.conns.fetch_add(1, Ordering::SeqCst);
                 self.accepted.fetch_add(1, Ordering::SeqCst);
+                conn_metrics().0.inc();
                 s.spawn(move || {
                     if let Err(e) = handler.handle(stream) {
                         eprintln!("[net] connection error: {e}");
                     }
                     self.conns.fetch_sub(1, Ordering::SeqCst);
+                    conn_metrics().1.inc();
                 });
             }
             // accept loop done: raise the flag so handler read loops (and

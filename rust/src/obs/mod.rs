@@ -1,0 +1,49 @@
+//! `obs` — the unified observability layer: one process-global metrics
+//! registry, a Prometheus text encoder, and lightweight tracing spans.
+//!
+//! Before this module each subsystem watched itself its own way
+//! (`serve/metrics.rs` sliding windows, the `pruning/status.rs` JSON
+//! snapshot, bench-only timers). `obs` gives them one substrate so a
+//! single scraper covers a whole fleet — a sharded 70%-sparsity pruning
+//! run and a serving replica show up in the same Prometheus instance.
+//!
+//! * [`registry`] — atomic counters, gauges, and fixed-bucket histograms
+//!   behind cloneable `Arc` handles. Registration (name + pre-declared
+//!   label set) takes a lock once; recording through a handle is
+//!   lock-free and allocation-free, so decode steps and ADMM inner loops
+//!   can record without perturbing what they measure. [`global()`]
+//!   returns the process-wide registry every endpoint renders.
+//! * [`prometheus`] — text exposition (format 0.0.4): `# HELP`/`# TYPE`
+//!   blocks, escaped labels, cumulative `_bucket{le=...}` histograms.
+//!   Served as `GET /metrics` by all three TCP endpoints — the serve
+//!   front-end (next to `/healthz`), `alps worker`, and the `prune
+//!   --status-addr` server.
+//! * [`trace`] — spans (monotonic start + duration + key=value fields)
+//!   and point events, written as JSONL to an optional `--trace-out`
+//!   sink for offline analysis; a no-op behind one atomic load otherwise.
+//!
+//! ## Metric naming
+//!
+//! `alps_<subsystem>_<name>`, with base units (seconds, bytes) and
+//! `_total` on counters:
+//!
+//! * `alps_serve_*` — decode steps/tokens/latency, batch occupancy,
+//!   prefill, admissions/evictions/cancellations;
+//! * `alps_prune_*` — session progress (blocks/layers/checkpoints),
+//!   per-method solve-time histograms, live ADMM iteration per worker;
+//! * `alps_coord_*` — dispatcher RPC latency per worker, retries,
+//!   reroutes, wire bytes by calibration encoding;
+//! * `alps_net_*` — transport frames/bytes by direction, connections,
+//!   refusals.
+//!
+//! All metrics are process-global: a worker process exports its own
+//! `alps_net_*`/`alps_serve_*` view, the coordinator exports the
+//! pruning/dispatch view, and scraping any endpoint of a process returns
+//! everything that process recorded.
+
+pub mod prometheus;
+pub mod registry;
+pub mod trace;
+
+pub use registry::{global, Counter, Gauge, Histogram, Registry, LATENCY_EDGES};
+pub use trace::Span;

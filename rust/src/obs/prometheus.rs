@@ -1,0 +1,191 @@
+//! Prometheus text exposition (format version 0.0.4) for the
+//! [`super::registry`] families.
+//!
+//! One `# HELP` / `# TYPE` block per family, one sample line per series
+//! (histograms expand to cumulative `_bucket{le="..."}` lines plus
+//! `_sum` / `_count`). Label values are escaped per the spec
+//! (`\\` -> `\\\\`, `"` -> `\\"`, newline -> `\\n`); HELP text escapes
+//! backslash and newline. The encoder trusts metric *names* — they are
+//! compile-time constants in this crate (`alps_<subsystem>_<name>`),
+//! never user input.
+//!
+//! Serve `render()`'s output with content type
+//! [`CONTENT_TYPE`] (`text/plain; version=0.0.4`).
+
+use super::registry::{Family, Kind, SeriesView};
+use std::fmt::Write as _;
+
+/// HTTP content type for the exposition format.
+pub const CONTENT_TYPE: &str = "text/plain; version=0.0.4; charset=utf-8";
+
+/// Escape a label value: backslash, double quote, newline.
+pub fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Escape HELP text: backslash and newline (quotes are legal there).
+pub fn escape_help(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Format a sample value: integral floats render without a fraction,
+/// non-finite values use Prometheus spellings (`+Inf`, `-Inf`, `NaN`).
+pub fn fmt_value(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v.is_infinite() {
+        if v > 0.0 { "+Inf".to_string() } else { "-Inf".to_string() }
+    } else if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn label_block(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{}\"", escape_label(v)));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+/// Render a family list (called by [`super::Registry::render`] under the
+/// registration lock).
+pub(crate) fn render(families: &[Family]) -> String {
+    let mut out = String::new();
+    for fam in families {
+        let kind = match fam.kind {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        };
+        let _ = writeln!(out, "# HELP {} {}", fam.name, escape_help(&fam.help));
+        let _ = writeln!(out, "# TYPE {} {}", fam.name, kind);
+        fam.each(|labels, view| match view {
+            SeriesView::Counter(v) => {
+                let _ = writeln!(out, "{}{} {}", fam.name, label_block(labels, None), v);
+            }
+            SeriesView::Gauge(v) => {
+                let _ =
+                    writeln!(out, "{}{} {}", fam.name, label_block(labels, None), fmt_value(v));
+            }
+            SeriesView::Histogram { buckets, sum, count } => {
+                for (le, cum) in &buckets {
+                    let _ = writeln!(
+                        out,
+                        "{}_bucket{} {}",
+                        fam.name,
+                        label_block(labels, Some(("le", &fmt_value(*le)))),
+                        cum
+                    );
+                }
+                let _ = writeln!(
+                    out,
+                    "{}_sum{} {}",
+                    fam.name,
+                    label_block(labels, None),
+                    fmt_value(sum)
+                );
+                let _ =
+                    writeln!(out, "{}_count{} {}", fam.name, label_block(labels, None), count);
+            }
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Registry;
+    use super::*;
+
+    #[test]
+    fn escaping() {
+        assert_eq!(escape_label("a\\b\"c\nd"), "a\\\\b\\\"c\\nd");
+        assert_eq!(escape_help("a\\b\"c\nd"), "a\\\\b\"c\\nd");
+    }
+
+    #[test]
+    fn value_formats() {
+        assert_eq!(fmt_value(3.0), "3");
+        assert_eq!(fmt_value(0.25), "0.25");
+        assert_eq!(fmt_value(f64::INFINITY), "+Inf");
+        assert_eq!(fmt_value(f64::NEG_INFINITY), "-Inf");
+        assert_eq!(fmt_value(f64::NAN), "NaN");
+    }
+
+    #[test]
+    fn counter_and_gauge_lines() {
+        let r = Registry::new();
+        r.counter("alps_x_total", "events", &[("dir", "tx")]).add(7);
+        r.gauge("alps_x_live", "live \"now\"\nyes", &[]).set(2.5);
+        let text = r.render();
+        assert!(text.contains("# HELP alps_x_total events\n"), "{text}");
+        assert!(text.contains("# TYPE alps_x_total counter\n"));
+        assert!(text.contains("alps_x_total{dir=\"tx\"} 7\n"));
+        assert!(text.contains("# TYPE alps_x_live gauge\n"));
+        assert!(text.contains("# HELP alps_x_live live \"now\"\\nyes\n"));
+        assert!(text.contains("alps_x_live 2.5\n"));
+    }
+
+    #[test]
+    fn histogram_exposition_is_cumulative_with_inf() {
+        let r = Registry::new();
+        let h = r.histogram("alps_x_seconds", "lat", &[("m", "alps")], &[0.1, 1.0]);
+        h.observe(0.05);
+        h.observe(0.5);
+        h.observe(2.0);
+        let text = r.render();
+        assert!(text.contains("# TYPE alps_x_seconds histogram\n"));
+        assert!(text.contains("alps_x_seconds_bucket{m=\"alps\",le=\"0.1\"} 1\n"), "{text}");
+        assert!(text.contains("alps_x_seconds_bucket{m=\"alps\",le=\"1\"} 2\n"));
+        assert!(text.contains("alps_x_seconds_bucket{m=\"alps\",le=\"+Inf\"} 3\n"));
+        assert!(text.contains("alps_x_seconds_sum{m=\"alps\"} 2.55\n"));
+        assert!(text.contains("alps_x_seconds_count{m=\"alps\"} 3\n"));
+    }
+
+    #[test]
+    fn every_series_line_parses_shapewise() {
+        // cheap structural lint: every non-comment line is `name{...} value`
+        // or `name value` with a parseable float
+        let r = Registry::new();
+        r.counter("alps_a_total", "h", &[]).inc();
+        r.gauge("alps_b", "h", &[("w", "x:1")]).set(1.5);
+        r.histogram("alps_c_seconds", "h", &[], &[0.5]).observe(0.1);
+        for line in r.render().lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let (_, val) = line.rsplit_once(' ').expect("name value");
+            assert!(
+                val.parse::<f64>().is_ok() || val == "+Inf" || val == "NaN",
+                "bad value in {line}"
+            );
+        }
+    }
+}

@@ -1,0 +1,455 @@
+//! Process-global metrics registry: counters, gauges, and fixed-bucket
+//! histograms behind cheap cloneable handles.
+//!
+//! Design constraints (see the module doc in `obs/mod.rs`):
+//!
+//! * **Lock-free hot path.** A handle is an `Arc` around plain atomics;
+//!   `inc`/`set`/`observe` never take a lock and never allocate, so the
+//!   decode step and the ADMM inner loop can record per-iteration without
+//!   perturbing the thing they measure.
+//! * **Pre-registered labels.** Label sets are fixed at registration time
+//!   ([`Registry::counter`] & co. take the full label list); the hot path
+//!   only ever touches the returned handle. Dynamic label cardinality is
+//!   the caller's responsibility (register per worker, not per request).
+//! * **Idempotent registration.** Registering the same `(name, labels)`
+//!   twice returns a handle to the *same* underlying series, so every
+//!   subsystem can lazily grab its handles without coordinating
+//!   initialization order. A kind conflict (e.g. a counter re-registered
+//!   as a gauge) yields a detached handle that records into the void
+//!   instead of panicking — observability must never take the process
+//!   down.
+//!
+//! Rendering walks the registry under its registration mutex (scrapes are
+//! rare; recording never contends with them) and hands each family to the
+//! [`super::prometheus`] encoder.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Metric kind, fixed at first registration of a name.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+/// Monotonic event counter. Clone freely; clones share the same cell.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// A handle not attached to any registry (records are dropped at
+    /// render time, but `get` still works — useful in tests and as the
+    /// conflict fallback).
+    pub fn detached() -> Counter {
+        Counter(Arc::new(AtomicU64::new(0)))
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins f64 gauge (stored as bits in an `AtomicU64`).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn detached() -> Gauge {
+        Gauge(Arc::new(AtomicU64::new(0f64.to_bits())))
+    }
+
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Shared storage of one histogram series.
+pub(crate) struct HistogramCore {
+    /// Ascending upper bucket bounds; an implicit `+Inf` bucket follows.
+    pub(crate) edges: Vec<f64>,
+    /// Per-bucket counts, `edges.len() + 1` entries (last = overflow).
+    /// Stored non-cumulative; the encoder cumulates at render time.
+    pub(crate) counts: Vec<AtomicU64>,
+    /// Sum of observations as f64 bits, updated by CAS.
+    sum_bits: AtomicU64,
+    count: AtomicU64,
+}
+
+/// Fixed-bucket histogram. `observe` is lock-free: one bucket
+/// `fetch_add`, one `count` `fetch_add`, and a CAS loop on the f64 sum.
+#[derive(Clone)]
+pub struct Histogram(pub(crate) Arc<HistogramCore>);
+
+impl Histogram {
+    pub fn detached(edges: &[f64]) -> Histogram {
+        Histogram(Arc::new(HistogramCore::new(edges)))
+    }
+
+    /// Record one observation. Prometheus bucket semantics: a value lands
+    /// in the first bucket whose upper bound (`le`) is `>= v`; values
+    /// above every edge land in the implicit `+Inf` bucket. NaN counts
+    /// toward `+Inf` (it compares greater than every edge under these
+    /// rules) so a poisoned sample cannot stall the CAS or skew a finite
+    /// bucket.
+    pub fn observe(&self, v: f64) {
+        let c = &self.0;
+        let idx = c.edges.iter().position(|&e| v <= e).unwrap_or(c.edges.len());
+        c.counts[idx].fetch_add(1, Ordering::Relaxed);
+        c.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = c.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match c.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.0.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// `(le, cumulative_count)` pairs, ending with the `+Inf` bucket.
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let c = &self.0;
+        let mut cum = 0u64;
+        let mut out = Vec::with_capacity(c.edges.len() + 1);
+        for (i, cnt) in c.counts.iter().enumerate() {
+            cum += cnt.load(Ordering::Relaxed);
+            let le = c.edges.get(i).copied().unwrap_or(f64::INFINITY);
+            out.push((le, cum));
+        }
+        out
+    }
+}
+
+impl HistogramCore {
+    fn new(edges: &[f64]) -> HistogramCore {
+        let mut e: Vec<f64> = edges.iter().copied().filter(|x| x.is_finite()).collect();
+        e.sort_by(|a, b| a.total_cmp(b));
+        e.dedup();
+        let counts = (0..=e.len()).map(|_| AtomicU64::new(0)).collect();
+        HistogramCore {
+            edges: e,
+            counts,
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Handle of one registered series.
+enum Instrument {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+struct Series {
+    /// Sorted `(key, value)` label pairs (the registration identity).
+    labels: Vec<(String, String)>,
+    instrument: Instrument,
+}
+
+/// All series sharing one metric name (one `# HELP`/`# TYPE` block).
+pub(crate) struct Family {
+    pub(crate) name: String,
+    pub(crate) help: String,
+    pub(crate) kind: Kind,
+    series: Vec<Series>,
+}
+
+impl Family {
+    /// Iterate series as `(labels, instrument view)` for the encoder.
+    pub(crate) fn each(&self, mut f: impl FnMut(&[(String, String)], SeriesView)) {
+        for s in &self.series {
+            let view = match &s.instrument {
+                Instrument::Counter(c) => SeriesView::Counter(c.get()),
+                Instrument::Gauge(g) => SeriesView::Gauge(g.get()),
+                Instrument::Histogram(h) => SeriesView::Histogram {
+                    buckets: h.cumulative(),
+                    sum: h.sum(),
+                    count: h.count(),
+                },
+            };
+            f(&s.labels, view);
+        }
+    }
+}
+
+/// Snapshot of one series for rendering.
+pub(crate) enum SeriesView {
+    Counter(u64),
+    Gauge(f64),
+    Histogram { buckets: Vec<(f64, u64)>, sum: f64, count: u64 },
+}
+
+/// A set of metric families. Registration and rendering lock the family
+/// list; recording through handles never does.
+#[derive(Default)]
+pub struct Registry {
+    families: Mutex<Vec<Family>>,
+}
+
+fn sorted_labels(labels: &[(&str, &str)]) -> Vec<(String, String)> {
+    let mut v: Vec<(String, String)> =
+        labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+    v.sort();
+    v
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Register (or look up) a counter series.
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Counter {
+        let want = sorted_labels(labels);
+        let mut fams = crate::net::lock(&self.families);
+        match find_series(&mut fams, name, help, Kind::Counter, &want) {
+            Found::Existing(Instrument::Counter(c)) => c.clone(),
+            Found::Existing(_) | Found::Conflict => Counter::detached(),
+            Found::Vacant(fam) => {
+                let c = Counter::detached();
+                fam.series
+                    .push(Series { labels: want, instrument: Instrument::Counter(c.clone()) });
+                c
+            }
+        }
+    }
+
+    /// Register (or look up) a gauge series.
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Gauge {
+        let want = sorted_labels(labels);
+        let mut fams = crate::net::lock(&self.families);
+        match find_series(&mut fams, name, help, Kind::Gauge, &want) {
+            Found::Existing(Instrument::Gauge(g)) => g.clone(),
+            Found::Existing(_) | Found::Conflict => Gauge::detached(),
+            Found::Vacant(fam) => {
+                let g = Gauge::detached();
+                fam.series.push(Series { labels: want, instrument: Instrument::Gauge(g.clone()) });
+                g
+            }
+        }
+    }
+
+    /// Register (or look up) a histogram series with the given upper
+    /// bucket bounds (a `+Inf` bucket is always appended). On lookup the
+    /// first registration's edges win.
+    pub fn histogram(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        edges: &[f64],
+    ) -> Histogram {
+        let want = sorted_labels(labels);
+        let mut fams = crate::net::lock(&self.families);
+        match find_series(&mut fams, name, help, Kind::Histogram, &want) {
+            Found::Existing(Instrument::Histogram(h)) => h.clone(),
+            Found::Existing(_) | Found::Conflict => Histogram::detached(edges),
+            Found::Vacant(fam) => {
+                let h = Histogram::detached(edges);
+                fam.series
+                    .push(Series { labels: want, instrument: Instrument::Histogram(h.clone()) });
+                h
+            }
+        }
+    }
+
+    /// Render the whole registry in Prometheus text exposition format.
+    pub fn render(&self) -> String {
+        let fams = crate::net::lock(&self.families);
+        super::prometheus::render(&fams)
+    }
+
+    /// Number of registered families (tests / introspection).
+    pub fn family_count(&self) -> usize {
+        crate::net::lock(&self.families).len()
+    }
+}
+
+enum Found<'a> {
+    Existing(&'a Instrument),
+    Vacant(&'a mut Family),
+    Conflict,
+}
+
+fn find_series<'a>(
+    fams: &'a mut Vec<Family>,
+    name: &str,
+    help: &str,
+    kind: Kind,
+    labels: &[(String, String)],
+) -> Found<'a> {
+    let pos = fams.iter().position(|f| f.name == name);
+    match pos {
+        Some(i) if fams[i].kind != kind => Found::Conflict,
+        Some(i) => {
+            // NLL-friendly two-phase lookup: find the series index first.
+            if let Some(j) = fams[i].series.iter().position(|s| s.labels == labels) {
+                Found::Existing(&fams[i].series[j].instrument)
+            } else {
+                Found::Vacant(&mut fams[i])
+            }
+        }
+        None => {
+            fams.push(Family {
+                name: name.to_string(),
+                help: help.to_string(),
+                kind,
+                series: Vec::new(),
+            });
+            let last = fams.len() - 1;
+            Found::Vacant(&mut fams[last])
+        }
+    }
+}
+
+/// The process-global registry every subsystem records into and every
+/// `/metrics` endpoint renders.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// Standard latency bucket edges in seconds: 1ms..~100s, roughly
+/// exponential. Shared by RPC / solve / request histograms so dashboards
+/// line up across subsystems.
+pub const LATENCY_EDGES: [f64; 12] =
+    [0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 1.0, 5.0, 25.0, 100.0];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_idempotent_registration_shares_cell() {
+        let r = Registry::new();
+        let a = r.counter("alps_test_total", "h", &[("k", "v")]);
+        let b = r.counter("alps_test_total", "h", &[("k", "v")]);
+        a.add(3);
+        b.inc();
+        assert_eq!(a.get(), 4);
+        assert_eq!(b.get(), 4);
+        assert_eq!(r.family_count(), 1);
+    }
+
+    #[test]
+    fn label_order_is_canonicalized() {
+        let r = Registry::new();
+        let a = r.counter("alps_t", "h", &[("a", "1"), ("b", "2")]);
+        let b = r.counter("alps_t", "h", &[("b", "2"), ("a", "1")]);
+        a.inc();
+        assert_eq!(b.get(), 1);
+    }
+
+    #[test]
+    fn kind_conflict_yields_detached_handle() {
+        let r = Registry::new();
+        let c = r.counter("alps_kind", "h", &[]);
+        c.inc();
+        let g = r.gauge("alps_kind", "h", &[]);
+        g.set(5.0); // must not panic, must not corrupt the counter
+        assert_eq!(c.get(), 1);
+        assert_eq!(r.family_count(), 1);
+    }
+
+    #[test]
+    fn histogram_bucket_edges_inclusive() {
+        let h = Histogram::detached(&[0.1, 1.0, 10.0]);
+        h.observe(0.1); // exactly on an edge -> that bucket (le semantics)
+        h.observe(0.05);
+        h.observe(1.0000001);
+        h.observe(1e9); // beyond every edge -> +Inf
+        let cum = h.cumulative();
+        assert_eq!(cum.len(), 4);
+        assert_eq!(cum[0], (0.1, 2)); // 0.05 and 0.1
+        assert_eq!(cum[1], (1.0, 2));
+        assert_eq!(cum[2], (10.0, 3));
+        assert_eq!(cum[3].1, 4);
+        assert!(cum[3].0.is_infinite());
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - (0.1 + 0.05 + 1.0000001 + 1e9)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn histogram_edges_sorted_and_deduped() {
+        let h = Histogram::detached(&[5.0, 1.0, 5.0, f64::INFINITY]);
+        h.observe(2.0);
+        let cum = h.cumulative();
+        // finite edges 1, 5 plus implicit +Inf (the explicit Inf dropped)
+        assert_eq!(cum.len(), 3);
+        assert_eq!(cum[0].0, 1.0);
+        assert_eq!(cum[1], (5.0, 1));
+    }
+
+    #[test]
+    fn histogram_nan_goes_to_overflow() {
+        let h = Histogram::detached(&[1.0]);
+        h.observe(f64::NAN);
+        let cum = h.cumulative();
+        assert_eq!(cum[0].1, 0);
+        assert_eq!(cum[1].1, 1);
+    }
+
+    #[test]
+    fn concurrent_recording_is_exact() {
+        let r = Registry::new();
+        let c = r.counter("alps_conc_total", "h", &[]);
+        let h = r.histogram("alps_conc_secs", "h", &[], &[0.5]);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let c = c.clone();
+                let h = h.clone();
+                s.spawn(move || {
+                    for i in 0..1000 {
+                        c.inc();
+                        h.observe(if i % 2 == 0 { 0.25 } else { 0.75 });
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 8000);
+        assert_eq!(h.count(), 8000);
+        let cum = h.cumulative();
+        assert_eq!(cum[0].1, 4000);
+        assert_eq!(cum[1].1, 8000);
+        assert!((h.sum() - (4000.0 * 0.25 + 4000.0 * 0.75)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gauge_set_get() {
+        let r = Registry::new();
+        let g = r.gauge("alps_g", "h", &[]);
+        g.set(-2.5);
+        assert_eq!(g.get(), -2.5);
+        let g2 = r.gauge("alps_g", "h", &[]);
+        assert_eq!(g2.get(), -2.5);
+    }
+}

@@ -29,6 +29,12 @@
 //!   endpoint streaming the session's progress snapshot with per-worker
 //!   attribution and live heartbeat progress) — all built on the shared
 //!   [`crate::net`] transport layer.
+//! * Observability: the session dual-writes the [`crate::obs`] registry
+//!   (`alps_prune_layers_total`, per-method solve-time histograms, the
+//!   current-block gauge) and stamps every [`session::ProgressEvent`]
+//!   with wall seconds since the run started; the status endpoint and
+//!   the worker port both answer `GET /metrics` with the Prometheus
+//!   exposition, and `--trace-out` streams spans/events as JSONL.
 //!
 //! The old `method_by_name` / `all_methods` free functions and the
 //! coordinator's `PruneEngine` enum remain as deprecated shims for one

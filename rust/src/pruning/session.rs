@@ -49,14 +49,18 @@ use std::sync::Arc;
 
 /// Streaming progress from a pruning run. One channel feeds the CLI's
 /// verbose output, bench progress lines, and tests.
+///
+/// Events carry `elapsed_secs` — wall-clock seconds since the session
+/// started — so any consumer (verbose lines, the status snapshot, trace
+/// sinks) can place them on a shared timeline without its own clock.
 #[derive(Clone, Debug)]
 pub enum ProgressEvent {
     /// The run began: identity + total block count.
     RunStarted { model: String, method: String, target: String, n_blocks: usize },
     /// A block was skipped because the checkpoint already contains it.
-    BlockResumed { block: usize },
+    BlockResumed { block: usize, elapsed_secs: f64 },
     /// Calibration capture for this block is starting.
-    BlockStarted { block: usize, n_blocks: usize },
+    BlockStarted { block: usize, n_blocks: usize, elapsed_secs: f64 },
     /// One matrix was solved and written back.
     LayerSolved {
         block: usize,
@@ -70,9 +74,11 @@ pub enum ProgressEvent {
         admm_iters: usize,
         /// Pool member that solved it (sharded engines); `None` locally.
         worker: Option<String>,
+        /// Since session start (not the same as `secs`, the solve time).
+        elapsed_secs: f64,
     },
     /// The per-block checkpoint (weights + manifest) was persisted.
-    CheckpointWritten { block: usize, path: PathBuf },
+    CheckpointWritten { block: usize, path: PathBuf, elapsed_secs: f64 },
     /// The run finished (possibly early via `stop_after`).
     RunFinished { blocks_done: usize, total_secs: f64 },
 }
@@ -233,6 +239,11 @@ impl<'a> PruneSession<'a> {
             target: report.target.clone(),
             n_blocks,
         });
+        let omet = PruneObs::acquire(&report.method);
+        let mut run_span = crate::obs::Span::begin("prune_run");
+        run_span.set_field("model", &report.model);
+        run_span.set_field("method", &report.method);
+        run_span.set_field("target", &report.target);
 
         let engine_config = self.engine.config_digest();
         let calib_dig = calib_digest(&self.calib);
@@ -261,14 +272,18 @@ impl<'a> PruneSession<'a> {
                 report.layers = ck.layers;
                 start_block = ck.blocks_done;
                 for block in 0..start_block {
-                    self.emit(&ProgressEvent::BlockResumed { block });
+                    let elapsed_secs = total_timer.elapsed_secs();
+                    self.emit(&ProgressEvent::BlockResumed { block, elapsed_secs });
                 }
             }
         }
 
         let end_block = n_blocks.min(self.stop_after.unwrap_or(n_blocks));
         for block in start_block..end_block {
-            self.emit(&ProgressEvent::BlockStarted { block, n_blocks });
+            let elapsed_secs = total_timer.elapsed_secs();
+            self.emit(&ProgressEvent::BlockStarted { block, n_blocks, elapsed_secs });
+            omet.cur_block.set(block as f64);
+            let block_span = crate::obs::Span::begin("block").field("block", &block.to_string());
 
             // (1) capture this block's layer inputs under current weights
             let inputs = model.forward_collect(&self.calib, block)?;
@@ -309,6 +324,21 @@ impl<'a> PruneSession<'a> {
                     secs: res.secs,
                     admm_iters: res.admm_iters,
                 };
+                omet.layers.inc();
+                omet.solve_secs.observe(rep.secs);
+                if crate::obs::trace::enabled() {
+                    let b = block.to_string();
+                    let secs = format!("{:.4}", rep.secs);
+                    crate::obs::trace::event(
+                        "layer_solved",
+                        &[
+                            ("block", &b),
+                            ("layer", &rep.name),
+                            ("worker", res.worker.as_deref().unwrap_or("local")),
+                            ("secs", &secs),
+                        ],
+                    );
+                }
                 self.emit(&ProgressEvent::LayerSolved {
                     block,
                     layer: rep.name.clone(),
@@ -320,6 +350,7 @@ impl<'a> PruneSession<'a> {
                     secs: rep.secs,
                     admm_iters: rep.admm_iters,
                     worker: res.worker.clone(),
+                    elapsed_secs: total_timer.elapsed_secs(),
                 });
                 report.layers.push(rep);
             }
@@ -338,11 +369,16 @@ impl<'a> PruneSession<'a> {
                     layers: report.layers.clone(),
                 };
                 let path = state.save(&dir, model)?;
-                self.emit(&ProgressEvent::CheckpointWritten { block, path });
+                omet.checkpoints.inc();
+                let elapsed_secs = total_timer.elapsed_secs();
+                self.emit(&ProgressEvent::CheckpointWritten { block, path, elapsed_secs });
             }
+            omet.blocks.inc();
+            block_span.end();
         }
 
         report.total_secs = total_timer.elapsed_secs();
+        run_span.end();
         self.emit(&ProgressEvent::RunFinished {
             blocks_done: start_block.max(end_block),
             total_secs: report.total_secs,
@@ -353,25 +389,62 @@ impl<'a> PruneSession<'a> {
     fn emit(&mut self, ev: &ProgressEvent) {
         if self.verbose {
             match ev {
-                ProgressEvent::BlockResumed { block } => {
+                ProgressEvent::BlockResumed { block, .. } => {
                     println!("  [{block}] resumed from checkpoint");
                 }
                 ProgressEvent::LayerSolved {
-                    block, layer, n_in, n_out, kept, rel_error, secs, ..
+                    block,
+                    layer,
+                    n_in,
+                    n_out,
+                    kept,
+                    rel_error,
+                    secs,
+                    elapsed_secs,
+                    ..
                 } => {
                     println!(
                         "  [{block}] {layer} {n_in}x{n_out} kept={kept} \
-                         err={rel_error:.4} ({secs:.2}s)"
+                         err={rel_error:.4} ({secs:.2}s, +{elapsed_secs:.1}s)"
                     );
                 }
-                ProgressEvent::CheckpointWritten { block, path } => {
-                    println!("  [{block}] checkpoint -> {}", path.display());
+                ProgressEvent::CheckpointWritten { block, path, elapsed_secs } => {
+                    println!("  [{block}] checkpoint -> {} (+{elapsed_secs:.1}s)", path.display());
                 }
                 _ => {}
             }
         }
         if let Some(obs) = &mut self.observer {
             obs(ev);
+        }
+    }
+}
+
+/// Registry handles for session progress (`alps_prune_*`). Acquired once
+/// per run; the per-method solve-time histogram carries the method label
+/// so a fleet scrape can compare ALPS vs SparseGPT solve cost directly.
+struct PruneObs {
+    layers: crate::obs::Counter,
+    blocks: crate::obs::Counter,
+    checkpoints: crate::obs::Counter,
+    cur_block: crate::obs::Gauge,
+    solve_secs: crate::obs::Histogram,
+}
+
+impl PruneObs {
+    fn acquire(method: &str) -> PruneObs {
+        let r = crate::obs::global();
+        PruneObs {
+            layers: r.counter("alps_prune_layers_total", "layers solved and written back", &[]),
+            blocks: r.counter("alps_prune_blocks_total", "blocks completed", &[]),
+            checkpoints: r.counter("alps_prune_checkpoints_total", "checkpoints written", &[]),
+            cur_block: r.gauge("alps_prune_block", "block currently being pruned", &[]),
+            solve_secs: r.histogram(
+                "alps_prune_layer_solve_seconds",
+                "per-layer solve time by method",
+                &[("method", method)],
+                &crate::obs::LATENCY_EDGES,
+            ),
         }
     }
 }

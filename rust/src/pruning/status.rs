@@ -17,17 +17,30 @@
 //!
 //! ```text
 //! curl http://127.0.0.1:7878/status       # HTTP JSON snapshot
+//! curl http://127.0.0.1:7878/metrics      # Prometheus text exposition
 //! printf 'status\n' | nc 127.0.0.1 7878   # same JSON as one line
 //! ```
 //!
 //! The endpoint is read-only and stateless per connection (one query, one
 //! answer, close), served by the shared [`crate::net`] accept loop, so a
-//! monitoring scrape can never interfere with the run it watches.
+//! monitoring scrape can never interfere with the run it watches. Both
+//! routes survive a full connection table: the refusal path sniffs the
+//! first bytes and still answers `GET` probes.
+//!
+//! The snapshot carries wall-clock shape too — `elapsed_secs` (stamped on
+//! every progress event by the session) and `block_secs` (per-block wall
+//! time derived from consecutive `BlockStarted` stamps). Heartbeats
+//! additionally publish the `alps_prune_admm_iteration{worker=...}` gauge
+//! to the [`crate::obs`] registry, so `/metrics` shows live solver
+//! progress next to the counters.
 
 use super::session::{json_escape, ProgressEvent};
 use super::wire::Heartbeat;
 use crate::net::framing::{read_line_deadline, LineRead};
-use crate::net::server::{finish_refusal, respond_http_json, write_http_json};
+use crate::net::server::{
+    finish_refusal, request_path, respond_http, respond_http_json, write_http_json,
+    write_http_response,
+};
 use crate::net::{lock, ConnHandler, NetServer, ServerConfig, READ_POLL, WRITE_TIMEOUT};
 use anyhow::{Context as _, Result};
 use std::collections::BTreeMap;
@@ -72,6 +85,17 @@ pub struct StatusSnapshot {
     /// Latest in-solve progress per pool member:
     /// `(job, admm_iter, elapsed_ms)` from its most recent heartbeat.
     pub solving: BTreeMap<String, (u64, u64, u64)>,
+    /// Wall seconds since the session started, as stamped on the most
+    /// recent progress event — lets a scraper judge run age without
+    /// clock agreement with the coordinator.
+    pub elapsed_secs: f64,
+    /// Wall seconds each finished block took, keyed by block index —
+    /// derived from consecutive `BlockStarted` stamps (the final block
+    /// closes on `RunFinished`'s total).
+    pub block_secs: BTreeMap<usize, f64>,
+    /// Bookkeeping for `block_secs`: the currently running block and its
+    /// start stamp. Not rendered in the JSON snapshot.
+    pub open_block: Option<(usize, f64)>,
 }
 
 impl StatusSnapshot {
@@ -100,11 +124,19 @@ impl StatusSnapshot {
             })
             .collect::<Vec<_>>()
             .join(",");
+        let fin = |v: f64| if v.is_finite() { v } else { 0.0 };
+        let block_secs = self
+            .block_secs
+            .iter()
+            .map(|(b, s)| format!("\"{b}\":{}", fin(*s)))
+            .collect::<Vec<_>>()
+            .join(",");
         format!(
             "{{\"model\":\"{}\",\"method\":\"{}\",\"target\":\"{}\",\
              \"n_blocks\":{},\"blocks_done\":{},\"layers_solved\":{},\
              \"checkpoints_written\":{},\"last_layer\":\"{}\",\
              \"running\":{},\"finished\":{},\"total_secs\":{},\
+             \"elapsed_secs\":{},\"block_secs\":{{{}}},\
              \"workers\":{{{}}},\"heartbeats\":{{{}}},\"solving\":{{{}}}}}\n",
             json_escape(&self.model),
             json_escape(&self.method),
@@ -116,7 +148,9 @@ impl StatusSnapshot {
             json_escape(&self.last_layer),
             self.running,
             self.finished,
-            if self.total_secs.is_finite() { self.total_secs } else { 0.0 },
+            fin(self.total_secs),
+            fin(self.elapsed_secs),
+            block_secs,
             workers,
             heartbeats,
             solving,
@@ -150,32 +184,46 @@ impl StatusBoard {
                     ..Default::default()
                 };
             }
-            ProgressEvent::BlockResumed { .. } => {
+            ProgressEvent::BlockResumed { elapsed_secs, .. } => {
                 st.blocks_done += 1;
+                st.elapsed_secs = st.elapsed_secs.max(*elapsed_secs);
             }
             // starting block k means blocks 0..k are finished — this is
             // what keeps `blocks_done` moving on runs without
             // `--checkpoint-dir` (no CheckpointWritten events)
-            ProgressEvent::BlockStarted { block, .. } => {
+            ProgressEvent::BlockStarted { block, elapsed_secs, .. } => {
                 st.blocks_done = st.blocks_done.max(*block);
+                st.elapsed_secs = st.elapsed_secs.max(*elapsed_secs);
+                // the previous block ran from its start stamp to this one
+                if let Some((prev, started)) = st.open_block.take() {
+                    st.block_secs.insert(prev, (elapsed_secs - started).max(0.0));
+                }
+                st.open_block = Some((*block, *elapsed_secs));
             }
-            ProgressEvent::LayerSolved { layer, worker, .. } => {
+            ProgressEvent::LayerSolved { layer, worker, elapsed_secs, .. } => {
                 st.layers_solved += 1;
                 st.last_layer = layer.clone();
+                st.elapsed_secs = st.elapsed_secs.max(*elapsed_secs);
                 let key = worker.as_deref().unwrap_or(LOCAL_WORKER).to_string();
                 // the delivered layer supersedes that worker's live
                 // in-solve progress entry
                 st.solving.remove(&key);
                 *st.workers.entry(key).or_insert(0) += 1;
             }
-            ProgressEvent::CheckpointWritten { block, .. } => {
+            ProgressEvent::CheckpointWritten { block, elapsed_secs, .. } => {
                 st.checkpoints_written += 1;
                 // a checkpoint marks the block complete
                 st.blocks_done = st.blocks_done.max(block + 1);
+                st.elapsed_secs = st.elapsed_secs.max(*elapsed_secs);
             }
             ProgressEvent::RunFinished { blocks_done, total_secs } => {
                 st.blocks_done = st.blocks_done.max(*blocks_done);
                 st.total_secs = *total_secs;
+                st.elapsed_secs = st.elapsed_secs.max(*total_secs);
+                // the last block closes on the run total
+                if let Some((prev, started)) = st.open_block.take() {
+                    st.block_secs.insert(prev, (total_secs - started).max(0.0));
+                }
                 st.running = false;
                 st.finished = true;
             }
@@ -190,6 +238,16 @@ impl StatusBoard {
         *st.heartbeats.entry(worker.to_string()).or_insert(0) += 1;
         st.solving
             .insert(worker.to_string(), (hb.job, hb.admm_iter, hb.elapsed_ms));
+        drop(st);
+        // registry lookup is idempotent; at keepalive cadence (seconds)
+        // the name search is noise
+        crate::obs::global()
+            .gauge(
+                "alps_prune_admm_iteration",
+                "Latest ADMM iteration reported by each worker's keepalive.",
+                &[("worker", worker)],
+            )
+            .set(hb.admm_iter as f64);
     }
 
     /// Drop a worker's live solve-progress entry (called by the sharded
@@ -258,32 +316,48 @@ impl ConnHandler for StatusHandler<'_> {
             Err(e) if e.kind() == std::io::ErrorKind::TimedOut => return Ok(()),
             Err(e) => return Err(e.into()),
         };
-        let body = self.board.snapshot().to_json();
         if first.starts_with("GET ") {
-            respond_http_json(
-                &mut reader,
-                &mut stream,
-                MAX_QUERY_LINE,
-                self.net.shutdown_flag(),
-                &body,
-            )?;
+            if request_path(&first) == "/metrics" {
+                let body = crate::obs::global().render();
+                respond_http(
+                    &mut reader,
+                    &mut stream,
+                    MAX_QUERY_LINE,
+                    self.net.shutdown_flag(),
+                    crate::obs::prometheus::CONTENT_TYPE,
+                    &body,
+                )?;
+            } else {
+                let body = self.board.snapshot().to_json();
+                respond_http_json(
+                    &mut reader,
+                    &mut stream,
+                    MAX_QUERY_LINE,
+                    self.net.shutdown_flag(),
+                    &body,
+                )?;
+            }
         } else {
             // any plain line (canonically `status`) gets the JSON line
-            stream.write_all(body.as_bytes())?;
+            stream.write_all(self.board.snapshot().to_json().as_bytes())?;
         }
         let _ = stream.shutdown(std::net::Shutdown::Write);
         Ok(())
     }
 
     /// Monitoring must stay live even when idle clients exhaust the
-    /// connection cap: an over-cap `GET` probe still gets the snapshot.
+    /// connection cap: an over-cap `GET` probe still gets the snapshot
+    /// (or the Prometheus page — the 8-byte sniff covers `GET /met`).
     fn refuse(&self, stream: TcpStream, cap: usize) {
         let mut st = stream;
         let _ = st.set_read_timeout(Some(READ_POLL));
         let _ = st.set_write_timeout(Some(WRITE_TIMEOUT));
         let mut first = [0u8; 8];
         let have = std::io::Read::read(&mut st, &mut first).unwrap_or(0);
-        if first[..have].starts_with(b"GET ") {
+        if first[..have].starts_with(b"GET /met") {
+            let body = crate::obs::global().render();
+            let _ = write_http_response(&mut st, crate::obs::prometheus::CONTENT_TYPE, &body);
+        } else if first[..have].starts_with(b"GET ") {
             let _ = write_http_json(&mut st, &self.board.snapshot().to_json());
         } else {
             let _ = writeln!(st, "err - connection limit reached ({cap})");
@@ -306,7 +380,7 @@ mod tests {
             target: "0.70".into(),
             n_blocks: 2,
         });
-        board.observe(&ProgressEvent::BlockStarted { block: 0, n_blocks: 2 });
+        board.observe(&ProgressEvent::BlockStarted { block: 0, n_blocks: 2, elapsed_secs: 0.5 });
         for (i, w) in [Some("127.0.0.1:1"), Some("127.0.0.1:2"), None].iter().enumerate() {
             board.observe(&ProgressEvent::LayerSolved {
                 block: 0,
@@ -319,14 +393,16 @@ mod tests {
                 secs: 0.5,
                 admm_iters: 3,
                 worker: w.map(str::to_string),
+                elapsed_secs: 1.0 + i as f64,
             });
         }
         board.observe(&ProgressEvent::CheckpointWritten {
             block: 0,
             path: PathBuf::from("ck"),
+            elapsed_secs: 4.0,
         });
         // checkpoint-free runs advance blocks_done through BlockStarted
-        board.observe(&ProgressEvent::BlockStarted { block: 1, n_blocks: 2 });
+        board.observe(&ProgressEvent::BlockStarted { block: 1, n_blocks: 2, elapsed_secs: 4.5 });
     }
 
     #[test]
@@ -344,15 +420,24 @@ mod tests {
         assert_eq!(st.workers.get("127.0.0.1:1"), Some(&1));
         assert_eq!(st.workers.get("127.0.0.1:2"), Some(&1));
         assert_eq!(st.workers.get("local"), Some(&1));
+        // elapsed tracks the newest stamp; block 0's wall time closed on
+        // block 1's start (4.5 - 0.5)
+        assert_eq!(st.elapsed_secs, 4.5);
+        assert_eq!(st.block_secs.get(&0), Some(&4.0));
+        assert!(st.block_secs.get(&1).is_none());
 
-        board.observe(&ProgressEvent::RunFinished { blocks_done: 2, total_secs: 1.5 });
+        board.observe(&ProgressEvent::RunFinished { blocks_done: 2, total_secs: 6.5 });
         let st = board.snapshot();
         assert!(st.finished && !st.running);
         assert_eq!(st.blocks_done, 2);
+        // the run total closes the final block's wall time (6.5 - 4.5)
+        assert_eq!(st.block_secs.get(&1), Some(&2.0));
         let json = st.to_json();
         assert!(json.contains("\"layers_solved\":3"), "{json}");
         assert!(json.contains("\"127.0.0.1:1\":1"), "{json}");
         assert!(json.contains("\"finished\":true"), "{json}");
+        assert!(json.contains("\"block_secs\":{\"0\":4,\"1\":2}"), "{json}");
+        assert!(json.contains("\"elapsed_secs\":6.5"), "{json}");
     }
 
     #[test]
@@ -383,6 +468,7 @@ mod tests {
             secs: 0.5,
             admm_iters: 3,
             worker: Some("127.0.0.1:1".into()),
+            elapsed_secs: 5.0,
         });
         assert!(board.snapshot().solving.get("127.0.0.1:1").is_none());
         // a dead/rerouted worker's entry clears too (dispatcher requeue
@@ -419,8 +505,28 @@ mod tests {
             st.read_to_string(&mut resp).unwrap();
             assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
             assert!(resp.contains("\"workers\":{"), "{resp}");
+            assert!(resp.contains("\"block_secs\":{"), "{resp}");
+            // Prometheus scrape on the same port
+            let mut st = TcpStream::connect(addr).unwrap();
+            st.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            write!(st, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+            let mut resp = String::new();
+            st.read_to_string(&mut resp).unwrap();
+            assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+            assert!(resp.contains("text/plain; version=0.0.4"), "{resp}");
+            assert!(resp.contains("alps_net_connections_total"), "{resp}");
             server.request_shutdown();
             srv.join().unwrap().unwrap();
         });
+    }
+
+    #[test]
+    fn heartbeats_feed_admm_iteration_gauge() {
+        let board = StatusBoard::new();
+        let hb = Heartbeat { job: 3, admm_iter: 41, elapsed_ms: 800 };
+        board.note_heartbeat("127.0.0.1:9", &hb);
+        let page = crate::obs::global().render();
+        assert!(page.contains("# TYPE alps_prune_admm_iteration gauge"), "{page}");
+        assert!(page.contains("alps_prune_admm_iteration{worker=\"127.0.0.1:9\"} 41"), "{page}");
     }
 }

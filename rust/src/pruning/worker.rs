@@ -26,6 +26,15 @@
 //!   uses, so results stay bit-identical while wide layers ship O(n·n_in)
 //!   bytes instead of O(n_in^2).
 //!
+//! The worker port doubles as a monitoring endpoint: the first byte of a
+//! connection is sniffed (frames open with the `b"AF"` magic, HTTP probes
+//! with `G`), so `curl http://worker:7979/metrics` answers with the
+//! process-global Prometheus page from [`crate::obs`] — including the
+//! `alps_net_*` transport counters — and any other `GET` path with a
+//! one-line health JSON. Probes work even over the connection cap (the
+//! refusal path sniffs too), so a scrape never competes with coordinators
+//! for solve slots.
+//!
 //! Connections come through the shared [`crate::net`] layer: the accept
 //! loop, connection cap, and shutdown drain are [`NetServer`]'s; this
 //! module only decodes [`tag::SOLVE`] frames, solves, and answers
@@ -40,10 +49,13 @@
 
 use super::engine::NativeEngine;
 use super::wire::{self, tag};
-use crate::net::framing::{read_frame, write_frame, FrameRead};
-use crate::net::server::finish_refusal;
+use crate::net::framing::{read_frame, read_line_deadline, write_frame, FrameRead, LineRead};
+use crate::net::server::{
+    finish_refusal, request_path, respond_http, respond_http_json, write_http_response,
+};
 use crate::net::{lock, ConnHandler, NetServer, ServerConfig, READ_POLL, WRITE_TIMEOUT};
 use anyhow::{Context as _, Result};
+use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -52,6 +64,14 @@ use std::time::{Duration, Instant};
 /// How often the heartbeat thread wakes to check for work/shutdown —
 /// bounds how long a finished solve waits for its sidecar to exit.
 const HEARTBEAT_TICK: Duration = Duration::from_millis(20);
+
+/// Longest accepted HTTP probe request line (frame-protocol traffic never
+/// goes through the line reader).
+const MAX_PROBE_LINE: usize = 4096;
+
+/// How long an HTTP probe gets to deliver its request line before the
+/// connection is dropped — probes must not pin worker slots.
+const PROBE_DEADLINE: Duration = Duration::from_secs(10);
 
 /// Worker endpoint configuration.
 #[derive(Clone, Debug)]
@@ -131,10 +151,32 @@ impl ConnHandler for WorkerHandler<'_> {
         stream.set_write_timeout(Some(WRITE_TIMEOUT)).context("setting write timeout")?;
         let _ = stream.set_nodelay(true);
         let mut reader = stream.try_clone().context("cloning stream")?;
+        let shutdown = self.worker.net.shutdown_flag();
+        // sniff the first byte before committing to the frame protocol:
+        // frames open with the magic `b"AF"`, so a leading 'G' can only be
+        // an HTTP `GET` probe (`/metrics` exposition or a health check)
+        let first = loop {
+            let mut b = [0u8; 1];
+            match reader.peek(&mut b) {
+                Ok(0) => return Ok(()),
+                Ok(_) => break b[0],
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    if shutdown.load(Ordering::SeqCst) {
+                        return Ok(());
+                    }
+                }
+                Err(e) => return Err(e.into()),
+            }
+        };
+        if first == b'G' {
+            return answer_http_probe(reader, stream, shutdown, self.worker.layers_solved());
+        }
         // the heartbeat sidecar and the request loop share the write side
         let writer = Mutex::new(stream);
         let max = self.worker.cfg.max_frame_bytes;
-        let shutdown = self.worker.net.shutdown_flag();
         loop {
             let (tag, payload) = match read_frame(&mut reader, max, Some(shutdown), None) {
                 Ok(FrameRead::Frame { tag, payload }) => (tag, payload),
@@ -192,17 +234,63 @@ impl ConnHandler for WorkerHandler<'_> {
     /// Over-cap coordinators get a frame-level BUSY (retryable — the
     /// dispatcher backs off and reconnects; only solver failures abort a
     /// run), then a brief inbound drain so the reply isn't RST away.
+    /// Over-cap `GET` probes are sniffed out first so monitoring stays
+    /// live when every slot is grinding a solve.
     fn refuse(&self, stream: TcpStream, cap: usize) {
         let mut st = stream;
         let _ = st.set_read_timeout(Some(READ_POLL));
         let _ = st.set_write_timeout(Some(WRITE_TIMEOUT));
-        let _ = write_frame(
-            &mut st,
-            tag::BUSY,
-            &wire::encode_error(0, &format!("worker connection limit reached ({cap})")),
-        );
+        let mut first = [0u8; 8];
+        let have = std::io::Read::read(&mut st, &mut first).unwrap_or(0);
+        if first[..have].starts_with(b"GET ") {
+            let body = crate::obs::global().render();
+            let _ = write_http_response(&mut st, crate::obs::prometheus::CONTENT_TYPE, &body);
+        } else {
+            let _ = write_frame(
+                &mut st,
+                tag::BUSY,
+                &wire::encode_error(0, &format!("worker connection limit reached ({cap})")),
+            );
+        }
         finish_refusal(&st);
     }
+}
+
+/// Answer one HTTP probe on a worker connection: `/metrics` serves the
+/// process-global Prometheus page, any other path a one-line health JSON.
+/// One response per connection, then close — exactly the status-endpoint
+/// contract, so a Prometheus scrape config can point at workers and the
+/// coordinator uniformly.
+fn answer_http_probe(
+    reader: TcpStream,
+    stream: TcpStream,
+    shutdown: &AtomicBool,
+    layers_solved: usize,
+) -> Result<()> {
+    let mut reader = BufReader::new(reader);
+    let line = match read_line_deadline(&mut reader, MAX_PROBE_LINE, shutdown, PROBE_DEADLINE) {
+        Ok(LineRead::Line(l)) => l,
+        Ok(_) => return Ok(()),
+        Err(e) if e.kind() == std::io::ErrorKind::TimedOut => return Ok(()),
+        Err(e) => return Err(e.into()),
+    };
+    let mut stream = stream;
+    if request_path(&line) == "/metrics" {
+        let body = crate::obs::global().render();
+        respond_http(
+            &mut reader,
+            &mut stream,
+            MAX_PROBE_LINE,
+            shutdown,
+            crate::obs::prometheus::CONTENT_TYPE,
+            &body,
+        )?;
+    } else {
+        let body = format!("{{\"ok\":true,\"layers_solved\":{layers_solved}}}\n");
+        respond_http_json(&mut reader, &mut stream, MAX_PROBE_LINE, shutdown, &body)?;
+    }
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    Ok(())
 }
 
 /// Solve one request through the native engine — the exact code path a
@@ -376,6 +464,50 @@ mod tests {
                 .unwrap();
             assert_eq!(resp.w, local.w, "worker-side gram must not change a bit");
 
+            drop(stream);
+            worker.request_shutdown();
+            srv.join().unwrap().unwrap();
+        });
+    }
+
+    #[test]
+    fn worker_port_answers_http_probes() {
+        use std::io::{Read as _, Write as _};
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let worker = Worker::new(WorkerConfig::default());
+        std::thread::scope(|s| {
+            let srv = s.spawn(|| worker.serve(listener));
+            // Prometheus scrape on the frame-protocol port
+            let mut st = TcpStream::connect(addr).unwrap();
+            st.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            write!(st, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+            let mut resp = String::new();
+            st.read_to_string(&mut resp).unwrap();
+            assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+            assert!(resp.contains("text/plain; version=0.0.4"), "{resp}");
+            assert!(resp.contains("alps_net_connections_total"), "{resp}");
+            // any other GET path gets the health line
+            let mut st = TcpStream::connect(addr).unwrap();
+            st.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            write!(st, "GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+            let mut resp = String::new();
+            st.read_to_string(&mut resp).unwrap();
+            assert!(resp.contains("application/json"), "{resp}");
+            assert!(resp.contains("\"ok\":true"), "{resp}");
+            // probes must not disturb the frame protocol on the same port
+            let mut stream = TcpStream::connect(addr).unwrap();
+            stream.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+            let p = random_problem(10, 5, 40, 1);
+            let req = wire::SolveRequest {
+                job: 1,
+                target: SparsityTarget::Unstructured(0.5),
+                spec: MethodSpec::Magnitude,
+                what: p.what.clone(),
+                calib: wire::Calib::Gram(p.h.clone()),
+            };
+            let (resp, _) = roundtrip_solve(&mut stream, &req).unwrap();
+            assert_eq!(resp.job, 1);
             drop(stream);
             worker.request_shutdown();
             srv.join().unwrap().unwrap();

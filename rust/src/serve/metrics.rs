@@ -5,7 +5,16 @@
 //! steps, likewise for request latencies), so a long-lived server holds
 //! bounded memory; latency percentiles cover that window while the
 //! throughput counters cover the full lifetime.
+//!
+//! [`ServeMetrics`] is also a **view over the [`crate::obs`] registry**:
+//! every `record_*` dual-writes the process-global `alps_serve_*`
+//! counters/histograms through pre-registered lock-free handles, so a
+//! `GET /metrics` scrape reads fresh numbers *without* taking the batcher
+//! lock the scheduler holds (scrape-under-load never blocks decoding).
+//! The sliding windows stay local — exact percentiles for the CLI report;
+//! bucketed histograms for Prometheus.
 
+use crate::obs::{Counter, Gauge, Histogram};
 use crate::util::table::Table;
 use crate::util::Stats;
 use std::collections::VecDeque;
@@ -14,8 +23,52 @@ use std::collections::VecDeque;
 /// steps — bounded memory and report cost on long-lived servers.
 pub const STEP_WINDOW: usize = 4096;
 
+/// Registry handles behind one [`ServeMetrics`] instance. Registration
+/// is idempotent, so every instance in a process shares the same
+/// underlying `alps_serve_*` series (process totals — the Prometheus
+/// contract), while the window-based percentiles stay per-instance.
+struct ObsHandles {
+    tokens: Counter,
+    steps: Counter,
+    requests: Counter,
+    cancelled: Counter,
+    prefills: Counter,
+    prompt_tokens: Counter,
+    batch_occupancy: Gauge,
+    step_secs: Histogram,
+    request_secs: Histogram,
+    prefill_secs: Histogram,
+}
+
+impl ObsHandles {
+    fn acquire() -> ObsHandles {
+        let r = crate::obs::global();
+        let edges = &crate::obs::LATENCY_EDGES;
+        ObsHandles {
+            tokens: r.counter("alps_serve_tokens_total", "decode tokens generated", &[]),
+            steps: r.counter("alps_serve_steps_total", "batched decode steps", &[]),
+            requests: r.counter("alps_serve_requests_total", "requests completed", &[]),
+            cancelled: r
+                .counter("alps_serve_cancelled_total", "requests cancelled (client gone)", &[]),
+            prefills: r.counter("alps_serve_prefills_total", "admission prefills", &[]),
+            prompt_tokens: r
+                .counter("alps_serve_prompt_tokens_total", "prompt tokens prefilled", &[]),
+            batch_occupancy: r
+                .gauge("alps_serve_batch_occupancy", "tokens produced by the last step", &[]),
+            step_secs: r.histogram("alps_serve_step_seconds", "decode step latency", &[], edges),
+            request_secs: r.histogram(
+                "alps_serve_request_seconds",
+                "end-to-end request latency (queue + prefill + decode)",
+                &[],
+                edges,
+            ),
+            prefill_secs: r
+                .histogram("alps_serve_prefill_seconds", "admission prefill latency", &[], edges),
+        }
+    }
+}
+
 /// Accumulated serving counters for one engine run.
-#[derive(Default)]
 pub struct ServeMetrics {
     /// Sliding window of batched decode steps: (seconds, tokens produced).
     steps: VecDeque<(f64, usize)>,
@@ -30,11 +83,30 @@ pub struct ServeMetrics {
     prompts_prefilled: usize,
     prompt_tokens: usize,
     decode_wall_secs: f64,
+    obs: ObsHandles,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> ServeMetrics {
+        ServeMetrics::new()
+    }
 }
 
 impl ServeMetrics {
     pub fn new() -> ServeMetrics {
-        ServeMetrics::default()
+        ServeMetrics {
+            steps: VecDeque::new(),
+            steps_total: 0,
+            request_secs: VecDeque::new(),
+            prefill_secs: VecDeque::new(),
+            tokens_generated: 0,
+            requests_completed: 0,
+            requests_cancelled: 0,
+            prompts_prefilled: 0,
+            prompt_tokens: 0,
+            decode_wall_secs: 0.0,
+            obs: ObsHandles::acquire(),
+        }
     }
 
     /// Record one batched decode step that produced `batch` tokens.
@@ -46,6 +118,10 @@ impl ServeMetrics {
         self.steps_total += 1;
         self.tokens_generated += batch;
         self.decode_wall_secs += secs;
+        self.obs.tokens.add(batch as u64);
+        self.obs.steps.inc();
+        self.obs.batch_occupancy.set(batch as f64);
+        self.obs.step_secs.observe(secs);
     }
 
     /// Record one completed request's end-to-end latency (queue + prefill
@@ -56,6 +132,8 @@ impl ServeMetrics {
         }
         self.request_secs.push_back(total_secs);
         self.requests_completed += 1;
+        self.obs.requests.inc();
+        self.obs.request_secs.observe(total_secs);
     }
 
     /// Record one admission prefill of a `tokens`-long prompt.
@@ -66,6 +144,9 @@ impl ServeMetrics {
         self.prefill_secs.push_back(secs);
         self.prompts_prefilled += 1;
         self.prompt_tokens += tokens;
+        self.obs.prefills.inc();
+        self.obs.prompt_tokens.add(tokens as u64);
+        self.obs.prefill_secs.observe(secs);
     }
 
     pub fn prompts_prefilled(&self) -> usize {
@@ -94,6 +175,7 @@ impl ServeMetrics {
     /// Record one request evicted because its client disconnected.
     pub fn record_cancelled(&mut self) {
         self.requests_cancelled += 1;
+        self.obs.cancelled.inc();
     }
 
     pub fn requests_cancelled(&self) -> usize {
@@ -267,6 +349,22 @@ mod tests {
         let _ = m.prefill_latency_ms(50.0);
         let _ = m.render();
         let _ = m.summary();
+    }
+
+    #[test]
+    fn registry_view_reflects_records() {
+        // counters are process-global (tests share them), so assert the
+        // families exist and are non-zero rather than exact values
+        let mut m = ServeMetrics::new();
+        m.record_step(3, 0.01);
+        m.record_request(0.2);
+        m.record_prefill(5, 0.003);
+        let text = crate::obs::global().render();
+        assert!(text.contains("# TYPE alps_serve_tokens_total counter"), "{text}");
+        assert!(text.contains("alps_serve_step_seconds_bucket"));
+        assert!(text.contains("alps_serve_request_seconds_count"));
+        assert!(text.contains("alps_serve_prefill_seconds_sum"));
+        assert!(text.contains("alps_serve_batch_occupancy"));
     }
 
     #[test]

@@ -27,8 +27,9 @@
 //!   transport layer: the accept loop, connection cap, bounded line
 //!   reads, and graceful drain-on-shutdown live in `net`; this module
 //!   adds the line protocol, the scheduler thread driving decode steps
-//!   over a shared `Mutex<Batcher>`, lock-free `GET /healthz`, and
-//!   client-disconnect cancellation (a connection that dies with
+//!   over a shared `Mutex<Batcher>`, lock-free `GET /healthz` and
+//!   `GET /metrics` (Prometheus text from the [`crate::obs`] registry),
+//!   and client-disconnect cancellation (a connection that dies with
 //!   generations in flight evicts them from the batcher instead of
 //!   decoding to completion). See its module docs for the wire protocol.
 //! * [`metrics`] — throughput and latency accounting on
@@ -36,6 +37,9 @@
 //!   p50/p95/p99, per-request latency, admission prefill latency, mean
 //!   batch occupancy. Latency windows tolerate NaN samples
 //!   (`f64::total_cmp` ordering) instead of panicking the comparator.
+//!   Every `record_*` also dual-writes the process-global
+//!   `alps_serve_*` series in [`crate::obs`] through lock-free handles,
+//!   so `/metrics` scrapes read fresh counters without the batcher lock.
 //!
 //! Per-token decode cost is O(context) attention + O(1) weight matmuls
 //! thanks to the KV cache; re-running the full prefix each token (the

@@ -12,8 +12,11 @@
 //!   the decode batch. Finished responses are routed back to the owning
 //!   connection over per-connection mpsc channels.
 //! * `GET /healthz` is answered from static model info plus the
-//!   [`crate::net::NetServer`] connection gauge — never touching the
-//!   batcher lock — so probes stay responsive while decode steps run.
+//!   [`crate::net::NetServer`] connection gauge, and `GET /metrics`
+//!   renders the process-global [`crate::obs`] registry (Prometheus text:
+//!   the `alps_serve_*` and `alps_net_*` families) — neither touches the
+//!   batcher lock, so probes and scrapes stay responsive while decode
+//!   steps run, even with the server at its connection cap.
 //! * A disconnected client's outstanding generations are **cancelled**:
 //!   when a connection tears down with requests still in flight (read or
 //!   write error — the client is gone), their sequences are evicted from
@@ -36,15 +39,19 @@
 //! * `stats` answers one `ok - <metrics summary>` line.
 //! * `shutdown` answers `ok shutdown` and stops the whole server after
 //!   draining in-flight work.
-//! * A first line starting with `GET ` gets a minimal HTTP 200 health
-//!   response (so `curl http://addr/healthz` works) and closes.
+//! * A first line starting with `GET ` gets a minimal HTTP 200 response
+//!   and closes: `/metrics` serves the Prometheus exposition, anything
+//!   else the health JSON (so `curl http://addr/healthz` works).
 //! * Lines longer than [`TcpConfig::max_line_bytes`] get `err - line too
 //!   long` and the connection is closed.
 
 use super::batcher::{Batcher, Response};
 use super::engine::{Engine, SamplingParams};
 use crate::net::framing::{read_line_bounded, LineRead};
-use crate::net::server::{finish_refusal, respond_http_json, write_http_json};
+use crate::net::server::{
+    finish_refusal, request_path, respond_http, respond_http_json, write_http_json,
+    write_http_response,
+};
 use crate::net::{lock, ConnHandler, NetServer, ServerConfig, READ_POLL, WRITE_TIMEOUT};
 use anyhow::{Context as _, Result};
 use std::collections::{HashMap, HashSet};
@@ -139,28 +146,42 @@ impl ConnHandler for FrontEnd<'_, '_, '_> {
         let mut first = [0u8; 512];
         let mut have = 0usize;
         // classify from up to a few bounded reads: "GET " can arrive split
-        // across TCP segments; stop once 4 bytes or a newline are in hand,
-        // or the client stalls past the read deadline (silent => refuse)
-        for _ in 0..4 {
+        // across TCP segments; a GET keeps reading to the end of its
+        // request line (the path routes /metrics vs healthz), anything
+        // else stops at 4 bytes, and a client that stalls past the read
+        // deadline is refused as silent
+        for _ in 0..8 {
             match std::io::Read::read(&mut st, &mut first[have..]) {
                 Ok(0) | Err(_) => break,
                 Ok(n) => {
                     have += n;
-                    if have >= 4 || first[..have].contains(&b'\n') {
+                    let got = &first[..have];
+                    if got.contains(&b'\n')
+                        || (have >= 4 && !got.starts_with(b"GET "))
+                        || have == first.len()
+                    {
                         break;
                     }
                 }
             }
         }
         if first[..have].starts_with(b"GET ") {
-            let m = self.shared.engine.model();
-            let body = format!(
-                "{{\"model\":\"{}\",\"backend\":\"{}\",\"connections\":{},\"at_capacity\":true}}\n",
-                m.cfg.name,
-                self.shared.engine.label(),
-                self.shared.net.connections(),
-            );
-            let _ = write_http_json(&mut st, &body);
+            let line = String::from_utf8_lossy(&first[..have]);
+            if request_path(line.lines().next().unwrap_or("")) == "/metrics" {
+                // a saturated server is exactly when scrapes matter most
+                let body = crate::obs::global().render();
+                let _ = write_http_response(&mut st, crate::obs::prometheus::CONTENT_TYPE, &body);
+            } else {
+                let m = self.shared.engine.model();
+                let body = format!(
+                    "{{\"model\":\"{}\",\"backend\":\"{}\",\"connections\":{},\
+                     \"at_capacity\":true}}\n",
+                    m.cfg.name,
+                    self.shared.engine.label(),
+                    self.shared.net.connections(),
+                );
+                let _ = write_http_json(&mut st, &body);
+            }
         } else {
             let _ = writeln!(st, "err - connection limit reached ({cap})");
         }
@@ -369,6 +390,22 @@ fn conn_loop(
             }
         };
         if first && line.starts_with("GET ") {
+            // /metrics renders the process-global obs registry (no batcher
+            // lock — scrapes stay responsive mid-decode); any other path
+            // answers the healthz shape, likewise lock-free
+            if request_path(&line) == "/metrics" {
+                let body = crate::obs::global().render();
+                let ctype = crate::obs::prometheus::CONTENT_TYPE;
+                respond_http(
+                    &mut reader,
+                    &mut stream,
+                    cfg.max_line_bytes,
+                    shutdown_flag,
+                    ctype,
+                    &body,
+                )?;
+                break;
+            }
             let m = shared.engine.model();
             let body = format!(
                 "{{\"model\":\"{}\",\"backend\":\"{}\",\"vocab\":{},\"seq_len\":{},\
@@ -493,6 +530,18 @@ mod tests {
                 assert!(resp.contains("\"connections\""));
                 assert!(t.elapsed_secs() < 1.0, "healthz took {:.3}s", t.elapsed_secs());
             }
+            // a /metrics scrape mid-load must answer promptly too (it
+            // renders the obs registry without the batcher lock)
+            {
+                let t = Timer::start();
+                let (mut r, mut w) = connect(addr);
+                write!(w, "GET /metrics HTTP/1.1\r\n\r\n").unwrap();
+                let mut resp = String::new();
+                r.read_to_string(&mut resp).unwrap();
+                assert!(resp.starts_with("HTTP/1.1 200 OK"), "metrics: {resp}");
+                assert!(resp.contains("# TYPE alps_serve_tokens_total counter"), "{resp}");
+                assert!(t.elapsed_secs() < 1.0, "metrics took {:.3}s", t.elapsed_secs());
+            }
             let all: Vec<Vec<String>> = clients.into_iter().map(|c| c.join().unwrap()).collect();
             assert_eq!(all.len(), 5);
             // same greedy prompt everywhere => identical generations
@@ -561,6 +610,15 @@ mod tests {
             r3.read_to_string(&mut resp).unwrap();
             assert!(resp.starts_with("HTTP/1.1 200 OK"), "healthz at cap: {resp}");
             assert!(resp.contains("\"at_capacity\":true"));
+            // /metrics must also be answered at the cap (a saturated
+            // server is exactly when scrapes matter)
+            let (mut r4, mut w4) = connect(addr);
+            write!(w4, "GET /metrics HTTP/1.1\r\n\r\n").unwrap();
+            let mut resp = String::new();
+            r4.read_to_string(&mut resp).unwrap();
+            assert!(resp.starts_with("HTTP/1.1 200 OK"), "metrics at cap: {resp}");
+            assert!(resp.contains("text/plain; version=0.0.4"));
+            assert!(resp.contains("alps_net_connections_total"), "{resp}");
             send(&mut w1, "run");
             assert!(recv(&mut r1).starts_with("ok "));
             send(&mut w1, "shutdown");

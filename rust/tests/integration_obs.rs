@@ -1,0 +1,240 @@
+//! Observability integration: every TCP endpoint must answer
+//! `GET /metrics` with valid Prometheus text **while real work is in
+//! flight**, and the scrape must come back promptly — it reads the
+//! process-global [`alps::obs`] registry without taking the batcher or
+//! session locks, so a saturated server stays observable.
+//!
+//! Two scenarios:
+//!
+//! * the serve front-end is scraped while a batch of generations is
+//!   decoding (`alps_serve_*` + `alps_net_*` families);
+//! * a sharded prune run is paused between layer solves (the observer
+//!   blocks on a rendezvous channel) while the `--status-addr` endpoint
+//!   and the worker port are both scraped mid-run (`alps_prune_*`,
+//!   `alps_coord_*`, `alps_net_*` families), then the run resumes and
+//!   must still finish cleanly.
+
+use alps::config::{AlpsConfig, ModelConfig, SparsityTarget};
+use alps::coordinator::ShardedEngine;
+use alps::model::Model;
+use alps::pruning::{
+    MethodSpec, ProgressEvent, PruneSession, StatusBoard, StatusServer, Worker, WorkerConfig,
+};
+use alps::serve::{Engine as ServeEngine, SamplingParams, TcpConfig};
+use alps::util::Rng;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+fn tiny_cfg(name: &str) -> ModelConfig {
+    ModelConfig {
+        name: name.into(),
+        d_model: 16,
+        d_ff: 32,
+        n_layers: 2,
+        n_heads: 4,
+        vocab: 24,
+        seq_len: 12,
+    }
+}
+
+fn calib_seqs(n: usize, len: usize, vocab: usize, seed: u64) -> Vec<Vec<u16>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..len).map(|_| rng.below(vocab) as u16).collect())
+        .collect()
+}
+
+/// One timed `GET /metrics` scrape. Returns the raw HTTP response and
+/// the wall time it took — callers assert the scrape never waits on a
+/// work lock (a stuck scrape would eat the whole read timeout instead).
+fn scrape_metrics(addr: SocketAddr) -> (String, f64) {
+    let start = Instant::now();
+    let mut st = TcpStream::connect(addr).expect("connect for scrape");
+    st.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    write!(st, "GET /metrics HTTP/1.1\r\nHost: test\r\n\r\n").unwrap();
+    let _ = st.shutdown(std::net::Shutdown::Write);
+    let mut resp = String::new();
+    st.read_to_string(&mut resp).expect("read scrape response");
+    (resp, start.elapsed().as_secs_f64())
+}
+
+fn assert_prometheus_page(resp: &str, families: &[&str], ctx: &str) {
+    assert!(resp.starts_with("HTTP/1.1 200 OK"), "{ctx}: not a 200: {resp}");
+    assert!(resp.contains("text/plain; version=0.0.4"), "{ctx}: wrong content type: {resp}");
+    for fam in families {
+        assert!(resp.contains(fam), "{ctx}: missing family {fam}:\n{resp}");
+    }
+}
+
+/// Serve front-end: queue a batch, ask for results (`run` blocks the
+/// client connection on generation), and scrape `/metrics` from a second
+/// connection while that batch decodes. The scrape must answer without
+/// touching the batcher lock, carry the serve + net families, and the
+/// protocol connection must still deliver every result afterwards.
+#[test]
+fn serve_frontend_metrics_scrape_under_load() {
+    let model = Model::random(tiny_cfg("obs-serve"), 3).unwrap();
+    let engine = ServeEngine::dense(&model).unwrap();
+    let params = SamplingParams { max_new_tokens: 24, ..Default::default() };
+    let cfg = TcpConfig { max_batch: 4, max_conns: 8, max_line_bytes: 4096 };
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    std::thread::scope(|s| {
+        let srv = s.spawn(|| alps::serve::tcp::serve(listener, &engine, &params, &cfg));
+
+        let mut client = TcpStream::connect(addr).unwrap();
+        client.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let mut reader = BufReader::new(client.try_clone().unwrap());
+        let mut rng = Rng::new(5);
+        let n_req = 6usize;
+        for _ in 0..n_req {
+            let prompt: Vec<String> =
+                (0..6).map(|_| rng.below(model.cfg.vocab).to_string()).collect();
+            writeln!(client, "{}", prompt.join(" ")).unwrap();
+            let mut ack = String::new();
+            reader.read_line(&mut ack).unwrap();
+            assert!(ack.starts_with("queued "), "ack: {ack}");
+        }
+        // `run` makes the server decode the whole batch before replying —
+        // the scrape below races that decode, which is exactly the point
+        writeln!(client, "run").unwrap();
+
+        let (resp, secs) = scrape_metrics(addr);
+        assert!(secs < 10.0, "scrape under load took {secs}s — did it block?");
+        assert_prometheus_page(
+            &resp,
+            &[
+                "# TYPE alps_serve_tokens_total counter",
+                "alps_serve_steps_total",
+                "alps_serve_step_seconds_bucket",
+                "alps_net_connections_total",
+            ],
+            "serve front-end",
+        );
+
+        for _ in 0..n_req {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.starts_with("ok "), "result line: {line}");
+        }
+        drop(reader);
+        drop(client);
+
+        // a scrape after the load shows the work that just happened
+        let (resp, _) = scrape_metrics(addr);
+        assert_prometheus_page(&resp, &["alps_serve_requests_total"], "serve post-load");
+
+        let mut shut = TcpStream::connect(addr).unwrap();
+        writeln!(shut, "shutdown").unwrap();
+        let report = srv.join().expect("serve thread panicked").unwrap();
+        assert!(report.contains("tokens/s (decode)"), "report: {report}");
+    });
+}
+
+/// Sharded prune run with a status endpoint and a loopback worker: the
+/// observer pauses the session right after the first layer solve so the
+/// "mid-run" scrapes are deterministic, then the run resumes. Both the
+/// status port and the worker port must answer `/metrics` while the
+/// session is live, and the status JSON must carry the elapsed-time
+/// bookkeeping (`elapsed_secs`, `block_secs`).
+#[test]
+fn status_and_worker_ports_scrape_during_live_prune_run() {
+    let calib = calib_seqs(4, 8, 24, 11);
+    let target = SparsityTarget::Unstructured(0.6);
+    let spec = MethodSpec::Alps(AlpsConfig { max_iters: 40, ..Default::default() });
+    let mut model = Model::random(tiny_cfg("obs-prune"), 77).unwrap();
+
+    let wl = TcpListener::bind("127.0.0.1:0").unwrap();
+    let worker_addr = wl.local_addr().unwrap();
+    let worker = Arc::new(Worker::new(WorkerConfig::default()));
+    let w = worker.clone();
+    std::thread::spawn(move || {
+        let _ = w.serve(wl);
+    });
+
+    let board = StatusBoard::new();
+    let status = StatusServer::new();
+    let sl = TcpListener::bind("127.0.0.1:0").unwrap();
+    let status_addr = sl.local_addr().unwrap();
+
+    let (solved_tx, solved_rx) = mpsc::channel::<()>();
+    let (resume_tx, resume_rx) = mpsc::channel::<()>();
+
+    std::thread::scope(|s| {
+        let srv = s.spawn(|| status.serve(sl, &board));
+        // the channel endpoints are !Sync, so the runner captures its
+        // half by move; the board is shared by reference with the server
+        let board_ref = &board;
+        let spec2 = spec.clone();
+        let runner = s.spawn(move || {
+            let addrs = vec![worker_addr.to_string()];
+            let engine = ShardedEngine::with_config(spec2, addrs, Default::default()).unwrap();
+            let mut paused = false;
+            PruneSession::builder()
+                .calib(calib)
+                .target(target)
+                .engine(Box::new(engine))
+                .observer(|ev| {
+                    board_ref.observe(ev);
+                    if !paused && matches!(ev, ProgressEvent::LayerSolved { .. }) {
+                        paused = true;
+                        let _ = solved_tx.send(());
+                        // hold the session here while the main thread
+                        // scrapes: the run is provably mid-flight
+                        let _ = resume_rx.recv_timeout(Duration::from_secs(60));
+                    }
+                })
+                .run(&mut model)
+        });
+
+        solved_rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("no layer solved within 60s");
+
+        // run is paused mid-block: scrape the status endpoint...
+        let (resp, secs) = scrape_metrics(status_addr);
+        assert!(secs < 10.0, "status scrape took {secs}s mid-run");
+        assert_prometheus_page(
+            &resp,
+            &[
+                "# TYPE alps_prune_layers_total counter",
+                "alps_prune_block",
+                "alps_net_connections_total",
+                "alps_coord_rpc_seconds",
+                "alps_coord_wire_tx_bytes_total",
+            ],
+            "status endpoint mid-run",
+        );
+        // ...and the worker port, which shares the obs registry and
+        // sniffs HTTP apart from the frame protocol on the same socket
+        let (resp, secs) = scrape_metrics(worker_addr);
+        assert!(secs < 10.0, "worker scrape took {secs}s mid-run");
+        assert_prometheus_page(
+            &resp,
+            &["alps_net_frames_total", "alps_net_frame_bytes_total"],
+            "worker port mid-run",
+        );
+
+        resume_tx.send(()).unwrap();
+        let report = runner.join().expect("run thread panicked").unwrap();
+        assert!(!report.layers.is_empty());
+        assert_eq!(report.method, format!("sharded({})", spec.label()));
+
+        // post-run: the status JSON carries the timing bookkeeping
+        let mut st = TcpStream::connect(status_addr).unwrap();
+        st.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        write!(st, "GET /status HTTP/1.1\r\nHost: test\r\n\r\n").unwrap();
+        let _ = st.shutdown(std::net::Shutdown::Write);
+        let mut json = String::new();
+        st.read_to_string(&mut json).unwrap();
+        assert!(json.contains("\"elapsed_secs\":"), "{json}");
+        assert!(json.contains("\"block_secs\":{"), "{json}");
+        assert!(json.contains("\"finished\":true"), "{json}");
+
+        status.request_shutdown();
+        srv.join().expect("status server panicked").unwrap();
+    });
+}
