@@ -1,0 +1,174 @@
+//! `alps_lint` — run the repo's static-analysis gate over `rust/src`.
+//!
+//! ```text
+//! cargo run --bin alps_lint                         # gate: exit 0/1
+//! cargo run --bin alps_lint -- --write-protocol-lock  # refresh manifest
+//! cargo run --bin alps_lint -- --src DIR --protocol-lock FILE
+//! ```
+//!
+//! The gate lexes every `.rs` file under the source root and enforces
+//! the four invariants documented in [`alps::lint`]: panic-freedom and
+//! lock discipline in server paths, wire-protocol conformance against
+//! `PROTOCOL.lock`, and metric-naming conformance against the obs
+//! naming table. Findings print one per line as
+//! `path:line: [rule] message`; any finding exits 1.
+//!
+//! `--write-protocol-lock` recomputes the codec-layout fingerprint and
+//! rewrites the manifest's `version`/`layout` lines — refusing when the
+//! layout drifted but `FRAME_VERSION` did not change, so protocol
+//! revisions stay deliberate.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use alps::lint::{self, wire, SourceFile};
+
+fn main() -> ExitCode {
+    let mut src_dir = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/src"));
+    let mut lock_path = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/../PROTOCOL.lock"));
+    let mut write_lock = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--write-protocol-lock" => write_lock = true,
+            "--src" => match args.next() {
+                Some(v) => src_dir = PathBuf::from(v),
+                None => return usage("--src needs a directory"),
+            },
+            "--protocol-lock" => match args.next() {
+                Some(v) => lock_path = PathBuf::from(v),
+                None => return usage("--protocol-lock needs a file"),
+            },
+            "--help" | "-h" => {
+                println!(
+                    "alps_lint: static-analysis gate (see rust/src/lint/mod.rs)\n\
+                     usage: alps_lint [--src DIR] [--protocol-lock FILE] [--write-protocol-lock]"
+                );
+                return ExitCode::SUCCESS;
+            }
+            other => return usage(&format!("unknown argument '{other}'")),
+        }
+    }
+
+    let mut files = Vec::new();
+    if let Err(e) = collect(&src_dir, &src_dir, &mut files) {
+        eprintln!("alps_lint: walking {}: {e}", src_dir.display());
+        return ExitCode::FAILURE;
+    }
+    files.sort_by(|a, b| a.path.cmp(&b.path));
+    if files.is_empty() {
+        eprintln!("alps_lint: no .rs files under {}", src_dir.display());
+        return ExitCode::FAILURE;
+    }
+
+    if write_lock {
+        return refresh_manifest(&files, &lock_path);
+    }
+
+    let lock_text = std::fs::read_to_string(&lock_path).ok();
+    if let Some(t) = &lock_text {
+        if t.lines().any(|l| l.trim() == "layout pending") {
+            eprintln!(
+                "alps_lint: note: PROTOCOL.lock layout is 'pending' — run with \
+                 --write-protocol-lock on a machine with a toolchain to pin the codec fingerprint"
+            );
+        }
+    }
+    let findings = lint::check_sources(&files, lock_text.as_deref());
+    for f in &findings {
+        println!("{f}");
+    }
+    if findings.is_empty() {
+        eprintln!("alps_lint: {} files clean", files.len());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("alps_lint: {} finding(s)", findings.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn usage(msg: &str) -> ExitCode {
+    eprintln!("alps_lint: {msg} (try --help)");
+    ExitCode::FAILURE
+}
+
+/// Recursively collect `.rs` files as `/`-separated paths relative to
+/// `root`. The lint tree excludes itself (`lint/`, `bin/`): its unit
+/// tests embed deliberately-bad fixture snippets.
+fn collect(root: &Path, dir: &Path, out: &mut Vec<SourceFile>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        if rel == "lint" || rel == "bin" || rel.starts_with("lint/") || rel.starts_with("bin/") {
+            continue;
+        }
+        if path.is_dir() {
+            collect(root, &path, out)?;
+        } else if rel.ends_with(".rs") {
+            out.push(SourceFile { path: rel, text: std::fs::read_to_string(&path)? });
+        }
+    }
+    Ok(())
+}
+
+/// `--write-protocol-lock`: pin `version` to `FRAME_VERSION` and
+/// `layout` to the current codec fingerprint.
+fn refresh_manifest(files: &[SourceFile], lock_path: &Path) -> ExitCode {
+    let Some(wire_src) = files.iter().find(|f| f.path == "pruning/wire.rs") else {
+        eprintln!("alps_lint: pruning/wire.rs not found; cannot fingerprint the codec");
+        return ExitCode::FAILURE;
+    };
+    let Some(framing_src) = files.iter().find(|f| f.path == "net/framing.rs") else {
+        eprintln!("alps_lint: net/framing.rs not found; cannot read FRAME_VERSION");
+        return ExitCode::FAILURE;
+    };
+    let layout = wire::layout_hash(&alps::lint::lexer::lex(&wire_src.text));
+    let Some(version) = wire::frame_version(&alps::lint::lexer::lex(&framing_src.text)) else {
+        eprintln!("alps_lint: FRAME_VERSION const not found in net/framing.rs");
+        return ExitCode::FAILURE;
+    };
+    let old_text = match std::fs::read_to_string(lock_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("alps_lint: reading {}: {e}", lock_path.display());
+            return ExitCode::FAILURE;
+        }
+    };
+    if let Ok(old) = wire::parse_lock(&old_text) {
+        let drifted = old.layout != "pending" && old.layout != layout;
+        if drifted && old.version == version {
+            eprintln!(
+                "alps_lint: refusing to refresh — the codec layout drifted ({} -> {layout}) \
+                 but FRAME_VERSION is still {version}. Bump FRAME_VERSION in net/framing.rs \
+                 first so the protocol revision is deliberate.",
+                old.layout
+            );
+            return ExitCode::FAILURE;
+        }
+    }
+    let new_text = wire::rewrite_lock(&old_text, version, &layout);
+    if new_text == old_text {
+        eprintln!("alps_lint: {} already current", lock_path.display());
+        return ExitCode::SUCCESS;
+    }
+    match std::fs::write(lock_path, &new_text) {
+        Ok(()) => {
+            eprintln!(
+                "alps_lint: {} updated (version {version}, layout {layout})",
+                lock_path.display()
+            );
+            ExitCode::SUCCESS
+        }
+        Err(e) => {
+            eprintln!("alps_lint: writing {}: {e}", lock_path.display());
+            ExitCode::FAILURE
+        }
+    }
+}

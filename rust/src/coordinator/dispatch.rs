@@ -752,7 +752,8 @@ impl ShardedEngine {
             // the run completed, but part of the pool died along the way
             eprintln!("[sharded] degraded pool: {}", errors.join("; "));
         }
-        Ok(results.into_iter().map(|r| r.expect("checked above")).collect())
+        // `unsolved == 0` above: every slot is Some, so flatten loses nothing
+        Ok(results.into_iter().flatten().collect())
     }
 }
 
@@ -790,8 +791,12 @@ fn connect_candidates(candidates: &[SocketAddr], timeout: Duration) -> Result<Tc
             Err(e) => last = Some((*sa, e)),
         }
     }
-    let (sa, e) = last.expect("non-empty candidates");
-    bail!("no candidate reachable ({} tried, last {sa}: {e})", candidates.len())
+    match last {
+        Some((sa, e)) => {
+            bail!("no candidate reachable ({} tried, last {sa}: {e})", candidates.len())
+        }
+        None => bail!("no candidate reachable (0 tried)"),
+    }
 }
 
 #[cfg(test)]

@@ -40,6 +40,8 @@
 //! # Ok(()) }
 //! ```
 
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod dispatch;
 pub mod report;
 pub mod scheduler;

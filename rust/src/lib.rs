@@ -58,6 +58,7 @@ pub mod coordinator;
 pub mod data;
 pub mod eval;
 pub mod linalg;
+pub mod lint;
 pub mod model;
 pub mod net;
 pub mod obs;

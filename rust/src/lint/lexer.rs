@@ -1,0 +1,411 @@
+//! Token-level Rust lexer for `alps-lint` — string/comment/lifetime
+//! aware, no external parser.
+//!
+//! This is deliberately **not** a full Rust grammar: the lint rules only
+//! need a faithful token stream (so `unwrap` inside a string literal or
+//! a comment is never mistaken for a call) plus two annotations computed
+//! here because they need raw source access:
+//!
+//! * `lint:allow(<kind>) <reason>` markers collected from comments
+//!   (comments are otherwise dropped from the token stream), and
+//! * a per-token `test` flag marking everything under a `#[cfg(test)]`
+//!   attribute (the attribute's item — brace-matched block or up to the
+//!   terminating `;`) so rules can skip test code.
+//!
+//! Handled syntax: line + nested block comments, string/char/byte
+//! literals with escapes, raw (byte) strings with arbitrary `#` fences,
+//! lifetimes vs char literals, float literals. Unhandled corner cases
+//! (e.g. `'static` inside macro fragments) degrade to extra `Punct`
+//! tokens, which no rule matches on — safe in both directions.
+
+/// Token classes the rules dispatch on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    /// String literal; `text` holds the *content* (no quotes/fences).
+    Str,
+    Num,
+    /// Lifetime (`'a`) — kept distinct so `'a` never looks like an ident.
+    Life,
+    /// Single punctuation character.
+    Punct,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    /// 1-based source line.
+    pub line: u32,
+    /// True when the token sits inside a `#[cfg(test)]` item.
+    pub test: bool,
+}
+
+/// A `lint:allow(<kind>) <reason>` marker found in a comment.
+#[derive(Clone, Debug)]
+pub struct Allow {
+    pub line: u32,
+    pub kind: String,
+    pub reason: String,
+}
+
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub allows: Vec<Allow>,
+}
+
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let at = |i: usize| if i < n { b[i] } else { '\0' };
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment (covers `///` and `//!` doc comments too)
+        if c == '/' && at(i + 1) == '/' {
+            let mut text = String::new();
+            i += 2;
+            while i < n && b[i] != '\n' {
+                text.push(b[i]);
+                i += 1;
+            }
+            scan_allow(&text, line, &mut out.allows);
+            continue;
+        }
+        // nested block comment
+        if c == '/' && at(i + 1) == '*' {
+            let start_line = line;
+            let mut depth = 1usize;
+            let mut text = String::new();
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && at(i + 1) == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && at(i + 1) == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == '\n' {
+                        line += 1;
+                    }
+                    text.push(b[i]);
+                    i += 1;
+                }
+            }
+            scan_allow(&text, start_line, &mut out.allows);
+            continue;
+        }
+        // raw strings / byte strings / byte chars: r" r#" b" br" b'
+        if c == 'r' || c == 'b' {
+            let is_raw = c == 'r' || at(i + 1) == 'r';
+            let j = if c == 'b' && at(i + 1) == 'r' { i + 2 } else { i + 1 };
+            if is_raw {
+                let mut hashes = 0usize;
+                let mut k = j;
+                while at(k) == '#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if at(k) == '"' {
+                    k += 1;
+                    let start_line = line;
+                    let mut text = String::new();
+                    'raw: while k < n {
+                        if b[k] == '"' {
+                            let mut m = 0usize;
+                            while m < hashes && at(k + 1 + m) == '#' {
+                                m += 1;
+                            }
+                            if m == hashes {
+                                k += 1 + hashes;
+                                break 'raw;
+                            }
+                        }
+                        if b[k] == '\n' {
+                            line += 1;
+                        }
+                        text.push(b[k]);
+                        k += 1;
+                    }
+                    out.toks.push(Tok { kind: TokKind::Str, text, line: start_line, test: false });
+                    i = k;
+                    continue;
+                }
+            }
+            if c == 'b' && at(i + 1) == '"' {
+                let (text, j2, nl) = read_quoted(&b, i + 2, '"');
+                out.toks.push(Tok { kind: TokKind::Str, text, line, test: false });
+                line += nl;
+                i = j2;
+                continue;
+            }
+            if c == 'b' && at(i + 1) == '\'' {
+                let (_, j2, nl) = read_quoted(&b, i + 2, '\'');
+                line += nl;
+                i = j2;
+                continue;
+            }
+            // fall through: ordinary identifier starting with r/b
+        }
+        if c == '"' {
+            let (text, j2, nl) = read_quoted(&b, i + 1, '"');
+            out.toks.push(Tok { kind: TokKind::Str, text, line, test: false });
+            line += nl;
+            i = j2;
+            continue;
+        }
+        if c == '\'' {
+            // lifetime iff followed by ident chars and no closing quote
+            // right after a single char (`'a'` is a char, `'a` a lifetime)
+            if (at(i + 1).is_alphabetic() || at(i + 1) == '_') && at(i + 2) != '\'' {
+                let mut j = i + 1;
+                let mut text = String::new();
+                while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                    text.push(b[j]);
+                    j += 1;
+                }
+                out.toks.push(Tok { kind: TokKind::Life, text, line, test: false });
+                i = j;
+                continue;
+            }
+            let (_, j2, nl) = read_quoted(&b, i + 1, '\'');
+            line += nl;
+            i = j2;
+            continue;
+        }
+        if c.is_alphabetic() || c == '_' {
+            let mut j = i;
+            let mut text = String::new();
+            while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                text.push(b[j]);
+                j += 1;
+            }
+            out.toks.push(Tok { kind: TokKind::Ident, text, line, test: false });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            let mut text = String::new();
+            let mut seen_dot = false;
+            while j < n {
+                let d = b[j];
+                if d.is_alphanumeric() || d == '_' {
+                    text.push(d);
+                    j += 1;
+                } else if d == '.' && !seen_dot && at(j + 1).is_ascii_digit() {
+                    seen_dot = true;
+                    text.push(d);
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            out.toks.push(Tok { kind: TokKind::Num, text, line, test: false });
+            i = j;
+            continue;
+        }
+        out.toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line, test: false });
+        i += 1;
+    }
+    mark_tests(&mut out.toks);
+    out
+}
+
+/// Read a quoted literal body starting *after* the opening quote; returns
+/// (content, index past closing quote, newlines consumed).
+fn read_quoted(b: &[char], mut i: usize, close: char) -> (String, usize, u32) {
+    let n = b.len();
+    let mut text = String::new();
+    let mut nl = 0u32;
+    while i < n {
+        let c = b[i];
+        if c == '\\' && i + 1 < n {
+            if b[i + 1] == '\n' {
+                nl += 1;
+            }
+            text.push(c);
+            text.push(b[i + 1]);
+            i += 2;
+            continue;
+        }
+        if c == close {
+            i += 1;
+            break;
+        }
+        if c == '\n' {
+            nl += 1;
+        }
+        text.push(c);
+        i += 1;
+    }
+    (text, i, nl)
+}
+
+/// Collect `lint:allow(kind) reason` from one comment's text.
+fn scan_allow(comment: &str, line: u32, allows: &mut Vec<Allow>) {
+    let Some(pos) = comment.find("lint:allow(") else { return };
+    let rest = &comment[pos + "lint:allow(".len()..];
+    let Some(close) = rest.find(')') else {
+        allows.push(Allow { line, kind: String::new(), reason: String::new() });
+        return;
+    };
+    let kind = rest[..close].trim().to_string();
+    let reason = rest[close + 1..].trim().to_string();
+    allows.push(Allow { line, kind, reason });
+}
+
+/// Mark every token under a `#[cfg(test)]` attribute as test code. The
+/// attribute governs the next item: everything through the matching
+/// close of the first `{` opened after it, or through the first `;`
+/// before any brace opens (e.g. `#[cfg(test)] use x;`).
+fn mark_tests(toks: &mut [Tok]) {
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !is_cfg_test_at(toks, i) {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 7; // past `# [ cfg ( test ) ]`
+        let mut depth = 0usize;
+        let mut opened = false;
+        while j < toks.len() {
+            let t = &toks[j];
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    "{" => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    "}" => {
+                        depth = depth.saturating_sub(1);
+                        if opened && depth == 0 {
+                            break;
+                        }
+                    }
+                    ";" if !opened => break,
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        let end = j.min(toks.len().saturating_sub(1));
+        for t in toks.iter_mut().take(end + 1).skip(i) {
+            t.test = true;
+        }
+        i = end + 1;
+    }
+}
+
+fn is_cfg_test_at(toks: &[Tok], i: usize) -> bool {
+    let want: [(&str, TokKind); 7] = [
+        ("#", TokKind::Punct),
+        ("[", TokKind::Punct),
+        ("cfg", TokKind::Ident),
+        ("(", TokKind::Punct),
+        ("test", TokKind::Ident),
+        (")", TokKind::Punct),
+        ("]", TokKind::Punct),
+    ];
+    if i + want.len() > toks.len() {
+        return false;
+    }
+    want.iter().enumerate().all(|(k, (text, kind))| {
+        let t = &toks[i + k];
+        t.kind == *kind && t.text == *text
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).toks.into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_not_code() {
+        let lx = lex("let s = \"x.unwrap()\"; // also .unwrap()\n/* and .unwrap() */ y");
+        assert!(!lx.toks.iter().any(|t| t.kind == TokKind::Ident && t.text == "unwrap"));
+        assert!(lx.toks.iter().any(|t| t.kind == TokKind::Str && t.text == "x.unwrap()"));
+    }
+
+    #[test]
+    fn raw_strings_with_fences() {
+        let got = texts("r#\"a \"quote\" b\"# z");
+        assert_eq!(got[0], (TokKind::Str, "a \"quote\" b".into()));
+        assert_eq!(got[1], (TokKind::Ident, "z".into()));
+    }
+
+    #[test]
+    fn lifetime_vs_char() {
+        let got = texts("&'a str; let c = 'x'; let nl = '\\n';");
+        assert!(got.contains(&(TokKind::Life, "a".into())));
+        assert!(!got.iter().any(|(k, t)| *k == TokKind::Ident && t == "x"));
+    }
+
+    #[test]
+    fn lines_track_through_multiline_constructs() {
+        let lx = lex("a\n/* c\nc */\n\"s\ns\"\nb");
+        let b = lx.toks.iter().find(|t| t.text == "b").unwrap();
+        assert_eq!(b.line, 6);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let got = texts("/* outer /* inner */ still */ x");
+        assert_eq!(got, vec![(TokKind::Ident, "x".into())]);
+    }
+
+    #[test]
+    fn cfg_test_marks_the_next_item_only() {
+        let lx = lex("fn live() { a.unwrap(); }\n#[cfg(test)]\nmod tests { fn t() { b.unwrap(); } }\nfn live2() { c() }");
+        let unwraps: Vec<bool> =
+            lx.toks.iter().filter(|t| t.text == "unwrap").map(|t| t.test).collect();
+        assert_eq!(unwraps, vec![false, true]);
+        let live2 = lx.toks.iter().find(|t| t.text == "live2").unwrap();
+        assert!(!live2.test);
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_marked() {
+        let lx = lex("#[cfg(not(test))]\nfn f() { a.unwrap(); }");
+        assert!(lx.toks.iter().all(|t| !t.test));
+    }
+
+    #[test]
+    fn allow_markers_carry_kind_and_reason() {
+        let lx = lex("// lint:allow(panic) poison here means a prior abort\nx.unwrap();");
+        assert_eq!(lx.allows.len(), 1);
+        assert_eq!(lx.allows[0].kind, "panic");
+        assert_eq!(lx.allows[0].line, 1);
+        assert!(lx.allows[0].reason.starts_with("poison"));
+    }
+
+    #[test]
+    fn allow_without_reason_is_kept_for_reporting() {
+        let lx = lex("// lint:allow(lock)\n");
+        assert_eq!(lx.allows[0].reason, "");
+    }
+
+    #[test]
+    fn byte_strings_and_byte_chars() {
+        let got = texts("b\"AF\" b'x' ident");
+        assert_eq!(got[0], (TokKind::Str, "AF".into()));
+        assert_eq!(got.last().unwrap(), &(TokKind::Ident, "ident".into()));
+    }
+}

@@ -1,0 +1,462 @@
+//! Rule 2 — lock discipline.
+//!
+//! Two checks over watched files:
+//!
+//! * **Raw locks**: any `.lock()` method call must be replaced by the
+//!   poison-tolerant [`crate::net::lock`] helper (a poisoned server
+//!   mutex must degrade, not cascade the panic). The helper itself
+//!   carries the one `lint:allow(lock)` in the tree.
+//! * **Acquisition order**: a per-function scan tracks which `lock(..)`
+//!   guards are held at each later `lock(..)` call, accumulating a
+//!   global ordered graph keyed by the mutex's field name (the last
+//!   path identifier of the argument — `&shared.batcher` → `batcher`).
+//!   A cycle means two call paths can acquire the same pair of locks in
+//!   opposite order — a potential deadlock — and fails the gate.
+//!
+//! Guard lifetimes follow Rust's drop rules, conservatively: `let g =
+//! lock(..);` holds to end of scope or `drop(g)`; `match`/`if let`
+//! scrutinees and other temporaries hold to the end of the enclosing
+//! statement; a plain `if`/`while` condition releases at the body brace.
+//! The scan is intra-function (closures are analyzed at their
+//! definition site); cross-function nesting is out of scope and covered
+//! dynamically by the nightly TSan job.
+
+use std::collections::BTreeMap;
+
+use super::lexer::{Lexed, Tok, TokKind};
+use super::{Finding, SourceFile};
+
+/// Flag raw `.lock()` method calls (rule tag `lock`, suppressible).
+pub fn scan_raw_locks(file: &SourceFile, lx: &Lexed, out: &mut Vec<Finding>) {
+    let toks = &lx.toks;
+    for (i, t) in toks.iter().enumerate() {
+        if t.test || t.kind != TokKind::Ident || t.text != "lock" {
+            continue;
+        }
+        let prev_dot = i > 0 && toks[i - 1].kind == TokKind::Punct && toks[i - 1].text == ".";
+        let next_paren =
+            toks.get(i + 1).is_some_and(|n| n.kind == TokKind::Punct && n.text == "(");
+        if prev_dot && next_paren {
+            out.push(Finding {
+                path: file.path.clone(),
+                line: t.line,
+                rule: "lock",
+                msg: "raw .lock() — use net::lock (poison-tolerant); else lint:allow(lock)".into(),
+            });
+        }
+    }
+}
+
+/// Global lock-order graph: directed edge `a -> b` = "somewhere, `b` is
+/// acquired while `a` is held", with one witness site per edge.
+#[derive(Default)]
+pub struct LockGraph {
+    edges: BTreeMap<(String, String), (String, u32)>,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Release {
+    /// `let g = lock(..);` — end of scope or `drop(g)`.
+    Scope,
+    /// Temporary — end of the enclosing statement.
+    Stmt,
+    /// Plain `if`/`while` condition — the body `{`.
+    Body,
+}
+
+struct Guard {
+    name: String,
+    var: Option<String>,
+    release: Release,
+    depth_at: usize,
+}
+
+impl LockGraph {
+    fn add_edge(&mut self, from: &str, to: &str, path: &str, line: u32) {
+        self.edges
+            .entry((from.into(), to.into()))
+            .or_insert_with(|| (path.into(), line));
+    }
+
+    /// DFS for back edges; each one is a potential deadlock cycle.
+    pub fn check_cycles(&self) -> Vec<Finding> {
+        let mut adj: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+        for (a, b) in self.edges.keys() {
+            adj.entry(a).or_default().push(b);
+        }
+        let mut color: BTreeMap<&str, u8> = BTreeMap::new(); // 0 white 1 gray 2 black
+        let mut stack: Vec<&str> = Vec::new();
+        let mut out = Vec::new();
+        let roots: Vec<&str> = adj.keys().copied().collect();
+        for root in roots {
+            self.dfs(root, &adj, &mut color, &mut stack, &mut out);
+        }
+        out
+    }
+
+    fn dfs<'a>(
+        &'a self,
+        node: &'a str,
+        adj: &BTreeMap<&'a str, Vec<&'a str>>,
+        color: &mut BTreeMap<&'a str, u8>,
+        stack: &mut Vec<&'a str>,
+        out: &mut Vec<Finding>,
+    ) {
+        match color.get(node) {
+            Some(2) => return,
+            Some(1) => return, // handled by caller via back-edge check
+            _ => {}
+        }
+        color.insert(node, 1);
+        stack.push(node);
+        for &next in adj.get(node).into_iter().flatten() {
+            if color.get(next) == Some(&1) {
+                // back edge: cycle from `next` around to `node -> next`
+                let pos = stack.iter().position(|&s| s == next).unwrap_or(0);
+                let mut cycle: Vec<&str> = stack[pos..].to_vec();
+                cycle.push(next);
+                let (path, line) = self
+                    .edges
+                    .get(&(node.to_string(), next.to_string()))
+                    .cloned()
+                    .unwrap_or_default();
+                out.push(Finding {
+                    path,
+                    line,
+                    rule: "lock-order",
+                    msg: format!(
+                        "lock acquisition cycle {} — two paths can deadlock; acquire in one global order",
+                        cycle.join(" -> ")
+                    ),
+                });
+            } else {
+                self.dfs(next, adj, color, stack, out);
+            }
+        }
+        stack.pop();
+        color.insert(node, 2);
+    }
+}
+
+/// Scan one file's non-test functions, adding held-lock edges to `graph`.
+pub fn scan_order(file: &SourceFile, lx: &Lexed, graph: &mut LockGraph) {
+    let toks = &lx.toks;
+    let mut i = 0usize;
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.test || t.kind != TokKind::Ident || t.text != "fn" {
+            i += 1;
+            continue;
+        }
+        // find the body `{` at paren depth 0, or `;` (bodyless decl)
+        let mut j = i + 1;
+        let mut paren = 0isize;
+        let mut body = None;
+        while j < toks.len() {
+            let u = &toks[j];
+            if u.kind == TokKind::Punct {
+                match u.text.as_str() {
+                    "(" => paren += 1,
+                    ")" => paren -= 1,
+                    "{" if paren == 0 => {
+                        body = Some(j);
+                        break;
+                    }
+                    ";" if paren == 0 => break,
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        let Some(start) = body else {
+            i = j + 1;
+            continue;
+        };
+        let end = match_brace(toks, start);
+        scan_fn_body(file, toks, start, end, graph);
+        i = end + 1;
+    }
+}
+
+fn match_brace(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0usize;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return k;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    toks.len() - 1
+}
+
+fn is_punct(t: &Tok, s: &str) -> bool {
+    t.kind == TokKind::Punct && t.text == s
+}
+
+fn scan_fn_body(file: &SourceFile, toks: &[Tok], start: usize, end: usize, graph: &mut LockGraph) {
+    let mut held: Vec<Guard> = Vec::new();
+    let mut depth = 1usize; // inside the body `{`
+    let mut i = start + 1;
+    while i < end {
+        let t = &toks[i];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "{" => {
+                    held.retain(|g| g.release != Release::Body);
+                    depth += 1;
+                }
+                "}" => {
+                    depth = depth.saturating_sub(1);
+                    held.retain(|g| g.depth_at <= depth);
+                }
+                ";" => held.retain(|g| !(g.release == Release::Stmt && g.depth_at == depth)),
+                _ => {}
+            }
+            i += 1;
+            continue;
+        }
+        // drop(var) releases a named guard
+        if t.kind == TokKind::Ident
+            && t.text == "drop"
+            && i + 3 < end
+            && is_punct(&toks[i + 1], "(")
+            && toks[i + 2].kind == TokKind::Ident
+            && is_punct(&toks[i + 3], ")")
+        {
+            let var = &toks[i + 2].text;
+            held.retain(|g| g.var.as_deref() != Some(var.as_str()));
+            i += 4;
+            continue;
+        }
+        // free call to the lock helper (`lock(` / `net::lock(`), not a
+        // method (`.lock(`) and not the helper's own definition (`fn lock`)
+        if t.kind == TokKind::Ident && t.text == "lock" {
+            let prev = &toks[i - 1];
+            let free_call = !is_punct(prev, ".")
+                && !(prev.kind == TokKind::Ident && prev.text == "fn")
+                && toks.get(i + 1).is_some_and(|n| is_punct(n, "("));
+            if free_call {
+                let (name, close) = lock_arg_name(toks, i + 1, end);
+                for g in &held {
+                    graph.add_edge(&g.name, &name, &file.path, t.line);
+                }
+                let (release, var) = classify(toks, start, i, close);
+                held.push(Guard { name, var, release, depth_at: depth });
+                i += 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Lock identity = last path identifier of the argument before any
+/// indexing: `&self.conns[widx]` → `conns`, `&d.pending` → `pending`.
+fn lock_arg_name(toks: &[Tok], open: usize, end: usize) -> (String, usize) {
+    let mut depth = 0isize;
+    let mut name = String::from("?");
+    let mut k = open;
+    while k < end {
+        let t = &toks[k];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "(" => depth += 1,
+                ")" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return (name, k);
+                    }
+                }
+                "[" if depth == 1 => {
+                    // skip the index expression, keep the container name
+                    let mut b = 1isize;
+                    k += 1;
+                    while k < end && b > 0 {
+                        if is_punct(&toks[k], "[") {
+                            b += 1;
+                        } else if is_punct(&toks[k], "]") {
+                            b -= 1;
+                        }
+                        k += 1;
+                    }
+                    continue;
+                }
+                _ => {}
+            }
+        } else if t.kind == TokKind::Ident && t.text != "mut" {
+            name = t.text.clone();
+        }
+        k += 1;
+    }
+    (name, end)
+}
+
+/// Decide when a freshly acquired guard is released, from the statement
+/// context: backward scan to the statement start (`;`/`{`/`}` boundary).
+fn classify(
+    toks: &[Tok],
+    body_start: usize,
+    lock_idx: usize,
+    close: usize,
+) -> (Release, Option<String>) {
+    let mut s = lock_idx;
+    while s > body_start + 1 {
+        let p = &toks[s - 1];
+        if is_punct(p, ";") || is_punct(p, "{") || is_punct(p, "}") {
+            break;
+        }
+        s -= 1;
+    }
+    let first = &toks[s];
+    if first.kind == TokKind::Ident {
+        match first.text.as_str() {
+            "let" => {
+                // `let [mut] var = <path::>lock(..);` binds a named guard
+                let mut k = s + 1;
+                if toks.get(k).is_some_and(|t| t.kind == TokKind::Ident && t.text == "mut") {
+                    k += 1;
+                }
+                let var_ok = toks.get(k).map(|t| t.kind == TokKind::Ident).unwrap_or(false);
+                let eq_ok = toks.get(k + 1).is_some_and(|t| is_punct(t, "="));
+                let rhs_is_path = var_ok
+                    && eq_ok
+                    && toks[k + 2..=lock_idx]
+                        .iter()
+                        .all(|t| t.kind == TokKind::Ident || is_punct(t, ":"));
+                let ends_stmt = toks.get(close + 1).is_some_and(|t| is_punct(t, ";"));
+                if rhs_is_path && ends_stmt {
+                    return (Release::Scope, Some(toks[k].text.clone()));
+                }
+                (Release::Stmt, None)
+            }
+            "if" | "while" => {
+                let next_let =
+                    toks.get(s + 1).is_some_and(|t| t.kind == TokKind::Ident && t.text == "let");
+                if next_let {
+                    (Release::Stmt, None)
+                } else {
+                    (Release::Body, None)
+                }
+            }
+            _ => (Release::Stmt, None),
+        }
+    } else {
+        (Release::Stmt, None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::lex;
+
+    fn graph_of(srcs: &[(&str, &str)]) -> LockGraph {
+        let mut g = LockGraph::default();
+        for (path, src) in srcs {
+            let f = SourceFile { path: (*path).into(), text: (*src).into() };
+            let lx = lex(src);
+            scan_order(&f, &lx, &mut g);
+        }
+        g
+    }
+
+    #[test]
+    fn raw_lock_fires_and_helper_does_not() {
+        let src = "fn f() {\n    let a = m.lock().unwrap();\n    let b = lock(&m2);\n}\n";
+        let f = SourceFile { path: "net/fixture.rs".into(), text: src.into() };
+        let lx = lex(src);
+        let mut out = Vec::new();
+        scan_raw_locks(&f, &lx, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].line, 2);
+    }
+
+    #[test]
+    fn consistent_order_is_clean() {
+        let g = graph_of(&[(
+            "serve/a.rs",
+            "fn x(s: &S) {\n    let mut b = lock(&s.batcher);\n    let mut r = lock(&s.replies);\n    b.go(); r.go();\n}\nfn y(s: &S) {\n    let mut b = lock(&s.batcher);\n    lock(&s.replies).insert(1);\n}\n",
+        )]);
+        assert!(g.check_cycles().is_empty());
+        assert_eq!(g.edges.len(), 1); // batcher -> replies, witnessed twice
+    }
+
+    #[test]
+    fn opposite_order_is_a_cycle() {
+        let g = graph_of(&[
+            (
+                "serve/a.rs",
+                "fn x(s: &S) {\n    let b = lock(&s.batcher);\n    let r = lock(&s.replies);\n}\n",
+            ),
+            (
+                "coordinator/b.rs",
+                "fn y(s: &S) {\n    let r = lock(&s.replies);\n    let b = lock(&s.batcher);\n}\n",
+            ),
+        ]);
+        let out = g.check_cycles();
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].msg.contains("batcher") && out[0].msg.contains("replies"));
+        assert_eq!(out[0].rule, "lock-order");
+    }
+
+    #[test]
+    fn drop_and_scope_release_guards() {
+        // b is dropped before r: no edge. s2's guard dies with its block.
+        let g = graph_of(&[(
+            "serve/a.rs",
+            "fn x(s: &S) {\n    let b = lock(&s.batcher);\n    drop(b);\n    let r = lock(&s.replies);\n}\nfn y(s: &S) {\n    { let b = lock(&s.batcher); }\n    let r = lock(&s.replies);\n}\n",
+        )]);
+        assert!(g.edges.is_empty(), "{:?}", g.edges.keys().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn plain_if_condition_releases_at_body() {
+        let g = graph_of(&[(
+            "net/a.rs",
+            "fn x(s: &S) {\n    if lock(&s.pending).is_empty() {\n        let r = lock(&s.results);\n    }\n}\n",
+        )]);
+        assert!(g.edges.is_empty(), "{:?}", g.edges.keys().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn match_scrutinee_holds_through_statement() {
+        let g = graph_of(&[(
+            "coordinator/a.rs",
+            "fn x(s: &S) {\n    let v = match lock(&s.conns[i]).take() {\n        Some(c) => { let p = lock(&s.pending); 1 }\n        None => 0,\n    };\n    let after = lock(&s.results);\n}\n",
+        )]);
+        // conns held through the match (edge to pending) and released at
+        // the statement's `;` — no edge to `results`
+        assert!(g.edges.contains_key(&("conns".into(), "pending".into())));
+        assert!(!g.edges.contains_key(&("conns".into(), "results".into())));
+    }
+
+    #[test]
+    fn indexed_and_pathed_args_resolve_to_field_name() {
+        let g = graph_of(&[(
+            "net/a.rs",
+            "fn x(s: &S, i: usize) {\n    let c = crate::net::lock(&s.conns[i]);\n    let p = lock(&s.pending);\n}\n",
+        )]);
+        assert!(
+            g.edges.contains_key(&("conns".into(), "pending".into())),
+            "{:?}",
+            g.edges.keys().collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn temporaries_release_at_semicolon() {
+        let g = graph_of(&[(
+            "serve/a.rs",
+            "fn x(s: &S) {\n    lock(&s.batcher).cancel(1);\n    let r = lock(&s.replies);\n}\n",
+        )]);
+        assert!(g.edges.is_empty(), "{:?}", g.edges.keys().collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,210 @@
+//! Rule 4 — metric-naming conformance.
+//!
+//! Every metric name literal (`"alps_..."` in non-test code) must carry
+//! the `alps_<subsystem>_` prefix assigned to the module registering it,
+//! and must appear as a row in the naming table of the [`crate::obs`]
+//! module doc (`//! | `alps_...` | kind | module |`). The check runs in
+//! both directions: an unlisted registration fails, and a table row
+//! whose metric no longer exists in code fails as stale — renaming a
+//! metric without updating the doc exits non-zero either way.
+
+use super::lexer::{Lexed, TokKind};
+use super::{Finding, SourceFile};
+
+/// Module prefix ownership. `obs/` may mention any `alps_` name (it is
+/// the registry and the doc table). Modules not listed here must not
+/// register metrics until given a row.
+const SUBSYSTEMS: &[(&str, &str)] = &[
+    ("net/", "alps_net_"),
+    ("serve/", "alps_serve_"),
+    ("coordinator/", "alps_coord_"),
+    ("pruning/", "alps_prune_"),
+    ("obs/", "alps_"),
+];
+
+/// A string literal counts as a metric name when it looks like one:
+/// `alps_` + lowercase/digit/underscore body, not a glob/family stub.
+fn is_metric_literal(s: &str) -> bool {
+    s.len() > "alps_".len()
+        && s.starts_with("alps_")
+        && !s.ends_with('_')
+        && s.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+/// Parse the obs module-doc naming table rows: lines shaped
+/// ``//! | `alps_...` | ... |``. Returns (name, 1-based line).
+pub fn doc_table(obs_mod_src: &str) -> Vec<(String, u32)> {
+    let mut out = Vec::new();
+    for (i, raw) in obs_mod_src.lines().enumerate() {
+        let line = raw.trim_start();
+        let Some(rest) = line.strip_prefix("//!") else { continue };
+        let rest = rest.trim_start();
+        let Some(rest) = rest.strip_prefix("| `") else { continue };
+        let Some(end) = rest.find('`') else { continue };
+        let name = &rest[..end];
+        if is_metric_literal(name) {
+            out.push((name.to_string(), i as u32 + 1));
+        }
+    }
+    out
+}
+
+pub fn check(
+    files: &[SourceFile],
+    lexed: &[(usize, Lexed)],
+    obs_mod: Option<&SourceFile>,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let table = match obs_mod {
+        Some(f) => doc_table(&f.text),
+        None => {
+            out.push(Finding {
+                path: "obs/mod.rs".into(),
+                line: 0,
+                rule: "metric",
+                msg: "obs/mod.rs missing — no metric naming table to check against".into(),
+            });
+            return out;
+        }
+    };
+    let mut seen: Vec<&str> = Vec::new();
+    for (i, lx) in lexed {
+        let file = &files[*i];
+        let subsystem = SUBSYSTEMS.iter().find(|(dir, _)| file.path.starts_with(dir));
+        for t in &lx.toks {
+            if t.test || t.kind != TokKind::Str || !is_metric_literal(&t.text) {
+                continue;
+            }
+            let name = t.text.as_str();
+            match subsystem {
+                None => {
+                    out.push(Finding {
+                        path: file.path.clone(),
+                        line: t.line,
+                        rule: "metric",
+                        msg: format!(
+                            "metric literal '{name}' in a module with no assigned subsystem prefix — extend lint::metrics::SUBSYSTEMS deliberately"
+                        ),
+                    });
+                    continue;
+                }
+                Some((_, prefix)) if !name.starts_with(prefix) => out.push(Finding {
+                    path: file.path.clone(),
+                    line: t.line,
+                    rule: "metric",
+                    msg: format!("metric '{name}' must use the {prefix}* prefix for this module"),
+                }),
+                _ => {}
+            }
+            if !table.iter().any(|(n, _)| n == name) {
+                out.push(Finding {
+                    path: file.path.clone(),
+                    line: t.line,
+                    rule: "metric",
+                    msg: format!(
+                        "metric '{name}' is not in the obs/mod.rs naming table — add a `| \\`{name}\\` | kind | module |` row"
+                    ),
+                });
+            }
+            seen.push(name);
+        }
+    }
+    for (name, line) in &table {
+        if !seen.iter().any(|s| s == name) {
+            out.push(Finding {
+                path: "obs/mod.rs".into(),
+                line: *line,
+                rule: "metric",
+                msg: format!("stale naming-table row: '{name}' is registered nowhere in live code"),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::lex;
+
+    fn run(files: &[(&str, &str)]) -> Vec<Finding> {
+        let srcs: Vec<SourceFile> = files
+            .iter()
+            .map(|(p, s)| SourceFile { path: (*p).into(), text: (*s).into() })
+            .collect();
+        let lexed: Vec<(usize, Lexed)> =
+            srcs.iter().enumerate().map(|(i, f)| (i, lex(&f.text))).collect();
+        let obs = srcs.iter().find(|f| f.path == "obs/mod.rs").cloned();
+        check(&srcs, &lexed, obs.as_ref())
+    }
+
+    const OBS_MOD: &str = "\
+//! obs.
+//!
+//! | metric | kind | registered in |
+//! |---|---|---|
+//! | `alps_net_frames_total` | counter | `net::framing` |
+//! | `alps_serve_tokens_total` | counter | `serve::metrics` |
+";
+
+    #[test]
+    fn table_parse_skips_globs_and_prose() {
+        let rows = doc_table("//! | `alps_net_frames_total` | c | m |\n//! | `alps_net_` | family | m |\n//! `alps_inline_mention_total` in prose\n");
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].0, "alps_net_frames_total");
+    }
+
+    #[test]
+    fn conformant_metrics_pass() {
+        let out = run(&[
+            ("obs/mod.rs", OBS_MOD),
+            ("net/framing.rs", "fn m() { r.counter(\"alps_net_frames_total\", \"h\", &[]); }"),
+            ("serve/metrics.rs", "fn m() { r.counter(\"alps_serve_tokens_total\", \"h\", &[]); }"),
+        ]);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn misnamed_metric_fails() {
+        let out = run(&[
+            ("obs/mod.rs", OBS_MOD),
+            ("serve/metrics.rs", "fn m() { r.counter(\"alps_net_frames_total\", \"h\", &[]); }"),
+        ]);
+        assert!(
+            out.iter().any(|f| f.msg.contains("must use the alps_serve_* prefix")),
+            "{out:?}"
+        );
+    }
+
+    #[test]
+    fn unlisted_metric_and_stale_row_fail() {
+        let out = run(&[
+            ("obs/mod.rs", OBS_MOD),
+            ("net/framing.rs", "fn m() { r.counter(\"alps_net_frames_total\", \"h\", &[]); }"),
+            ("net/server.rs", "fn m() { r.counter(\"alps_net_brand_new_total\", \"h\", &[]); }"),
+        ]);
+        assert!(
+            out.iter().any(|f| f.msg.contains("not in the obs/mod.rs naming table")),
+            "{out:?}"
+        );
+        // alps_serve_tokens_total is in the table but never registered
+        assert!(out.iter().any(|f| f.msg.contains("stale naming-table row")), "{out:?}");
+    }
+
+    #[test]
+    fn unmapped_module_and_test_code() {
+        let out = run(&[
+            ("obs/mod.rs", OBS_MOD),
+            ("net/framing.rs", "fn m() { r.counter(\"alps_net_frames_total\", \"h\", &[]); }"),
+            ("serve/metrics.rs", "fn m() { r.counter(\"alps_serve_tokens_total\", \"h\", &[]); }"),
+            ("linalg/mod.rs", "fn m() { r.counter(\"alps_linalg_mm_total\", \"h\", &[]); }"),
+            (
+                "pruning/session.rs",
+                "#[cfg(test)]\nmod tests { fn t() { r.counter(\"alps_session_fixture\", \"h\", &[]); } }",
+            ),
+        ]);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].msg.contains("no assigned subsystem prefix"));
+        assert_eq!(out[0].path, "linalg/mod.rs");
+    }
+}

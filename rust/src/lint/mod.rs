@@ -1,0 +1,266 @@
+//! `alps-lint` — the repo's in-tree static-analysis gate.
+//!
+//! Run as `cargo run --bin alps_lint`; CI runs it as a blocking step
+//! ahead of clippy. The tool walks `rust/src`, lexes every file with the
+//! std-only token scanner in [`lexer`] (string/comment aware — no
+//! external parser), and enforces four project invariants:
+//!
+//! 1. **Panic-freedom in server paths** ([`panics`]) — no `unwrap()` /
+//!    `expect()` / `panic!` / `unreachable!` / `todo!` / `unimplemented!`
+//!    in non-`#[cfg(test)]` code under the watched modules (`net/`,
+//!    `serve/`, `coordinator/`, `obs/`, and
+//!    `pruning/{worker,wire,status,session}.rs`). A server that upholds
+//!    bit-identical distributed runs must refuse a connection, not abort
+//!    the process.
+//! 2. **Lock discipline** ([`locks`]) — raw `.lock()` on a `Mutex` in
+//!    watched modules must go through the poison-tolerant
+//!    [`crate::net::lock`] helper, and a per-function held-lock scan
+//!    builds a global lock-acquisition-order graph and fails on cycles
+//!    (a static deadlock detector for the scheduler/batcher/dispatcher
+//!    locks).
+//! 3. **Wire-protocol conformance** ([`wire`]) — every `tag::` constant
+//!    in `pruning/wire.rs` must have an encoder, a decoder, and a
+//!    per-byte truncation test exercising its payload, all recorded in
+//!    the committed `PROTOCOL.lock` manifest; a codec-layout fingerprint
+//!    ties the manifest to `net::framing::FRAME_VERSION` so payload
+//!    drift forces a deliberate version bump (regenerate with
+//!    `cargo run --bin alps_lint -- --write-protocol-lock`).
+//! 4. **Metric-naming conformance** ([`metrics`]) — every metric name
+//!    literal must match `alps_<subsystem>_*` for the module it lives in
+//!    and appear in the naming table in the [`crate::obs`] module doc
+//!    (stale table rows fail too).
+//!
+//! ## Escape hatch
+//!
+//! A finding is suppressed by a comment on the same or the preceding
+//! line: `// lint:allow(panic) <reason>` or `// lint:allow(lock)
+//! <reason>`. The reason is mandatory, and each marker suppresses
+//! **exactly one** finding — unused or unmatched markers are themselves
+//! findings, so stale allows cannot accumulate.
+//!
+//! ## Known approximations
+//!
+//! The lock model is intentionally conservative: guards bound by `let`
+//! are held to end of scope (or an explicit `drop(name)`), `match` /
+//! `if let` scrutinee temporaries are held through the enclosing
+//! statement, and plain `if`/`while` condition temporaries release at
+//! the body brace — Rust's actual drop order, except that statement
+//! over-approximation can extend a scrutinee guard to the end of its
+//! block. Closures are scanned at their definition site as part of the
+//! enclosing function. These over-approximations can only produce false
+//! *cycles* (never missed ones among literal `lock(..)` call sites);
+//! none occur in the current tree.
+
+pub mod lexer;
+pub mod locks;
+pub mod metrics;
+pub mod panics;
+pub mod wire;
+
+use lexer::{Allow, Lexed};
+
+/// One source file handed to the rules: a path *relative to `rust/src`*
+/// (always `/`-separated) plus its text.
+#[derive(Clone, Debug)]
+pub struct SourceFile {
+    pub path: String,
+    pub text: String,
+}
+
+/// A rule violation. `rule` is the short kind tag (`panic`, `lock`,
+/// `lock-order`, `wire`, `metric`, `allow`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    pub path: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.msg)
+    }
+}
+
+/// Server-path predicate: the modules where rules 1 and 2 apply.
+pub fn is_server_path(path: &str) -> bool {
+    path.starts_with("net/")
+        || path.starts_with("serve/")
+        || path.starts_with("coordinator/")
+        || path.starts_with("obs/")
+        || matches!(
+            path,
+            "pruning/worker.rs" | "pruning/wire.rs" | "pruning/status.rs" | "pruning/session.rs"
+        )
+}
+
+/// Which allow kinds exist, and which rule tags they suppress.
+fn allow_suppresses(kind: &str, rule: &'static str) -> bool {
+    matches!((kind, rule), ("panic", "panic") | ("lock", "lock"))
+}
+
+/// Apply `lint:allow` markers to raw findings from one file. Each marker
+/// must carry a reason and suppresses exactly one finding on its own or
+/// the following line; leftovers on either side surface as findings.
+pub fn apply_allows(path: &str, raw: Vec<Finding>, allows: &[Allow]) -> Vec<Finding> {
+    let mut used = vec![false; allows.len()];
+    let mut out = Vec::new();
+    for f in raw {
+        let slot = allows.iter().enumerate().position(|(k, a)| {
+            !used[k]
+                && allow_suppresses(&a.kind, f.rule)
+                && (a.line == f.line || a.line + 1 == f.line)
+        });
+        match slot {
+            Some(k) if allows[k].reason.is_empty() => {
+                used[k] = true;
+                out.push(Finding {
+                    path: path.into(),
+                    line: allows[k].line,
+                    rule: "allow",
+                    msg: format!("lint:allow({}) requires a reason", allows[k].kind),
+                });
+            }
+            Some(k) => used[k] = true,
+            None => out.push(f),
+        }
+    }
+    for (k, a) in allows.iter().enumerate() {
+        if used[k] {
+            continue;
+        }
+        if !matches!(a.kind.as_str(), "panic" | "lock") {
+            out.push(Finding {
+                path: path.into(),
+                line: a.line,
+                rule: "allow",
+                msg: format!("unknown lint:allow kind '{}' (expected panic|lock)", a.kind),
+            });
+        } else {
+            out.push(Finding {
+                path: path.into(),
+                line: a.line,
+                rule: "allow",
+                msg: format!(
+                    "unused lint:allow({}) — nothing on this or the next line to suppress",
+                    a.kind
+                ),
+            });
+        }
+    }
+    out
+}
+
+/// Run every rule over an in-memory tree. `protocol_lock` is the text of
+/// `PROTOCOL.lock` (None = missing, which is itself a finding). Returns
+/// findings sorted by path/line.
+pub fn check_sources(files: &[SourceFile], protocol_lock: Option<&str>) -> Vec<Finding> {
+    let lexed: Vec<(usize, Lexed)> =
+        files.iter().enumerate().map(|(i, f)| (i, lexer::lex(&f.text))).collect();
+    let mut findings = Vec::new();
+
+    let mut graph = locks::LockGraph::default();
+    for (i, lx) in &lexed {
+        let file = &files[*i];
+        if is_server_path(&file.path) {
+            let mut raw = Vec::new();
+            panics::scan(file, lx, &mut raw);
+            locks::scan_raw_locks(file, lx, &mut raw);
+            findings.extend(apply_allows(&file.path, raw, &lx.allows));
+            locks::scan_order(file, lx, &mut graph);
+        }
+        // `lint:allow` markers outside the watched modules are inert by
+        // design — rules 1 and 2 only apply there, so only there can a
+        // marker be matched (or flagged as unused)
+    }
+    findings.extend(graph.check_cycles());
+
+    let wire_idx = files.iter().position(|f| f.path == "pruning/wire.rs");
+    let framing_idx = files.iter().position(|f| f.path == "net/framing.rs");
+    match (wire_idx, framing_idx) {
+        (Some(w), Some(fr)) => {
+            findings.extend(wire::check(
+                &files[w],
+                &lexed[w].1,
+                &files[fr],
+                &lexed[fr].1,
+                protocol_lock,
+            ));
+        }
+        _ => findings.push(Finding {
+            path: "pruning/wire.rs".into(),
+            line: 0,
+            rule: "wire",
+            msg: "pruning/wire.rs or net/framing.rs missing from the scanned tree".into(),
+        }),
+    }
+
+    let obs_mod = files.iter().find(|f| f.path == "obs/mod.rs");
+    findings.extend(metrics::check(files, &lexed, obs_mod));
+
+    findings.sort_by(|a, b| (&a.path, a.line).cmp(&(&b.path, b.line)));
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn file(path: &str, text: &str) -> SourceFile {
+        SourceFile { path: path.into(), text: text.into() }
+    }
+
+    #[test]
+    fn server_path_predicate() {
+        assert!(is_server_path("net/framing.rs"));
+        assert!(is_server_path("serve/tcp.rs"));
+        assert!(is_server_path("coordinator/dispatch.rs"));
+        assert!(is_server_path("obs/registry.rs"));
+        assert!(is_server_path("pruning/wire.rs"));
+        assert!(!is_server_path("pruning/admm.rs"));
+        assert!(!is_server_path("linalg/mod.rs"));
+        assert!(!is_server_path("lint/mod.rs"));
+    }
+
+    #[test]
+    fn allow_suppresses_exactly_one_finding() {
+        let f = file(
+            "net/x.rs",
+            "fn f() {\n    // lint:allow(panic) startup-only, config already validated\n    a.unwrap();\n    b.unwrap();\n}\n",
+        );
+        let lx = lexer::lex(&f.text);
+        let mut raw = Vec::new();
+        panics::scan(&f, &lx, &mut raw);
+        assert_eq!(raw.len(), 2);
+        let out = apply_allows(&f.path, raw, &lx.allows);
+        assert_eq!(out.len(), 1, "one suppressed, one kept: {out:?}");
+        assert_eq!(out[0].line, 4);
+    }
+
+    #[test]
+    fn unused_and_unreasoned_allows_are_findings() {
+        let f = file("net/x.rs", "// lint:allow(panic) nothing here\nfn f() {}\n");
+        let lx = lexer::lex(&f.text);
+        let out = apply_allows(&f.path, Vec::new(), &lx.allows);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].msg.contains("unused"));
+
+        let f2 = file("net/x.rs", "fn f() {\n    a.unwrap(); // lint:allow(panic)\n}\n");
+        let lx2 = lexer::lex(&f2.text);
+        let mut raw = Vec::new();
+        panics::scan(&f2, &lx2, &mut raw);
+        let out2 = apply_allows(&f2.path, raw, &lx2.allows);
+        assert_eq!(out2.len(), 1);
+        assert!(out2[0].msg.contains("requires a reason"), "{out2:?}");
+    }
+
+    #[test]
+    fn unknown_allow_kind_is_reported() {
+        let f = file("serve/x.rs", "// lint:allow(races) hmm\nfn f() {}\n");
+        let lx = lexer::lex(&f.text);
+        let out = apply_allows(&f.path, Vec::new(), &lx.allows);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].msg.contains("unknown lint:allow kind"));
+    }
+}

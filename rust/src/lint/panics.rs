@@ -1,0 +1,95 @@
+//! Rule 1 — panic-freedom in server paths.
+//!
+//! Flags, in non-test tokens of watched files: method calls `.unwrap(`
+//! and `.expect(`, and the macros `panic!`, `unreachable!`, `todo!`,
+//! `unimplemented!`. Combinators like `unwrap_or_else` are distinct
+//! identifiers and never match. Suppress a deliberate site with
+//! `// lint:allow(panic) <reason>`.
+
+use super::lexer::{Lexed, Tok, TokKind};
+use super::{Finding, SourceFile};
+
+const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+
+pub fn scan(file: &SourceFile, lx: &Lexed, out: &mut Vec<Finding>) {
+    let toks = &lx.toks;
+    for (i, t) in toks.iter().enumerate() {
+        if t.test || t.kind != TokKind::Ident {
+            continue;
+        }
+        let prev = i.checked_sub(1).map(|p| &toks[p]);
+        let next = toks.get(i + 1);
+        let is_punct = |t: Option<&Tok>, s: &str| {
+            t.is_some_and(|t| t.kind == TokKind::Punct && t.text == s)
+        };
+        if (t.text == "unwrap" || t.text == "expect")
+            && is_punct(prev, ".")
+            && is_punct(next, "(")
+        {
+            out.push(Finding {
+                path: file.path.clone(),
+                line: t.line,
+                rule: "panic",
+                msg: format!(
+                    ".{}() in a server path — return an error (`?`/`bail!`) or justify with lint:allow(panic)",
+                    t.text
+                ),
+            });
+        } else if PANIC_MACROS.contains(&t.text.as_str()) && is_punct(next, "!") {
+            out.push(Finding {
+                path: file.path.clone(),
+                line: t.line,
+                rule: "panic",
+                msg: format!(
+                    "{}! in a server path — a transport/serve layer must not abort the process",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::lex;
+
+    fn scan_src(src: &str) -> Vec<Finding> {
+        let f = SourceFile { path: "net/fixture.rs".into(), text: src.into() };
+        let lx = lex(src);
+        let mut out = Vec::new();
+        scan(&f, &lx, &mut out);
+        out
+    }
+
+    #[test]
+    fn flags_unwrap_expect_and_panic_macros() {
+        let out = scan_src(
+            "fn f() {\n    a.unwrap();\n    b.expect(\"msg\");\n    panic!(\"boom\");\n    unreachable!();\n}\n",
+        );
+        assert_eq!(out.len(), 4, "{out:?}");
+        assert_eq!(out[0].line, 2);
+        assert_eq!(out[3].line, 5);
+    }
+
+    #[test]
+    fn combinators_and_test_code_pass() {
+        let out = scan_src(
+            "fn f() {\n    a.unwrap_or(0);\n    b.unwrap_or_else(|p| p.into_inner());\n    c.expect_err_helper();\n}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { x.unwrap(); panic!(\"fine in tests\"); }\n}\n",
+        );
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn strings_and_comments_do_not_fire() {
+        let out = scan_src("fn f() { let s = \"a.unwrap()\"; } // .unwrap() here too\n");
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn std_panic_paths_do_not_fire() {
+        // `std::panic::catch_unwind` — `panic` not followed by `!`
+        let out = scan_src("fn f() { let _ = std::panic::catch_unwind(|| 1); }\n");
+        assert!(out.is_empty(), "{out:?}");
+    }
+}

@@ -1,0 +1,541 @@
+//! Rule 3 — wire-protocol conformance.
+//!
+//! Ground truth is `pruning/wire.rs` (the frame payload codecs and the
+//! `mod tag` constants) plus `net::framing::FRAME_VERSION`. The
+//! committed `PROTOCOL.lock` manifest at the repo root records, per
+//! tag: its value, its encoder and decoder symbols, and the labels its
+//! payloads carry in the per-byte truncation test. The gate fails when
+//! the manifest and the source disagree in either direction — adding a
+//! tag without a codec, deleting a truncation label, or renaming a
+//! symbol all exit non-zero.
+//!
+//! Layout drift: the manifest's `layout` line pins an FNV-1a
+//! fingerprint of wire.rs's non-test token stream (string literals
+//! excluded, so error-message edits are free). When the fingerprint
+//! changes, `--write-protocol-lock` refuses to refresh the manifest
+//! unless `FRAME_VERSION` was bumped too — payload drift must be a
+//! deliberate protocol revision, never an accident. The committed value
+//! `pending` is the bootstrap state (no toolchain has run the tool
+//! yet): the gate accepts it with a notice instead of a finding.
+
+use super::lexer::{Lexed, TokKind};
+use super::{Finding, SourceFile};
+
+#[derive(Clone, Debug, Default)]
+pub struct TagRow {
+    pub name: String,
+    pub value: u32,
+    pub encode: String,
+    pub decode: String,
+    pub truncation: Vec<String>,
+    pub line: u32,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ProtocolLock {
+    pub version: u32,
+    pub truncation_test: String,
+    pub rows: Vec<TagRow>,
+    pub layout: String,
+}
+
+pub const LOCK_PATH: &str = "PROTOCOL.lock";
+
+pub fn parse_lock(text: &str) -> Result<ProtocolLock, String> {
+    let mut out = ProtocolLock::default();
+    let mut have_version = false;
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        let lno = idx as u32 + 1;
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut words = line.split_whitespace();
+        match words.next() {
+            Some("version") => {
+                out.version = words
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .ok_or_else(|| format!("line {lno}: bad version line"))?;
+                have_version = true;
+            }
+            Some("truncation-test") => {
+                out.truncation_test =
+                    words.next().ok_or_else(|| format!("line {lno}: missing test name"))?.into();
+            }
+            Some("layout") => {
+                out.layout =
+                    words.next().ok_or_else(|| format!("line {lno}: missing layout value"))?.into();
+            }
+            Some("tag") => {
+                let mut row = TagRow { line: lno, ..TagRow::default() };
+                row.name =
+                    words.next().ok_or_else(|| format!("line {lno}: missing tag name"))?.into();
+                row.value = words
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .ok_or_else(|| format!("line {lno}: bad tag value"))?;
+                for w in words {
+                    if let Some(v) = w.strip_prefix("encode=") {
+                        row.encode = v.into();
+                    } else if let Some(v) = w.strip_prefix("decode=") {
+                        row.decode = v.into();
+                    } else if let Some(v) = w.strip_prefix("truncation=") {
+                        row.truncation = v.split(',').map(|s| s.to_string()).collect();
+                    } else {
+                        return Err(format!("line {lno}: unknown field '{w}'"));
+                    }
+                }
+                if row.encode.is_empty() || row.decode.is_empty() || row.truncation.is_empty() {
+                    return Err(format!(
+                        "line {lno}: tag {} needs encode=, decode= and truncation=",
+                        row.name
+                    ));
+                }
+                out.rows.push(row);
+            }
+            Some(other) => return Err(format!("line {lno}: unknown directive '{other}'")),
+            None => {}
+        }
+    }
+    if !have_version {
+        return Err("missing 'version' line".into());
+    }
+    if out.truncation_test.is_empty() {
+        return Err("missing 'truncation-test' line".into());
+    }
+    if out.layout.is_empty() {
+        return Err("missing 'layout' line".into());
+    }
+    Ok(out)
+}
+
+/// Extract `pub const NAME: u8 = N;` rows from the non-test `mod tag`
+/// block of wire.rs tokens.
+pub fn source_tags(lx: &Lexed) -> Vec<(String, u32, u32)> {
+    let toks = &lx.toks;
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 2 < toks.len() {
+        if !toks[i].test
+            && toks[i].kind == TokKind::Ident
+            && toks[i].text == "mod"
+            && toks[i + 1].kind == TokKind::Ident
+            && toks[i + 1].text == "tag"
+        {
+            let mut depth = 0usize;
+            let mut j = i + 2;
+            while j < toks.len() {
+                let t = &toks[j];
+                if t.kind == TokKind::Punct && t.text == "{" {
+                    depth += 1;
+                } else if t.kind == TokKind::Punct && t.text == "}" {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if t.kind == TokKind::Ident && t.text == "const" {
+                    // const NAME : u8 = NUM
+                    if let (Some(name), Some(num)) = (toks.get(j + 1), toks.get(j + 5)) {
+                        if name.kind == TokKind::Ident && num.kind == TokKind::Num {
+                            if let Ok(v) = num.text.parse() {
+                                out.push((name.text.clone(), v, name.line));
+                            }
+                        }
+                    }
+                }
+                j += 1;
+            }
+            return out;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// `FRAME_VERSION: u8 = N` from net/framing.rs tokens.
+pub fn frame_version(framing: &Lexed) -> Option<u32> {
+    let toks = &framing.toks;
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind == TokKind::Ident && t.text == "FRAME_VERSION" && i + 4 < toks.len() {
+            let n = &toks[i + 4];
+            if toks[i + 1].text == ":" && toks[i + 2].text == "u8" && n.kind == TokKind::Num {
+                return n.text.parse().ok();
+            }
+        }
+    }
+    None
+}
+
+/// FNV-1a 64 fingerprint of the non-test token stream, string literals
+/// excluded (message text is not layout). 16 lowercase hex digits.
+pub fn layout_hash(lx: &Lexed) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |s: &str| {
+        for b in s.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h ^= 0x0a;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    for t in &lx.toks {
+        if t.test || t.kind == TokKind::Str {
+            continue;
+        }
+        eat(&t.text);
+    }
+    format!("{h:016x}")
+}
+
+/// Replace the `version` and `layout` lines of an existing manifest,
+/// preserving everything else byte-for-byte.
+pub fn rewrite_lock(text: &str, version: u32, layout: &str) -> String {
+    let mut out = String::new();
+    for raw in text.lines() {
+        let t = raw.trim_start();
+        if t.starts_with("version ") || t == "version" {
+            out.push_str(&format!("version {version}\n"));
+        } else if t.starts_with("layout ") || t == "layout" {
+            out.push_str(&format!("layout {layout}\n"));
+        } else {
+            out.push_str(raw);
+            out.push('\n');
+        }
+    }
+    out
+}
+
+fn finding(path: &str, line: u32, msg: String) -> Finding {
+    Finding { path: path.into(), line, rule: "wire", msg }
+}
+
+/// Full rule-3 check. `lock_text` None = PROTOCOL.lock missing.
+pub fn check(
+    wire: &SourceFile,
+    wire_lx: &Lexed,
+    _framing: &SourceFile,
+    framing_lx: &Lexed,
+    lock_text: Option<&str>,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let Some(text) = lock_text else {
+        out.push(finding(
+            LOCK_PATH,
+            0,
+            "PROTOCOL.lock missing — regenerate with `cargo run --bin alps_lint -- --write-protocol-lock`".into(),
+        ));
+        return out;
+    };
+    let lock = match parse_lock(text) {
+        Ok(l) => l,
+        Err(e) => {
+            out.push(finding(LOCK_PATH, 0, format!("unparseable manifest: {e}")));
+            return out;
+        }
+    };
+
+    // tags: source <-> manifest, both directions, values included
+    let src_tags = source_tags(wire_lx);
+    for (name, value, line) in &src_tags {
+        match lock.rows.iter().find(|r| &r.name == name) {
+            None => out.push(finding(
+                &wire.path,
+                *line,
+                format!("tag::{name} has no PROTOCOL.lock row — add one with its encoder, decoder and truncation labels"),
+            )),
+            Some(r) if r.value != *value => out.push(finding(
+                LOCK_PATH,
+                r.line,
+                format!("tag {name} is {value} in wire.rs but {} in the manifest", r.value),
+            )),
+            _ => {}
+        }
+    }
+    for r in &lock.rows {
+        if !src_tags.iter().any(|(n, _, _)| n == &r.name) {
+            out.push(finding(
+                LOCK_PATH,
+                r.line,
+                format!("stale row: tag {} no longer exists in pruning/wire.rs", r.name),
+            ));
+        }
+    }
+
+    // codec symbols must exist as non-test fns (with their type if pathed)
+    let fns: Vec<&str> = wire_lx
+        .toks
+        .windows(2)
+        .filter(|w| {
+            !w[0].test
+                && w[0].kind == TokKind::Ident
+                && w[0].text == "fn"
+                && w[1].kind == TokKind::Ident
+        })
+        .map(|w| w[1].text.as_str())
+        .collect();
+    let idents: Vec<&str> = wire_lx
+        .toks
+        .iter()
+        .filter(|t| !t.test && t.kind == TokKind::Ident)
+        .map(|t| t.text.as_str())
+        .collect();
+    let require_symbol = |sym: &str, row: &TagRow, role: &str, out: &mut Vec<Finding>| {
+        let (ty, func) = match sym.rsplit_once("::") {
+            Some((ty, f)) => (Some(ty), f),
+            None => (None, sym),
+        };
+        let ty_ok = match ty {
+            Some(t) => idents.contains(&t),
+            None => true,
+        };
+        let ok = fns.contains(&func) && ty_ok;
+        if !ok {
+            out.push(finding(
+                LOCK_PATH,
+                row.line,
+                format!(
+                    "tag {} {role} '{sym}' not found as a non-test fn in pruning/wire.rs",
+                    row.name
+                ),
+            ));
+        }
+    };
+    for r in &lock.rows {
+        require_symbol(&r.encode, r, "encoder", &mut out);
+        require_symbol(&r.decode, r, "decoder", &mut out);
+    }
+
+    // the per-byte truncation test must exist and exercise every label
+    match test_fn_strings(wire_lx, &lock.truncation_test) {
+        None => out.push(finding(
+            &wire.path,
+            0,
+            format!(
+                "truncation test '{}' (named in PROTOCOL.lock) not found in pruning/wire.rs test code",
+                lock.truncation_test
+            ),
+        )),
+        Some((strs, idents_in_test)) => {
+            if !idents_in_test.iter().any(|s| s == "cut") {
+                out.push(finding(
+                    &wire.path,
+                    0,
+                    format!(
+                        "truncation test '{}' no longer loops per byte (no `cut` variable)",
+                        lock.truncation_test
+                    ),
+                ));
+            }
+            for r in &lock.rows {
+                for label in &r.truncation {
+                    if !strs.iter().any(|s| s == label) {
+                        out.push(finding(
+                            &wire.path,
+                            0,
+                            format!(
+                                "truncation test '{}' lost the '{}' payload labelled for tag {}",
+                                lock.truncation_test, label, r.name
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    // FRAME_VERSION must match the manifest
+    match frame_version(framing_lx) {
+        None => out.push(finding("net/framing.rs", 0, "FRAME_VERSION const not found".into())),
+        Some(v) if v != lock.version => out.push(finding(
+            LOCK_PATH,
+            0,
+            format!(
+                "manifest version {} != net::framing::FRAME_VERSION {v} — refresh with --write-protocol-lock",
+                lock.version
+            ),
+        )),
+        _ => {}
+    }
+
+    // layout fingerprint ('pending' = bootstrap, accepted with a notice)
+    let computed = layout_hash(wire_lx);
+    if lock.layout != "pending" && lock.layout != computed {
+        out.push(finding(
+            LOCK_PATH,
+            0,
+            format!(
+                "codec layout drifted (manifest {}, source {computed}) — bump FRAME_VERSION in net/framing.rs, then `cargo run --bin alps_lint -- --write-protocol-lock`",
+                lock.layout
+            ),
+        ));
+    }
+    out
+}
+
+/// Locate a `#[cfg(test)]`-marked fn by name and return (string
+/// literals, identifiers) of its body.
+fn test_fn_strings(lx: &Lexed, name: &str) -> Option<(Vec<String>, Vec<String>)> {
+    let toks = &lx.toks;
+    let pos = toks.windows(2).position(|w| {
+        w[0].test && w[0].kind == TokKind::Ident && w[0].text == "fn" && w[1].text == name
+    })?;
+    // body = first brace-matched block after the name
+    let mut i = pos + 2;
+    while i < toks.len() && !(toks[i].kind == TokKind::Punct && toks[i].text == "{") {
+        i += 1;
+    }
+    let mut depth = 0usize;
+    let mut strs = Vec::new();
+    let mut idents = Vec::new();
+    for t in toks.iter().skip(i) {
+        match t.kind {
+            TokKind::Punct if t.text == "{" => depth += 1,
+            TokKind::Punct if t.text == "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            TokKind::Str => strs.push(t.text.clone()),
+            TokKind::Ident => idents.push(t.text.clone()),
+            _ => {}
+        }
+    }
+    Some((strs, idents))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::lex;
+
+    const GOOD_WIRE: &str = r#"
+pub mod tag {
+    pub const SOLVE: u8 = 1;
+    pub const ERROR: u8 = 3;
+}
+pub fn encode_solve(x: u8) -> Vec<u8> { vec![x] }
+pub struct SolveRequest;
+impl SolveRequest {
+    pub fn decode(b: &[u8]) -> Result<Self, ()> { let _ = b; Ok(SolveRequest) }
+}
+pub fn encode_error(j: u64) -> Vec<u8> { vec![j as u8] }
+pub fn decode_error(b: &[u8]) -> Result<u64, ()> { let _ = b; Ok(0) }
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn every_truncation_of_every_payload_errors() {
+        for (label, buf) in [("solve", &[1u8][..]), ("error", &[3u8][..])] {
+            for cut in 0..buf.len() {
+                let _ = (label, cut);
+            }
+        }
+    }
+}
+"#;
+
+    const FRAMING: &str = "pub const FRAME_VERSION: u8 = 2;\n";
+
+    const GOOD_LOCK: &str = "\
+# test manifest
+version 2
+truncation-test every_truncation_of_every_payload_errors
+tag SOLVE 1 encode=encode_solve decode=SolveRequest::decode truncation=solve
+tag ERROR 3 encode=encode_error decode=decode_error truncation=error
+layout pending
+";
+
+    fn run(wire_src: &str, lock: Option<&str>) -> Vec<Finding> {
+        let wire = SourceFile { path: "pruning/wire.rs".into(), text: wire_src.into() };
+        let framing = SourceFile { path: "net/framing.rs".into(), text: FRAMING.into() };
+        let wlx = lex(wire_src);
+        let flx = lex(FRAMING);
+        check(&wire, &wlx, &framing, &flx, lock)
+    }
+
+    #[test]
+    fn conformant_tree_passes() {
+        let out = run(GOOD_WIRE, Some(GOOD_LOCK));
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn missing_manifest_fails() {
+        let out = run(GOOD_WIRE, None);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].msg.contains("PROTOCOL.lock missing"));
+    }
+
+    #[test]
+    fn new_tag_without_row_fails() {
+        let src = GOOD_WIRE.replace(
+            "pub const ERROR: u8 = 3;",
+            "pub const ERROR: u8 = 3;\n    pub const PING: u8 = 9;",
+        );
+        let out = run(&src, Some(GOOD_LOCK));
+        assert!(
+            out.iter().any(|f| f.msg.contains("tag::PING has no PROTOCOL.lock row")),
+            "{out:?}"
+        );
+    }
+
+    #[test]
+    fn deleted_truncation_payload_fails() {
+        let src = GOOD_WIRE.replace("(\"error\", &[3u8][..])", "");
+        let out = run(&src, Some(GOOD_LOCK));
+        assert!(
+            out.iter().any(|f| f.msg.contains("lost the 'error' payload")),
+            "{out:?}"
+        );
+    }
+
+    #[test]
+    fn renamed_codec_symbol_fails() {
+        let src = GOOD_WIRE.replace("pub fn decode_error", "pub fn decode_err2");
+        let out = run(&src, Some(GOOD_LOCK));
+        assert!(out.iter().any(|f| f.msg.contains("decoder 'decode_error' not found")), "{out:?}");
+    }
+
+    #[test]
+    fn version_mismatch_and_layout_drift_fail() {
+        let lock = GOOD_LOCK.replace("version 2", "version 1");
+        let out = run(GOOD_WIRE, Some(&lock));
+        assert!(out.iter().any(|f| f.msg.contains("FRAME_VERSION")), "{out:?}");
+
+        let wlx = lex(GOOD_WIRE);
+        let real = layout_hash(&wlx);
+        let pinned = GOOD_LOCK.replace("layout pending", &format!("layout {real}"));
+        assert!(run(GOOD_WIRE, Some(&pinned)).is_empty());
+        // structural change (new fn) drifts the fingerprint...
+        let drifted =
+            GOOD_WIRE.replace("pub fn encode_error(j: u64)", "pub fn encode_error(j: u32)");
+        let out2 = run(&drifted, Some(&pinned));
+        assert!(out2.iter().any(|f| f.msg.contains("layout drifted")), "{out2:?}");
+        // ...but string-literal content is not layout
+        assert_eq!(
+            layout_hash(&lex("fn e() { err(\"old message\") }")),
+            layout_hash(&lex("fn e() { err(\"new message\") }")),
+        );
+    }
+
+    #[test]
+    fn stale_row_and_value_mismatch_fail() {
+        let lock = format!("{GOOD_LOCK}tag GONE 7 encode=encode_error decode=decode_error truncation=error\n");
+        let out = run(GOOD_WIRE, Some(&lock));
+        assert!(out.iter().any(|f| f.msg.contains("stale row: tag GONE")), "{out:?}");
+
+        let lock2 = GOOD_LOCK.replace("tag ERROR 3", "tag ERROR 4");
+        let out2 = run(GOOD_WIRE, Some(&lock2));
+        assert!(out2.iter().any(|f| f.msg.contains("is 3 in wire.rs but 4")), "{out2:?}");
+    }
+
+    #[test]
+    fn rewrite_preserves_rows() {
+        let new = rewrite_lock(GOOD_LOCK, 3, "deadbeefdeadbeef");
+        assert!(new.contains("version 3\n"));
+        assert!(new.contains("layout deadbeefdeadbeef\n"));
+        assert!(new.contains("tag SOLVE 1"));
+        assert!(new.contains("# test manifest"));
+    }
+}

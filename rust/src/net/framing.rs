@@ -331,7 +331,10 @@ pub fn read_frame_deadline(
     let mut payload = vec![0u8; len];
     match read_full(r, &mut payload, false, shutdown, idle, deadline)? {
         Fill::Shutdown => Ok(FrameRead::Shutdown),
-        Fill::Eof => unreachable!("eof_ok is false for payload reads"),
+        // read_full never reports Eof when eof_ok is false (a short read
+        // errors there), but a transport layer must not be able to abort
+        // the process on a codepath mistake — treat it as a framing error
+        Fill::Eof => bail!("connection closed mid-payload"),
         Fill::Done => {
             let (frames, bytes) = frame_metrics("rx");
             frames.inc();

@@ -35,6 +35,8 @@
 //! ([`server::respond_http`] / [`server::write_http_response`]) that the
 //! `GET /healthz`, `GET /status`, and `GET /metrics` probes are built on.
 
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod framing;
 pub mod server;
 
@@ -46,5 +48,6 @@ use std::sync::{Mutex, MutexGuard, PoisonError};
 /// Poison-tolerant lock: a panicked handler thread must not take the
 /// whole server down with it.
 pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // lint:allow(lock) this IS the poison-tolerant wrapper every other module must call
     m.lock().unwrap_or_else(PoisonError::into_inner)
 }

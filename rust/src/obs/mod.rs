@@ -25,21 +25,45 @@
 //! ## Metric naming
 //!
 //! `alps_<subsystem>_<name>`, with base units (seconds, bytes) and
-//! `_total` on counters:
+//! `_total` on counters. The table below is the authoritative set:
+//! `alps-lint` (rule 4, `cargo run --bin alps_lint`) fails the build
+//! when a registration uses a name missing from this table, when a name
+//! violates its module's subsystem prefix, or when a row goes stale.
 //!
-//! * `alps_serve_*` — decode steps/tokens/latency, batch occupancy,
-//!   prefill, admissions/evictions/cancellations;
-//! * `alps_prune_*` — session progress (blocks/layers/checkpoints),
-//!   per-method solve-time histograms, live ADMM iteration per worker;
-//! * `alps_coord_*` — dispatcher RPC latency per worker, retries,
-//!   reroutes, wire bytes by calibration encoding;
-//! * `alps_net_*` — transport frames/bytes by direction, connections,
-//!   refusals.
+//! | metric | kind | registered in |
+//! |---|---|---|
+//! | `alps_net_frames_total` | counter | `net::framing` |
+//! | `alps_net_frame_bytes_total` | counter | `net::framing` |
+//! | `alps_net_connections_total` | counter | `net::server` |
+//! | `alps_net_connections_closed_total` | counter | `net::server` |
+//! | `alps_net_refusals_total` | counter | `net::server` |
+//! | `alps_serve_tokens_total` | counter | `serve::metrics` |
+//! | `alps_serve_steps_total` | counter | `serve::metrics` |
+//! | `alps_serve_requests_total` | counter | `serve::metrics` |
+//! | `alps_serve_cancelled_total` | counter | `serve::metrics` |
+//! | `alps_serve_prefills_total` | counter | `serve::metrics` |
+//! | `alps_serve_prompt_tokens_total` | counter | `serve::metrics` |
+//! | `alps_serve_batch_occupancy` | gauge | `serve::metrics` |
+//! | `alps_serve_step_seconds` | histogram | `serve::metrics` |
+//! | `alps_serve_request_seconds` | histogram | `serve::metrics` |
+//! | `alps_serve_prefill_seconds` | histogram | `serve::metrics` |
+//! | `alps_coord_retries_total` | counter | `coordinator::dispatch` |
+//! | `alps_coord_reroutes_total` | counter | `coordinator::dispatch` |
+//! | `alps_coord_wire_tx_bytes_total` | counter | `coordinator::dispatch` |
+//! | `alps_coord_rpc_seconds` | histogram | `coordinator::dispatch` |
+//! | `alps_prune_layers_total` | counter | `pruning::session` |
+//! | `alps_prune_blocks_total` | counter | `pruning::session` |
+//! | `alps_prune_checkpoints_total` | counter | `pruning::session` |
+//! | `alps_prune_block` | gauge | `pruning::session` |
+//! | `alps_prune_layer_solve_seconds` | histogram | `pruning::session` |
+//! | `alps_prune_admm_iteration` | gauge | `pruning::status` |
 //!
 //! All metrics are process-global: a worker process exports its own
 //! `alps_net_*`/`alps_serve_*` view, the coordinator exports the
 //! pruning/dispatch view, and scraping any endpoint of a process returns
 //! everything that process recorded.
+
+#![warn(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod prometheus;
 pub mod registry;

@@ -34,6 +34,8 @@
 //! block whose weights were already written, which keeps the run valid
 //! but can differ bitwise from an uninterrupted run in that window.
 
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 use super::engine::{Engine, LayerJob, NativeEngine};
 use super::{LayerProblem, MethodSpec};
 use crate::config::{AlpsConfig, SparsityTarget};
@@ -256,7 +258,11 @@ impl<'a> PruneSession<'a> {
         };
         let mut start_block = 0usize;
         if self.resume {
-            let dir = self.checkpoint_dir.clone().expect("validated in build()");
+            let Some(dir) = self.checkpoint_dir.clone() else {
+                // build() validates this pairing; keep the session
+                // constructible-by-hand without an abort path
+                bail!("resume requires a checkpoint dir");
+            };
             if let Some(ck) = CheckpointState::load(&dir)? {
                 ck.validate(&report, n_blocks, &engine_config, &calib_dig, &init_weights_dig)?;
                 let weights = Weights::load(&dir.join(CKPT_WEIGHTS))

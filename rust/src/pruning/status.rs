@@ -34,6 +34,8 @@
 //! to the [`crate::obs`] registry, so `/metrics` shows live solver
 //! progress next to the counters.
 
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 use super::session::{json_escape, ProgressEvent};
 use super::wire::Heartbeat;
 use crate::net::framing::{read_line_deadline, LineRead};

@@ -43,6 +43,8 @@
 //! f32/f64 round-trip through `to_le_bytes`/`from_le_bytes` exactly, so
 //! the transport never perturbs a single bit of the matrices.
 
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 use super::{LayerProblem, MethodSpec};
 use crate::config::{AlpsConfig, DsNoTConfig, SparseGptConfig, SparsityTarget};
 use crate::linalg::Matrix;

@@ -47,6 +47,8 @@
 //! CLI: `alps worker --addr 127.0.0.1:7979 [--max-conns 8]
 //! [--max-frame-mb 1024] [--heartbeat-secs 2]`.
 
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 use super::engine::NativeEngine;
 use super::wire::{self, tag};
 use crate::net::framing::{read_frame, read_line_deadline, write_frame, FrameRead, LineRead};

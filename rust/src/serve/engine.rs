@@ -65,7 +65,11 @@ pub fn sample_token(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> u
             return i as u16;
         }
     }
-    *idx.last().unwrap() as u16
+    // float-rounding fallthrough (u can stay epsilon-positive after the
+    // last weight): take the least-likely candidate. `idx` is empty only
+    // for an empty logits row — a malformed model must yield a token id,
+    // not abort the serving process
+    idx.last().map_or(0, |&i| i as u16)
 }
 
 /// One completed generation (single-request path).
@@ -226,5 +230,17 @@ mod tests {
             let t = sample_token(&logits, &p, &mut rng);
             assert!(t == 1 || t == 3, "top-2 violated: {t}");
         }
+    }
+
+    // regression: an empty logits row with temperature sampling used to
+    // panic on the fallthrough (`idx.last().unwrap()`), aborting the
+    // serving process on a malformed model instead of degrading
+    #[test]
+    fn sample_token_empty_logits_does_not_panic() {
+        let mut rng = Rng::new(7);
+        let p = SamplingParams { temperature: 0.8, ..Default::default() };
+        assert_eq!(sample_token(&[], &p, &mut rng), 0);
+        let p = SamplingParams { temperature: 0.8, top_k: 2, ..Default::default() };
+        assert_eq!(sample_token(&[], &p, &mut rng), 0);
     }
 }

@@ -79,6 +79,8 @@
 //!   per replica) would scale further.
 //! * No TLS/auth on the TCP front-end; it trusts its network.
 
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
