@@ -3,7 +3,10 @@
 //! prefill (admission latency), (c) closed-loop continuous-batching load
 //! test, dense vs CSR backends at 0/50/70/90% sparsity, with tokens/s and
 //! p50/p95/p99 token latency, (d) concurrent TCP clients with healthz
-//! latency under load. Results feed EXPERIMENTS.md §Serve.
+//! latency under load, (e) three-way dense vs CSR vs packed-N:M race on
+//! one 2:4-pruned model — all three backends must emit identical token
+//! streams, and packed decode must not lose to CSR. Results feed
+//! EXPERIMENTS.md §Serve.
 //!
 //!     ALPS_THREADS=4 cargo bench --bench bench_serve
 //!     cargo bench --bench bench_serve -- --smoke   # reduced CI workload
@@ -13,7 +16,8 @@
 use alps::config::ModelConfig;
 use alps::linalg::matmul::num_threads;
 use alps::model::{Model, SparseModel};
-use alps::pruning::projection::topk_project;
+use alps::pruning::projection::{nm_project, topk_project};
+use alps::sparse::NmModel;
 use alps::serve::{tcp, Batcher, Engine, SamplingParams, TcpConfig};
 use alps::util::table::Table;
 use alps::util::{Rng, Timer};
@@ -27,6 +31,16 @@ fn prune_model(model: &Model, density: f64) -> anyhow::Result<Model> {
         let mat = w.matrix(&name)?;
         let keep = ((mat.data.len() as f64) * density).round() as usize;
         w.set_matrix(&name, &topk_project(&mat, keep.max(1)))?;
+    }
+    Model::new(model.cfg.clone(), w)
+}
+
+/// Copy of `model` with every prunable matrix 2:4 magnitude-projected —
+/// the same checkpoint serves all three backends in section (e).
+fn prune_model_nm(model: &Model, n: usize, m: usize) -> anyhow::Result<Model> {
+    let mut w = model.weights.clone();
+    for name in model.prunable_names() {
+        w.set_matrix(&name, &nm_project(&w.matrix(&name)?, n, m))?;
     }
     Model::new(model.cfg.clone(), w)
 }
@@ -276,5 +290,84 @@ fn main() -> anyhow::Result<()> {
     } else {
         bench_tcp_concurrency(&model, 8, 4, 16)?;
     }
+
+    // ---------- (e) dense vs CSR vs packed N:M at matched 2:4
+    bench_nm_race(&model, n_req, prompt_len, max_new, max_batch)?;
+    Ok(())
+}
+
+/// (e) the packed-format payoff: one 2:4-pruned checkpoint served by all
+/// three backends. Token streams must be identical (packed N:M is
+/// bit-identical to CSR by construction), and packed decode throughput
+/// must be at least CSR's — same nnz, smaller index metadata, no indptr.
+fn bench_nm_race(
+    model: &Model,
+    n_req: usize,
+    prompt_len: usize,
+    max_new: usize,
+    max_batch: usize,
+) -> anyhow::Result<()> {
+    let m = prune_model_nm(model, 2, 4)?;
+    let n_layers = m.prunable_names().len();
+    let e_dense = Engine::dense(&m)?;
+    let e_csr = Engine::sparse(&m)?;
+    let e_nm = Engine::nm(&m, 2, 4)?;
+    assert!(
+        e_nm.label().contains(&format!("{n_layers}/{n_layers} packed")),
+        "2:4-projected model must pack every layer, got '{}'",
+        e_nm.label()
+    );
+
+    // exactness gate before timing: identical greedy streams on all three
+    let params = SamplingParams { max_new_tokens: max_new, ..Default::default() };
+    for prompt in [vec![1u16, 2, 3], vec![500, 7, 123, 9], vec![42; 6]] {
+        let td = e_dense.generate(&prompt, &params, 0)?.tokens;
+        let tc = e_csr.generate(&prompt, &params, 0)?.tokens;
+        let tn = e_nm.generate(&prompt, &params, 0)?.tokens;
+        assert_eq!(tc, tn, "packed N:M diverged from CSR on {prompt:?}");
+        assert_eq!(td, tn, "packed N:M diverged from dense on {prompt:?}");
+    }
+
+    let (sparse_bytes, dense_bytes) = SparseModel::from_model(&m)?.bytes_sparse_vs_dense();
+    let nm_bytes = NmModel::from_model(&m, 2, 4)?.bytes_packed_vs_dense().0;
+    println!("\nmatched 2:4 race: dense vs CSR vs packed N:M (same checkpoint, greedy-identical)");
+    let mut t = Table::new(&["backend", "tok/s", "p50 ms", "p95 ms", "p99 ms", "weight MiB"]);
+    let mut best = [0.0f64; 3];
+    for (bi, (engine, bytes)) in
+        [(&e_dense, dense_bytes), (&e_csr, sparse_bytes), (&e_nm, nm_bytes)]
+            .into_iter()
+            .enumerate()
+    {
+        // best-of-3 to damp scheduler noise; the exactness gate above is
+        // what makes the three rows comparable
+        let mut rows = Vec::new();
+        for _ in 0..3 {
+            rows.push(run_load(engine, n_req, prompt_len, max_new, max_batch)?);
+        }
+        rows.sort_by(|a, b| b.0.total_cmp(&a.0));
+        let (tok_s, p50, p95, p99, reqs) = rows[0];
+        assert_eq!(reqs, n_req);
+        best[bi] = tok_s;
+        t.row(&[
+            engine.label().to_string(),
+            format!("{tok_s:.0}"),
+            format!("{p50:.3}"),
+            format!("{p95:.3}"),
+            format!("{p99:.3}"),
+            format!("{:.2}", bytes as f64 / (1024.0 * 1024.0)),
+        ]);
+    }
+    t.print();
+    println!(
+        "packed N:M vs CSR {:.2}x, vs dense {:.2}x",
+        best[2] / best[1].max(1e-12),
+        best[2] / best[0].max(1e-12),
+    );
+    assert!(
+        best[2] >= best[1],
+        "packed N:M decode ({:.0} tok/s) lost to CSR ({:.0} tok/s) at matched 2:4",
+        best[2],
+        best[1]
+    );
     Ok(())
 }

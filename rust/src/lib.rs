@@ -18,7 +18,8 @@
 //!   decode path ([`model::Decoder`]): per-token cost is O(context)
 //!   attention + O(1) weight matmuls instead of a full prefix re-forward.
 //!   The [`model::DecodeOps`] seam runs the same decode over dense
-//!   matrices or the CSR [`model::SparseModel`].
+//!   matrices, the CSR [`model::SparseModel`], or the packed N:M
+//!   [`sparse::NmModel`].
 //! * `serve` — continuous-batching generation engine (engine / batcher /
 //!   tcp / metrics) behind the `alps serve` CLI subcommand: batched
 //!   multi-row prompt prefill at admission and a threaded
@@ -27,6 +28,11 @@
 //!   architecture and wire protocol.
 //! * `linalg` — dense blocked/threaded matmul (thread count overridable
 //!   via `ALPS_THREADS`) and u32-indexed CSR kernels.
+//! * `sparse` — the packed semi-structured N:M format
+//!   ([`sparse::NmPacked`]: contiguous values, bit-packed in-group
+//!   indices, no indptr) and the [`sparse::NmModel`] decode backend
+//!   behind `alps serve --format nm`; bit-identical to the CSR path,
+//!   with per-layer CSR fallback for mixed checkpoints.
 //! * `net` — the shared TCP transport layer (bounded line reads,
 //!   length-prefixed binary frames, threaded accept loop with connection
 //!   cap and graceful shutdown drain) under both the serve front-end and
@@ -65,4 +71,5 @@ pub mod obs;
 pub mod pruning;
 pub mod runtime;
 pub mod serve;
+pub mod sparse;
 pub mod util;

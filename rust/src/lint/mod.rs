@@ -8,7 +8,7 @@
 //! 1. **Panic-freedom in server paths** ([`panics`]) — no `unwrap()` /
 //!    `expect()` / `panic!` / `unreachable!` / `todo!` / `unimplemented!`
 //!    in non-`#[cfg(test)]` code under the watched modules (`net/`,
-//!    `serve/`, `coordinator/`, `obs/`, and
+//!    `serve/`, `coordinator/`, `obs/`, `sparse/`, and
 //!    `pruning/{worker,wire,status,session}.rs`). A server that upholds
 //!    bit-identical distributed runs must refuse a connection, not abort
 //!    the process.
@@ -89,6 +89,7 @@ pub fn is_server_path(path: &str) -> bool {
         || path.starts_with("serve/")
         || path.starts_with("coordinator/")
         || path.starts_with("obs/")
+        || path.starts_with("sparse/")
         || matches!(
             path,
             "pruning/worker.rs" | "pruning/wire.rs" | "pruning/status.rs" | "pruning/session.rs"
@@ -217,6 +218,8 @@ mod tests {
         assert!(is_server_path("serve/tcp.rs"));
         assert!(is_server_path("coordinator/dispatch.rs"));
         assert!(is_server_path("obs/registry.rs"));
+        assert!(is_server_path("sparse/packed.rs"));
+        assert!(is_server_path("sparse/model.rs"));
         assert!(is_server_path("pruning/wire.rs"));
         assert!(!is_server_path("pruning/admm.rs"));
         assert!(!is_server_path("linalg/mod.rs"));

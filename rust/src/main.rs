@@ -7,8 +7,10 @@
 //!          perplexity on the three eval splits + 4 zero-shot tasks
 //!   layer  --model alps-base --layer mlp.w2 --sparsity 0.7 [--methods all]
 //!          single-layer reconstruction-error comparison (Fig. 2 row)
-//!   serve  --model alps-base --weights pruned.bin [--sparse] [--stdin]
-//!          continuous-batching generation server (see serve/mod.rs)
+//!   serve  --model alps-base --weights pruned.bin [--stdin]
+//!          [--format dense|csr|nm[:N:M]]  (--sparse = --format csr)
+//!          continuous-batching generation server (see serve/mod.rs);
+//!          `nm` serves the packed N:M format from `alps::sparse`
 //!   worker --addr 127.0.0.1:7979              distributed-pruning worker
 //!          (prune with --workers host:port,... to shard layer solves;
 //!           --status-addr exposes live progress over TCP)
@@ -413,16 +415,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     install_trace(args)?;
     let name = args.get("model", "alps-tiny");
     let model = if args.has("random") {
-        // synthetic weights: lets the server run without built artifacts
-        Model::random(ModelConfig::preset(&name)?, 0xA125)?
+        // synthetic weights: lets the server run without built artifacts;
+        // --weights still applies so smoke tests can serve a pruned
+        // checkpoint without shipping the full artifact set
+        let mut m = Model::random(ModelConfig::preset(&name)?, 0xA125)?;
+        if args.has("weights") {
+            m.weights = Weights::load(&PathBuf::from(args.get("weights", "")))?;
+        }
+        m
     } else {
         load_model(args)?
     };
-    let engine = if args.has("sparse") {
-        Engine::sparse(&model)?
-    } else {
-        Engine::dense(&model)?
-    };
+    let engine = build_engine(&model, args)?;
     let stop_token = match args.flags.get("stop") {
         Some(s) => Some(s.parse::<u16>().context("--stop token id")?),
         None => None,
@@ -451,6 +455,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
         serve_stdin(&engine, &params, cfg.max_batch)
     } else {
         serve_tcp(&engine, &params, &cfg, &args.get("addr", "127.0.0.1:7878"))
+    }
+}
+
+/// Pick the serving weight backend from `--format dense|csr|nm[:N:M]`
+/// (default dense; the older `--sparse` flag stays as a csr alias).
+/// Bare `nm` means 2:4; `nm:4:8` etc. selects another pattern.
+fn build_engine<'m>(model: &'m Model, args: &Args) -> Result<Engine<'m>> {
+    let format = if args.has("format") {
+        args.get("format", "dense")
+    } else if args.has("sparse") {
+        "csr".to_string()
+    } else {
+        "dense".to_string()
+    };
+    match format.as_str() {
+        "dense" => Engine::dense(model),
+        "csr" | "sparse" => Engine::sparse(model),
+        "nm" => Engine::nm(model, 2, 4),
+        f => match f.strip_prefix("nm:") {
+            Some(pat) => match SparsityTarget::parse(pat)? {
+                SparsityTarget::NM { n, m } => Engine::nm(model, n, m),
+                SparsityTarget::Unstructured(_) => {
+                    bail!("--format nm:<pattern> needs an N:M pattern, got '{pat}'")
+                }
+            },
+            None => bail!("unknown --format '{f}' (expected dense|csr|nm[:N:M])"),
+        },
     }
 }
 
@@ -630,7 +661,8 @@ fn usage() {
                  [--dsnot-cycles N]                            (dsnot)\n\
            eval  --model alps-base [--weights pruned.bin] [--items 50]\n\
            layer --model alps-base --block 0 --layer mlp.w2 --sparsity 0.7 [--methods all]\n\
-           serve --model alps-base [--weights pruned.bin] [--sparse] [--random]\n\
+           serve --model alps-base [--weights pruned.bin] [--random]\n\
+                 [--format dense|csr|nm[:N:M]] [--sparse (= --format csr)]\n\
                  [--addr 127.0.0.1:7878 | --stdin] [--max-batch 8] [--max-conns 64]\n\
                  [--max-line 65536] [--max-new 32] [--temperature 0] [--top-k 0] [--stop id]\n\
                  [--trace-out trace.jsonl]\n\

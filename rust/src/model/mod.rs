@@ -1,6 +1,12 @@
 //! The pruning target: a decoder-only transformer with rust-native
 //! inference (perplexity/zero-shot eval) and binary weight IO shared with
 //! the build-time python trainer.
+//!
+//! Decode-time weight access goes through the [`DecodeOps`] seam: the
+//! same [`Decoder`] runs over dense matrices ([`DenseOps`]), the CSR
+//! [`SparseModel`], or the packed N:M [`crate::sparse::NmModel`] — the
+//! backends are interchangeable and (for the two sparse ones)
+//! bit-identical, so exactness tests diff their outputs directly.
 
 pub mod sparse_infer;
 pub mod transformer;

@@ -44,6 +44,8 @@
 //! | `alps_serve_prefills_total` | counter | `serve::metrics` |
 //! | `alps_serve_prompt_tokens_total` | counter | `serve::metrics` |
 //! | `alps_serve_batch_occupancy` | gauge | `serve::metrics` |
+//! | `alps_serve_backend_layers` | gauge | `serve::engine` |
+//! | `alps_serve_weight_bytes` | gauge | `serve::engine` |
 //! | `alps_serve_step_seconds` | histogram | `serve::metrics` |
 //! | `alps_serve_request_seconds` | histogram | `serve::metrics` |
 //! | `alps_serve_prefill_seconds` | histogram | `serve::metrics` |

@@ -1,8 +1,14 @@
 //! Projection operators: exact global top-k (P_k of eq. 4) and the N:M
 //! group projection — the rust mirrors of the Layer-1 kernels.
+//!
+//! Every magnitude/score comparator here uses [`f32::total_cmp`]: a NaN
+//! weight or calibration score (possible with degenerate Hessians) sorts
+//! deterministically above every finite magnitude instead of panicking
+//! inside `sort`/`select_nth` the way `partial_cmp().unwrap()` did.
 
 use crate::config::SparsityTarget;
 use crate::linalg::Matrix;
+use anyhow::{ensure, Result};
 
 /// Exact Euclidean projection onto {||W||_0 <= k}: keep the k
 /// largest-magnitude entries (ties broken toward lower flat index, matching
@@ -19,13 +25,14 @@ pub fn topk_project(w: &Matrix, k: usize) -> Matrix {
     // threshold = k-th largest |value| via quickselect
     let mut mags: Vec<f32> = w.data.iter().map(|v| v.abs()).collect();
     let idx = total - k; // after ascending partition, elements [idx..] are top-k
-    let (_, thresh, _) = mags.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
+    let (_, thresh, _) = mags.select_nth_unstable_by(idx, |a, b| a.total_cmp(b));
     let thresh = *thresh;
     // keep strictly-above first, then fill remaining budget with ties in
-    // flat-index order (stable tie-break)
+    // flat-index order (stable tie-break); total_cmp keeps the two passes
+    // consistent with the select above when NaN magnitudes are present
     let mut kept = 0usize;
     for (i, &v) in w.data.iter().enumerate() {
-        if v.abs() > thresh {
+        if v.abs().total_cmp(&thresh).is_gt() {
             out.data[i] = v;
             kept += 1;
         }
@@ -36,7 +43,7 @@ pub fn topk_project(w: &Matrix, k: usize) -> Matrix {
             if kept == k {
                 break;
             }
-            if v.abs() == thresh && out.data[i] == 0.0 {
+            if v.abs().total_cmp(&thresh).is_eq() && out.data[i] == 0.0 {
                 // note: a genuine stored 0.0 with |0|==thresh only happens
                 // when thresh==0, where keeping zeros is harmless
                 out.data[i] = v;
@@ -54,9 +61,22 @@ pub fn topk_mask(w: &Matrix, k: usize) -> Matrix {
 
 /// N:M projection: within every group of `m` consecutive weights along the
 /// *input* dimension of each output column, keep the `n` largest magnitudes.
+///
+/// Panics when the pattern is malformed or `w.rows % m != 0`; callers that
+/// handle untrusted shapes (the serve path, checkpoint loaders) should use
+/// [`nm_project_checked`], which reports the same conditions as `Err`.
 pub fn nm_project(w: &Matrix, n: usize, m: usize) -> Matrix {
-    assert!(n <= m && m > 0, "bad N:M {n}:{m}");
-    assert_eq!(w.rows % m, 0, "n_in {} not divisible by M {}", w.rows, m);
+    match nm_project_checked(w, n, m) {
+        Ok(out) => out,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// [`nm_project`] with the shape preconditions surfaced as `Result`
+/// instead of panics: requires `0 < m`, `n <= m`, and `w.rows % m == 0`.
+pub fn nm_project_checked(w: &Matrix, n: usize, m: usize) -> Result<Matrix> {
+    ensure!(m > 0 && n <= m, "bad N:M {n}:{m}");
+    ensure!(w.rows % m == 0, "n_in {} not divisible by M {}", w.rows, m);
     let mut out = Matrix::zeros(w.rows, w.cols);
     let mut order: Vec<usize> = Vec::with_capacity(m);
     for c in 0..w.cols {
@@ -67,14 +87,14 @@ pub fn nm_project(w: &Matrix, n: usize, m: usize) -> Matrix {
             order.sort_by(|&a, &b| {
                 let ma = w.at(g0 + a, c).abs();
                 let mb = w.at(g0 + b, c).abs();
-                mb.partial_cmp(&ma).unwrap().then(a.cmp(&b))
+                mb.total_cmp(&ma).then(a.cmp(&b))
             });
             for &o in order.iter().take(n) {
                 *out.at_mut(g0 + o, c) = w.at(g0 + o, c);
             }
         }
     }
-    out
+    Ok(out)
 }
 
 /// Project according to a [`SparsityTarget`].
@@ -106,11 +126,7 @@ pub fn project_by_score(
                 for g0 in (0..w.rows).step_by(m) {
                     let mut order: Vec<usize> = (0..m).collect();
                     order.sort_by(|&a, &b| {
-                        scores
-                            .at(g0 + b, c)
-                            .partial_cmp(&scores.at(g0 + a, c))
-                            .unwrap()
-                            .then(a.cmp(&b))
+                        scores.at(g0 + b, c).total_cmp(&scores.at(g0 + a, c)).then(a.cmp(&b))
                     });
                     for &o in order.iter().take(n) {
                         *out.at_mut(g0 + o, c) = w.at(g0 + o, c);
@@ -128,7 +144,7 @@ pub fn project_by_score(
                 for c in 0..w.cols {
                     let mut order: Vec<usize> = (0..w.rows).collect();
                     order.sort_by(|&a, &b| {
-                        scores.at(b, c).partial_cmp(&scores.at(a, c)).unwrap().then(a.cmp(&b))
+                        scores.at(b, c).total_cmp(&scores.at(a, c)).then(a.cmp(&b))
                     });
                     for &r in order.iter().take(keep_per_col) {
                         *out.at_mut(r, c) = w.at(r, c);
@@ -138,7 +154,7 @@ pub fn project_by_score(
                 let k = target.keep_count(w.rows, w.cols);
                 let mut order: Vec<usize> = (0..w.data.len()).collect();
                 order.sort_by(|&a, &b| {
-                    scores.data[b].partial_cmp(&scores.data[a]).unwrap().then(a.cmp(&b))
+                    scores.data[b].total_cmp(&scores.data[a]).then(a.cmp(&b))
                 });
                 for &i in order.iter().take(k) {
                     out.data[i] = w.data[i];
@@ -253,6 +269,47 @@ mod tests {
         // each column keeps its top 2
         assert_eq!(p.col(0), vec![0.0, 0.0, 3.0, 4.0]);
         assert_eq!(p.col(1), vec![0.0, 0.0, 30.0, 40.0]);
+    }
+
+    #[test]
+    fn nm_checked_rejects_bad_shapes() {
+        let w = Matrix::from_vec(6, 1, vec![1., 2., 3., 4., 5., 6.]);
+        assert!(nm_project_checked(&w, 2, 4).is_err(), "6 rows not divisible by 4");
+        assert!(nm_project_checked(&w, 3, 2).is_err(), "n > m");
+        assert!(nm_project_checked(&w, 1, 0).is_err(), "m == 0");
+        let ok = nm_project_checked(&w, 1, 2).unwrap();
+        assert_eq!(ok, nm_project(&w, 1, 2));
+    }
+
+    #[test]
+    fn nan_weights_do_not_panic_and_sort_first() {
+        // total_cmp: |NaN| is the largest magnitude class, so a NaN weight
+        // is deterministically *kept* rather than crashing the comparator.
+        let w = Matrix::from_vec(4, 1, vec![1.0, f32::NAN, 3.0, 0.5]);
+        let p = nm_project(&w, 2, 4);
+        assert!(p.data[1].is_nan());
+        assert_eq!(p.data[2], 3.0);
+        assert_eq!(p.data[0], 0.0);
+        assert_eq!(p.data[3], 0.0);
+
+        // top-k select_nth path with a NaN present
+        let t = topk_project(&w, 2);
+        assert!(t.data[1].is_nan());
+        assert_eq!(t.data[2], 3.0);
+    }
+
+    #[test]
+    fn nan_scores_do_not_panic() {
+        let w = Matrix::from_vec(4, 1, vec![1., 2., 3., 4.]);
+        let s = Matrix::from_vec(4, 1, vec![f32::NAN, 1.0, 2.0, f32::NAN]);
+        // positive NaN sorts above every finite score under total_cmp, so
+        // both NaN-scored slots win the 2:4 budget — deterministically.
+        let p = project_by_score(&w, &s, SparsityTarget::NM { n: 2, m: 4 }, true);
+        assert_eq!(p.data, vec![1.0, 0.0, 0.0, 4.0]);
+        let g = project_by_score(&w, &s, SparsityTarget::Unstructured(0.5), false);
+        assert_eq!(g.data, vec![1.0, 0.0, 0.0, 4.0]);
+        let c = project_by_score(&w, &s, SparsityTarget::Unstructured(0.5), true);
+        assert_eq!(c.data, vec![1.0, 0.0, 0.0, 4.0]);
     }
 
     #[test]

@@ -1,7 +1,11 @@
-//! Generation engine: sampling + a dense-or-sparse decode backend behind
-//! one type, so the batcher and CLI never care which weight format serves.
+//! Generation engine: sampling + a dense / CSR / packed-N:M decode
+//! backend behind one type, so the batcher and CLI never care which
+//! weight format serves. Construction registers the
+//! `alps_serve_backend_layers` / `alps_serve_weight_bytes` gauges
+//! (labelled by format) so scrapes show what backend is live.
 
 use crate::model::{DecodeOps, Decoder, DenseOps, Model, SparseModel};
+use crate::sparse::NmModel;
 use crate::util::{Rng, Timer};
 use anyhow::Result;
 
@@ -82,6 +86,26 @@ pub struct Generation {
     pub total_secs: f64,
 }
 
+/// Record which weight format an engine serves and what it costs: one
+/// `{format=...}` series per backend, set at construction. A scrape of
+/// any serving process shows the live backend and its prunable-weight
+/// footprint next to the `alps_serve_*` traffic counters.
+fn set_format_gauges(format: &'static str, layers: usize, weight_bytes: usize) {
+    let r = crate::obs::global();
+    r.gauge(
+        "alps_serve_backend_layers",
+        "prunable layers held by the serving weight backend",
+        &[("format", format)],
+    )
+    .set(layers as f64);
+    r.gauge(
+        "alps_serve_weight_bytes",
+        "prunable-weight footprint of the serving weight backend",
+        &[("format", format)],
+    )
+    .set(weight_bytes as f64);
+}
+
 /// Generation engine over one model with a fixed weight backend.
 pub struct Engine<'m> {
     decoder: DynDecoder<'m>,
@@ -91,6 +115,12 @@ pub struct Engine<'m> {
 impl<'m> Engine<'m> {
     /// Serve from dense weights (pre-resolved once, no per-step clones).
     pub fn dense(model: &'m Model) -> Result<Engine<'m>> {
+        let names = model.prunable_names();
+        let bytes = names
+            .iter()
+            .map(|n| model.weights.get(n).map(|t| t.numel() * 4).unwrap_or(0))
+            .sum();
+        set_format_gauges("dense", names.len(), bytes);
         let ops: Box<dyn DecodeOps + Send + Sync + 'm> = Box::new(DenseOps::new(model)?);
         Ok(Engine { decoder: Decoder::new(model, ops)?, label: "dense".to_string() })
     }
@@ -100,7 +130,21 @@ impl<'m> Engine<'m> {
     pub fn sparse(model: &'m Model) -> Result<Engine<'m>> {
         let sm = SparseModel::from_model(model)?;
         let label = format!("sparse(d={:.2})", sm.density());
+        set_format_gauges("csr", model.prunable_names().len(), sm.bytes_sparse_vs_dense().0);
         let ops: Box<dyn DecodeOps + Send + Sync + 'm> = Box::new(sm);
+        Ok(Engine { decoder: Decoder::new(model, ops)?, label })
+    }
+
+    /// Serve from packed N:M prunable weights ([`crate::sparse`]) — the
+    /// semi-structured deployment path for what `--sparsity N:M` prunes.
+    /// Layers that are not N:M-conformant fall back to CSR per layer
+    /// (the label reports the split), so mixed checkpoints serve; packed
+    /// layers decode bit-identically to the CSR backend.
+    pub fn nm(model: &'m Model, n: usize, m: usize) -> Result<Engine<'m>> {
+        let nm = NmModel::from_model(model, n, m)?;
+        let label = format!("nm({n}:{m}, {}/{} packed)", nm.packed_layers(), nm.layer_count());
+        set_format_gauges("nm", nm.layer_count(), nm.bytes_packed_vs_dense().0);
+        let ops: Box<dyn DecodeOps + Send + Sync + 'm> = Box::new(nm);
         Ok(Engine { decoder: Decoder::new(model, ops)?, label })
     }
 
@@ -179,6 +223,27 @@ mod tests {
         let a = de.generate(&[4, 2], &p, 0).unwrap();
         let b = se.generate(&[4, 2], &p, 0).unwrap();
         assert_eq!(a.tokens, b.tokens);
+    }
+
+    #[test]
+    fn nm_engine_matches_csr_engine_bitwise() {
+        let mut m = random_model(25);
+        for name in m.prunable_names() {
+            let w = m.weights.matrix(&name).unwrap();
+            let nm = crate::pruning::projection::nm_project(&w, 2, 4);
+            m.weights.set_matrix(&name, &nm).unwrap();
+        }
+        let ce = Engine::sparse(&m).unwrap();
+        let ne = Engine::nm(&m, 2, 4).unwrap();
+        // 2 blocks x 6 prunable layers, all 2:4-conformant
+        assert_eq!(ne.label(), "nm(2:4, 12/12 packed)");
+        let p = SamplingParams { max_new_tokens: 6, ..Default::default() };
+        let a = ce.generate(&[4, 2, 9], &p, 0).unwrap();
+        let b = ne.generate(&[4, 2, 9], &p, 0).unwrap();
+        assert_eq!(a.tokens, b.tokens);
+        // dense agrees greedily too (float-tolerant path, same argmax)
+        let de = Engine::dense(&m).unwrap();
+        assert_eq!(de.generate(&[4, 2, 9], &p, 0).unwrap().tokens, b.tokens);
     }
 
     #[test]

@@ -8,10 +8,15 @@
 //! * [`engine`] — token-level generation over the incremental KV-cache
 //!   decode path ([`crate::model::Decoder`]): greedy and temperature/top-k
 //!   sampling via the deterministic [`crate::util::Rng`]. One [`Engine`]
-//!   wraps either the dense weight backend or the CSR
-//!   [`crate::model::SparseModel`] backend behind the same
-//!   [`crate::model::DecodeOps`] seam; backends are `Send + Sync` so one
-//!   engine is shared by reference across server threads.
+//!   wraps the dense weight backend, the CSR
+//!   [`crate::model::SparseModel`], or the packed N:M
+//!   [`crate::sparse::NmModel`] (strided semi-structured kernels,
+//!   bit-identical to CSR, per-layer CSR fallback for mixed
+//!   checkpoints) behind the same [`crate::model::DecodeOps`] seam;
+//!   backends are `Send + Sync` so one engine is shared by reference
+//!   across server threads. Construction sets the
+//!   `alps_serve_backend_layers` / `alps_serve_weight_bytes` gauges
+//!   (labelled `format=dense|csr|nm`).
 //! * [`batcher`] — a FIFO request queue with **continuous batching**:
 //!   between decode steps, finished sequences are evicted and queued
 //!   requests admitted, so the batch stays full without waiting for the
@@ -51,11 +56,19 @@
 //! ## CLI
 //!
 //! ```text
-//! alps serve --model alps-base --weights pruned.bin [--sparse]
+//! alps serve --model alps-base --weights pruned.bin
+//!            [--format dense|csr|nm[:N:M]] [--sparse]
 //!            [--addr 127.0.0.1:7878] [--stdin] [--random]
 //!            [--max-batch 8] [--max-conns 64] [--max-line 65536]
 //!            [--max-new 32] [--temperature 0.0] [--top-k 0]
 //! ```
+//!
+//! `--format` picks the weight backend: `dense`, `csr` (alias of the
+//! older `--sparse` flag), or `nm` for the packed N:M path (`nm` alone
+//! means 2:4; `nm:4:8` etc. selects the pattern — non-conformant layers
+//! fall back to CSR per layer). CSR and packed N:M produce bit-identical
+//! token streams, so serving the same checkpoint under both formats and
+//! diffing outputs is a valid (and CI-exercised) correctness check.
 //!
 //! Two std-only front-ends:
 //!

@@ -1,0 +1,40 @@
+//! `sparse` — the packed semi-structured N:M weight subsystem: the
+//! serving-side format for what ALPS prunes.
+//!
+//! The paper's headline deployable artifact is N:M sparsity (the 2:4
+//! results): exactly N kept weights in every group of M consecutive
+//! inputs of each output column. The pruning tier already *produces*
+//! those masks ([`crate::pruning::projection::nm_project`],
+//! `bench_table3_nm`); this module lets the serving tier *execute* them
+//! as N:M instead of paying generic-CSR bookkeeping for a format whose
+//! whole point is fixed, predictable structure:
+//!
+//! * [`packed`] — [`NmPacked`]: values stored contiguously per output
+//!   column, in-group indices bit-packed (2 bits each for 2:4), no
+//!   indptr, perfectly strided group-wise gather kernels. Validated
+//!   conversions from masked dense and from [`crate::linalg::Csr`],
+//!   plus [`NmPacked::from_parts`] for untrusted buffers. Kernels are
+//!   **bit-identical** to the CSR kernels (same ascending accumulation
+//!   order — the repo's standing exactness discipline).
+//! * [`model`] — [`NmModel`]: every prunable matrix packed, with a
+//!   per-layer CSR fallback for non-conformant layers so mixed
+//!   checkpoints serve. Implements [`crate::model::DecodeOps`], so the
+//!   whole serve stack (decoder, batcher, TCP front-end) runs on it
+//!   unchanged via `alps serve --format nm` /
+//!   [`crate::serve::Engine::nm`].
+//!
+//! `bench_serve` races dense vs CSR vs packed N:M at matched 2:4
+//! sparsity, and `bench_perf_hotpath` tracks the kernel-level gap in
+//! `BENCH_perf.json`.
+//!
+//! This is a server path: `alps-lint` rule 1 (panic-freedom) applies,
+//! and conversion errors surface as `Result`s — a malformed checkpoint
+//! must be refused, not abort the process.
+
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
+pub mod model;
+pub mod packed;
+
+pub use model::{NmModel, NmWeight};
+pub use packed::NmPacked;

@@ -1,0 +1,205 @@
+//! Model-level packing: every prunable matrix held as [`NmPacked`],
+//! with a per-layer CSR fallback so mixed checkpoints (some layers
+//! N:M-pruned, some unstructured or dense) still serve through the same
+//! backend. Implements [`DecodeOps`], so [`crate::model::Decoder`],
+//! `prefill_batch`, the batcher, and the TCP front-end run unchanged.
+//!
+//! Exactness contract: a packed layer's kernels are bit-identical to
+//! the CSR kernels on the same weights (see [`super::packed`]), and a
+//! fallback layer *is* CSR — so an [`NmModel`] decode is bit-identical
+//! to [`crate::model::SparseModel`] end to end, whatever mix of layers
+//! packed. The integration suite pins this at the single-step,
+//! `prefill_batch`, and full-generation levels.
+
+use super::packed::NmPacked;
+use crate::linalg::{Csr, Matrix};
+use crate::model::{DecodeOps, Model};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// One prunable layer in the packed model: the strided N:M format when
+/// the layer conforms, generic CSR otherwise.
+pub enum NmWeight {
+    Packed(NmPacked),
+    Csr(Csr),
+}
+
+/// A model with prunable matrices packed as N:M (CSR per-layer fallback).
+pub struct NmModel<'m> {
+    pub model: &'m Model,
+    weights: HashMap<String, NmWeight>,
+    n: usize,
+    m: usize,
+}
+
+impl<'m> NmModel<'m> {
+    /// Pack every prunable matrix as `n`:`m`; a layer that is not
+    /// N:M-conformant (or whose input dim is not divisible by `m`)
+    /// falls back to CSR instead of failing the whole model, so a
+    /// mixed checkpoint serves. [`NmModel::packed_layers`] reports how
+    /// many layers took the packed path.
+    pub fn from_model(model: &'m Model, n: usize, m: usize) -> Result<Self> {
+        let mut weights = HashMap::new();
+        for name in model.prunable_names() {
+            let w = model.weights.matrix(&name)?;
+            let weight = match NmPacked::from_dense(&w, n, m) {
+                Ok(p) => NmWeight::Packed(p),
+                Err(_) => NmWeight::Csr(Csr::from_dense(&w)),
+            };
+            weights.insert(name, weight);
+        }
+        Ok(NmModel { model, weights, n, m })
+    }
+
+    /// The target pattern this model was packed against.
+    pub fn pattern(&self) -> (usize, usize) {
+        (self.n, self.m)
+    }
+
+    /// Layers that took the packed N:M path (the rest serve as CSR).
+    pub fn packed_layers(&self) -> usize {
+        self.weights.values().filter(|w| matches!(w, NmWeight::Packed(_))).count()
+    }
+
+    pub fn layer_count(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Weighted mean density over the prunable matrices.
+    pub fn density(&self) -> f64 {
+        let (mut nnz, mut total) = (0usize, 0usize);
+        for w in self.weights.values() {
+            let (z, rc) = match w {
+                NmWeight::Packed(p) => (p.nnz(), p.rows * p.cols),
+                NmWeight::Csr(c) => (c.nnz(), c.rows * c.cols),
+            };
+            nnz += z;
+            total += rc;
+        }
+        nnz as f64 / total.max(1) as f64
+    }
+
+    /// Memory footprint of the packed prunable weights in bytes
+    /// (packed-or-CSR per layer) vs dense f32.
+    pub fn bytes_packed_vs_dense(&self) -> (usize, usize) {
+        let (mut packed, mut dense) = (0usize, 0usize);
+        for w in self.weights.values() {
+            let (b, rc) = match w {
+                NmWeight::Packed(p) => (p.bytes(), p.rows * p.cols),
+                NmWeight::Csr(c) => (c.bytes(), c.rows * c.cols),
+            };
+            packed += b;
+            dense += rc * 4;
+        }
+        (packed, dense)
+    }
+
+    fn weight(&self, name: &str) -> Result<&NmWeight> {
+        self.weights.get(name).ok_or_else(|| anyhow!("no packed weight for '{name}'"))
+    }
+}
+
+/// Packed decode backend: the single-row gather kernel for unbatched
+/// decode, `left_matmul` for batched decode steps and the multi-row
+/// `Decoder::prefill_batch` passes — the same routing as the CSR
+/// backend, with bit-identical results.
+impl DecodeOps for NmModel<'_> {
+    fn apply(&self, name: &str, x: &Matrix) -> Result<Matrix> {
+        match self.weight(name)? {
+            NmWeight::Packed(p) => Ok(if x.rows == 1 {
+                Matrix::from_vec(1, p.cols, p.row_matvec(x.row(0)))
+            } else {
+                p.left_matmul(x)
+            }),
+            NmWeight::Csr(c) => Ok(if x.rows == 1 {
+                Matrix::from_vec(1, c.cols, c.row_matvec(x.row(0)))
+            } else {
+                c.left_matmul(x)
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::transformer::testutil::random_model;
+    use crate::model::{Decoder, SparseModel};
+    use crate::pruning::projection::nm_project;
+
+    fn nm_pruned(seed: u64) -> Model {
+        let mut m = random_model(seed);
+        for name in m.prunable_names() {
+            let w = m.weights.matrix(&name).unwrap();
+            m.weights.set_matrix(&name, &nm_project(&w, 2, 4)).unwrap();
+        }
+        m
+    }
+
+    #[test]
+    fn conformant_model_packs_every_layer() {
+        let m = nm_pruned(30);
+        let nm = NmModel::from_model(&m, 2, 4).unwrap();
+        assert_eq!(nm.packed_layers(), nm.layer_count());
+        assert_eq!(nm.layer_count(), m.prunable_names().len());
+        assert!((nm.density() - 0.5).abs() < 0.05, "2:4 density {}", nm.density());
+        let (packed, dense) = nm.bytes_packed_vs_dense();
+        assert!(packed < dense * 6 / 10, "packed {packed} vs dense {dense}");
+    }
+
+    #[test]
+    fn mixed_checkpoint_falls_back_per_layer() {
+        // leave the dense random weights on all but one layer: only the
+        // projected layer conforms, the rest must serve as CSR
+        let mut m = random_model(31);
+        let name = "blocks.0.mlp.w1";
+        let w = m.weights.matrix(name).unwrap();
+        m.weights.set_matrix(name, &nm_project(&w, 2, 4)).unwrap();
+        let nm = NmModel::from_model(&m, 2, 4).unwrap();
+        assert_eq!(nm.packed_layers(), 1);
+        assert_eq!(nm.layer_count(), m.prunable_names().len());
+        // and the mixed backend still decodes bit-identically to CSR
+        let sdec = Decoder::new(&m, SparseModel::from_model(&m).unwrap()).unwrap();
+        let ndec = Decoder::new(&m, NmModel::from_model(&m, 2, 4).unwrap()).unwrap();
+        let mut sc = sdec.new_cache();
+        let mut nc = ndec.new_cache();
+        for &tok in &[2u16, 7, 1, 9] {
+            let a = sdec.step(&mut sc, tok).unwrap();
+            let b = ndec.step(&mut nc, tok).unwrap();
+            assert_eq!(a, b, "mixed packed/CSR decode diverged from CSR");
+        }
+    }
+
+    #[test]
+    fn packed_decode_bit_identical_to_csr() {
+        let m = nm_pruned(32);
+        let sdec = Decoder::new(&m, SparseModel::from_model(&m).unwrap()).unwrap();
+        let ndec = Decoder::new(&m, NmModel::from_model(&m, 2, 4).unwrap()).unwrap();
+        let ids = [2u16, 7, 1, 9, 4, 3];
+        // batched prefill, then stepwise decode: exact equality throughout
+        let mut sc = sdec.new_cache();
+        let mut nc = ndec.new_cache();
+        let a = sdec.prefill_batch(&mut sc, &ids).unwrap();
+        let b = ndec.prefill_batch(&mut nc, &ids).unwrap();
+        assert_eq!(a, b, "prefill_batch diverged bitwise");
+        for &tok in &[5u16, 11, 0] {
+            let a = sdec.step(&mut sc, tok).unwrap();
+            let b = ndec.step(&mut nc, tok).unwrap();
+            assert_eq!(a, b, "decode step diverged bitwise");
+        }
+    }
+
+    #[test]
+    fn missing_weight_rejected() {
+        let m = nm_pruned(33);
+        let nm = NmModel::from_model(&m, 2, 4).unwrap();
+        assert!(nm.apply("nope", &Matrix::zeros(1, 16)).is_err());
+    }
+
+    #[test]
+    fn pattern_is_recorded() {
+        let m = nm_pruned(34);
+        let nm = NmModel::from_model(&m, 2, 4).unwrap();
+        assert_eq!(nm.pattern(), (2, 4));
+    }
+}

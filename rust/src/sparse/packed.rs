@@ -1,0 +1,485 @@
+//! The packed N:M weight representation: exactly `n` stored slots per
+//! group of `m` consecutive input rows of each output column, matching
+//! the grouping of [`crate::pruning::projection::nm_project`].
+//!
+//! Layout (the whole point — no indptr, perfectly strided access):
+//!
+//! * `values` — column-major slot stream, `cols * groups * n` f32s at
+//!   slot `s = (c * groups + g) * n + j`, so the decode gather for one
+//!   output column reads its values sequentially.
+//! * `idx` — in-group row offsets, bit-packed into `u64` words at
+//!   `bits = ceil(log2(m))` rounded up to a power of two (2 bits for
+//!   2:4), so a packed index never straddles a word boundary: slot `s`
+//!   lives at bit offset `s * bits`.
+//!
+//! A group holding fewer than `n` nonzeros is padded with `0.0` values
+//! at the smallest unused in-group offsets; within every group the `n`
+//! stored offsets are strictly ascending ([`NmPacked::from_parts`]
+//! validates this, rejecting malformed or truncated buffers).
+//!
+//! ## Bit-identity with the CSR kernels
+//!
+//! [`Csr::row_matvec`] accumulates into `y[c]` over ascending input row
+//! `r`, skipping rows where the activation is exactly `0.0` (and CSR
+//! never stores a zero value). The gather kernels here visit each
+//! column's entries in ascending `r` (groups ascend, in-group offsets
+//! ascend) and skip both zero activations and padded zero values, so
+//! per output column the f32 additions happen in the identical order on
+//! the identical terms — the outputs are bit-identical, which is what
+//! lets `bench_serve` and the serve CLI diff token streams across
+//! backends.
+
+use crate::linalg::{Csr, Matrix};
+use anyhow::{ensure, Result};
+
+/// Packed N:M sparse matrix (`rows` = input dim, `cols` = output dim).
+#[derive(Clone, Debug, PartialEq)]
+pub struct NmPacked {
+    pub rows: usize,
+    pub cols: usize,
+    pub n: usize,
+    pub m: usize,
+    /// Bit width of one packed in-group index (1, 2, 4, or 8).
+    bits: usize,
+    /// Slot values, `cols * (rows / m) * n` entries, column-major.
+    values: Vec<f32>,
+    /// Bit-packed in-group indices, `ceil(slots * bits / 64)` words.
+    idx: Vec<u64>,
+}
+
+/// Index width for group size `m`: `ceil(log2(m))` rounded up to a
+/// power of two, so `64 % bits == 0` and no index straddles a word.
+fn index_bits(m: usize) -> usize {
+    let need = usize::BITS as usize - (m - 1).leading_zeros() as usize;
+    match need {
+        0 | 1 => 1,
+        2 => 2,
+        3 | 4 => 4,
+        _ => 8,
+    }
+}
+
+fn idx_words(slots: usize, bits: usize) -> usize {
+    (slots * bits).div_ceil(64)
+}
+
+fn validate_pattern(rows: usize, cols: usize, n: usize, m: usize) -> Result<()> {
+    ensure!((2..=256).contains(&m), "N:M group size M must be in 2..=256, got {m}");
+    ensure!(n <= m, "bad N:M pattern {n}:{m} — N must be <= M");
+    ensure!(cols > 0, "matrix has no output columns");
+    ensure!(
+        rows % m == 0,
+        "input dim {rows} not divisible by M={m} — layer cannot pack as {n}:{m}"
+    );
+    Ok(())
+}
+
+impl NmPacked {
+    /// Pack a dense matrix that conforms to the N:M pattern (at most `n`
+    /// nonzeros in every group of `m` consecutive rows per column, e.g.
+    /// the output of `nm_project`). Errors on shape or pattern
+    /// violations instead of panicking — the serving path packs
+    /// untrusted checkpoints and must refuse, not abort.
+    pub fn from_dense(w: &Matrix, n: usize, m: usize) -> Result<NmPacked> {
+        validate_pattern(w.rows, w.cols, n, m)?;
+        let (bits, groups) = (index_bits(m), w.rows / m);
+        let slots = w.cols * groups * n;
+        let mut values = vec![0.0f32; slots];
+        let mut idx = vec![0u64; idx_words(slots, bits)];
+        let mut entries: Vec<(usize, f32)> = Vec::with_capacity(m);
+        for c in 0..w.cols {
+            for g in 0..groups {
+                let g0 = g * m;
+                entries.clear();
+                for j in 0..m {
+                    let v = w.at(g0 + j, c);
+                    if v != 0.0 {
+                        entries.push((j, v));
+                    }
+                }
+                ensure!(
+                    entries.len() <= n,
+                    "column {c} rows {g0}..{} hold {} nonzeros — not {n}:{m}-sparse",
+                    g0 + m,
+                    entries.len()
+                );
+                pad_group(&mut entries, n, m);
+                store_group(&mut values, &mut idx, bits, (c * groups + g) * n, &entries);
+            }
+        }
+        Ok(NmPacked { rows: w.rows, cols: w.cols, n, m, bits, values, idx })
+    }
+
+    /// Pack directly from a CSR matrix (same validation as
+    /// [`NmPacked::from_dense`], without materializing a dense copy).
+    pub fn from_csr(a: &Csr, n: usize, m: usize) -> Result<NmPacked> {
+        validate_pattern(a.rows, a.cols, n, m)?;
+        let (bits, groups) = (index_bits(m), a.rows / m);
+        // bucket entries by (column, group); ascending-row iteration
+        // keeps every bucket's in-group offsets ascending
+        let mut buckets: Vec<Vec<(usize, f32)>> = vec![Vec::new(); a.cols * groups];
+        for r in 0..a.rows {
+            let (g, j) = (r / m, r % m);
+            for i in a.row_range(r) {
+                let v = a.values[i];
+                if v != 0.0 {
+                    buckets[a.indices[i] as usize * groups + g].push((j, v));
+                }
+            }
+        }
+        let slots = a.cols * groups * n;
+        let mut values = vec![0.0f32; slots];
+        let mut idx = vec![0u64; idx_words(slots, bits)];
+        for (b, entries) in buckets.iter_mut().enumerate() {
+            let (c, g) = (b / groups, b % groups);
+            ensure!(
+                entries.len() <= n,
+                "column {c} rows {}..{} hold {} nonzeros — not {n}:{m}-sparse",
+                g * m,
+                g * m + m,
+                entries.len()
+            );
+            pad_group(entries, n, m);
+            store_group(&mut values, &mut idx, bits, b * n, entries);
+        }
+        Ok(NmPacked { rows: a.rows, cols: a.cols, n, m, bits, values, idx })
+    }
+
+    /// Reassemble from raw buffers (the wire/mmap direction), validating
+    /// everything a hostile or truncated input could violate: buffer
+    /// lengths must match the shape exactly, every in-group index must
+    /// be `< m` and strictly ascending within its group, and bits past
+    /// the last packed index must be zero (canonical form — equal
+    /// matrices have equal buffers).
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        n: usize,
+        m: usize,
+        values: Vec<f32>,
+        idx: Vec<u64>,
+    ) -> Result<NmPacked> {
+        validate_pattern(rows, cols, n, m)?;
+        let (bits, groups) = (index_bits(m), rows / m);
+        let slots = cols * groups * n;
+        ensure!(
+            values.len() == slots,
+            "value buffer holds {} slots, shape needs {slots}",
+            values.len()
+        );
+        let want = idx_words(slots, bits);
+        ensure!(idx.len() == want, "index buffer holds {} words, shape needs {want}", idx.len());
+        let used_bits = slots * bits;
+        if used_bits % 64 != 0 {
+            let tail = idx[used_bits >> 6] >> (used_bits & 63);
+            ensure!(tail == 0, "index buffer carries nonzero bits past the last packed slot");
+        }
+        let p = NmPacked { rows, cols, n, m, bits, values, idx };
+        for c in 0..cols {
+            for g in 0..groups {
+                let mut prev: Option<usize> = None;
+                for j in 0..n {
+                    let gi = p.idx_at((c * groups + g) * n + j);
+                    ensure!(gi < m, "in-group index {gi} out of range for M={m}");
+                    if let Some(prev) = prev {
+                        ensure!(
+                            gi > prev,
+                            "in-group indices must be strictly ascending \
+                             (column {c}, group {g}: {prev} then {gi})"
+                        );
+                    }
+                    prev = Some(gi);
+                }
+            }
+        }
+        Ok(p)
+    }
+
+    /// In-group index of slot `s`. `bits` divides 64, so the index sits
+    /// wholly inside one word.
+    #[inline]
+    fn idx_at(&self, s: usize) -> usize {
+        let off = s * self.bits;
+        (self.idx[off >> 6] >> (off & 63)) as usize & ((1 << self.bits) - 1)
+    }
+
+    pub fn groups(&self) -> usize {
+        self.rows / self.m
+    }
+
+    /// Stored nonzeros (padding slots hold `0.0` and do not count).
+    pub fn nnz(&self) -> usize {
+        self.values.iter().filter(|v| **v != 0.0).count()
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.rows * self.cols).max(1) as f64
+    }
+
+    /// Bytes of the packed representation (f32 slot values + bit-packed
+    /// index words). For 2:4 this is 4.25 bytes per kept weight vs CSR's
+    /// 8 + indptr.
+    pub fn bytes(&self) -> usize {
+        self.values.len() * 4 + self.idx.len() * 8
+    }
+
+    pub fn to_dense(&self) -> Matrix {
+        let groups = self.groups();
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for c in 0..self.cols {
+            for g in 0..groups {
+                for j in 0..self.n {
+                    let s = (c * groups + g) * self.n + j;
+                    let v = self.values[s];
+                    if v != 0.0 {
+                        *out.at_mut(g * self.m + self.idx_at(s), c) = v;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// y = x W for a single activation row x (len == `rows`) — the
+    /// KV-cache decode shape. Gather form: one output column at a time,
+    /// streaming its `groups * n` value slots sequentially; each `y[c]`
+    /// is written exactly once. Bit-identical to [`Csr::row_matvec`]
+    /// (see the module doc for the accumulation-order argument).
+    pub fn row_matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.rows);
+        let groups = self.groups();
+        let mask = (1usize << self.bits) - 1;
+        let mut y = vec![0.0f32; self.cols];
+        for (c, yc) in y.iter_mut().enumerate() {
+            let base = c * groups * self.n;
+            let mut acc = 0.0f32;
+            for g in 0..groups {
+                let g0 = g * self.m;
+                for j in 0..self.n {
+                    let s = base + g * self.n + j;
+                    let v = self.values[s];
+                    if v == 0.0 {
+                        continue; // padding slot — CSR stores no zeros
+                    }
+                    let off = s * self.bits;
+                    let xv = x[g0 + ((self.idx[off >> 6] >> (off & 63)) as usize & mask)];
+                    if xv == 0.0 {
+                        continue; // match the CSR zero-activation skip
+                    }
+                    acc += xv * v;
+                }
+            }
+            *yc = acc;
+        }
+        y
+    }
+
+    /// Dense @ packed: Y = X W (shape `x.cols == rows`) — the batched
+    /// decode / prefill shape. Each output row reproduces the
+    /// single-row kernel exactly, so this is bit-identical to
+    /// [`Csr::left_matmul`] row by row.
+    pub fn left_matmul(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.rows);
+        let mut y = Matrix::zeros(x.rows, self.cols);
+        for t in 0..x.rows {
+            y.row_mut(t).copy_from_slice(&self.row_matvec(x.row(t)));
+        }
+        y
+    }
+}
+
+/// Extend an ascending `(in-group index, value)` list to exactly `n`
+/// entries by inserting `0.0` at the smallest unused offsets, keeping
+/// the index order strictly ascending.
+fn pad_group(entries: &mut Vec<(usize, f32)>, n: usize, m: usize) {
+    if entries.len() == n {
+        return;
+    }
+    let mut used = [false; 256];
+    for &(j, _) in entries.iter() {
+        used[j] = true;
+    }
+    for (j, used) in used.iter().enumerate().take(m) {
+        if entries.len() == n {
+            break;
+        }
+        if !used {
+            entries.push((j, 0.0));
+        }
+    }
+    entries.sort_unstable_by_key(|&(j, _)| j);
+}
+
+/// Write one padded group's `n` entries at slot offset `s0`.
+fn store_group(
+    values: &mut [f32],
+    idx: &mut [u64],
+    bits: usize,
+    s0: usize,
+    entries: &[(usize, f32)],
+) {
+    for (j, &(gi, v)) in entries.iter().enumerate() {
+        let s = s0 + j;
+        values[s] = v;
+        let off = s * bits;
+        idx[off >> 6] |= (gi as u64) << (off & 63);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::projection::nm_project;
+    use crate::util::Rng;
+
+    fn random_nm(rows: usize, cols: usize, n: usize, m: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        nm_project(&Matrix::randn(rows, cols, &mut rng), n, m)
+    }
+
+    #[test]
+    fn bit_widths() {
+        assert_eq!(index_bits(2), 1);
+        assert_eq!(index_bits(3), 2);
+        assert_eq!(index_bits(4), 2);
+        assert_eq!(index_bits(8), 4);
+        assert_eq!(index_bits(16), 4);
+        assert_eq!(index_bits(17), 8);
+        assert_eq!(index_bits(256), 8);
+    }
+
+    #[test]
+    fn dense_roundtrip_24() {
+        let w = random_nm(16, 6, 2, 4, 0);
+        let p = NmPacked::from_dense(&w, 2, 4).unwrap();
+        assert_eq!(p.to_dense(), w);
+        assert_eq!(p.nnz(), w.nnz());
+        assert_eq!(p.groups(), 4);
+    }
+
+    #[test]
+    fn csr_roundtrip_matches_dense_packing() {
+        let w = random_nm(24, 5, 4, 8, 1);
+        let from_dense = NmPacked::from_dense(&w, 4, 8).unwrap();
+        let from_csr = NmPacked::from_csr(&Csr::from_dense(&w), 4, 8).unwrap();
+        // canonical packing: both directions produce identical buffers
+        assert_eq!(from_dense, from_csr);
+        assert_eq!(from_csr.to_dense(), w);
+    }
+
+    #[test]
+    fn deficient_groups_pad_and_roundtrip() {
+        // one group entirely zero, one with a single nonzero: both pad
+        let mut w = Matrix::zeros(8, 1);
+        w.data[5] = 3.0; // second group of rows 4..8
+        let p = NmPacked::from_dense(&w, 2, 4).unwrap();
+        assert_eq!(p.nnz(), 1);
+        assert_eq!(p.to_dense(), w);
+        // kernels still match CSR on padded groups
+        let csr = Csr::from_dense(&w);
+        let x: Vec<f32> = (0..8).map(|i| i as f32 - 3.0).collect();
+        assert_eq!(p.row_matvec(&x), csr.row_matvec(&x));
+    }
+
+    #[test]
+    fn nonconformant_dense_rejected() {
+        let mut rng = Rng::new(2);
+        let dense = Matrix::randn(16, 4, &mut rng); // ~all nonzero
+        let err = NmPacked::from_dense(&dense, 2, 4).unwrap_err().to_string();
+        assert!(err.contains("not 2:4-sparse"), "{err}");
+        let err = NmPacked::from_csr(&Csr::from_dense(&dense), 2, 4).unwrap_err().to_string();
+        assert!(err.contains("not 2:4-sparse"), "{err}");
+    }
+
+    #[test]
+    fn bad_shapes_rejected() {
+        let w = Matrix::zeros(10, 3); // 10 % 4 != 0
+        assert!(NmPacked::from_dense(&w, 2, 4).is_err());
+        let w = Matrix::zeros(8, 3);
+        assert!(NmPacked::from_dense(&w, 5, 4).is_err()); // n > m
+        assert!(NmPacked::from_dense(&w, 1, 1).is_err()); // m < 2
+        assert!(NmPacked::from_dense(&w, 2, 512).is_err()); // m > 256
+    }
+
+    #[test]
+    fn from_parts_roundtrip_and_rejections() {
+        let w = random_nm(8, 3, 2, 4, 3);
+        let p = NmPacked::from_dense(&w, 2, 4).unwrap();
+        let ok = NmPacked::from_parts(8, 3, 2, 4, p.values.clone(), p.idx.clone()).unwrap();
+        assert_eq!(ok, p);
+
+        // truncated value buffer
+        let mut v = p.values.clone();
+        v.pop();
+        assert!(NmPacked::from_parts(8, 3, 2, 4, v, p.idx.clone()).is_err());
+        // truncated index buffer
+        assert!(NmPacked::from_parts(8, 3, 2, 4, p.values.clone(), Vec::new()).is_err());
+        // non-ascending in-group indices (slot 0 and 1 both index 0)
+        let zeroed = vec![0u64; p.idx.len()];
+        let err = NmPacked::from_parts(8, 3, 2, 4, p.values.clone(), zeroed)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("strictly ascending"), "{err}");
+        // out-of-range index: M=3 packs at 2 bits, so the value 3 fits
+        // the field but exceeds the group
+        let w3 = random_nm(6, 1, 1, 3, 4);
+        let p3 = NmPacked::from_dense(&w3, 1, 3).unwrap();
+        let mut bad = p3.idx.clone();
+        bad[0] |= 0b11; // slot 0 -> index 3 >= m
+        let err = NmPacked::from_parts(6, 1, 1, 3, p3.values.clone(), bad)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("out of range"), "{err}");
+        // garbage past the last packed slot breaks canonical form
+        let mut tail = p3.idx.clone();
+        tail[0] |= 1u64 << 63;
+        assert!(NmPacked::from_parts(6, 1, 1, 3, p3.values.clone(), tail).is_err());
+    }
+
+    #[test]
+    fn row_matvec_bit_identical_to_csr() {
+        for (n, m, seed) in [(2usize, 4usize, 5u64), (1, 2, 6), (4, 8, 7)] {
+            let w = random_nm(32, 9, n, m, seed);
+            let p = NmPacked::from_dense(&w, n, m).unwrap();
+            let csr = Csr::from_dense(&w);
+            let mut rng = Rng::new(seed + 100);
+            let mut x = rng.gaussian_vec(32);
+            x[3] = 0.0; // exercise the zero-activation skip
+            x[17] = 0.0;
+            let got = p.row_matvec(&x);
+            let want = csr.row_matvec(&x);
+            assert_eq!(got, want, "{n}:{m} gather diverged from CSR bitwise");
+        }
+    }
+
+    #[test]
+    fn left_matmul_bit_identical_to_csr() {
+        let w = random_nm(16, 7, 2, 4, 8);
+        let p = NmPacked::from_dense(&w, 2, 4).unwrap();
+        let csr = Csr::from_dense(&w);
+        let mut rng = Rng::new(9);
+        let x = Matrix::randn(5, 16, &mut rng);
+        assert_eq!(p.left_matmul(&x), csr.left_matmul(&x));
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let w = random_nm(128, 64, 2, 4, 10);
+        let p = NmPacked::from_dense(&w, 2, 4).unwrap();
+        let slots = 64 * 32 * 2;
+        assert_eq!(p.bytes(), slots * 4 + (slots * 2).div_ceil(64) * 8);
+        // 2:4 packs to ~4.25 bytes/weight vs CSR's 8 + indptr
+        assert!(p.bytes() < Csr::from_dense(&w).bytes());
+        // and half + eps of the dense f32 footprint
+        assert!(p.bytes() < 128 * 64 * 4 * 9 / 16);
+    }
+
+    #[test]
+    fn density_counts_padding_as_zero() {
+        let w = Matrix::zeros(8, 2);
+        let p = NmPacked::from_dense(&w, 2, 4).unwrap();
+        assert_eq!(p.nnz(), 0);
+        assert_eq!(p.density(), 0.0);
+        assert_eq!(p.row_matvec(&[1.0; 8]), vec![0.0; 2]);
+    }
+}
