@@ -2,11 +2,30 @@
 //! is not in play (native baselines, tests, small shapes).
 //!
 //! Kernel structure mirrors the Pallas kernel (DESIGN.md §Hardware-
-//! Adaptation): an MR x NR register-blocked micro-kernel keeps the C
-//! accumulators in SIMD registers across the whole K loop (f32
-//! accumulation), and rows of C are partitioned across threads (each
-//! thread owns disjoint output strips, so no synchronization). See
-//! EXPERIMENTS.md §Perf for the optimization log.
+//! Adaptation), now with the memory hierarchy made explicit:
+//!
+//! * **Register tier:** an MR x LANE accumulator tile per column group —
+//!   portable `[f32; LANE]` lanes the compiler lowers to wide SIMD
+//!   (f32x8 on AVX2), one B lane load reused MR times.
+//! * **Cache tier:** the K loop is blocked into KC-deep panels and the
+//!   touched B panel is packed contiguous per NR-wide column strip, so
+//!   the inner loops stream from L1/L2 instead of striding `n_dim`
+//!   floats between consecutive k rows.
+//! * **Thread tier:** rows of C are partitioned across threads, each
+//!   writing its disjoint `split_at_mut` strip of C in place (no
+//!   per-thread buffer, no merge copy).
+//!
+//! Exactness discipline: every output element is produced by ONE
+//! k-ascending f32 accumulation chain. K-panel boundaries spill the
+//! accumulator tile to C and reload it — an exact f32 round-trip — and
+//! lanes vectorize across independent output columns, never across k,
+//! so results are bit-identical whatever the thread partition or panel
+//! split (the repo's standing bit-identity bar: CSR vs packed N:M,
+//! native vs sharded, resume). The one documented exception is
+//! [`matvec`], which reduces through four f64 partial lanes in a fixed
+//! order — deterministic, but not the sequential chain; its callers
+//! (PCG, scale re-fitting, Cholesky checks) are tolerance-tested.
+//! See EXPERIMENTS.md §Perf for the optimization log.
 
 use super::matrix::Matrix;
 
@@ -18,13 +37,12 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
-/// Below this many f32 multiply-adds the explicit-transpose copy is the
-/// dominant cost and the product runs single-threaded anyway (same
-/// threshold as the threading cutoff in [`matmul_into`]), so `matmul_tn`
-/// takes the allocation-free strided path. Above it, the transposed copy
-/// amortizes: A^T rows become contiguous for the register-blocked kernel
-/// and the row partition fans across the thread pool.
-const TN_STRIDED_CUTOFF: usize = 64 * 64 * 64;
+/// Below this many f32 multiply-adds the product runs single-threaded
+/// ([`matmul_into`]) and `matmul_tn` takes the allocation-free strided
+/// path. Above it, the transposed copy amortizes: A^T rows become
+/// contiguous for the register-blocked kernel and the row partition fans
+/// across the thread pool.
+const PAR_CUTOFF: usize = 64 * 64 * 64;
 
 /// C = A^T @ B.
 ///
@@ -34,31 +52,49 @@ const TN_STRIDED_CUTOFF: usize = 64 * 64 * 64;
 /// two paths agree bitwise on finite inputs.
 pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.rows, b.rows, "matmul_tn dims: {}x{} vs {}x{}", a.rows, a.cols, b.rows, b.cols);
-    if a.rows * a.cols * b.cols <= TN_STRIDED_CUTOFF {
+    if a.rows * a.cols * b.cols <= PAR_CUTOFF {
         return matmul_tn_strided(a, b);
     }
     let at = a.transpose();
     matmul(&at, b)
 }
 
-/// Strided kernel for C = A^T @ B: for each shared row k, rank-1 update
-/// C[i, :] += A[k, i] * B[k, :]. Both operands stream row-contiguously —
-/// no transpose allocation, no strided inner loop.
+/// Strided kernel for C = A^T @ B: C[i, :] += A[k, i] * B[k, :] over the
+/// shared rows k, blocked into KC-deep panels. Each panel's A slab is
+/// gathered transposed (contiguous per output row i), then row i of C is
+/// kept hot across the whole panel while the panel's B rows are reused
+/// for every i — L2-resident instead of sweeping all of C once per k.
+/// Per element the accumulation stays a single k-ascending chain
+/// (panels ascend, k within a panel ascends), so this is bit-identical
+/// to the unblocked rank-1 formulation on finite inputs.
 fn matmul_tn_strided(a: &Matrix, b: &Matrix) -> Matrix {
     let n_dim = b.cols;
-    let mut c = Matrix::zeros(a.cols, n_dim);
-    for k in 0..a.rows {
-        let arow = a.row(k);
-        let brow = b.row(k);
-        for (i, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let crow = &mut c.data[i * n_dim..(i + 1) * n_dim];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
+    let m_dim = a.cols;
+    let mut c = Matrix::zeros(m_dim, n_dim);
+    let mut apanel = vec![0.0f32; KC * m_dim];
+    let mut kb = 0;
+    while kb < a.rows {
+        let kw = (a.rows - kb).min(KC);
+        for k in 0..kw {
+            let arow = a.row(kb + k);
+            for (i, &v) in arow.iter().enumerate() {
+                apanel[i * kw + k] = v;
             }
         }
+        for i in 0..m_dim {
+            let ap = &apanel[i * kw..i * kw + kw];
+            let crow = &mut c.data[i * n_dim..(i + 1) * n_dim];
+            for (k, &av) in ap.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[(kb + k) * n_dim..(kb + k) * n_dim + n_dim];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        }
+        kb += KC;
     }
     c
 }
@@ -81,16 +117,30 @@ pub fn gram(x: &Matrix) -> Matrix {
 }
 
 /// y = A @ x for a vector x.
+///
+/// Reduces through four f64 partial lanes with a fixed
+/// `(l0+l1)+(l2+l3)` merge and a sequential tail — deterministic across
+/// runs and thread counts, but NOT the same value as a sequential f64
+/// chain; callers (PCG, quantizer scale re-fitting) are tolerance-based.
 pub fn matvec(a: &Matrix, x: &[f32]) -> Vec<f32> {
     assert_eq!(a.cols, x.len());
     let mut y = vec![0.0f32; a.rows];
-    for r in 0..a.rows {
+    for (r, yv) in y.iter_mut().enumerate() {
         let row = a.row(r);
-        let mut acc = 0.0f64;
-        for (av, xv) in row.iter().zip(x) {
-            acc += (*av as f64) * (*xv as f64);
+        let n4 = row.len() / 4 * 4;
+        let mut lanes = [0.0f64; 4];
+        let mut k = 0;
+        while k < n4 {
+            for (l, lane) in lanes.iter_mut().enumerate() {
+                *lane += (row[k + l] as f64) * (x[k + l] as f64);
+            }
+            k += 4;
         }
-        y[r] = acc as f32;
+        let mut acc = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+        for k in n4..row.len() {
+            acc += (row[k] as f64) * (x[k] as f64);
+        }
+        *yv = acc as f32;
     }
     y
 }
@@ -113,68 +163,113 @@ fn parse_threads(v: &str) -> Option<usize> {
     v.trim().parse::<usize>().ok().filter(|&n| n > 0)
 }
 
-/// Micro-kernel geometry: MR rows of A against an NR-wide strip of B, with
-/// the C accumulators living in SIMD registers across the whole K loop —
-/// one B load is reused MR times, so the kernel is compute-bound instead
-/// of L1-bound (§Perf: 7 -> ~20 GFLOP/s on one AVX-512 core).
+/// Portable SIMD lane width: `[f32; LANE]` tiles compile to one ymm
+/// vector op on AVX2 (and two on 128-bit NEON/SSE) without `std::arch`.
+const LANE: usize = 8;
+/// Micro-kernel geometry: MR rows of A against an NR-wide strip of B.
+/// Per LANE-wide column group the MR x LANE C tile lives in registers
+/// across a whole K panel — one B lane load is reused MR times, so the
+/// kernel is compute-bound instead of L1-bound.
 const MR: usize = 4;
 const NR: usize = 64;
+/// K-panel depth: the packed B panel is KC x NR f32 (32 KiB) — resident
+/// in L2 and streamed through L1 while every MR-row block of A reuses it.
+const KC: usize = 128;
 
-/// C += A @ B restricted to C rows [r0, r1).
+/// C += A @ B restricted to C rows [r0, r1), written into the strip `c`
+/// (rows r0..r1 of the full C, row-major, `b.cols` wide, pre-zeroed or
+/// carrying prior partial sums).
 fn matmul_rows(a: &Matrix, b: &Matrix, c: &mut [f32], r0: usize, r1: usize) {
     let k_dim = a.cols;
     let n_dim = b.cols;
-    let mut r = r0;
-    // full MR-row blocks through the register-blocked micro-kernel
-    while r + MR <= r1 {
-        let mut nb = 0;
-        while nb + NR <= n_dim {
-            microkernel::<MR, NR>(a, b, c, r, r0, nb, k_dim, n_dim);
-            nb += NR;
+    // last row reachable by a full MR-row block from this strip's base
+    let r_mr = r0 + (r1 - r0) / MR * MR;
+    let mut bpack = vec![0.0f32; KC * NR];
+    let mut nb = 0;
+    while nb < n_dim {
+        let nw = (n_dim - nb).min(NR);
+        if nw == NR && r_mr > r0 {
+            let mut kb = 0;
+            while kb < k_dim {
+                let kw = (k_dim - kb).min(KC);
+                pack_b(b, kb, kw, nb, &mut bpack);
+                let mut r = r0;
+                while r + MR <= r1 {
+                    microkernel(a, &bpack, c, r, r0, nb, kb, kw, k_dim, n_dim);
+                    r += MR;
+                }
+                kb += KC;
+            }
         }
-        if nb < n_dim {
-            scalar_tail(a, b, c, r, (r + MR).min(r1), r0, nb, n_dim, k_dim, n_dim);
+        // row remainder of a full column panel, or the whole strip for
+        // the (< NR) column tail
+        let scalar_r0 = if nw == NR { r_mr } else { r0 };
+        if scalar_r0 < r1 {
+            scalar_tail(a, b, c, scalar_r0, r1, r0, nb, nb + nw, k_dim, n_dim);
         }
-        r += MR;
-    }
-    // remainder rows
-    if r < r1 {
-        scalar_tail(a, b, c, r, r1, r0, 0, n_dim, k_dim, n_dim);
+        nb += NR;
     }
 }
 
-/// MR x NR register-blocked kernel over the full K dimension.
+/// Copy the B panel rows [kb, kb+kw) x cols [nb, nb+NR) into a
+/// contiguous kw x NR buffer: the micro-kernel then streams lane-aligned
+/// consecutive rows instead of striding `n_dim` floats per k.
+#[inline]
+fn pack_b(b: &Matrix, kb: usize, kw: usize, nb: usize, bpack: &mut [f32]) {
+    let n_dim = b.cols;
+    for k in 0..kw {
+        let src = &b.data[(kb + k) * n_dim + nb..(kb + k) * n_dim + nb + NR];
+        bpack[k * NR..k * NR + NR].copy_from_slice(src);
+    }
+}
+
+/// MR x NR panel kernel over one packed K panel. For each LANE-wide
+/// column group the MR x LANE C tile is loaded once, accumulated lane-
+/// parallel in k-ascending order across the panel, and stored back — an
+/// exact f32 spill, so chaining panels preserves each element's single
+/// accumulation chain bit-for-bit (lanes span independent columns, never
+/// k).
+#[allow(clippy::too_many_arguments)]
 #[inline(always)]
-fn microkernel<const MRC: usize, const NRC: usize>(
+fn microkernel(
     a: &Matrix,
-    b: &Matrix,
+    bpack: &[f32],
     c: &mut [f32],
     r: usize,
     r0: usize,
     nb: usize,
+    kb: usize,
+    kw: usize,
     k_dim: usize,
     n_dim: usize,
 ) {
-    let mut acc = [[0.0f32; NRC]; MRC];
-    for k in 0..k_dim {
-        let brow = &b.data[k * n_dim + nb..k * n_dim + nb + NRC];
-        for i in 0..MRC {
-            let av = a.data[(r + i) * k_dim + k];
-            let accr = &mut acc[i];
-            for j in 0..NRC {
-                accr[j] += av * brow[j];
+    for g in 0..NR / LANE {
+        let col = nb + g * LANE;
+        let mut acc = [[0.0f32; LANE]; MR];
+        for (i, accr) in acc.iter_mut().enumerate() {
+            let base = (r + i - r0) * n_dim + col;
+            accr.copy_from_slice(&c[base..base + LANE]);
+        }
+        for k in 0..kw {
+            let bl = &bpack[k * NR + g * LANE..k * NR + g * LANE + LANE];
+            for (i, accr) in acc.iter_mut().enumerate() {
+                let av = a.data[(r + i) * k_dim + kb + k];
+                for (accv, &bv) in accr.iter_mut().zip(bl) {
+                    *accv += av * bv;
+                }
             }
         }
-    }
-    for i in 0..MRC {
-        let dst = &mut c[(r + i - r0) * n_dim + nb..(r + i - r0) * n_dim + nb + NRC];
-        for j in 0..NRC {
-            dst[j] += acc[i][j];
+        for (i, accr) in acc.iter().enumerate() {
+            let base = (r + i - r0) * n_dim + col;
+            c[base..base + LANE].copy_from_slice(accr);
         }
     }
 }
 
-/// Scalar fallback for row/column tails.
+/// Scalar fallback for row/column tails: per row an axpy over the
+/// selected column range per nonzero A element, k ascending — the same
+/// per-element chain as the vector path, so tails and panels agree
+/// bitwise on finite inputs.
 #[allow(clippy::too_many_arguments)]
 fn scalar_tail(
     a: &Matrix,
@@ -190,14 +285,14 @@ fn scalar_tail(
 ) {
     for r in r_start..r_end {
         let arow = &a.data[r * k_dim..(r + 1) * k_dim];
-        let crow = &mut c[(r - r0) * n_dim..(r - r0 + 1) * n_dim];
+        let crow = &mut c[(r - r0) * n_dim + n_start..(r - r0) * n_dim + n_end];
         for (k, &av) in arow.iter().enumerate() {
             if av == 0.0 {
                 continue;
             }
-            let brow = &b.data[k * n_dim..k * n_dim + n_dim];
-            for j in n_start..n_end {
-                crow[j] += av * brow[j];
+            let brow = &b.data[k * n_dim + n_start..k * n_dim + n_end];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
             }
         }
     }
@@ -208,47 +303,32 @@ fn scalar_tail(
 /// Row-partitioned across the thread pool; both the serve decode batch
 /// (`[batch, d]`) and the batched prefill (`[prompt, d]`) land here, so a
 /// multi-row prefill fans its rows across workers while a single decode
-/// row stays on the calling thread (below the threading cutoff).
+/// row stays on the calling thread (below the threading cutoff). Each
+/// worker writes its disjoint `split_at_mut` strip of C in place — no
+/// per-thread buffer and no merge copy — and the row partition cannot
+/// change the result bits (every element's chain lives in one strip).
 pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     assert_eq!(a.cols, b.rows);
     assert_eq!((c.rows, c.cols), (a.rows, b.cols));
-    c.data.iter_mut().for_each(|v| *v = 0.0);
+    c.data.fill(0.0);
     let nt = num_threads().min(a.rows.max(1));
-    if nt <= 1 || a.rows * a.cols * b.cols < 64 * 64 * 64 {
-        let (r0, r1) = (0, a.rows);
-        let n_dim = b.cols;
-        let mut strip = vec![0.0f32; (r1 - r0) * n_dim];
-        matmul_rows(a, b, &mut strip, r0, r1);
-        c.data.copy_from_slice(&strip);
+    if nt <= 1 || a.rows * a.cols * b.cols < PAR_CUTOFF {
+        matmul_rows(a, b, &mut c.data, 0, a.rows);
         return;
     }
     let rows_per = a.rows.div_ceil(nt);
     let n_dim = b.cols;
-    let chunks: Vec<(usize, usize)> = (0..nt)
-        .map(|t| (t * rows_per, ((t + 1) * rows_per).min(a.rows)))
-        .filter(|(r0, r1)| r1 > r0)
-        .collect();
-    let mut out: Vec<Vec<f32>> = Vec::with_capacity(chunks.len());
     std::thread::scope(|s| {
-        let handles: Vec<_> = chunks
-            .iter()
-            .map(|&(r0, r1)| {
-                s.spawn(move || {
-                    let mut strip = vec![0.0f32; (r1 - r0) * n_dim];
-                    matmul_rows(a, b, &mut strip, r0, r1);
-                    strip
-                })
-            })
-            .collect();
-        for h in handles {
-            out.push(h.join().expect("matmul worker panicked"));
+        let mut rest: &mut [f32] = &mut c.data;
+        let mut r0 = 0usize;
+        while r0 < a.rows {
+            let r1 = (r0 + rows_per).min(a.rows);
+            let (strip, tail) = std::mem::take(&mut rest).split_at_mut((r1 - r0) * n_dim);
+            rest = tail;
+            s.spawn(move || matmul_rows(a, b, strip, r0, r1));
+            r0 = r1;
         }
     });
-    let mut offset = 0;
-    for strip in out {
-        c.data[offset..offset + strip.len()].copy_from_slice(&strip);
-        offset += strip.len();
-    }
 }
 
 #[cfg(test)]
@@ -287,6 +367,49 @@ mod tests {
     }
 
     #[test]
+    fn lane_block_and_panel_tails_match_naive() {
+        // shapes span every remainder class the blocked kernel has:
+        // rows % MR, cols vs NR (sub-LANE, mid-panel, and multi-panel
+        // tails), and k on / across the KC panel boundary
+        let mut rng = Rng::new(11);
+        for &(m, k, n) in &[
+            (1, 1, 1),
+            (3, KC - 1, NR - 1),
+            (4, KC, NR),
+            (5, KC + 5, NR + 3),
+            (6, 2 * KC + 7, NR + LANE + 1),
+            (MR + 3, 40, 2 * NR + 5),
+            (2, 33, 5),
+            (9, KC + 1, 3 * NR),
+        ] {
+            let a = Matrix::randn(m, k, &mut rng);
+            let b = Matrix::randn(k, n, &mut rng);
+            assert!(matmul(&a, &b).max_abs_diff(&naive(&a, &b)) < 1e-3, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn thread_partition_is_bitwise_invariant() {
+        // threaded and single-threaded matmul_into must agree bitwise:
+        // matmul_rows is the per-thread body, and running it over the
+        // full row range vs disjoint strips of the same C must produce
+        // identical bits regardless of the partition the pool picks
+        let mut rng = Rng::new(10);
+        let (m, k, n) = (37, KC + 22, 80);
+        let a = Matrix::randn(m, k, &mut rng);
+        let b = Matrix::randn(k, n, &mut rng);
+        let mut full = vec![0.0f32; m * n];
+        matmul_rows(&a, &b, &mut full, 0, m);
+        let mut parts = vec![0.0f32; m * n];
+        for (r0, r1) in [(0usize, 10usize), (10, 11), (11, 29), (29, m)] {
+            matmul_rows(&a, &b, &mut parts[r0 * n..r1 * n], r0, r1);
+        }
+        assert_eq!(full, parts, "row partition changed result bits");
+        // the public entry point (threaded or not at this size) agrees too
+        assert_eq!(matmul(&a, &b).data, full);
+    }
+
+    #[test]
     fn identity_is_noop() {
         let mut rng = Rng::new(3);
         let a = Matrix::randn(20, 20, &mut rng);
@@ -318,8 +441,16 @@ mod tests {
     #[test]
     fn matmul_tn_strided_and_transpose_paths_agree() {
         let mut rng = Rng::new(8);
-        // spans the cutoff: small goes strided, large goes transpose+matmul
-        for &(rows, k, n) in &[(10, 4, 3), (64, 64, 64), (70, 64, 64), (30, 90, 110)] {
+        // spans the cutoff and the KC panel boundary: small goes strided,
+        // large goes transpose+matmul
+        for &(rows, k, n) in &[
+            (10, 4, 3),
+            (64, 64, 64),
+            (70, 64, 64),
+            (30, 90, 110),
+            (KC + 22, 12, 9),
+            (2 * KC + 3, 5, 7),
+        ] {
             let a = Matrix::randn(rows, k, &mut rng);
             let b = Matrix::randn(rows, n, &mut rng);
             let strided = matmul_tn_strided(&a, &b);
@@ -360,6 +491,22 @@ mod tests {
         let got = matvec(&a, &x);
         for i in 0..15 {
             assert!((got[i] - expect.at(i, 0)).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matvec_lane_tails_match_f64_reference() {
+        // k values straddling the 4-lane boundary, vs a sequential f64 sum
+        let mut rng = Rng::new(12);
+        for &(m, k) in &[(3, 1), (5, 4), (7, 9), (4, 35)] {
+            let a = Matrix::randn(m, k, &mut rng);
+            let x: Vec<f32> = rng.gaussian_vec(k);
+            let got = matvec(&a, &x);
+            for r in 0..m {
+                let want: f64 =
+                    a.row(r).iter().zip(&x).map(|(w, v)| *w as f64 * *v as f64).sum();
+                assert!((got[r] as f64 - want).abs() < 1e-5, "{m}x{k} row {r}");
+            }
         }
     }
 

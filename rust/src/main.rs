@@ -8,9 +8,10 @@
 //!   layer  --model alps-base --layer mlp.w2 --sparsity 0.7 [--methods all]
 //!          single-layer reconstruction-error comparison (Fig. 2 row)
 //!   serve  --model alps-base --weights pruned.bin [--stdin]
-//!          [--format dense|csr|nm[:N:M]]  (--sparse = --format csr)
+//!          [--format dense|csr|nm[:N:M]|int8]  (--sparse = --format csr)
 //!          continuous-batching generation server (see serve/mod.rs);
-//!          `nm` serves the packed N:M format from `alps::sparse`
+//!          `nm` serves the packed N:M format from `alps::sparse`;
+//!          `int8` serves quantized codes + per-column scales
 //!   worker --addr 127.0.0.1:7979              distributed-pruning worker
 //!          (prune with --workers host:port,... to shard layer solves;
 //!           --status-addr exposes live progress over TCP)
@@ -458,9 +459,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
 }
 
-/// Pick the serving weight backend from `--format dense|csr|nm[:N:M]`
-/// (default dense; the older `--sparse` flag stays as a csr alias).
-/// Bare `nm` means 2:4; `nm:4:8` etc. selects another pattern.
+/// Pick the serving weight backend from
+/// `--format dense|csr|nm[:N:M]|int8` (default dense; the older
+/// `--sparse` flag stays as a csr alias). Bare `nm` means 2:4;
+/// `nm:4:8` etc. selects another pattern; `int8` quantizes every
+/// prunable matrix at load.
 fn build_engine<'m>(model: &'m Model, args: &Args) -> Result<Engine<'m>> {
     let format = if args.has("format") {
         args.get("format", "dense")
@@ -473,6 +476,7 @@ fn build_engine<'m>(model: &'m Model, args: &Args) -> Result<Engine<'m>> {
         "dense" => Engine::dense(model),
         "csr" | "sparse" => Engine::sparse(model),
         "nm" => Engine::nm(model, 2, 4),
+        "int8" => Engine::int8(model),
         f => match f.strip_prefix("nm:") {
             Some(pat) => match SparsityTarget::parse(pat)? {
                 SparsityTarget::NM { n, m } => Engine::nm(model, n, m),
@@ -480,7 +484,7 @@ fn build_engine<'m>(model: &'m Model, args: &Args) -> Result<Engine<'m>> {
                     bail!("--format nm:<pattern> needs an N:M pattern, got '{pat}'")
                 }
             },
-            None => bail!("unknown --format '{f}' (expected dense|csr|nm[:N:M])"),
+            None => bail!("unknown --format '{f}' (expected dense|csr|nm[:N:M]|int8)"),
         },
     }
 }
@@ -662,7 +666,7 @@ fn usage() {
            eval  --model alps-base [--weights pruned.bin] [--items 50]\n\
            layer --model alps-base --block 0 --layer mlp.w2 --sparsity 0.7 [--methods all]\n\
            serve --model alps-base [--weights pruned.bin] [--random]\n\
-                 [--format dense|csr|nm[:N:M]] [--sparse (= --format csr)]\n\
+                 [--format dense|csr|nm[:N:M]|int8] [--sparse (= --format csr)]\n\
                  [--addr 127.0.0.1:7878 | --stdin] [--max-batch 8] [--max-conns 64]\n\
                  [--max-line 65536] [--max-new 32] [--temperature 0] [--top-k 0] [--stop id]\n\
                  [--trace-out trace.jsonl]\n\

@@ -5,6 +5,15 @@
 //! weights, with an optional PCG-style re-fit: after rounding, the scales
 //! are re-chosen to minimize the layer-wise reconstruction objective on
 //! the frozen support + codes (a 1-D least squares per column, exact).
+//!
+//! The serving side of this format is [`crate::sparse::int8`]
+//! (`alps serve --format int8`): it re-quantizes every prunable matrix
+//! at load and decodes from the codes + scales directly. A checkpoint
+//! whose weights already sit on the grid (quantize → dequantize, as
+//! `examples/prune_quantize.rs` writes) re-quantizes with exact codes
+//! and ≤1-ulp scales (f32 `(127*s)/127` is only an identity for special
+//! scales, e.g. powers of two), so serving it under int8 matches dense
+//! to ulp precision and greedy token streams agree.
 
 use super::LayerProblem;
 use crate::linalg::Matrix;

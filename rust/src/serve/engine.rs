@@ -1,11 +1,12 @@
-//! Generation engine: sampling + a dense / CSR / packed-N:M decode
-//! backend behind one type, so the batcher and CLI never care which
-//! weight format serves. Construction registers the
+//! Generation engine: sampling + a dense / CSR / packed-N:M / int8
+//! decode backend behind one type, so the batcher and CLI never care
+//! which weight format serves. Construction registers the
 //! `alps_serve_backend_layers` / `alps_serve_weight_bytes` gauges
-//! (labelled by format) so scrapes show what backend is live.
+//! (labelled `format=dense|csr|nm|int8`) so scrapes show what backend
+//! is live and what its prunable weights cost.
 
 use crate::model::{DecodeOps, Decoder, DenseOps, Model, SparseModel};
-use crate::sparse::NmModel;
+use crate::sparse::{Int8Model, NmModel};
 use crate::util::{Rng, Timer};
 use anyhow::Result;
 
@@ -148,6 +149,23 @@ impl<'m> Engine<'m> {
         Ok(Engine { decoder: Decoder::new(model, ops)?, label })
     }
 
+    /// Serve from int8-quantized prunable weights ([`crate::sparse`]) —
+    /// the weight-bandwidth deployment path. Every prunable matrix is
+    /// quantized at load (codes + per-column scales, ~25% of dense f32
+    /// bytes); a `prune_quantize`-produced checkpoint recovers its codes
+    /// exactly and its scales to ≤1 ulp, so decode matches dense to ulp
+    /// precision and greedy token streams agree (see
+    /// [`crate::sparse::int8`] for the exactness boundary).
+    pub fn int8(model: &'m Model) -> Result<Engine<'m>> {
+        let im = Int8Model::from_model(model)?;
+        let (qb, db) = im.bytes_int8_vs_dense();
+        let pct = if db == 0 { 0.0 } else { 100.0 * qb as f64 / db as f64 };
+        let label = format!("int8({} layers, {pct:.1}% of dense bytes)", im.layer_count());
+        set_format_gauges("int8", im.layer_count(), qb);
+        let ops: Box<dyn DecodeOps + Send + Sync + 'm> = Box::new(im);
+        Ok(Engine { decoder: Decoder::new(model, ops)?, label })
+    }
+
     pub fn decoder(&self) -> &DynDecoder<'m> {
         &self.decoder
     }
@@ -244,6 +262,28 @@ mod tests {
         // dense agrees greedily too (float-tolerant path, same argmax)
         let de = Engine::dense(&m).unwrap();
         assert_eq!(de.generate(&[4, 2, 9], &p, 0).unwrap().tokens, b.tokens);
+    }
+
+    #[test]
+    fn int8_engine_matches_dense_greedy_on_grid_checkpoint() {
+        let mut m = random_model(26);
+        // put every prunable weight on the int8 grid, as prune_quantize
+        // checkpoints are: load-time requantization recovers the codes
+        // exactly and the scales to <=1 ulp, so greedy tokens agree
+        // (bitwise logit equality needs power-of-two scales — covered in
+        // sparse::int8's tests)
+        for name in m.prunable_names() {
+            let w = m.weights.matrix(&name).unwrap();
+            let q = crate::pruning::quantize::QuantizedWeights::quantize(&w);
+            m.weights.set_matrix(&name, &q.dequantize()).unwrap();
+        }
+        let de = Engine::dense(&m).unwrap();
+        let qe = Engine::int8(&m).unwrap();
+        assert!(qe.label().starts_with("int8("), "label: {}", qe.label());
+        let p = SamplingParams { max_new_tokens: 6, ..Default::default() };
+        let a = de.generate(&[3, 1, 4], &p, 0).unwrap();
+        let b = qe.generate(&[3, 1, 4], &p, 0).unwrap();
+        assert_eq!(a.tokens, b.tokens);
     }
 
     #[test]

@@ -9,14 +9,16 @@
 //!   decode path ([`crate::model::Decoder`]): greedy and temperature/top-k
 //!   sampling via the deterministic [`crate::util::Rng`]. One [`Engine`]
 //!   wraps the dense weight backend, the CSR
-//!   [`crate::model::SparseModel`], or the packed N:M
+//!   [`crate::model::SparseModel`], the packed N:M
 //!   [`crate::sparse::NmModel`] (strided semi-structured kernels,
 //!   bit-identical to CSR, per-layer CSR fallback for mixed
-//!   checkpoints) behind the same [`crate::model::DecodeOps`] seam;
-//!   backends are `Send + Sync` so one engine is shared by reference
-//!   across server threads. Construction sets the
-//!   `alps_serve_backend_layers` / `alps_serve_weight_bytes` gauges
-//!   (labelled `format=dense|csr|nm`).
+//!   checkpoints), or the int8 [`crate::sparse::Int8Model`] (quantized
+//!   codes + per-column scales, ~25% of dense weight bytes) behind the
+//!   same [`crate::model::DecodeOps`] seam; backends are `Send + Sync`
+//!   so one engine is shared by reference across server threads.
+//!   Construction sets the `alps_serve_backend_layers` /
+//!   `alps_serve_weight_bytes` gauges
+//!   (labelled `format=dense|csr|nm|int8`).
 //! * [`batcher`] — a FIFO request queue with **continuous batching**:
 //!   between decode steps, finished sequences are evicted and queued
 //!   requests admitted, so the batch stays full without waiting for the
@@ -57,18 +59,23 @@
 //!
 //! ```text
 //! alps serve --model alps-base --weights pruned.bin
-//!            [--format dense|csr|nm[:N:M]] [--sparse]
+//!            [--format dense|csr|nm[:N:M]|int8] [--sparse]
 //!            [--addr 127.0.0.1:7878] [--stdin] [--random]
 //!            [--max-batch 8] [--max-conns 64] [--max-line 65536]
 //!            [--max-new 32] [--temperature 0.0] [--top-k 0]
 //! ```
 //!
 //! `--format` picks the weight backend: `dense`, `csr` (alias of the
-//! older `--sparse` flag), or `nm` for the packed N:M path (`nm` alone
+//! older `--sparse` flag), `nm` for the packed N:M path (`nm` alone
 //! means 2:4; `nm:4:8` etc. selects the pattern — non-conformant layers
-//! fall back to CSR per layer). CSR and packed N:M produce bit-identical
-//! token streams, so serving the same checkpoint under both formats and
-//! diffing outputs is a valid (and CI-exercised) correctness check.
+//! fall back to CSR per layer), or `int8` to quantize every prunable
+//! matrix at load (`crate::pruning::quantize` codes + per-column
+//! scales). CSR and packed N:M produce bit-identical token streams, so
+//! serving the same checkpoint under both formats and diffing outputs
+//! is a valid (and CI-exercised) correctness check; `int8` matches
+//! dense to ulp precision when the checkpoint already sits on the int8
+//! grid (a `prune_quantize` artifact), and otherwise differs by
+//! quantization error.
 //!
 //! Two std-only front-ends:
 //!

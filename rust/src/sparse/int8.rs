@@ -1,0 +1,345 @@
+//! Int8 quantized decode backend — serve the weights
+//! [`crate::pruning::quantize`] produces.
+//!
+//! [`Int8Weight`] stores a prunable matrix as int8 codes + per-output-
+//! column f32 scales (the `QuantizedWeights` layout), and decodes with
+//! f32 accumulators: the kernels compute `x[k] * (code as f32 * scale)`
+//! per term, which is exactly the dequantized f32 weight — bit-identical
+//! to the dense kernels running on [`Int8Weight::dequantize`]'s output,
+//! with the accumulation kept in the repo's standard k-ascending order.
+//! On a checkpoint whose weights sit on the int8 grid (what
+//! `examples/prune_quantize.rs` writes), load-time re-quantization
+//! recovers the codes *exactly* and the scales to within 1 ulp — exactly
+//! when the scale is a power of two, since f32 `(127*s)/127` is not an
+//! identity for general `s` — so decode matches dense to ulp precision
+//! and greedy token streams agree. Weight bytes drop to ~25% of dense
+//! f32 (1 byte/code + one f32 scale per column), which is what
+//! weight-bandwidth-bound decode throughput actually buys.
+//!
+//! [`Int8Model`] packs every prunable matrix and implements
+//! [`crate::model::DecodeOps`], so the whole serve stack (decoder,
+//! batcher, TCP front-end) runs on it unchanged via
+//! `alps serve --format int8` / [`crate::serve::Engine::int8`].
+//!
+//! This is a server path: `alps-lint` rule 1 (panic-freedom) applies —
+//! malformed shapes surface as `Result`s, never aborts.
+
+use crate::linalg::Matrix;
+use crate::model::{DecodeOps, Model};
+use crate::pruning::quantize::QuantizedWeights;
+use anyhow::{anyhow, ensure, Result};
+use std::collections::HashMap;
+
+/// One prunable layer as int8 codes (row-major `[rows, cols]`) with a
+/// per-output-column f32 scale.
+pub struct Int8Weight {
+    pub rows: usize,
+    pub cols: usize,
+    codes: Vec<i8>,
+    scales: Vec<f32>,
+}
+
+impl Int8Weight {
+    /// Adopt a [`QuantizedWeights`], validating its buffer shapes (the
+    /// quantizer upholds them, but checkpoints may arrive from anywhere).
+    pub fn from_quantized(q: QuantizedWeights) -> Result<Int8Weight> {
+        ensure!(
+            q.codes.len() == q.rows * q.cols,
+            "int8 codes length {} != {}x{}",
+            q.codes.len(),
+            q.rows,
+            q.cols
+        );
+        ensure!(
+            q.scales.len() == q.cols,
+            "int8 scales length {} != cols {}",
+            q.scales.len(),
+            q.cols
+        );
+        Ok(Int8Weight { rows: q.rows, cols: q.cols, codes: q.codes, scales: q.scales })
+    }
+
+    /// Symmetric per-column int8 quantization of a dense matrix. For a
+    /// matrix already on the int8 grid (a `prune_quantize` checkpoint)
+    /// this recovers the codes exactly and the scales to within 1 ulp
+    /// (exactly when the scale is a power of two — see the module docs).
+    pub fn from_dense(w: &Matrix) -> Result<Int8Weight> {
+        Int8Weight::from_quantized(QuantizedWeights::quantize(w))
+    }
+
+    /// Stored bytes: one per code plus one f32 scale per column.
+    pub fn bytes(&self) -> usize {
+        self.codes.len() + 4 * self.scales.len()
+    }
+
+    /// Surviving (nonzero-code) weight count.
+    pub fn nnz(&self) -> usize {
+        self.codes.iter().filter(|c| **c != 0).count()
+    }
+
+    /// Dense f32 reconstruction — the exact values the decode kernels
+    /// multiply by (`code as f32 * scale`), for tests and fallbacks.
+    pub fn dequantize(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                m.data[r * self.cols + c] = self.codes[r * self.cols + c] as f32 * self.scales[c];
+            }
+        }
+        m
+    }
+
+    /// y += x @ W for one activation row (`x.len() == rows`), into a
+    /// pre-zeroed (or partial) output row of length `cols`. Terms are
+    /// `x[k] * (code as f32 * scale)` accumulated k-ascending with the
+    /// zero-activation skip — the same per-element chain as the dense
+    /// kernels on the dequantized matrix, hence bit-identical to them.
+    fn accumulate_row(&self, x: &[f32], y: &mut [f32]) {
+        for (k, &xv) in x.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let crow = &self.codes[k * self.cols..(k + 1) * self.cols];
+            for ((yv, &code), &s) in y.iter_mut().zip(crow).zip(&self.scales) {
+                *yv += xv * (code as f32 * s);
+            }
+        }
+    }
+
+    /// y = x @ W for a single activation row — the KV-cache decode shape.
+    pub fn row_matvec(&self, x: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(x.len(), self.rows);
+        let mut y = vec![0.0f32; self.cols];
+        self.accumulate_row(x, &mut y);
+        y
+    }
+
+    /// Y = X @ W for a multi-row activation batch (batched decode steps
+    /// and `prefill_batch`).
+    pub fn left_matmul(&self, x: &Matrix) -> Matrix {
+        debug_assert_eq!(x.cols, self.rows);
+        let mut out = Matrix::zeros(x.rows, self.cols);
+        for r in 0..x.rows {
+            let dst = &mut out.data[r * self.cols..(r + 1) * self.cols];
+            self.accumulate_row(x.row(r), dst);
+        }
+        out
+    }
+}
+
+/// A model with every prunable matrix quantized to int8 at load time.
+pub struct Int8Model<'m> {
+    pub model: &'m Model,
+    weights: HashMap<String, Int8Weight>,
+}
+
+impl<'m> Int8Model<'m> {
+    /// Quantize every prunable matrix (dense tensors untouched). On a
+    /// `prune_quantize`-produced checkpoint the stored f32 weights are
+    /// already on the int8 grid, so this recovers their codes exactly
+    /// (and their scales to ≤1 ulp — see the module docs).
+    pub fn from_model(model: &'m Model) -> Result<Self> {
+        let mut weights = HashMap::new();
+        for name in model.prunable_names() {
+            let w = model.weights.matrix(&name)?;
+            weights.insert(name, Int8Weight::from_dense(&w)?);
+        }
+        Ok(Int8Model { model, weights })
+    }
+
+    pub fn layer_count(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Weighted mean density (nonzero codes) over the prunable matrices.
+    pub fn density(&self) -> f64 {
+        let (mut nnz, mut total) = (0usize, 0usize);
+        for w in self.weights.values() {
+            nnz += w.nnz();
+            total += w.rows * w.cols;
+        }
+        nnz as f64 / total.max(1) as f64
+    }
+
+    /// Memory footprint of the int8 prunable weights in bytes (codes +
+    /// per-column scales) vs dense f32 — ~25% for any non-trivial rows.
+    pub fn bytes_int8_vs_dense(&self) -> (usize, usize) {
+        let (mut int8, mut dense) = (0usize, 0usize);
+        for w in self.weights.values() {
+            int8 += w.bytes();
+            dense += w.rows * w.cols * 4;
+        }
+        (int8, dense)
+    }
+
+    fn weight(&self, name: &str) -> Result<&Int8Weight> {
+        self.weights.get(name).ok_or_else(|| anyhow!("no int8 weight for '{name}'"))
+    }
+}
+
+/// Int8 decode backend: the single-row kernel for unbatched decode,
+/// `left_matmul` for batched decode steps and multi-row prefill — the
+/// same routing as the CSR and packed N:M backends.
+impl DecodeOps for Int8Model<'_> {
+    fn apply(&self, name: &str, x: &Matrix) -> Result<Matrix> {
+        let w = self.weight(name)?;
+        ensure!(
+            x.cols == w.rows,
+            "int8 weight '{name}': activation dim {} vs weight rows {}",
+            x.cols,
+            w.rows
+        );
+        Ok(if x.rows == 1 {
+            Matrix::from_vec(1, w.cols, w.row_matvec(x.row(0)))
+        } else {
+            w.left_matmul(x)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::matmul;
+    use crate::model::transformer::testutil::random_model;
+    use crate::model::{Decoder, DenseOps};
+    use crate::util::Rng;
+
+    /// Put every prunable matrix of a random model onto the int8 grid —
+    /// the state a `prune_quantize` checkpoint arrives in — with the
+    /// scales snapped to powers of two so load-time scale recovery is
+    /// bitwise-exact (f32 `(127*s)/127` is not an identity for general
+    /// `s`; general grids recover to ≤1 ulp, covered separately).
+    fn grid_model(seed: u64) -> Model {
+        let mut m = random_model(seed);
+        for name in m.prunable_names() {
+            let w = m.weights.matrix(&name).unwrap();
+            let mut q = QuantizedWeights::quantize(&w);
+            for s in &mut q.scales {
+                *s = s.log2().round().exp2();
+            }
+            m.weights.set_matrix(&name, &q.dequantize()).unwrap();
+        }
+        m
+    }
+
+    #[test]
+    fn kernels_bit_identical_to_dequantized_dense() {
+        let mut rng = Rng::new(40);
+        for &(rows, cols) in &[(16, 24), (33, 7), (65, 70)] {
+            let w = Matrix::randn(rows, cols, &mut rng);
+            let q = Int8Weight::from_dense(&w).unwrap();
+            let deq = q.dequantize();
+            let x = rng.gaussian_vec(rows);
+            let xm = Matrix::from_vec(1, rows, x.clone());
+            // single-row kernel vs dense matmul on the dequantized matrix
+            assert_eq!(q.row_matvec(&x), matmul(&xm, &deq).data, "{rows}x{cols}");
+            // multi-row kernel too
+            let xb = Matrix::randn(5, rows, &mut rng);
+            assert_eq!(q.left_matmul(&xb).data, matmul(&xb, &deq).data, "{rows}x{cols} batch");
+        }
+    }
+
+    #[test]
+    fn general_grid_recovers_codes_exactly_values_to_ulp() {
+        // quantize -> dequantize -> re-quantize: the codes are a fixed
+        // point; the scales (and so the values) recover to within 1 ulp
+        // because f32 (127*s)/127 can round one step off s
+        let mut rng = Rng::new(41);
+        let w = Matrix::randn(40, 12, &mut rng);
+        let q1 = Int8Weight::from_dense(&w).unwrap();
+        let once = q1.dequantize();
+        let q2 = Int8Weight::from_dense(&once).unwrap();
+        assert_eq!(q1.codes, q2.codes);
+        for (a, b) in once.data.iter().zip(&q2.dequantize().data) {
+            assert!((a - b).abs() <= 3.0e-7 * a.abs(), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn power_of_two_grid_round_trips_exactly() {
+        // with power-of-two scales, 127*s and (127*s)/127 are both exact,
+        // so the whole grid is a bitwise fixed point of re-quantization —
+        // the property grid_model relies on
+        let mut rng = Rng::new(47);
+        let mut q = QuantizedWeights::quantize(&Matrix::randn(40, 12, &mut rng));
+        for s in &mut q.scales {
+            *s = s.log2().round().exp2();
+        }
+        let once = Int8Weight::from_quantized(q).unwrap().dequantize();
+        let twice = Int8Weight::from_dense(&once).unwrap().dequantize();
+        assert_eq!(once.data, twice.data);
+    }
+
+    #[test]
+    fn int8_decode_bit_identical_to_dense_on_grid_checkpoint() {
+        let m = grid_model(42);
+        let ddec = Decoder::new(&m, DenseOps::new(&m).unwrap()).unwrap();
+        let qdec = Decoder::new(&m, Int8Model::from_model(&m).unwrap()).unwrap();
+        let ids = [2u16, 7, 1, 9, 4, 3];
+        // batched prefill, then stepwise decode: exact equality throughout
+        let mut dc = ddec.new_cache();
+        let mut qc = qdec.new_cache();
+        let a = ddec.prefill_batch(&mut dc, &ids).unwrap();
+        let b = qdec.prefill_batch(&mut qc, &ids).unwrap();
+        assert_eq!(a, b, "prefill_batch diverged bitwise");
+        for &tok in &[5u16, 11, 0] {
+            let a = ddec.step(&mut dc, tok).unwrap();
+            let b = qdec.step(&mut qc, tok).unwrap();
+            assert_eq!(a, b, "decode step diverged bitwise");
+        }
+    }
+
+    #[test]
+    fn weight_bytes_about_a_quarter_of_dense() {
+        // 1 byte/code + 4 bytes/column scale: 256 rows => 25.4% of dense
+        let mut rng = Rng::new(43);
+        let w = Matrix::randn(256, 64, &mut rng);
+        let q = Int8Weight::from_dense(&w).unwrap();
+        let dense = 256 * 64 * 4;
+        let ratio = q.bytes() as f64 / dense as f64;
+        assert!((0.25..0.26).contains(&ratio), "ratio {ratio}");
+        // model level: strictly under dense, and under CSR-at-full-density
+        let m = grid_model(44);
+        let im = Int8Model::from_model(&m).unwrap();
+        let (int8, dense) = im.bytes_int8_vs_dense();
+        assert!(int8 < dense / 3, "int8 {int8} vs dense {dense}");
+        assert_eq!(im.layer_count(), m.prunable_names().len());
+    }
+
+    #[test]
+    fn missing_and_misshapen_inputs_rejected() {
+        let m = grid_model(45);
+        let im = Int8Model::from_model(&m).unwrap();
+        assert!(im.apply("nope", &Matrix::zeros(1, 16)).is_err());
+        // wrong activation width must error, not abort
+        assert!(im.apply("blocks.0.attn.wq", &Matrix::zeros(1, 7)).is_err());
+        // malformed quantized buffers are refused
+        let bad = QuantizedWeights { rows: 4, cols: 4, codes: vec![0; 3], scales: vec![1.0; 4] };
+        assert!(Int8Weight::from_quantized(bad).is_err());
+        let bad2 = QuantizedWeights { rows: 2, cols: 3, codes: vec![0; 6], scales: vec![1.0; 2] };
+        assert!(Int8Weight::from_quantized(bad2).is_err());
+    }
+
+    #[test]
+    fn pruned_zeros_survive_quantization() {
+        let mut rng = Rng::new(46);
+        let mut w = Matrix::randn(20, 10, &mut rng);
+        for (i, v) in w.data.iter_mut().enumerate() {
+            if i % 3 != 0 {
+                *v = 0.0;
+            }
+        }
+        let q = Int8Weight::from_dense(&w).unwrap();
+        let deq = q.dequantize();
+        for (orig, got) in w.data.iter().zip(&deq.data) {
+            if *orig == 0.0 {
+                assert_eq!(*got, 0.0);
+            }
+        }
+        // nnz counts only surviving codes; density is its model-level ratio
+        assert!(q.nnz() <= 200 / 3 + 1, "nnz {}", q.nnz());
+        let d = Int8Model::from_model(&grid_model(46)).unwrap().density();
+        assert!(d > 0.0 && d <= 1.0, "density {d}");
+    }
+}

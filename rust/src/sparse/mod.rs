@@ -22,6 +22,15 @@
 //!   whole serve stack (decoder, batcher, TCP front-end) runs on it
 //!   unchanged via `alps serve --format nm` /
 //!   [`crate::serve::Engine::nm`].
+//! * [`int8`] — [`Int8Model`]/[`Int8Weight`]: the quantized deployment
+//!   format ([`crate::pruning::quantize`]'s int8 codes + per-column f32
+//!   scales) behind the same [`crate::model::DecodeOps`] seam, served
+//!   via `alps serve --format int8` / [`crate::serve::Engine::int8`].
+//!   Weight bytes drop to ~25% of dense f32; the kernels are
+//!   bit-identical to dense on the dequantized matrix, and a checkpoint
+//!   already on the int8 grid (`examples/prune_quantize.rs`) re-loads
+//!   with exact codes and ≤1-ulp scales, so its decode matches dense to
+//!   ulp precision.
 //!
 //! `bench_serve` races dense vs CSR vs packed N:M at matched 2:4
 //! sparsity, and `bench_perf_hotpath` tracks the kernel-level gap in
@@ -33,8 +42,10 @@
 
 #![warn(clippy::unwrap_used, clippy::expect_used)]
 
+pub mod int8;
 pub mod model;
 pub mod packed;
 
+pub use int8::{Int8Model, Int8Weight};
 pub use model::{NmModel, NmWeight};
 pub use packed::NmPacked;
