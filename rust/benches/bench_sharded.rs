@@ -1,7 +1,7 @@
 //! Distributed pruning benchmark: layer-solve throughput of the native
 //! in-process engine vs a [`ShardedEngine`] over loopback worker pools of
 //! 1 and 2 members, plus the wire/codec cost per layer — including the
-//! protocol-v2 comparison of gram-on-coordinator vs gram-on-worker
+//! protocol comparison (v2+) of gram-on-coordinator vs gram-on-worker
 //! (`--ship-activations`) payload sizes and wall time. Loopback makes the
 //! transport cost visible without hiding it behind real network latency —
 //! the point is to bound the protocol overhead, and to verify (every run)

@@ -1,37 +1,54 @@
 //! Coordinator-side dispatcher for distributed pruning: a
 //! [`ShardedEngine`] implementing [`crate::pruning::Engine`] that ships
-//! [`LayerProblem`]s to a pool of `alps worker` processes over the binary
-//! frame protocol ([`crate::pruning::wire`], version 2) and reassembles
-//! results deterministically.
+//! [`LayerProblem`]s to an **elastic pool** of `alps worker` processes
+//! over the binary frame protocol ([`crate::pruning::wire`], version 3)
+//! and reassembles results deterministically.
 //!
 //! Design:
 //!
-//! * **One dispatcher thread per worker**, all draining one shared job
+//! * **Owned jobs, long-lived pool**: each layer solve is an `Arc`'d
+//!   self-contained [`OwnedJob`] — target, `Arc<LayerProblem>`, and a
+//!   positional result slot in its block's [`BlockState`] — pushed onto
+//!   one shared queue that outlives any single block solve. Dispatcher
+//!   threads are spawned once per run (detached `std::thread::spawn`,
+//!   joined at [`ShardedEngine::close`]), not scoped per block: nothing
+//!   in the dispatch path borrows from a block's stack frame, which is
+//!   what lets workers join and leave while a run is in flight.
+//! * **One dispatcher thread per pool member**, all draining the shared
 //!   queue — a fast worker naturally takes more layers (work stealing by
 //!   construction), and layer order never matters because results land in
-//!   a slot indexed by job position. The threads are scoped per block
-//!   solve (they borrow the block's problems — zero copies); what
-//!   persists across blocks is the expensive part, the **connections**.
-//! * **Persistent worker pool**: each worker's TCP connection is parked
-//!   in a per-slot cache when a block finishes and picked up again by the
-//!   next block's dispatcher, so an N-block run dials each worker once,
-//!   not N times. A parked connection that went stale between blocks
-//!   (worker restarted, NAT timeout) gets one free redial — staleness is
-//!   not a worker failure and never burns a retry attempt.
-//!   [`ShardedEngine::close`] drops the cached connections explicitly
-//!   (the session calls it when a run finishes; dropping the engine does
-//!   the same).
-//! * **Heartbeat liveness**: protocol-v2 workers emit a
-//!   [`tag::HEARTBEAT`] frame every couple of seconds while solving, so
-//!   *any* silence longer than [`ShardedConfig::heartbeat_grace`]
-//!   (default 30 s) means the worker is gone — not merely slow — and its
-//!   in-flight jobs reroute immediately instead of waiting out the
+//!   a slot indexed by job position. Heartbeat- and result-derived
+//!   per-worker solve-time EWMAs feed a smarter dequeue: the **slowest**
+//!   member skips the queue head and takes the **smallest** pending layer
+//!   (cost ∝ `n_in · n_out`), so a straggler never strands a huge layer
+//!   at the end of a block. Any dequeue policy is bit-safe — reassembly
+//!   is positional.
+//! * **Dynamic membership**: [`ShardedEngine::listen_for_registrations`]
+//!   accepts [`tag::REGISTER`] frames (new in frame version 3) carrying a
+//!   worker's advertised `host:port`; the coordinator adds the member,
+//!   spawns a dispatcher for it, and acks by echoing the frame —
+//!   `alps worker --register host:port` dials it and joins mid-run.
+//!   Departures (exhausted reconnect attempts, heartbeat silence, BUSY
+//!   past patience) requeue the member's owned jobs at the front of the
+//!   queue and retire the member for good; joins and leaves feed the
+//!   fleet gauges and, when a [`StatusBoard`] is attached, the
+//!   `--status-addr` fleet-size series and membership event log.
+//! * **Persistent connections**: an idle dispatcher parks its TCP
+//!   connection in its member slot and picks it up again when work
+//!   arrives, so an N-block run dials each worker once, not N times. A
+//!   parked connection that went stale between blocks (worker restarted,
+//!   NAT timeout) gets one free redial — staleness is not a worker
+//!   failure and never burns a retry attempt.
+//! * **Heartbeat liveness**: workers emit a [`tag::HEARTBEAT`] frame
+//!   every couple of seconds while solving, so *any* silence longer than
+//!   [`ShardedConfig::heartbeat_grace`] (default 30 s) means the worker
+//!   is gone — not merely slow — and its in-flight jobs reroute
+//!   immediately instead of waiting out the
 //!   [`ShardedConfig::idle_timeout`] (default 600 s, kept as the
 //!   wall-clock ceiling on any single frame transfer, which also defeats
 //!   byte-dribbling peers). Beats renew the silence clock (only a
 //!   delivered result renews the reconnect-attempt budget, so a
-//!   beat-then-crash worker still exhausts its attempts), and they
-//!   surface on the status endpoint when a [`StatusBoard`] is attached.
+//!   beat-then-crash worker still exhausts its attempts).
 //! * **Per-worker outstanding-request limit**
 //!   ([`ShardedConfig::max_outstanding`]): each connection pipelines a
 //!   bounded number of in-flight solves, enough to hide the round trip
@@ -41,52 +58,55 @@
 //!   is strictly smaller than the gram (`n < n_in`), the request ships X
 //!   instead of H `[n_in, n_in]` and the worker builds H itself with the
 //!   same deterministic kernel — O(n·n_in) wire bytes instead of
-//!   O(n_in^2), a large cut for wide layers pruned from modest
-//!   calibration sets, and never an inflation for narrow ones (the
-//!   cheaper encoding is chosen per layer).
+//!   O(n_in^2), and never an inflation for narrow layers (the cheaper
+//!   encoding is chosen per layer).
 //! * **Retry on disconnect**: a failed connect, a broken connection, or a
-//!   hung worker requeues that worker's in-flight jobs at the *front* of
-//!   the queue (another worker picks them up next) and the worker gets a
+//!   hung worker requeues that member's in-flight jobs at the *front* of
+//!   the queue (another member picks them up next) and the member gets a
 //!   bounded number of reconnect attempts
 //!   ([`ShardedConfig::max_attempts`]). The run completes as long as one
-//!   worker survives; only when every pool member is gone do unsolved
+//!   member survives; only when the live fleet is empty do unsolved
 //!   layers fail the block.
 //! * **Solver errors are not retried**: a worker answering `tag::ERROR`
 //!   for a job this connection owns hit a deterministic failure (bad
 //!   target for the method, degenerate problem) that would fail
-//!   identically anywhere, so the whole block aborts with that message.
-//!   Transport-level refusals (`tag::BUSY` at the connection cap, or an
-//!   ERROR carrying the worker's protocol sentinel instead of an owned
-//!   job id) stay retryable.
+//!   identically anywhere, so that job's whole block aborts with the
+//!   message. The member survives — a solver error is not a transport
+//!   fault. Transport-level refusals (`tag::BUSY` at the connection cap,
+//!   or an ERROR carrying the worker's protocol sentinel instead of an
+//!   owned job id) stay retryable.
 //! * **Observability**: the dispatcher feeds the process-global
 //!   [`crate::obs`] registry — per-worker RPC latency histograms
 //!   (`alps_coord_rpc_seconds{worker=...}`), burned reconnect attempts
 //!   (`alps_coord_retries_total`), rerouted in-flight jobs
-//!   (`alps_coord_reroutes_total`), and request payload bytes split by
-//!   calibration encoding (`alps_coord_wire_tx_bytes_total{calib=...}` —
-//!   the live measure of what activation shipping saves). All recording
+//!   (`alps_coord_reroutes_total`), request payload bytes split by
+//!   calibration encoding (`alps_coord_wire_tx_bytes_total{calib=...}`),
+//!   and the fleet lifecycle (`alps_coord_fleet_size`,
+//!   `alps_coord_joins_total`, `alps_coord_leaves_total`). All recording
 //!   is lock-free and off the result path: instrumentation cannot change
 //!   a bit of the reassembled weights.
 //! * **Bit-identical results**: matrices travel bit-exactly
 //!   (`to_le_bytes` round-trip), the worker rebuilds the problem with the
 //!   same deterministic kernels (including the gram, when activations are
-//!   shipped), and reassembly is positional — a sharded run equals a
+//!   shipped), and reassembly is positional — a sharded run, *including
+//!   one with workers joining and leaving mid-flight*, equals a
 //!   [`NativeEngine`] run to the last bit (proven by
 //!   `tests/integration_sharded.rs` and the CI smoke step).
 
 use crate::config::SparsityTarget;
 use crate::net::framing::{read_frame_deadline, write_frame, FrameRead};
 use crate::net::lock;
-use crate::obs::Counter;
+use crate::obs::{Counter, Gauge};
 use crate::pruning::engine::{Engine, LayerJob, LayerResult};
 use crate::pruning::status::StatusBoard;
 use crate::pruning::wire::{self, tag, CalibRef};
 use crate::pruning::{LayerProblem, MethodSpec};
 use anyhow::{bail, Context as _, Result};
 use std::collections::VecDeque;
-use std::net::{SocketAddr, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Dispatcher tuning knobs.
 #[derive(Clone, Debug)]
@@ -100,7 +120,7 @@ pub struct ShardedConfig {
     /// Per-attempt connect timeout.
     pub connect_timeout: Duration,
     /// Legacy silence ceiling (`--shard-idle`). The read loop waits
-    /// `heartbeat_grace.min(idle_timeout)` for the next byte, so with v2
+    /// `heartbeat_grace.min(idle_timeout)` for the next byte, so with
     /// heartbeats the grace is the effective budget and this only still
     /// bites when configured *below* the grace; it survives so operators
     /// who tuned `--shard-idle` down keep their tighter bound.
@@ -144,70 +164,738 @@ impl Default for ShardedConfig {
     }
 }
 
-/// Poll interval while a drained-queue worker waits for possible
-/// reroutes: a job is only truly gone once its result slot is filled, so
-/// survivors linger until the whole block is solved (or failed).
+/// Poll interval for every wait-for-state loop in the pool: an idle
+/// dispatcher waiting for work, the block-completion wait in
+/// [`ShardedEngine::dispatch`], and the registration accept loop.
 const WAIT_POLL: Duration = Duration::from_millis(50);
 
-/// Process-global coordinator counters: `(retries, reroutes, tx_gram,
-/// tx_activations)`. Retries are burned reconnect attempts, reroutes are
-/// in-flight jobs requeued off a failed worker, and the tx counters split
-/// solve-request payload bytes by calibration encoding — the live view of
-/// the activation-shipping trade the module doc describes.
-fn coord_metrics() -> &'static (Counter, Counter, Counter, Counter) {
-    static M: std::sync::OnceLock<(Counter, Counter, Counter, Counter)> =
-        std::sync::OnceLock::new();
+/// EWMA smoothing for per-member solve seconds: `new = (1-α)·old + α·x`.
+const EWMA_ALPHA: f64 = 0.3;
+
+/// Process-global coordinator instrumentation. Retries are burned
+/// reconnect attempts, reroutes are in-flight jobs requeued off a failed
+/// member, the tx counters split solve-request payload bytes by
+/// calibration encoding, and the fleet gauge/counters track dynamic
+/// membership (seed members count as joins too, so
+/// `joins - leaves = fleet_size` at any instant).
+struct CoordMetrics {
+    retries: Counter,
+    reroutes: Counter,
+    tx_gram: Counter,
+    tx_acts: Counter,
+    joins: Counter,
+    leaves: Counter,
+    fleet: Gauge,
+}
+
+fn coord_metrics() -> &'static CoordMetrics {
+    static M: std::sync::OnceLock<CoordMetrics> = std::sync::OnceLock::new();
     M.get_or_init(|| {
         let r = crate::obs::global();
         let tx = "alps_coord_wire_tx_bytes_total";
         let tx_help = "solve-request payload bytes sent, by calibration encoding";
-        (
-            r.counter("alps_coord_retries_total", "worker reconnect attempts burned", &[]),
-            r.counter("alps_coord_reroutes_total", "in-flight jobs requeued off a worker", &[]),
-            r.counter(tx, tx_help, &[("calib", "gram")]),
-            r.counter(tx, tx_help, &[("calib", "activations")]),
-        )
+        CoordMetrics {
+            retries: r.counter("alps_coord_retries_total", "worker reconnect attempts burned", &[]),
+            reroutes: r
+                .counter("alps_coord_reroutes_total", "in-flight jobs requeued off a worker", &[]),
+            tx_gram: r.counter(tx, tx_help, &[("calib", "gram")]),
+            tx_acts: r.counter(tx, tx_help, &[("calib", "activations")]),
+            joins: r.counter(
+                "alps_coord_joins_total",
+                "workers that joined the fleet (seed list + REGISTER frames)",
+                &[],
+            ),
+            leaves: r.counter(
+                "alps_coord_leaves_total",
+                "workers written off the fleet for good",
+                &[],
+            ),
+            fleet: r.gauge(
+                "alps_coord_fleet_size",
+                "live dispatcher-backed workers in the fleet",
+                &[],
+            ),
+        }
     })
 }
 
-/// Shared dispatch state for one block solve. Holds borrowed problems —
-/// the dispatcher never copies a layer's matrices except into the wire
-/// encoding itself.
-struct Dispatch<'j> {
-    problems: &'j [&'j LayerProblem],
-    target: SparsityTarget,
-    /// Job indices not yet assigned (rerouted jobs return to the front).
-    pending: Mutex<VecDeque<usize>>,
+/// Result collection for one `solve_block` call. Jobs hold an `Arc` to
+/// their block, so a block whose dispatch already failed (or returned)
+/// stays alive until the last straggler result lands harmlessly in it.
+struct BlockState {
     /// One slot per job, positional — deterministic reassembly.
     results: Mutex<Vec<Option<LayerResult>>>,
+    /// Slots not yet filled; the block is done when this hits zero.
+    unsolved: AtomicUsize,
     /// First deterministic solver error; aborts the block.
     fatal: Mutex<Option<String>>,
-    /// Transport-level failure per written-off worker (diagnostics).
-    worker_errors: Mutex<Vec<String>>,
 }
 
-impl Dispatch<'_> {
-    fn all_solved(&self) -> bool {
-        !lock(&self.results).iter().any(|r| r.is_none())
+/// One self-contained layer solve: everything a dispatcher needs to ship
+/// the job and land the result, with no borrows into any stack frame.
+struct OwnedJob {
+    /// Position in the block — the result slot index and the wire job id.
+    slot: usize,
+    target: SparsityTarget,
+    problem: Arc<LayerProblem>,
+    block: Arc<BlockState>,
+}
+
+impl OwnedJob {
+    /// Relative solve-cost proxy (`n_in · n_out`) for the
+    /// smallest-layer-to-slowest-member dequeue policy.
+    fn cost(&self) -> u64 {
+        (self.problem.h.rows as u64).saturating_mul(self.problem.what.cols.max(1) as u64)
     }
 }
 
-/// A pruning [`Engine`] that fans layer solves across remote workers,
-/// keeping its per-worker connections alive across block solves.
-pub struct ShardedEngine {
+/// One pool member: a worker address, its parked connection, and its
+/// liveness + solve-time estimate. `alive == false` is permanent — a
+/// written-off member never rejoins except through a fresh REGISTER.
+struct Member {
+    addr: String,
+    /// Connection parked here while the member's dispatcher idles (and
+    /// across block solves); taking it is a `from_cache` reuse that earns
+    /// a free redial on staleness.
+    conn: Mutex<Option<TcpStream>>,
+    alive: AtomicBool,
+    /// EWMA of delivered solve seconds as `f64` bits; 0 = no data yet.
+    /// Raised toward a heartbeat's elapsed time when an in-progress solve
+    /// already exceeds the average — a straggler announces itself before
+    /// its result lands.
+    ewma_bits: AtomicU64,
+}
+
+impl Member {
+    fn new(addr: String) -> Member {
+        Member {
+            addr,
+            conn: Mutex::new(None),
+            alive: AtomicBool::new(true),
+            ewma_bits: AtomicU64::new(0),
+        }
+    }
+
+    fn ewma(&self) -> f64 {
+        f64::from_bits(self.ewma_bits.load(Ordering::Relaxed))
+    }
+
+    /// Fold a delivered solve's seconds into the estimate.
+    fn fold_ewma(&self, secs: f64) {
+        if !secs.is_finite() || secs <= 0.0 {
+            return;
+        }
+        let old = self.ewma();
+        let new = if old > 0.0 { (1.0 - EWMA_ALPHA) * old + EWMA_ALPHA * secs } else { secs };
+        self.ewma_bits.store(new.to_bits(), Ordering::Relaxed);
+    }
+
+    /// A heartbeat proves the current solve has already run `secs`; an
+    /// estimate below that is stale — raise it (never lower it here).
+    fn raise_ewma_floor(&self, secs: f64) {
+        if secs.is_finite() && secs > self.ewma() {
+            self.ewma_bits.store(secs.to_bits(), Ordering::Relaxed);
+        }
+    }
+}
+
+/// The long-lived dispatch pool: the shared job queue, the member fleet,
+/// and the dispatcher threads. Owned via `Arc` by the engine, every
+/// dispatcher thread, and the registration listener.
+struct Pool {
     spec: MethodSpec,
-    workers: Vec<String>,
     cfg: ShardedConfig,
-    /// Per-worker parked connection, reused by the next block's
-    /// dispatcher (same index as `workers`).
-    conns: Vec<Mutex<Option<TcpStream>>>,
-    /// Live-progress sink: heartbeats are reported here when attached.
-    board: Option<Arc<StatusBoard>>,
+    /// Jobs not yet assigned (rerouted jobs return to the front).
+    pending: Mutex<VecDeque<Arc<OwnedJob>>>,
+    members: Mutex<Vec<Arc<Member>>>,
+    /// Dispatcher thread handles, joined at [`ShardedEngine::close`].
+    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Raised by `close` to stop every dispatcher and the registration
+    /// listener; reset afterwards so a later solve can reseed the fleet.
+    shutdown: AtomicBool,
+    /// Set once the seed worker list has been turned into members.
+    seeded: AtomicBool,
+    /// Live-progress sink: heartbeats and membership events go here.
+    board: Mutex<Option<Arc<StatusBoard>>>,
+    /// Transport-level failure per written-off member, drained by the
+    /// next `dispatch` for its error / degraded-pool diagnostics.
+    worker_errors: Mutex<Vec<String>>,
+}
+
+impl Pool {
+    fn new(spec: MethodSpec, cfg: ShardedConfig) -> Pool {
+        Pool {
+            spec,
+            cfg,
+            pending: Mutex::new(VecDeque::new()),
+            members: Mutex::new(Vec::new()),
+            threads: Mutex::new(Vec::new()),
+            shutdown: AtomicBool::new(false),
+            seeded: AtomicBool::new(false),
+            board: Mutex::new(None),
+            worker_errors: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn live_members(&self) -> usize {
+        lock(&self.members).iter().filter(|m| m.alive.load(Ordering::SeqCst)).count()
+    }
+
+    fn board(&self) -> Option<Arc<StatusBoard>> {
+        lock(&self.board).clone()
+    }
+
+    /// Add a member and spawn its dispatcher. Re-registering a live
+    /// address is idempotent (`false`); registering the address of a
+    /// written-off member replaces the dead entry with a fresh one.
+    fn add_member(self: &Arc<Self>, addr: &str) -> bool {
+        let member = Arc::new(Member::new(addr.to_string()));
+        {
+            let mut members = lock(&self.members);
+            if members.iter().any(|m| m.addr == addr && m.alive.load(Ordering::SeqCst)) {
+                return false;
+            }
+            members.retain(|m| m.addr != addr || m.alive.load(Ordering::SeqCst));
+            members.push(member.clone());
+        }
+        let met = coord_metrics();
+        met.joins.inc();
+        met.fleet.set(self.live_members() as f64);
+        if let Some(board) = self.board() {
+            board.note_worker_joined(addr);
+        }
+        let pool = self.clone();
+        let handle = std::thread::spawn(move || pool.member_loop(&member));
+        lock(&self.threads).push(handle);
+        true
+    }
+
+    /// Retire a member for good: record why, update the fleet metrics,
+    /// and clear its live status (the `solving` entry AND its stale
+    /// ADMM-iteration gauge series — a departed worker must not keep
+    /// publishing a frozen iteration count).
+    fn leave(&self, member: &Member, error: String) {
+        member.alive.store(false, Ordering::SeqCst);
+        lock(&self.worker_errors).push(error);
+        let met = coord_metrics();
+        met.leaves.inc();
+        met.fleet.set(self.live_members() as f64);
+        if let Some(board) = self.board() {
+            board.note_worker_left(&member.addr);
+        }
+    }
+
+    /// Shared failure epilogue for every retryable connection-level fault
+    /// in [`Pool::member_loop`]: a stale parked connection redials for
+    /// free; otherwise one reconnect attempt is consumed (with the
+    /// configured backoff before the retry) and the member leaves the
+    /// fleet — `true` — once the budget is gone. Keeping the policy in
+    /// one place keeps the six failure sites from drifting.
+    fn written_off(
+        &self,
+        member: &Member,
+        attempts: &mut usize,
+        from_cache: bool,
+        error: impl FnOnce() -> String,
+    ) -> bool {
+        if from_cache {
+            // stale parked connection (worker restarted or link timed out
+            // between blocks): one free redial, no attempt burned
+            return false;
+        }
+        *attempts += 1;
+        coord_metrics().retries.inc();
+        if *attempts >= self.cfg.max_attempts {
+            self.leave(member, error());
+            return true;
+        }
+        std::thread::sleep(self.cfg.retry_backoff);
+        false
+    }
+
+    /// True when `member` has the worst solve-time estimate in the live
+    /// fleet — and at least one *other* live member has data, so the
+    /// policy never fires on a fleet with nothing to compare against.
+    fn is_slowest(&self, member: &Member) -> bool {
+        let mine = member.ewma();
+        if mine <= 0.0 {
+            return false;
+        }
+        let members = lock(&self.members);
+        let mut best_other = 0.0f64;
+        for m in members.iter() {
+            if std::ptr::eq(m.as_ref(), member) || !m.alive.load(Ordering::SeqCst) {
+                continue;
+            }
+            let e = m.ewma();
+            if e > best_other {
+                best_other = e;
+            }
+        }
+        best_other > 0.0 && mine > best_other
+    }
+
+    /// Dequeue the next job for `member`. Default is queue order; when
+    /// the member is provably the slowest in the fleet and there is a
+    /// choice, it takes the smallest pending layer instead, so a
+    /// straggler never strands a huge layer at the end of a block. Jobs
+    /// whose block already failed are dropped on sight.
+    fn take_job(&self, member: &Member) -> Option<Arc<OwnedJob>> {
+        loop {
+            let job = {
+                let mut pending = lock(&self.pending);
+                if pending.len() > 1 && self.is_slowest(member) {
+                    let smallest = pending
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|(_, j)| j.cost())
+                        .map(|(i, _)| i);
+                    match smallest {
+                        Some(i) => pending.remove(i),
+                        None => pending.pop_front(),
+                    }
+                } else {
+                    pending.pop_front()
+                }
+            }?;
+            if lock(&job.block.fatal).is_none() {
+                return Some(job);
+            }
+        }
+    }
+
+    /// Land a delivered result in its block's slot (first delivery wins;
+    /// a straggler from a rerouted duplicate is dropped) and fold the
+    /// solve time into the member's estimate.
+    fn deliver(&self, member: &Member, job: &OwnedJob, resp: wire::SolveResponse) {
+        member.fold_ewma(resp.secs);
+        let mut results = lock(&job.block.results);
+        if job.slot < results.len() && results[job.slot].is_none() {
+            results[job.slot] = Some(LayerResult {
+                w: resp.w,
+                secs: resp.secs,
+                admm_iters: resp.admm_iters as usize,
+                worker: Some(member.addr.clone()),
+            });
+            drop(results);
+            job.block.unsolved.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Return a member's in-flight jobs to the *front* of the queue so a
+    /// surviving member reroutes them before taking fresh work.
+    fn requeue(&self, member: &Member, in_flight: &mut VecDeque<Arc<OwnedJob>>) {
+        if in_flight.is_empty() {
+            return;
+        }
+        coord_metrics().reroutes.add(in_flight.len() as u64);
+        if let Some(board) = self.board() {
+            // whatever this worker was live-reporting is now abandoned:
+            // clear its "solving" status entry so a dead worker doesn't
+            // show as forever in-progress
+            board.note_worker_stalled(&member.addr);
+        }
+        let mut pending = lock(&self.pending);
+        while let Some(job) = in_flight.pop_back() {
+            pending.push_front(job);
+        }
+    }
+
+    /// One member's dispatch loop, alive for the whole run: idle (with
+    /// the connection parked) while the queue is empty, otherwise connect
+    /// (or unpark), keep up to `max_outstanding` solves in flight, and
+    /// reroute on failure. Returns only at shutdown or when the member is
+    /// written off the fleet.
+    fn member_loop(&self, member: &Arc<Member>) {
+        let addr = member.addr.as_str();
+        // registered once per worker address; lock-free to observe
+        let rpc_secs = crate::obs::global().histogram(
+            "alps_coord_rpc_seconds",
+            "send-to-result latency of a remote layer solve",
+            &[("worker", addr)],
+            &crate::obs::LATENCY_EDGES,
+        );
+        let mut attempts = 0usize;
+        // set at the first BUSY answer; cleared by any successful solve
+        let mut busy_since: Option<Instant> = None;
+        'idle: loop {
+            if self.shutdown.load(Ordering::SeqCst) || !member.alive.load(Ordering::SeqCst) {
+                return;
+            }
+            if lock(&self.pending).is_empty() {
+                // nothing to do anywhere; jobs in flight on other members
+                // may still reroute here, so stay ready
+                std::thread::sleep(WAIT_POLL);
+                continue 'idle;
+            }
+            // a connection parked while idling (or by a previous block) is
+            // reused; if it went stale in between, its failure below
+            // redials for free (`from_cache`) instead of burning an attempt
+            let (stream, mut from_cache) = match lock(&member.conn).take() {
+                Some(s) => (s, true),
+                None => match connect(addr, self.cfg.connect_timeout) {
+                    Ok(s) => (s, false),
+                    Err(e) => {
+                        if self.written_off(member, &mut attempts, false, || {
+                            format!("{addr}: {e}")
+                        }) {
+                            return;
+                        }
+                        continue 'idle;
+                    }
+                },
+            };
+            let mut reader = match stream.try_clone() {
+                Ok(r) => r,
+                Err(e) => {
+                    self.leave(member, format!("{addr}: clone failed: {e}"));
+                    return;
+                }
+            };
+            let mut writer = stream;
+            // in-flight jobs, in send order (the worker answers one
+            // connection's requests sequentially, so the front-most job
+            // with a matching id is always the right one — job ids are
+            // block-local slots and may repeat across blocks)
+            let mut in_flight: VecDeque<Arc<OwnedJob>> = VecDeque::new();
+            // send instants for the RPC-latency histogram, keyed by slot
+            // (tiny: bounded by max_outstanding). Dropped wholesale with
+            // the connection on reroute — a rerouted job's latency would
+            // measure the failure, not the solve.
+            let mut sent_at: Vec<(usize, Instant)> = Vec::new();
+            // last moment this worker proved it is working *for us*: a
+            // successful send, an owned RESULT/ERROR, or an owned
+            // HEARTBEAT. Frames for jobs we don't own (a desynced or
+            // hostile peer echoing someone else's beats) deliberately do
+            // NOT renew it — otherwise such a peer could pin our in-flight
+            // jobs forever without ever tripping the grace.
+            let mut last_owned_signal = Instant::now();
+            // cleared when a pipelined send stalls: a busy worker only
+            // reads between solves, so a huge second frame can exceed the
+            // socket buffer and the write timeout without anything being
+            // wrong — stop sending, keep reading (the write may have been
+            // partial, so the channel can't carry further requests), and
+            // replace the connection once the in-flight drain completes
+            let mut can_send = true;
+            loop {
+                if self.shutdown.load(Ordering::SeqCst) {
+                    self.requeue(member, &mut in_flight);
+                    return;
+                }
+                // top up the pipeline
+                while can_send && in_flight.len() < self.cfg.max_outstanding {
+                    let Some(job) = self.take_job(member) else { break };
+                    let problem = job.problem.as_ref();
+                    // ship raw activations instead of the gram when
+                    // configured, retained, and *strictly smaller* — for
+                    // rows >= n_in the gram is the cheaper payload, so the
+                    // flag picks the winning encoding per layer instead of
+                    // inflating narrow layers
+                    let calib = match (self.cfg.ship_activations, &problem.x) {
+                        (true, Some(x)) if x.rows < problem.h.rows => {
+                            CalibRef::Activations(x.as_ref())
+                        }
+                        _ => CalibRef::Gram(&problem.h),
+                    };
+                    let shipped_x = matches!(calib, CalibRef::Activations(_));
+                    let payload = wire::encode_solve(
+                        job.slot as u64,
+                        job.target,
+                        &self.spec,
+                        &problem.what,
+                        calib,
+                    );
+                    let met = coord_metrics();
+                    let tx_bytes = if shipped_x { &met.tx_acts } else { &met.tx_gram };
+                    tx_bytes.add(payload.len() as u64);
+                    if let Err(e) = write_frame(&mut writer, tag::SOLVE, &payload) {
+                        lock(&self.pending).push_front(job);
+                        if in_flight.is_empty() {
+                            if from_cache {
+                                // stale parked connection: one free
+                                // redial, no attempt burned
+                                continue 'idle;
+                            }
+                            // a saturated worker may have refused us with a
+                            // BUSY still sitting in our receive buffer (its
+                            // refusal drain is bounded, so a huge frame can
+                            // fail the write first) — prefer that
+                            // classification over a hard failure
+                            let refusal = read_frame_deadline(
+                                &mut reader,
+                                self.cfg.max_frame_bytes,
+                                None,
+                                Some(Duration::from_secs(1)),
+                                Some(Duration::from_secs(5)),
+                            );
+                            if let Ok(FrameRead::Frame { tag: tag::BUSY, .. }) = refusal {
+                                let since = *busy_since.get_or_insert_with(Instant::now);
+                                if since.elapsed() >= self.cfg.busy_patience {
+                                    self.leave(
+                                        member,
+                                        format!(
+                                            "{addr}: busy (at capacity) for {:.1}s",
+                                            since.elapsed().as_secs_f64()
+                                        ),
+                                    );
+                                    return;
+                                }
+                                std::thread::sleep(self.cfg.retry_backoff);
+                                continue 'idle;
+                            }
+                            // nothing owed on this connection: a failed
+                            // write really is a broken worker link
+                            if self.written_off(member, &mut attempts, false, || {
+                                format!("{addr}: send failed: {e}")
+                            }) {
+                                return;
+                            }
+                            continue 'idle;
+                        }
+                        // backpressure, not failure: the worker is solving
+                        // and not reading — drain its responses instead
+                        can_send = false;
+                        break;
+                    }
+                    sent_at.push((job.slot, Instant::now()));
+                    in_flight.push_back(job);
+                    last_owned_signal = Instant::now();
+                }
+                if in_flight.is_empty() {
+                    if !can_send {
+                        // write side poisoned (possibly partial frame) but
+                        // fully drained: replace the connection; attempts
+                        // was reset by the drained responses
+                        continue 'idle;
+                    }
+                    if lock(&self.pending).is_empty() {
+                        // queue drained and nothing owed: park the healthy
+                        // connection and go idle until work arrives
+                        *lock(&member.conn) = Some(writer);
+                        continue 'idle;
+                    }
+                    continue;
+                }
+                // heartbeats arrive every couple of seconds during a solve,
+                // so owned-signal silence beyond the grace means a dead
+                // worker — far tighter than the idle ceiling kept for
+                // tuned-down `--shard-idle` links. The budget is the
+                // *remaining* grace since the last owned signal, so
+                // unowned frames (which complete a read without renewing
+                // the clock) cannot stretch it; the per-frame wall-clock
+                // deadline (at least the idle ceiling, so a huge
+                // legitimate RESULT still has the full `--shard-idle`
+                // window to transfer) stops a peer from pinning us with
+                // one never-completing dribbled frame.
+                let silence_budget = self.cfg.heartbeat_grace.min(self.cfg.idle_timeout);
+                let remaining = silence_budget.saturating_sub(last_owned_signal.elapsed());
+                let read = if remaining.is_zero() {
+                    // grace exhausted across reads (e.g. a stream of
+                    // unowned heartbeats): same as a mid-solve hang
+                    Err(anyhow::anyhow!(
+                        "no owned result/heartbeat for {:.1}s",
+                        silence_budget.as_secs_f64()
+                    ))
+                } else {
+                    read_frame_deadline(
+                        &mut reader,
+                        self.cfg.max_frame_bytes,
+                        Some(&self.shutdown),
+                        Some(remaining),
+                        Some(self.cfg.idle_timeout.max(remaining)),
+                    )
+                };
+                match read {
+                    Ok(FrameRead::Frame { tag: tag::RESULT, payload }) => {
+                        match wire::SolveResponse::decode(&payload) {
+                            Ok(resp) => {
+                                let pos = in_flight
+                                    .iter()
+                                    .position(|j| j.slot as u64 == resp.job);
+                                if let Some(p) = pos {
+                                    let Some(job) = in_flight.remove(p) else { continue };
+                                    if let Some(sp) =
+                                        sent_at.iter().position(|(s, _)| *s == job.slot)
+                                    {
+                                        rpc_secs.observe(
+                                            sent_at.remove(sp).1.elapsed().as_secs_f64(),
+                                        );
+                                    }
+                                    self.deliver(member, &job, resp);
+                                    // a delivered solve proves the worker
+                                    // healthy; give transient failures a
+                                    // fresh retry budget and treat the
+                                    // connection as established (no longer
+                                    // a stale-cache suspect)
+                                    attempts = 0;
+                                    busy_since = None;
+                                    from_cache = false;
+                                    last_owned_signal = Instant::now();
+                                } else {
+                                    // desynced or corrupt response: drop
+                                    // the connection and reroute everything
+                                    // in flight
+                                    self.requeue(member, &mut in_flight);
+                                    if self.written_off(member, &mut attempts, from_cache, || {
+                                        format!("{addr}: answered unknown job {}", resp.job)
+                                    }) {
+                                        return;
+                                    }
+                                    continue 'idle;
+                                }
+                            }
+                            Err(e) => {
+                                self.requeue(member, &mut in_flight);
+                                if self.written_off(member, &mut attempts, from_cache, || {
+                                    format!("{addr}: bad response: {e}")
+                                }) {
+                                    return;
+                                }
+                                continue 'idle;
+                            }
+                        }
+                    }
+                    Ok(FrameRead::Frame { tag: tag::HEARTBEAT, payload }) => {
+                        // liveness beacon: the solve is progressing. Only a
+                        // beat for a job we own proves *our* channel (a
+                        // desynced peer echoing someone else's beat does
+                        // not). A beat renews the silence clock, clears the
+                        // stale-cache/busy suspicion, and raises the
+                        // member's solve-time estimate when the in-progress
+                        // solve already exceeds it — but deliberately NOT
+                        // the reconnect-attempt budget: only a *delivered
+                        // result* does that, so a worker that beats once
+                        // and crashes on every connection still exhausts
+                        // `max_attempts` instead of looping forever.
+                        if let Ok(hb) = wire::decode_heartbeat(&payload) {
+                            if in_flight.iter().any(|j| j.slot as u64 == hb.job) {
+                                busy_since = None;
+                                from_cache = false;
+                                last_owned_signal = Instant::now();
+                                member.raise_ewma_floor(hb.elapsed_ms as f64 / 1000.0);
+                                if let Some(board) = self.board() {
+                                    board.note_heartbeat(addr, &hb);
+                                }
+                            }
+                        }
+                    }
+                    Ok(FrameRead::Frame { tag: tag::ERROR, payload }) => {
+                        // an ERROR echoing one of OUR in-flight jobs is a
+                        // deterministic solver failure: retrying on another
+                        // worker would fail identically — abort that job's
+                        // block. The member survives (nothing is wrong with
+                        // the transport); its remaining in-flight jobs stay
+                        // owed and their late results land in the dead
+                        // block harmlessly. An ERROR for a job we don't own
+                        // (the worker's u64::MAX protocol sentinel, or a
+                        // desynced peer) is a transport fault: reroute and
+                        // retry.
+                        match wire::decode_error(&payload) {
+                            Ok((jobid, m)) => {
+                                let pos = in_flight
+                                    .iter()
+                                    .position(|j| j.slot as u64 == jobid);
+                                if let Some(p) = pos {
+                                    let Some(job) = in_flight.remove(p) else { continue };
+                                    sent_at.retain(|(s, _)| *s != job.slot);
+                                    let msg = format!("worker {addr}, job {jobid}: {m}");
+                                    let mut fatal = lock(&job.block.fatal);
+                                    if fatal.is_none() {
+                                        *fatal = Some(msg);
+                                    }
+                                    drop(fatal);
+                                    last_owned_signal = Instant::now();
+                                } else {
+                                    self.requeue(member, &mut in_flight);
+                                    if self.written_off(member, &mut attempts, from_cache, || {
+                                        format!("{addr}: protocol error: {m}")
+                                    }) {
+                                        return;
+                                    }
+                                    continue 'idle;
+                                }
+                            }
+                            Err(e) => {
+                                self.requeue(member, &mut in_flight);
+                                self.leave(member, format!("{addr}: undecodable error: {e}"));
+                                return;
+                            }
+                        }
+                    }
+                    Ok(FrameRead::Frame { tag: tag::BUSY, .. }) => {
+                        // worker at its connection cap: a healthy-but-full
+                        // pool member, so it spends its own (much longer)
+                        // patience budget, not the hard-failure attempts
+                        self.requeue(member, &mut in_flight);
+                        let since = *busy_since.get_or_insert_with(Instant::now);
+                        if since.elapsed() >= self.cfg.busy_patience {
+                            self.leave(
+                                member,
+                                format!(
+                                    "{addr}: busy (at capacity) for {:.1}s",
+                                    since.elapsed().as_secs_f64()
+                                ),
+                            );
+                            return;
+                        }
+                        std::thread::sleep(self.cfg.retry_backoff);
+                        continue 'idle;
+                    }
+                    Ok(FrameRead::Frame { tag, .. }) => {
+                        self.requeue(member, &mut in_flight);
+                        self.leave(member, format!("{addr}: unexpected frame tag {tag}"));
+                        return;
+                    }
+                    Ok(FrameRead::Shutdown) => {
+                        // close() raised the pool flag mid-read
+                        self.requeue(member, &mut in_flight);
+                        return;
+                    }
+                    Ok(FrameRead::Eof) => {
+                        // worker closed the connection mid-solve: reroute
+                        self.requeue(member, &mut in_flight);
+                        if self.written_off(member, &mut attempts, from_cache, || {
+                            format!("{addr}: disconnected mid-solve")
+                        }) {
+                            return;
+                        }
+                        continue 'idle;
+                    }
+                    Err(e) => {
+                        // keep the real cause: "no owned result/heartbeat
+                        // for Ns" (missed-beat detection on a still-open
+                        // connection) reads very differently from a
+                        // dropped connection when debugging a pool
+                        self.requeue(member, &mut in_flight);
+                        if self.written_off(member, &mut attempts, from_cache, || {
+                            format!("{addr}: {e}")
+                        }) {
+                            return;
+                        }
+                        continue 'idle;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// A pruning [`Engine`] that fans layer solves across an elastic pool of
+/// remote workers; dispatcher threads and connections live for the whole
+/// run and are released by [`ShardedEngine::close`].
+pub struct ShardedEngine {
+    /// Seed worker addresses, turned into pool members at the first
+    /// dispatch (and again after a `close`).
+    workers: Vec<String>,
+    pool: Arc<Pool>,
+    /// The registration listener's thread, kept out of `Pool::threads`
+    /// so it never tries to join itself at close.
+    registrar: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl ShardedEngine {
     /// `workers` are `host:port` addresses of running `alps worker`
-    /// processes (at least one).
+    /// processes (at least one — further workers can REGISTER later).
     pub fn new(spec: MethodSpec, workers: Vec<String>) -> Result<ShardedEngine> {
         Self::with_config(spec, workers, ShardedConfig::default())
     }
@@ -225,8 +913,11 @@ impl ShardedEngine {
             max_attempts: cfg.max_attempts.max(1),
             ..cfg
         };
-        let conns = workers.iter().map(|_| Mutex::new(None)).collect();
-        Ok(ShardedEngine { spec, workers, cfg, conns, board: None })
+        Ok(ShardedEngine {
+            workers,
+            pool: Arc::new(Pool::new(spec, cfg)),
+            registrar: Mutex::new(None),
+        })
     }
 
     /// Parse a CLI `host:port,host:port` list.
@@ -244,429 +935,146 @@ impl ShardedEngine {
         &self.workers
     }
 
-    /// Surface worker heartbeats on a status board (the `--status-addr`
-    /// endpoint includes per-worker beat counts in its snapshot).
+    /// Surface worker heartbeats and fleet membership on a status board
+    /// (the `--status-addr` endpoint includes per-worker beat counts, the
+    /// fleet-size series, and join/leave events in its snapshot).
     pub fn set_status_board(&mut self, board: Arc<StatusBoard>) {
-        self.board = Some(board);
+        *lock(&self.pool.board) = Some(board);
     }
 
-    /// Shared failure epilogue for every retryable connection-level
-    /// fault in [`ShardedEngine::worker_loop`]: a stale parked connection
-    /// redials for free; otherwise one reconnect attempt is consumed
-    /// (with the configured backoff before the retry) and the worker is
-    /// written off — `true` — once the budget is gone. Keeping the policy
-    /// in one place keeps the six failure sites from drifting.
-    fn written_off(
+    /// Start accepting [`tag::REGISTER`] frames on `addr` so workers can
+    /// join the fleet mid-run (`alps worker --register <this addr>`).
+    /// Returns the bound address (useful with a `:0` port). The listener
+    /// runs until [`ShardedEngine::close`].
+    pub fn listen_for_registrations(&self, addr: &str) -> Result<String> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding registration endpoint {addr}"))?;
+        let local = listener
+            .local_addr()
+            .context("registration endpoint local addr")?
+            .to_string();
+        listener
+            .set_nonblocking(true)
+            .context("registration endpoint nonblocking")?;
+        let pool = self.pool.clone();
+        let handle = std::thread::spawn(move || registration_loop(&pool, &listener));
+        *lock(&self.registrar) = Some(handle);
+        Ok(local)
+    }
+
+    /// Turn the seed worker list into pool members (once per pool life;
+    /// `close` resets, so the next solve reseeds and redials).
+    fn ensure_running(&self) {
+        if self.pool.seeded.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        for addr in &self.workers {
+            self.pool.add_member(addr);
+        }
+    }
+
+    /// Stop the pool: raise the shutdown flag, join the registration
+    /// listener and every dispatcher thread, and drop all membership
+    /// state (including parked connections). Safe at any point and
+    /// idempotent; a later solve reseeds the fleet from the worker list
+    /// and redials. The session calls this when a run finishes so worker
+    /// slots free immediately instead of waiting for the engine to drop.
+    pub fn close(&self) {
+        self.pool.shutdown.store(true, Ordering::SeqCst);
+        // the registrar first, so no new dispatcher spawns mid-close
+        if let Some(handle) = lock(&self.registrar).take() {
+            let _ = handle.join();
+        }
+        loop {
+            let handles: Vec<_> = std::mem::take(&mut *lock(&self.pool.threads));
+            if handles.is_empty() {
+                break;
+            }
+            for h in handles {
+                let _ = h.join();
+            }
+        }
+        lock(&self.pool.members).clear();
+        lock(&self.pool.pending).clear();
+        coord_metrics().fleet.set(0.0);
+        self.pool.seeded.store(false, Ordering::SeqCst);
+        self.pool.shutdown.store(false, Ordering::SeqCst);
+    }
+
+    /// Fan the problems across the pool as owned jobs; results are
+    /// positional. One deep problem clone per layer is the price of the
+    /// borrow-free pool (the matrices still cross the wire at most once).
+    fn dispatch(
         &self,
-        d: &Dispatch,
-        attempts: &mut usize,
-        from_cache: bool,
-        error: impl FnOnce() -> String,
-    ) -> bool {
-        if from_cache {
-            // stale parked connection (worker restarted or link timed out
-            // between blocks): one free redial, no attempt burned
-            return false;
+        problems: &[&LayerProblem],
+        target: SparsityTarget,
+    ) -> Result<Vec<LayerResult>> {
+        if problems.is_empty() {
+            return Ok(Vec::new());
         }
-        *attempts += 1;
-        coord_metrics().0.inc();
-        if *attempts >= self.cfg.max_attempts {
-            lock(&d.worker_errors).push(error());
-            return true;
+        self.ensure_running();
+        let block = Arc::new(BlockState {
+            results: Mutex::new((0..problems.len()).map(|_| None).collect()),
+            unsolved: AtomicUsize::new(problems.len()),
+            fatal: Mutex::new(None),
+        });
+        {
+            let mut pending = lock(&self.pool.pending);
+            for (slot, p) in problems.iter().enumerate() {
+                pending.push_back(Arc::new(OwnedJob {
+                    slot,
+                    target,
+                    problem: Arc::new((*p).clone()),
+                    block: block.clone(),
+                }));
+            }
         }
-        std::thread::sleep(self.cfg.retry_backoff);
-        false
+        loop {
+            if block.unsolved.load(Ordering::SeqCst) == 0 {
+                break;
+            }
+            let fatal = lock(&block.fatal).clone();
+            if let Some(msg) = fatal {
+                self.drain_block(&block);
+                bail!("sharded solve failed: {msg}");
+            }
+            if self.pool.live_members() == 0 {
+                let unsolved = block.unsolved.load(Ordering::SeqCst);
+                if unsolved > 0 {
+                    self.drain_block(&block);
+                    let errors = std::mem::take(&mut *lock(&self.pool.worker_errors));
+                    bail!(
+                        "{unsolved} of {} layers unsolved — every worker failed: [{}]",
+                        problems.len(),
+                        errors.join("; ")
+                    );
+                }
+            }
+            std::thread::sleep(WAIT_POLL);
+        }
+        let errors = std::mem::take(&mut *lock(&self.pool.worker_errors));
+        if !errors.is_empty() {
+            // the block completed, but part of the fleet died along the way
+            eprintln!("[sharded] degraded pool: {}", errors.join("; "));
+        }
+        let results = std::mem::take(&mut *lock(&block.results));
+        // `unsolved == 0` above: every slot is Some, so flatten loses nothing
+        Ok(results.into_iter().flatten().collect())
     }
 
-    /// One worker's dispatch loop: connect (or reuse the parked
-    /// connection), keep up to `max_outstanding` solves in flight,
-    /// reroute on failure, park the connection again when the block is
-    /// done.
-    fn worker_loop(&self, widx: usize, d: &Dispatch) {
-        let addr = &self.workers[widx];
-        // registered once per worker address; lock-free to observe
-        let rpc_secs = crate::obs::global().histogram(
-            "alps_coord_rpc_seconds",
-            "send-to-result latency of a remote layer solve",
-            &[("worker", addr)],
-            &crate::obs::LATENCY_EDGES,
-        );
-        let mut attempts = 0usize;
-        // set at the first BUSY answer; cleared by any successful solve
-        let mut busy_since: Option<std::time::Instant> = None;
-        'reconnect: loop {
-            if lock(&d.fatal).is_some() || d.all_solved() {
-                return;
-            }
-            if lock(&d.pending).is_empty() {
-                // unsolved layers are in flight on other workers; linger in
-                // case one dies and reroutes them here
-                std::thread::sleep(WAIT_POLL);
-                continue 'reconnect;
-            }
-            // a connection parked by a previous block is reused; if it
-            // went stale in between, its failure below redials for free
-            // (`from_cache`) instead of burning an attempt
-            let (stream, mut from_cache) = match lock(&self.conns[widx]).take() {
-                Some(s) => (s, true),
-                None => match connect(addr, self.cfg.connect_timeout) {
-                    Ok(s) => (s, false),
-                    Err(e) => {
-                        if self.written_off(d, &mut attempts, false, || {
-                            format!("{addr}: {e}")
-                        }) {
-                            return;
-                        }
-                        continue 'reconnect;
-                    }
-                },
-            };
-            let mut reader = match stream.try_clone() {
-                Ok(r) => r,
-                Err(e) => {
-                    lock(&d.worker_errors).push(format!("{addr}: clone failed: {e}"));
-                    return;
-                }
-            };
-            let mut writer = stream;
-            // in-flight job indices, in send order
-            let mut in_flight: VecDeque<usize> = VecDeque::new();
-            // send instants for the RPC-latency histogram, keyed by job
-            // index (tiny: bounded by max_outstanding). Dropped wholesale
-            // with the connection on reroute — a rerouted job's latency
-            // would measure the failure, not the solve.
-            let mut sent_at: Vec<(usize, std::time::Instant)> = Vec::new();
-            // last moment this worker proved it is working *for us*: a
-            // successful send, an owned RESULT, or an owned HEARTBEAT.
-            // Frames for jobs we don't own (a desynced or hostile peer
-            // echoing someone else's beats) deliberately do NOT renew it —
-            // otherwise such a peer could pin our in-flight jobs forever
-            // without ever tripping the grace.
-            let mut last_owned_signal = std::time::Instant::now();
-            // cleared when a pipelined send stalls: a busy worker only
-            // reads between solves, so a huge second frame can exceed the
-            // socket buffer and the write timeout without anything being
-            // wrong — stop sending, keep reading (the write may have been
-            // partial, so the channel can't carry further requests), and
-            // replace the connection once the in-flight drain completes
-            let mut can_send = true;
-            let requeue = |in_flight: &mut VecDeque<usize>| {
-                if !in_flight.is_empty() {
-                    coord_metrics().1.add(in_flight.len() as u64);
-                    if let Some(board) = &self.board {
-                        // whatever this worker was live-reporting is now
-                        // abandoned: clear its "solving" status entry so a
-                        // dead worker doesn't show as forever in-progress
-                        board.note_worker_stalled(addr);
-                    }
-                }
-                let mut pending = lock(&d.pending);
-                // front of the queue: a surviving worker reroutes these
-                // before taking fresh work
-                while let Some(idx) = in_flight.pop_back() {
-                    pending.push_front(idx);
-                }
-            };
-            loop {
-                if lock(&d.fatal).is_some() {
-                    if in_flight.is_empty() {
-                        // clean connection, nothing owed: park it for the
-                        // next block (the run may continue past this
-                        // block's failure handling)
-                        *lock(&self.conns[widx]) = Some(writer);
-                    }
-                    requeue(&mut in_flight);
-                    return;
-                }
-                // top up the pipeline
-                while can_send && in_flight.len() < self.cfg.max_outstanding {
-                    let Some(idx) = lock(&d.pending).pop_front() else { break };
-                    let problem = d.problems[idx];
-                    // borrow-encode: no deep copy of the (possibly huge)
-                    // weight and calibration matrices just to serialize
-                    // them; ship raw activations instead of the gram when
-                    // configured, retained, and *strictly smaller* — for
-                    // rows >= n_in the gram is the cheaper payload, so the
-                    // flag picks the winning encoding per layer instead of
-                    // inflating narrow layers
-                    let calib = match (self.cfg.ship_activations, &problem.x) {
-                        (true, Some(x)) if x.rows < problem.h.rows => {
-                            CalibRef::Activations(x.as_ref())
-                        }
-                        _ => CalibRef::Gram(&problem.h),
-                    };
-                    let shipped_x = matches!(calib, CalibRef::Activations(_));
-                    let payload = wire::encode_solve(
-                        idx as u64,
-                        d.target,
-                        &self.spec,
-                        &problem.what,
-                        calib,
-                    );
-                    let met = coord_metrics();
-                    let tx_bytes = if shipped_x { &met.3 } else { &met.2 };
-                    tx_bytes.add(payload.len() as u64);
-                    if let Err(e) = write_frame(&mut writer, tag::SOLVE, &payload) {
-                        lock(&d.pending).push_front(idx);
-                        if in_flight.is_empty() {
-                            if from_cache {
-                                // stale parked connection (worker restarted
-                                // or link timed out between blocks): one
-                                // free redial, no attempt burned
-                                continue 'reconnect;
-                            }
-                            // a saturated worker may have refused us with a
-                            // BUSY still sitting in our receive buffer (its
-                            // refusal drain is bounded, so a huge frame can
-                            // fail the write first) — prefer that
-                            // classification over a hard failure
-                            let refusal = read_frame_deadline(
-                                &mut reader,
-                                self.cfg.max_frame_bytes,
-                                None,
-                                Some(Duration::from_secs(1)),
-                                Some(Duration::from_secs(5)),
-                            );
-                            if let Ok(FrameRead::Frame { tag: tag::BUSY, .. }) = refusal {
-                                let since = *busy_since
-                                    .get_or_insert_with(std::time::Instant::now);
-                                if since.elapsed() >= self.cfg.busy_patience {
-                                    lock(&d.worker_errors).push(format!(
-                                        "{addr}: busy (at capacity) for {:.1}s",
-                                        since.elapsed().as_secs_f64()
-                                    ));
-                                    return;
-                                }
-                                std::thread::sleep(self.cfg.retry_backoff);
-                                continue 'reconnect;
-                            }
-                            // nothing owed on this connection: a failed
-                            // write really is a broken worker link
-                            if self.written_off(d, &mut attempts, false, || {
-                                format!("{addr}: send failed: {e}")
-                            }) {
-                                return;
-                            }
-                            continue 'reconnect;
-                        }
-                        // backpressure, not failure: the worker is solving
-                        // and not reading — drain its responses instead
-                        can_send = false;
-                        break;
-                    }
-                    in_flight.push_back(idx);
-                    sent_at.push((idx, std::time::Instant::now()));
-                    last_owned_signal = std::time::Instant::now();
-                }
-                if in_flight.is_empty() {
-                    if !can_send {
-                        // write side poisoned (possibly partial frame) but
-                        // fully drained: replace the connection; attempts
-                        // was reset by the drained responses
-                        continue 'reconnect;
-                    }
-                    // queue drained and nothing owed to us — but jobs in
-                    // flight on *other* workers may still reroute here, so
-                    // only leave once every result slot is filled
-                    if d.all_solved() || lock(&d.fatal).is_some() {
-                        // park the healthy connection for the next block
-                        *lock(&self.conns[widx]) = Some(writer);
-                        return;
-                    }
-                    if lock(&d.pending).is_empty() {
-                        std::thread::sleep(WAIT_POLL);
-                    }
-                    continue;
-                }
-                // heartbeats arrive every couple of seconds during a solve,
-                // so owned-signal silence beyond the grace means a dead
-                // worker — far tighter than the idle ceiling kept for
-                // v1-era links. The budget is the *remaining* grace since
-                // the last owned signal, so unowned frames (which complete
-                // a read without renewing the clock) cannot stretch it;
-                // the per-frame wall-clock deadline (at least the idle
-                // ceiling, so a huge legitimate RESULT still has the full
-                // `--shard-idle` window to transfer) stops a peer from
-                // pinning us with one never-completing dribbled frame.
-                let silence_budget = self.cfg.heartbeat_grace.min(self.cfg.idle_timeout);
-                let remaining = silence_budget.saturating_sub(last_owned_signal.elapsed());
-                let read = if remaining.is_zero() {
-                    // grace exhausted across reads (e.g. a stream of
-                    // unowned heartbeats): same as a mid-solve hang
-                    Err(anyhow::anyhow!(
-                        "no owned result/heartbeat for {:.1}s",
-                        silence_budget.as_secs_f64()
-                    ))
-                } else {
-                    read_frame_deadline(
-                        &mut reader,
-                        self.cfg.max_frame_bytes,
-                        None,
-                        Some(remaining),
-                        Some(self.cfg.idle_timeout.max(remaining)),
-                    )
-                };
-                match read {
-                    Ok(FrameRead::Frame { tag: tag::RESULT, payload }) => {
-                        match wire::SolveResponse::decode(&payload) {
-                            Ok(resp) if in_flight.contains(&(resp.job as usize)) => {
-                                let idx = resp.job as usize;
-                                in_flight.retain(|&i| i != idx);
-                                if let Some(p) = sent_at.iter().position(|(i, _)| *i == idx) {
-                                    rpc_secs.observe(sent_at.remove(p).1.elapsed().as_secs_f64());
-                                }
-                                lock(&d.results)[idx] = Some(LayerResult {
-                                    w: resp.w,
-                                    secs: resp.secs,
-                                    admm_iters: resp.admm_iters as usize,
-                                    worker: Some(addr.to_string()),
-                                });
-                                // a delivered solve proves the worker
-                                // healthy; give transient failures a fresh
-                                // retry budget and treat the connection as
-                                // established (no longer a stale-cache
-                                // suspect)
-                                attempts = 0;
-                                busy_since = None;
-                                from_cache = false;
-                                last_owned_signal = std::time::Instant::now();
-                            }
-                            // desynced or corrupt response: drop the
-                            // connection and reroute everything in flight
-                            Ok(resp) => {
-                                requeue(&mut in_flight);
-                                if self.written_off(d, &mut attempts, from_cache, || {
-                                    format!("{addr}: answered unknown job {}", resp.job)
-                                }) {
-                                    return;
-                                }
-                                continue 'reconnect;
-                            }
-                            Err(e) => {
-                                requeue(&mut in_flight);
-                                if self.written_off(d, &mut attempts, from_cache, || {
-                                    format!("{addr}: bad response: {e}")
-                                }) {
-                                    return;
-                                }
-                                continue 'reconnect;
-                            }
-                        }
-                    }
-                    Ok(FrameRead::Frame { tag: tag::HEARTBEAT, payload }) => {
-                        // liveness beacon: the solve is progressing. Only a
-                        // beat for a job we own proves *our* channel (a
-                        // desynced peer echoing someone else's beat does
-                        // not). A beat renews the silence clock and clears
-                        // the stale-cache/busy suspicion, but deliberately
-                        // NOT the reconnect-attempt budget — only a
-                        // *delivered result* does that, so a worker that
-                        // beats once and crashes on every connection still
-                        // exhausts `max_attempts` instead of looping
-                        // forever.
-                        if let Ok(hb) = wire::decode_heartbeat(&payload) {
-                            if in_flight.contains(&(hb.job as usize)) {
-                                busy_since = None;
-                                from_cache = false;
-                                last_owned_signal = std::time::Instant::now();
-                                if let Some(board) = &self.board {
-                                    board.note_heartbeat(addr, &hb);
-                                }
-                            }
-                        }
-                    }
-                    Ok(FrameRead::Frame { tag: tag::ERROR, payload }) => {
-                        // an ERROR echoing one of OUR in-flight jobs is a
-                        // deterministic solver failure: retrying on another
-                        // worker would fail identically — abort the block.
-                        // An ERROR for a job we don't own (the worker's
-                        // u64::MAX protocol sentinel, or a desynced peer)
-                        // is a transport fault: reroute and retry.
-                        match wire::decode_error(&payload) {
-                            Ok((job, m))
-                                if usize::try_from(job)
-                                    .map(|j| in_flight.contains(&j))
-                                    .unwrap_or(false) =>
-                            {
-                                let msg = format!("worker {addr}, job {job}: {m}");
-                                let mut fatal = lock(&d.fatal);
-                                if fatal.is_none() {
-                                    *fatal = Some(msg);
-                                }
-                                requeue(&mut in_flight);
-                                return;
-                            }
-                            Ok((_, m)) => {
-                                requeue(&mut in_flight);
-                                if self.written_off(d, &mut attempts, from_cache, || {
-                                    format!("{addr}: protocol error: {m}")
-                                }) {
-                                    return;
-                                }
-                                continue 'reconnect;
-                            }
-                            Err(e) => {
-                                requeue(&mut in_flight);
-                                lock(&d.worker_errors)
-                                    .push(format!("{addr}: undecodable error: {e}"));
-                                return;
-                            }
-                        }
-                    }
-                    Ok(FrameRead::Frame { tag: tag::BUSY, .. }) => {
-                        // worker at its connection cap: a healthy-but-full
-                        // pool member, so it spends its own (much longer)
-                        // patience budget, not the hard-failure attempts
-                        requeue(&mut in_flight);
-                        let since = *busy_since.get_or_insert_with(std::time::Instant::now);
-                        if since.elapsed() >= self.cfg.busy_patience {
-                            lock(&d.worker_errors).push(format!(
-                                "{addr}: busy (at capacity) for {:.1}s",
-                                since.elapsed().as_secs_f64()
-                            ));
-                            return;
-                        }
-                        std::thread::sleep(self.cfg.retry_backoff);
-                        continue 'reconnect;
-                    }
-                    Ok(FrameRead::Frame { tag, .. }) => {
-                        requeue(&mut in_flight);
-                        lock(&d.worker_errors)
-                            .push(format!("{addr}: unexpected frame tag {tag}"));
-                        return;
-                    }
-                    Ok(FrameRead::Eof) | Ok(FrameRead::Shutdown) => {
-                        // worker closed the connection mid-solve: reroute
-                        requeue(&mut in_flight);
-                        if self.written_off(d, &mut attempts, from_cache, || {
-                            format!("{addr}: disconnected mid-solve")
-                        }) {
-                            return;
-                        }
-                        continue 'reconnect;
-                    }
-                    Err(e) => {
-                        // keep the real cause: "no owned result/heartbeat
-                        // for Ns" (missed-beat detection on a still-open
-                        // connection) reads very differently from a
-                        // dropped connection when debugging a pool
-                        requeue(&mut in_flight);
-                        if self.written_off(d, &mut attempts, from_cache, || {
-                            format!("{addr}: {e}")
-                        }) {
-                            return;
-                        }
-                        continue 'reconnect;
-                    }
-                }
-            }
-        }
+    /// Remove a failed block's unassigned jobs from the shared queue so
+    /// they stop competing with the next block's work. Its in-flight jobs
+    /// stay with their members: late results land in the dead block
+    /// harmlessly (the `Arc` keeps it alive), which keeps every
+    /// connection's request/response stream in sync.
+    fn drain_block(&self, block: &Arc<BlockState>) {
+        lock(&self.pool.pending).retain(|j| !Arc::ptr_eq(&j.block, block));
     }
 }
 
 impl Engine for ShardedEngine {
     fn label(&self) -> String {
-        format!("sharded({})", self.spec.label())
+        format!("sharded({})", self.pool.spec.label())
     }
 
     fn config_digest(&self) -> String {
@@ -675,7 +1083,7 @@ impl Engine for ShardedEngine {
         // nor remoting (nor where the gram is computed) changes a single
         // bit of the results, so checkpoints resume across pool changes
         // AND across the native/sharded boundary
-        format!("{:?}", self.spec)
+        format!("{:?}", self.pool.spec)
     }
 
     fn solve_layer(
@@ -683,7 +1091,6 @@ impl Engine for ShardedEngine {
         problem: &LayerProblem,
         target: SparsityTarget,
     ) -> Result<LayerResult> {
-        // borrowed straight through — no copy of the layer's matrices
         Ok(self.dispatch(&[problem], target)?.remove(0))
     }
 
@@ -701,60 +1108,59 @@ impl Engine for ShardedEngine {
     }
 }
 
-impl ShardedEngine {
-    /// Drop every parked worker connection. Subsequent solves redial
-    /// (reconnect-on-reuse), so `close` is safe at any point; the session
-    /// calls it when a run finishes so worker slots free immediately
-    /// instead of waiting for the engine to drop.
-    pub fn close(&self) {
-        for conn in &self.conns {
-            lock(conn).take();
-        }
+impl Drop for ShardedEngine {
+    /// An engine dropped without an explicit `close` must not leak
+    /// spinning dispatcher threads.
+    fn drop(&mut self) {
+        ShardedEngine::close(self);
     }
+}
 
-    /// Fan the borrowed problems across the pool; results are positional.
-    fn dispatch(
-        &self,
-        problems: &[&LayerProblem],
-        target: SparsityTarget,
-    ) -> Result<Vec<LayerResult>> {
-        if problems.is_empty() {
-            return Ok(Vec::new());
-        }
-        let d = Dispatch {
-            problems,
-            target,
-            pending: Mutex::new((0..problems.len()).collect()),
-            results: Mutex::new((0..problems.len()).map(|_| None).collect()),
-            fatal: Mutex::new(None),
-            worker_errors: Mutex::new(Vec::new()),
-        };
-        let d_ref = &d;
-        std::thread::scope(|s| {
-            for widx in 0..self.workers.len() {
-                s.spawn(move || self.worker_loop(widx, d_ref));
+/// Accept loop for the registration endpoint: non-blocking accepts,
+/// polled against the pool's shutdown flag so `close` can join it.
+fn registration_loop(pool: &Arc<Pool>, listener: &TcpListener) {
+    while !pool.shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => handle_registration(pool, stream),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(WAIT_POLL);
             }
-        });
-        if let Some(msg) = lock(&d.fatal).take() {
-            bail!("sharded solve failed: {msg}");
+            Err(_) => std::thread::sleep(WAIT_POLL),
         }
-        let results = d.results.into_inner().unwrap_or_else(|p| p.into_inner());
-        let errors = d.worker_errors.into_inner().unwrap_or_else(|p| p.into_inner());
-        let unsolved = results.iter().filter(|r| r.is_none()).count();
-        if unsolved > 0 {
-            bail!(
-                "{unsolved} of {} layers unsolved — every worker failed: [{}]",
-                problems.len(),
-                errors.join("; ")
-            );
-        }
-        if !errors.is_empty() {
-            // the run completed, but part of the pool died along the way
-            eprintln!("[sharded] degraded pool: {}", errors.join("; "));
-        }
-        // `unsolved == 0` above: every slot is Some, so flatten loses nothing
-        Ok(results.into_iter().flatten().collect())
     }
+}
+
+/// One registration handshake: read a REGISTER frame carrying the
+/// worker's advertised serve address, add it to the fleet, and ack by
+/// echoing the frame back (the worker's dialer retries until it sees the
+/// echo). Malformed or non-REGISTER traffic is dropped silently — this
+/// endpoint changes fleet membership, so it answers nothing else.
+fn handle_registration(pool: &Arc<Pool>, stream: TcpStream) {
+    let mut stream = stream;
+    // the listener is non-blocking; the conversation must not be
+    if stream.set_nonblocking(false).is_err() {
+        return;
+    }
+    if stream.set_read_timeout(Some(Duration::from_millis(200))).is_err() {
+        return;
+    }
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+    // a registration frame is tiny (an address string); bound it hard
+    let read = read_frame_deadline(
+        &mut stream,
+        4096,
+        Some(&pool.shutdown),
+        Some(Duration::from_secs(10)),
+        Some(Duration::from_secs(10)),
+    );
+    let Ok(FrameRead::Frame { tag: tag::REGISTER, payload }) = read else {
+        return;
+    };
+    let Ok(addr) = wire::decode_register(&payload) else {
+        return;
+    };
+    pool.add_member(&addr);
+    let _ = write_frame(&mut stream, tag::REGISTER, &payload);
 }
 
 /// Resolve `addr` and try **every** candidate address before giving up —
@@ -803,7 +1209,7 @@ fn connect_candidates(candidates: &[SocketAddr], timeout: Duration) -> Result<Tc
 mod tests {
     use super::*;
     use crate::pruning::testutil::random_problem;
-    use crate::pruning::worker::{Worker, WorkerConfig};
+    use crate::pruning::worker::{register_with_coordinator, Worker, WorkerConfig};
     use crate::pruning::NativeEngine;
     use std::net::TcpListener;
 
@@ -911,9 +1317,9 @@ mod tests {
         assert_eq!(
             worker.connections_accepted(),
             1,
-            "persistent pool must reuse its connection across blocks"
+            "long-lived pool must reuse its connection across blocks"
         );
-        // close() drops the parked connection; the next solve redials
+        // close() tears the pool down; the next solve reseeds and redials
         sharded.close();
         sharded.solve_block(&jobs(2, 30), target).unwrap();
         assert_eq!(worker.connections_accepted(), 2);
@@ -952,7 +1358,10 @@ mod tests {
             drop(l);
             s
         };
-        *lock(&sharded.conns[0]) = Some(dead);
+        {
+            let members = lock(&sharded.pool.members);
+            *lock(&members[0].conn) = Some(dead);
+        }
         // would fail with max_attempts=1 if staleness cost an attempt
         sharded.solve_block(&jobs(2, 50), target).unwrap();
         sharded.close();
@@ -1018,6 +1427,7 @@ mod tests {
                 .to_string();
             assert!(err.contains("sharded solve failed"), "{err}");
             assert!(err.contains("N:M"), "{err}");
+            sharded.close();
             worker.request_shutdown();
             srv.join().unwrap().unwrap();
         });
@@ -1028,8 +1438,6 @@ mod tests {
         // a BUSY refusal must never abort the run the way a solver error
         // does — it exhausts its own patience budget (not the hard-failure
         // attempts) and the worker is written off, not the block failed
-        use std::sync::atomic::{AtomicBool, Ordering};
-        use std::sync::Arc;
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
         let done = Arc::new(AtomicBool::new(false));
@@ -1075,5 +1483,94 @@ mod tests {
         assert_eq!(got, vec!["a:1", "b:2"]);
         assert_eq!(e.label(), "sharded(wanda)");
         assert!(ShardedEngine::from_flag(MethodSpec::Wanda, " ,").is_err());
+    }
+
+    #[test]
+    fn slowest_member_takes_smallest_pending_layer() {
+        // pure dequeue-policy check, no threads: hand-build a fleet with
+        // solve-time estimates and a queue of differently-sized layers
+        let pool = Arc::new(Pool::new(MethodSpec::Magnitude, quick_cfg()));
+        let fast = Arc::new(Member::new("fast:1".into()));
+        let slow = Arc::new(Member::new("slow:2".into()));
+        fast.fold_ewma(0.1);
+        slow.fold_ewma(9.0);
+        lock(&pool.members).extend([fast.clone(), slow.clone()]);
+        let block = Arc::new(BlockState {
+            results: Mutex::new((0..3).map(|_| None).collect()),
+            unsolved: AtomicUsize::new(3),
+            fatal: Mutex::new(None),
+        });
+        let target = SparsityTarget::Unstructured(0.5);
+        let push = |slot: usize, n_in: usize| {
+            lock(&pool.pending).push_back(Arc::new(OwnedJob {
+                slot,
+                target,
+                problem: Arc::new(random_problem(n_in, 4, 10, slot as u64)),
+                block: block.clone(),
+            }));
+        };
+        push(0, 24);
+        push(1, 6);
+        push(2, 16);
+        // the slow member skips the queue head for the smallest layer
+        assert_eq!(pool.take_job(&slow).unwrap().slot, 1);
+        // the fast member just takes the front
+        assert_eq!(pool.take_job(&fast).unwrap().slot, 0);
+        // with one job left there is no choice (len > 1 guard)
+        assert_eq!(pool.take_job(&slow).unwrap().slot, 2);
+        // jobs of an aborted block are dropped on sight
+        let failed = Arc::new(BlockState {
+            results: Mutex::new(vec![None]),
+            unsolved: AtomicUsize::new(1),
+            fatal: Mutex::new(Some("boom".into())),
+        });
+        lock(&pool.pending).push_back(Arc::new(OwnedJob {
+            slot: 0,
+            target,
+            problem: Arc::new(random_problem(6, 4, 10, 9)),
+            block: failed,
+        }));
+        assert!(pool.take_job(&fast).is_none());
+        assert!(lock(&pool.pending).is_empty());
+    }
+
+    #[test]
+    fn register_endpoint_adds_members_mid_run() {
+        let (addr_a, worker_a) = spawn_worker();
+        let sharded = ShardedEngine::with_config(
+            MethodSpec::Wanda,
+            vec![addr_a.clone()],
+            quick_cfg(),
+        )
+        .unwrap();
+        let reg = sharded.listen_for_registrations("127.0.0.1:0").unwrap();
+        let target = SparsityTarget::Unstructured(0.6);
+        let js = jobs(3, 700);
+        let local = NativeEngine::new(MethodSpec::Wanda).solve_block(&js, target).unwrap();
+        let remote = sharded.solve_block(&js, target).unwrap();
+        for (r, l) in remote.iter().zip(&local) {
+            assert_eq!(r.w, l.w);
+        }
+        // join a second worker mid-run through the REGISTER endpoint; the
+        // ack only comes back after the member is in the fleet
+        let (addr_b, worker_b) = spawn_worker();
+        let stop = AtomicBool::new(false);
+        register_with_coordinator(&reg, &addr_b, &stop).unwrap();
+        assert_eq!(sharded.pool.live_members(), 2);
+        // re-registering a live address is idempotent
+        register_with_coordinator(&reg, &addr_b, &stop).unwrap();
+        assert_eq!(sharded.pool.live_members(), 2);
+        // the grown fleet still reassembles bit-identically
+        let js2 = jobs(6, 800);
+        let local2 = NativeEngine::new(MethodSpec::Wanda).solve_block(&js2, target).unwrap();
+        let remote2 = sharded.solve_block(&js2, target).unwrap();
+        for (i, (r, l)) in remote2.iter().zip(&local2).enumerate() {
+            assert_eq!(r.w, l.w, "job {i} differs after the fleet grew");
+            let w = r.worker.as_deref().unwrap();
+            assert!(w == addr_a || w == addr_b, "unknown solver {w}");
+        }
+        sharded.close();
+        worker_a.request_shutdown();
+        worker_b.request_shutdown();
     }
 }

@@ -10,17 +10,24 @@
 //!
 //! * [`report`] — the per-layer / whole-run records every engine and
 //!   session produces ([`LayerReport`], [`RunReport`]).
-//! * [`dispatch`] — the distributed coordinator: [`ShardedEngine`] fans a
-//!   block's layer solves across a pool of `alps worker` endpoints over
-//!   TCP (persistent per-worker connections reused across blocks,
-//!   heartbeat-based dead-worker detection, per-worker
-//!   outstanding-request limits, retry-on-disconnect with rerouting,
-//!   optional activation shipping for worker-side gram computation,
-//!   deterministic positional reassembly) and plugs into the session
-//!   through the same [`crate::pruning::Engine`] trait as the local
-//!   backends — with bit-identical results. It reports per-worker RPC
-//!   latency, retries, reroutes, and wire bytes into the process-global
-//!   [`crate::obs`] registry (`alps_coord_*` series).
+//! * [`dispatch`] — the distributed coordinator: [`ShardedEngine`] keeps
+//!   a long-lived owned-job pool whose dispatcher threads outlive any
+//!   single block, fanning layer solves across a **dynamic** fleet of
+//!   `alps worker` endpoints over TCP. Jobs are `Arc`'d self-contained
+//!   units on a shared queue; workers join mid-run through the REGISTER
+//!   handshake ([`ShardedEngine::listen_for_registrations`]) and leave
+//!   (crash, silence, refused redials) by having their owned jobs
+//!   requeued. Persistent per-worker connections are reused across
+//!   blocks, dead workers are detected by missed heartbeats, per-worker
+//!   outstanding-request limits bound buffering, heartbeat-derived
+//!   solve-time estimates steer small layers toward slow members, and
+//!   optional activation shipping moves gram computation worker-side.
+//!   It plugs into the session through the same
+//!   [`crate::pruning::Engine`] trait as the local backends — with
+//!   bit-identical results even under mid-run membership churn — and
+//!   reports per-worker RPC latency, retries, reroutes, wire bytes, and
+//!   the fleet lifecycle into the process-global [`crate::obs`] registry
+//!   (`alps_coord_*` series).
 //! * [`scheduler`] — the deprecated [`Scheduler`] + [`PruneEngine`] shims
 //!   (one release of backwards compatibility) plus re-exports of the
 //!   single-layer experiment helpers.

@@ -14,7 +14,9 @@
 //!          `int8` serves quantized codes + per-column scales
 //!   worker --addr 127.0.0.1:7979              distributed-pruning worker
 //!          (prune with --workers host:port,... to shard layer solves;
-//!           --status-addr exposes live progress over TCP)
+//!           --status-addr exposes live progress over TCP; a coordinator
+//!           started with --register-addr accepts `worker --register`
+//!           joins mid-run)
 //!   info                                      artifact + model inventory
 //!   smoke  <file.hlo.txt>                     runtime smoke test
 //!
@@ -235,6 +237,9 @@ fn cmd_prune(args: &Args) -> Result<()> {
     // where layers get solved: a remote worker pool, the HLO runtime, or
     // the in-process native engine
     let workers_flag = args.get("workers", "");
+    if args.has("register-addr") && (workers_flag.is_empty() || workers_flag == "true") {
+        bail!("--register-addr extends a sharded pool: it requires --workers host:port[,...]");
+    }
     let engine: Box<dyn SolveEngine + '_> = if !workers_flag.is_empty() && workers_flag != "true" {
         if rt.is_some() {
             bail!("--workers cannot combine with --engine hlo");
@@ -286,6 +291,19 @@ fn cmd_prune(args: &Args) -> Result<()> {
         let mut eng = ShardedEngine::with_config(spec, workers, shard_cfg)?;
         if let Some(board) = &board {
             eng.set_status_board(board.clone());
+        }
+        if args.has("register-addr") {
+            let reg = args.get("register-addr", "");
+            if reg.is_empty() || reg == "true" {
+                bail!(
+                    "--register-addr requires host:port (e.g. --register-addr=127.0.0.1:7880)"
+                );
+            }
+            let bound = eng.listen_for_registrations(&reg)?;
+            println!(
+                "registration endpoint on {bound} — workers can join mid-run with \
+                 `alps worker --register {bound}`"
+            );
         }
         println!(
             "sharded across {} worker(s): {workers_flag}{}",
@@ -543,7 +561,9 @@ fn serve_tcp(
 /// Host the native layer solvers behind the pruning frame protocol so a
 /// coordinator (`alps prune --workers ...`) can shard blocks over here.
 /// Stateless: each request carries its method spec and target, so one
-/// worker serves any mix of runs. Runs until killed.
+/// worker serves any mix of runs. Runs until killed. With `--register`,
+/// a sidecar thread dials the coordinator's registration endpoint so
+/// this worker joins an already-running sharded pool.
 fn cmd_worker(args: &Args) -> Result<()> {
     let addr = args.get("addr", "127.0.0.1:7979");
     let heartbeat_secs = args
@@ -584,7 +604,40 @@ fn cmd_worker(args: &Args) -> Result<()> {
         cfg.heartbeat_every.as_secs_f64(),
     );
     let worker = Worker::new(cfg);
-    worker.serve(listener)?;
+    if args.has("register") {
+        let coord = args.get("register", "");
+        if coord.is_empty() || coord == "true" {
+            bail!(
+                "--register requires the coordinator's registration endpoint \
+                 (host:port from its --register-addr)"
+            );
+        }
+        // advertise the *bound* address, not the flag: `--addr host:0`
+        // must announce the kernel-assigned port
+        let advertise = listener
+            .local_addr()
+            .context("reading bound worker address")?
+            .to_string();
+        std::thread::scope(|s| -> Result<()> {
+            let shutdown = worker.shutdown_flag();
+            let dialer = s.spawn(move || {
+                let r = alps::pruning::register_with_coordinator(&coord, &advertise, shutdown);
+                if r.is_ok() {
+                    println!("registered with coordinator {coord} as {advertise}");
+                }
+                r
+            });
+            let served = worker.serve(listener);
+            match dialer.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => eprintln!("registration failed: {e}"),
+                Err(_) => eprintln!("registration thread panicked"),
+            }
+            served
+        })?;
+    } else {
+        worker.serve(listener)?;
+    }
     println!("worker done — {} layers solved", worker.layers_solved());
     Ok(())
 }
@@ -658,6 +711,7 @@ fn usage() {
                  [--engine native|hlo] [--calib 32] [--out pruned.bin] [--quiet]\n\
                  [--checkpoint-dir ck] [--resume] [--stop-after N] [--random] [--seed N]\n\
                  [--workers host:port,host:port] [--ship-activations]\n\
+                 [--register-addr 127.0.0.1:7880 (accept mid-run worker joins)]\n\
                  [--status-addr 127.0.0.1:7878] [--shard-idle SECS] [--shard-heartbeat SECS]\n\
                  [--shard-attempts N] [--shard-outstanding N] [--trace-out trace.jsonl]\n\
                  [--rho0 F] [--admm-iters N] [--pcg-iters N]   (alps)\n\
@@ -671,8 +725,9 @@ fn usage() {
                  [--max-line 65536] [--max-new 32] [--temperature 0] [--top-k 0] [--stop id]\n\
                  [--trace-out trace.jsonl]\n\
            worker [--addr 127.0.0.1:7979] [--max-conns 8] [--max-frame-mb 1024]\n\
-                 [--heartbeat-secs 2]\n\
-                 hosts the native layer solvers for `prune --workers`\n\
+                 [--heartbeat-secs 2] [--register COORD_HOST:PORT]\n\
+                 hosts the native layer solvers for `prune --workers`;\n\
+                 --register dials a coordinator's --register-addr to join mid-run\n\
            info\n\
            smoke [file.hlo.txt]"
     );

@@ -39,8 +39,12 @@ use std::time::{Duration, Instant};
 /// * 2 — distributed pruning v2: SOLVE payloads carry a calibration
 ///   discriminant (gram *or* raw activations, see `crate::pruning::wire`)
 ///   and workers emit periodic HEARTBEAT frames while solving.
+/// * 3 — dynamic worker membership: a REGISTER frame
+///   (`crate::pruning::wire`) lets a worker announce its serve address to
+///   a running coordinator's registration endpoint and join the fleet
+///   mid-run; the coordinator acks by echoing the frame.
 pub const FRAME_MAGIC: [u8; 2] = *b"AF";
-pub const FRAME_VERSION: u8 = 2;
+pub const FRAME_VERSION: u8 = 3;
 /// Fixed frame header size: magic(2) + version(1) + tag(1) + len(4).
 pub const FRAME_HEADER: usize = 8;
 

@@ -53,6 +53,9 @@
 //! | `alps_coord_reroutes_total` | counter | `coordinator::dispatch` |
 //! | `alps_coord_wire_tx_bytes_total` | counter | `coordinator::dispatch` |
 //! | `alps_coord_rpc_seconds` | histogram | `coordinator::dispatch` |
+//! | `alps_coord_fleet_size` | gauge | `coordinator::dispatch` |
+//! | `alps_coord_joins_total` | counter | `coordinator::dispatch` |
+//! | `alps_coord_leaves_total` | counter | `coordinator::dispatch` |
 //! | `alps_prune_layers_total` | counter | `pruning::session` |
 //! | `alps_prune_blocks_total` | counter | `pruning::session` |
 //! | `alps_prune_checkpoints_total` | counter | `pruning::session` |

@@ -58,7 +58,7 @@ pub mod worker;
 pub use engine::{Engine, HloEngine, LayerJob, LayerResult, NativeEngine};
 pub use session::{ProgressEvent, PruneSession, PruneSessionBuilder};
 pub use status::{StatusBoard, StatusServer};
-pub use worker::{Worker, WorkerConfig};
+pub use worker::{register_with_coordinator, Worker, WorkerConfig};
 
 use crate::config::{AlpsConfig, DsNoTConfig, SparseGptConfig, SparsityTarget};
 use crate::linalg::matmul::{gram, matmul};

@@ -218,10 +218,11 @@ impl<'a> PruneSession<'a> {
     /// Prune `model` in place; returns the per-layer run report.
     pub fn run(&mut self, model: &mut Model) -> Result<RunReport> {
         let result = self.run_inner(model);
-        // release engine-held resources (a sharded engine's persistent
-        // worker connections) whether the run finished or aborted — an
-        // early error must not leave parked connections pinning worker
-        // slots for the life of the process
+        // release engine-held resources (a sharded engine's dispatcher
+        // threads and persistent worker connections) whether the run
+        // finished or aborted — an early error must not leave detached
+        // pool threads or parked connections pinning worker slots for
+        // the life of the process
         self.engine.close();
         result
     }

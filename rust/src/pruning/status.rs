@@ -11,6 +11,14 @@
 //! in-solve progress (job, ADMM iteration, elapsed ms) — so an operator
 //! can tell a worker grinding a long ALPS layer from one that died.
 //!
+//! With dynamic membership (protocol v3) the board also tracks the fleet
+//! itself: [`StatusBoard::note_worker_joined`] /
+//! [`StatusBoard::note_worker_left`] (wired to the dispatcher's
+//! add/leave paths) maintain a live `fleet` size, a `fleet_series` of
+//! `[elapsed_secs, size]` samples — fleet size over time — and a
+//! `fleet_events` log of per-worker join/leave records, so an operator
+//! can reconstruct exactly when capacity came and went.
+//!
 //! Wiring: pass `StatusBoard::observe` as (part of) the session observer
 //! and serve the board on a listener; the CLI does exactly this for
 //! `alps prune --status-addr 127.0.0.1:7878`:
@@ -87,6 +95,15 @@ pub struct StatusSnapshot {
     /// Latest in-solve progress per pool member:
     /// `(job, admm_iter, elapsed_ms)` from its most recent heartbeat.
     pub solving: BTreeMap<String, (u64, u64, u64)>,
+    /// Live fleet size: members currently in the dispatcher pool
+    /// (sharded runs with dynamic membership only).
+    pub fleet: usize,
+    /// Fleet size over time: one `(elapsed_secs, size)` sample per
+    /// membership change, stamped with the newest progress-event clock.
+    pub fleet_series: Vec<(f64, usize)>,
+    /// Per-worker membership log: `(elapsed_secs, "join"|"leave",
+    /// worker)` in arrival order.
+    pub fleet_events: Vec<(f64, String, String)>,
     /// Wall seconds since the session started, as stamped on the most
     /// recent progress event — lets a scraper judge run age without
     /// clock agreement with the coordinator.
@@ -133,13 +150,33 @@ impl StatusSnapshot {
             .map(|(b, s)| format!("\"{b}\":{}", fin(*s)))
             .collect::<Vec<_>>()
             .join(",");
+        let fleet_series = self
+            .fleet_series
+            .iter()
+            .map(|(t, n)| format!("[{},{n}]", fin(*t)))
+            .collect::<Vec<_>>()
+            .join(",");
+        let fleet_events = self
+            .fleet_events
+            .iter()
+            .map(|(t, ev, w)| {
+                format!(
+                    "{{\"at\":{},\"event\":\"{}\",\"worker\":\"{}\"}}",
+                    fin(*t),
+                    json_escape(ev),
+                    json_escape(w)
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",");
         format!(
             "{{\"model\":\"{}\",\"method\":\"{}\",\"target\":\"{}\",\
              \"n_blocks\":{},\"blocks_done\":{},\"layers_solved\":{},\
              \"checkpoints_written\":{},\"last_layer\":\"{}\",\
              \"running\":{},\"finished\":{},\"total_secs\":{},\
              \"elapsed_secs\":{},\"block_secs\":{{{}}},\
-             \"workers\":{{{}}},\"heartbeats\":{{{}}},\"solving\":{{{}}}}}\n",
+             \"workers\":{{{}}},\"heartbeats\":{{{}}},\"solving\":{{{}}},\
+             \"fleet\":{},\"fleet_series\":[{}],\"fleet_events\":[{}]}}\n",
             json_escape(&self.model),
             json_escape(&self.method),
             json_escape(&self.target),
@@ -156,6 +193,9 @@ impl StatusSnapshot {
             workers,
             heartbeats,
             solving,
+            self.fleet,
+            fleet_series,
+            fleet_events,
         )
     }
 }
@@ -177,12 +217,18 @@ impl StatusBoard {
         let mut st = lock(&self.state);
         match ev {
             ProgressEvent::RunStarted { model, method, target, n_blocks } => {
+                // membership is pool state, not run state: a worker that
+                // registered while the model was still loading must not
+                // be erased by the run-start reset
                 *st = StatusSnapshot {
                     model: model.clone(),
                     method: method.clone(),
                     target: target.clone(),
                     n_blocks: *n_blocks,
                     running: true,
+                    fleet: st.fleet,
+                    fleet_series: std::mem::take(&mut st.fleet_series),
+                    fleet_events: std::mem::take(&mut st.fleet_events),
                     ..Default::default()
                 };
             }
@@ -258,6 +304,44 @@ impl StatusBoard {
     /// frozen progress reading. The beat count history stays.
     pub fn note_worker_stalled(&self, worker: &str) {
         lock(&self.state).solving.remove(worker);
+    }
+
+    /// Record a member joining the dispatcher pool (seed workers at first
+    /// dispatch, REGISTERed workers as they arrive): bumps the live fleet
+    /// size and appends to the series + event log.
+    pub fn note_worker_joined(&self, worker: &str) {
+        let mut st = lock(&self.state);
+        st.fleet += 1;
+        let at = st.elapsed_secs;
+        let n = st.fleet;
+        st.fleet_series.push((at, n));
+        st.fleet_events.push((at, "join".to_string(), worker.to_string()));
+    }
+
+    /// Record a member leaving the pool for good (retry budget exhausted,
+    /// shutdown): besides the fleet bookkeeping, a permanently departed
+    /// worker must not leave a frozen `solving` entry or a stale
+    /// `alps_prune_admm_iteration` reading — reroute clears the former
+    /// for the reroute case, but only this path handles final departure.
+    pub fn note_worker_left(&self, worker: &str) {
+        let mut st = lock(&self.state);
+        st.fleet = st.fleet.saturating_sub(1);
+        let at = st.elapsed_secs;
+        let n = st.fleet;
+        st.fleet_series.push((at, n));
+        st.fleet_events.push((at, "leave".to_string(), worker.to_string()));
+        st.solving.remove(worker);
+        drop(st);
+        // zero (rather than unregister — the registry has no removal) the
+        // departed worker's gauge so scrapes stop reading a live-looking
+        // iteration count from a dead worker
+        crate::obs::global()
+            .gauge(
+                "alps_prune_admm_iteration",
+                "Latest ADMM iteration reported by each worker's keepalive.",
+                &[("worker", worker)],
+            )
+            .set(0.0);
     }
 
     pub fn snapshot(&self) -> StatusSnapshot {
@@ -520,6 +604,51 @@ mod tests {
             server.request_shutdown();
             srv.join().unwrap().unwrap();
         });
+    }
+
+    #[test]
+    fn membership_feeds_fleet_series_and_clears_departed_worker_state() {
+        let board = StatusBoard::new();
+        // join before RunStarted must survive the run-start reset
+        board.observe(&ProgressEvent::BlockStarted { block: 0, n_blocks: 1, elapsed_secs: 0.0 });
+        board.note_worker_joined("10.0.0.1:7979");
+        board.observe(&ProgressEvent::RunStarted {
+            model: "alps-tiny".into(),
+            method: "sharded(alps)".into(),
+            target: "0.70".into(),
+            n_blocks: 1,
+        });
+        board.observe(&ProgressEvent::BlockStarted { block: 0, n_blocks: 1, elapsed_secs: 2.0 });
+        board.note_worker_joined("10.0.0.2:7979");
+        let beat = Heartbeat { job: 5, admm_iter: 77, elapsed_ms: 300 };
+        board.note_heartbeat("10.0.0.2:7979", &beat);
+        board.note_worker_left("10.0.0.2:7979");
+        let st = board.snapshot();
+        assert_eq!(st.fleet, 1);
+        assert_eq!(
+            st.fleet_series,
+            vec![(0.0, 1), (2.0, 2), (2.0, 1)],
+            "series tracks size at each membership change"
+        );
+        assert_eq!(st.fleet_events.len(), 3);
+        assert_eq!(st.fleet_events[1].1, "join");
+        assert_eq!(st.fleet_events[2], (2.0, "leave".to_string(), "10.0.0.2:7979".to_string()));
+        // satellite bugfix: final departure clears the live-solve entry
+        // and zeroes the per-worker ADMM gauge (beat history survives)
+        assert!(st.solving.get("10.0.0.2:7979").is_none());
+        assert_eq!(st.heartbeats.get("10.0.0.2:7979"), Some(&1));
+        let page = crate::obs::global().render();
+        assert!(
+            page.contains("alps_prune_admm_iteration{worker=\"10.0.0.2:7979\"} 0"),
+            "{page}"
+        );
+        let json = st.to_json();
+        assert!(json.contains("\"fleet\":1"), "{json}");
+        assert!(json.contains("\"fleet_series\":[[0,1],[2,2],[2,1]]"), "{json}");
+        assert!(
+            json.contains("{\"at\":2,\"event\":\"leave\",\"worker\":\"10.0.0.2:7979\"}"),
+            "{json}"
+        );
     }
 
     #[test]

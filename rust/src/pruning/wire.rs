@@ -1,4 +1,4 @@
-//! Wire codec for the distributed pruning protocol (frame version 2).
+//! Wire codec for the distributed pruning protocol (frame version 3).
 //!
 //! One [`SolveRequest`] carries everything a stateless worker needs to
 //! solve one layer: the dense weights, the calibration statistics, the
@@ -21,7 +21,7 @@
 //! kernels, so a remote solve is bit-identical to a local one.
 //!
 //! Encoding is little-endian and versioned at the frame layer
-//! ([`crate::net::framing`], `FRAME_VERSION = 2`); payload tags:
+//! ([`crate::net::framing`], `FRAME_VERSION = 3`); payload tags:
 //!
 //! * [`tag::SOLVE`] — coordinator -> worker, a [`SolveRequest`];
 //! * [`tag::RESULT`] — worker -> coordinator, a [`SolveResponse`];
@@ -34,7 +34,11 @@
 //! * [`tag::HEARTBEAT`] — worker -> coordinator, a [`Heartbeat`]: emitted
 //!   periodically while a solve is in progress so the coordinator can
 //!   tell a slow solve from a dead worker and reroute on missed beats
-//!   instead of waiting out its (much longer) idle timeout.
+//!   instead of waiting out its (much longer) idle timeout;
+//! * [`tag::REGISTER`] — worker -> coordinator (new in version 3), the
+//!   worker's advertised `host:port` serve address, sent to the
+//!   coordinator's registration endpoint to join the fleet mid-run; the
+//!   coordinator acks by echoing the frame back verbatim.
 //!
 //! Every decoder is bounds-checked: truncated or corrupt payloads come
 //! back as a `malformed frame` error, never a panic — a desynced or
@@ -69,6 +73,11 @@ pub mod tag {
     /// progress. Purely advisory: the coordinator uses the *absence* of
     /// beats to declare a worker dead.
     pub const HEARTBEAT: u8 = 5;
+    /// Worker -> coordinator (version 3): dynamic-membership
+    /// announcement carrying the worker's advertised serve address. Sent
+    /// to the coordinator's registration endpoint — not a worker's serve
+    /// port — and echoed back verbatim as the ack.
+    pub const REGISTER: u8 = 6;
 }
 
 /// Calibration statistics of one solve request (owned form).
@@ -268,6 +277,29 @@ pub fn decode_error(buf: &[u8]) -> Result<(u64, String)> {
         let msg = d.str()?;
         d.finish()?;
         Ok((job, msg))
+    }
+    inner(buf).map_err(|e| anyhow!("malformed frame: {e}"))
+}
+
+/// Encode a `tag::REGISTER` payload: the worker's advertised `host:port`
+/// serve address (where the coordinator should dial back for solves).
+pub fn encode_register(addr: &str) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.str(addr);
+    e.0
+}
+
+/// Decode a `tag::REGISTER` payload into the advertised worker address.
+/// An empty address is rejected — the coordinator could never dial it.
+pub fn decode_register(buf: &[u8]) -> Result<String> {
+    fn inner(buf: &[u8]) -> Result<String> {
+        let mut d = Dec::new(buf);
+        let addr = d.str()?;
+        if addr.is_empty() {
+            bail!("empty worker address");
+        }
+        d.finish()?;
+        Ok(addr)
     }
     inner(buf).map_err(|e| anyhow!("malformed frame: {e}"))
 }
@@ -610,6 +642,16 @@ mod tests {
         assert_eq!(decode_heartbeat(&encode_heartbeat(hb)).unwrap(), hb);
     }
 
+    #[test]
+    fn register_roundtrips_and_rejects_empty_address() {
+        let buf = encode_register("worker-7.internal:7979");
+        assert_eq!(decode_register(&buf).unwrap(), "worker-7.internal:7979");
+        // an empty advertised address can never be dialed back
+        let err = decode_register(&encode_register("")).unwrap_err().to_string();
+        assert!(err.contains("malformed frame"), "{err}");
+        assert!(err.contains("empty worker address"), "{err}");
+    }
+
     /// Every strict prefix of every payload type must decode to an error
     /// (`malformed frame`), never panic — the per-field regression sweep
     /// for the truncation-hardening guarantee.
@@ -642,6 +684,7 @@ mod tests {
         let error = encode_error(4, "boom");
         let heartbeat =
             encode_heartbeat(Heartbeat { job: 5, admm_iter: 6, elapsed_ms: 7 });
+        let register = encode_register("10.0.0.7:7979");
 
         for (name, buf) in [
             ("solve/gram", &solve_gram),
@@ -649,12 +692,14 @@ mod tests {
             ("response", &response),
             ("error", &error),
             ("heartbeat", &heartbeat),
+            ("register", &register),
         ] {
             for cut in 0..buf.len() {
                 let err = match name {
                     "response" => SolveResponse::decode(&buf[..cut]).err(),
                     "error" => decode_error(&buf[..cut]).err(),
                     "heartbeat" => decode_heartbeat(&buf[..cut]).err(),
+                    "register" => decode_register(&buf[..cut]).err(),
                     _ => SolveRequest::decode(&buf[..cut]).err(),
                 };
                 let err = err.unwrap_or_else(|| {
@@ -690,6 +735,7 @@ mod tests {
         assert!(decode_error(&with_junk(encode_error(1, "x"))).is_err());
         let hb = Heartbeat { job: 1, admm_iter: 0, elapsed_ms: 0 };
         assert!(decode_heartbeat(&with_junk(encode_heartbeat(hb))).is_err());
+        assert!(decode_register(&with_junk(encode_register("w:1"))).is_err());
         // oversized matrix header rejected before allocation (u32::MAX
         // rows/cols would overflow rows*cols*4 without the checked_mul)
         let mut e = Enc::new();

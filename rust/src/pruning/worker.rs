@@ -1,5 +1,5 @@
 //! The pruning worker: hosts [`NativeEngine`] behind the binary frame
-//! protocol (version 2) so a coordinator
+//! protocol (version 3) so a coordinator
 //! ([`crate::coordinator::ShardedEngine`]) can fan layer solves across
 //! machines.
 //!
@@ -7,19 +7,31 @@
 //! [`wire::SolveRequest`] carries its own [`MethodSpec`]
 //! (hyperparameters included) and sparsity target, so one worker pool
 //! serves ALPS, SparseGPT, Wanda, … runs concurrently, and a worker that
-//! restarts loses nothing but its in-flight solves (the coordinator
-//! reroutes those).
+//! restarts loses nothing but its in-flight solves (the coordinator's
+//! owned-job pool requeues those).
 //!
-//! Protocol-v2 behaviours hosted here:
+//! Since protocol v3 the fleet is **dynamic**: the coordinator keeps its
+//! jobs in a long-lived owned pool rather than borrowing them into
+//! per-block scoped threads, so membership can change mid-run. A worker
+//! started with `--register host:port` dials the coordinator's
+//! registration endpoint ([`register_with_coordinator`]), announces its
+//! serve address in a [`wire::tag::REGISTER`] frame, and is acked with
+//! the same frame echoed back; the coordinator then dials back like any
+//! seed worker and starts handing it jobs. Nothing on the serve path
+//! changes — a registered worker and a `--workers`-listed worker are
+//! indistinguishable once joined, and departures (silence, disconnect,
+//! refused redials) only cost a requeue of the jobs the member owned.
+//!
+//! Behaviours hosted here:
 //!
 //! * **Heartbeats** — while a solve runs, a sidecar thread writes a
 //!   [`wire::tag::HEARTBEAT`] frame every
 //!   [`WorkerConfig::heartbeat_every`] carrying the job id, the live ADMM
 //!   iteration count (ALPS), and elapsed milliseconds. The coordinator
-//!   uses missed beats to tell a dead worker from a slow solve and
-//!   reroutes within its (short) heartbeat grace instead of its (long)
-//!   idle timeout. Both threads share the socket through a mutex, so
-//!   frames never interleave.
+//!   uses missed beats to tell a dead worker from a slow solve (and to
+//!   maintain a per-worker solve-time estimate that steers small layers
+//!   toward slow members). Both threads share the socket through a
+//!   mutex, so frames never interleave.
 //! * **Worker-side gram** — a request whose calibration arrives as raw
 //!   activations ([`wire::Calib::Activations`]) has its gram computed
 //!   here with the same deterministic `linalg` kernels the coordinator
@@ -45,7 +57,8 @@
 //! busy without unbounded buffering.
 //!
 //! CLI: `alps worker --addr 127.0.0.1:7979 [--max-conns 8]
-//! [--max-frame-mb 1024] [--heartbeat-secs 2]`.
+//! [--max-frame-mb 1024] [--heartbeat-secs 2]
+//! [--register COORD_HOST:PORT]`.
 
 #![warn(clippy::unwrap_used, clippy::expect_used)]
 
@@ -137,9 +150,85 @@ impl Worker {
         self.net.shutdown();
     }
 
+    /// The flag [`Worker::request_shutdown`] sets — share it with sidecar
+    /// threads (the `--register` dialer, signal handlers) so they stop
+    /// when the worker drains.
+    pub fn shutdown_flag(&self) -> &AtomicBool {
+        self.net.shutdown_flag()
+    }
+
     /// Serve solve requests until [`Worker::request_shutdown`]. Blocks.
     pub fn serve(&self, listener: TcpListener) -> Result<()> {
         self.net.run(listener, &WorkerHandler { worker: self })
+    }
+}
+
+/// How long the `--register` dialer waits between attempts while the
+/// coordinator's registration endpoint is unreachable (the worker may
+/// legitimately come up first).
+const REGISTER_RETRY: Duration = Duration::from_millis(500);
+
+/// How long one registration attempt waits for the coordinator's ack
+/// before the attempt is written off and retried.
+const REGISTER_ACK_DEADLINE: Duration = Duration::from_secs(10);
+
+/// Largest accepted ack frame — the ack is the REGISTER frame echoed
+/// back, so it is as small as the address it carries.
+const MAX_REGISTER_FRAME: usize = 4096;
+
+/// Dial a running coordinator's registration endpoint (`prune --workers …
+/// --register-addr`) and announce `advertise` as this worker's serve
+/// address, retrying every [`REGISTER_RETRY`] until the coordinator
+/// echoes the [`tag::REGISTER`] frame back as an ack or `shutdown` is
+/// flagged. The coordinator dials the advertised address back exactly as
+/// it dials seed workers, so `advertise` must be reachable from the
+/// coordinator's side — pass the bound listener address, not `0.0.0.0`.
+pub fn register_with_coordinator(
+    coordinator: &str,
+    advertise: &str,
+    shutdown: &AtomicBool,
+) -> Result<()> {
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            anyhow::bail!("shutdown before registration was acknowledged");
+        }
+        match try_register(coordinator, advertise, shutdown) {
+            Ok(()) => return Ok(()),
+            Err(_) if !shutdown.load(Ordering::SeqCst) => std::thread::sleep(REGISTER_RETRY),
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// One registration attempt: connect, send REGISTER, require the echoed
+/// ack. Any failure is retryable — the caller owns the retry loop.
+fn try_register(coordinator: &str, advertise: &str, shutdown: &AtomicBool) -> Result<()> {
+    let mut stream = TcpStream::connect(coordinator)
+        .with_context(|| format!("dialing registration endpoint {coordinator}"))?;
+    stream.set_read_timeout(Some(READ_POLL)).context("setting read timeout")?;
+    stream.set_write_timeout(Some(WRITE_TIMEOUT)).context("setting write timeout")?;
+    write_frame(&mut stream, tag::REGISTER, &wire::encode_register(advertise))
+        .context("sending REGISTER")?;
+    match read_frame(
+        &mut stream,
+        MAX_REGISTER_FRAME,
+        Some(shutdown),
+        Some(REGISTER_ACK_DEADLINE),
+    )? {
+        FrameRead::Frame { tag: tag::REGISTER, payload } => {
+            let echoed = wire::decode_register(&payload)?;
+            if echoed != advertise {
+                anyhow::bail!("coordinator acked a different address ({echoed})");
+            }
+            Ok(())
+        }
+        FrameRead::Frame { tag, .. } => {
+            anyhow::bail!("unexpected registration ack tag {tag}")
+        }
+        FrameRead::Eof => anyhow::bail!("coordinator closed before acking registration"),
+        FrameRead::Shutdown => {
+            anyhow::bail!("shutdown before registration was acknowledged")
+        }
     }
 }
 
@@ -514,6 +603,36 @@ mod tests {
             worker.request_shutdown();
             srv.join().unwrap().unwrap();
         });
+    }
+
+    #[test]
+    fn register_dialer_respects_shutdown_and_requires_an_echoed_ack() {
+        // a pre-set shutdown flag stops the retry loop before any dial
+        let stop = AtomicBool::new(true);
+        let err = register_with_coordinator("127.0.0.1:1", "w:1", &stop)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("shutdown before registration"), "{err}");
+
+        // a faithful echo satisfies the dialer; the coordinator side here
+        // is a hand-rolled one-shot acceptor standing in for
+        // `ShardedEngine::listen_for_registrations`
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let reg = listener.local_addr().unwrap().to_string();
+        let ack = std::thread::spawn(move || -> Result<String> {
+            let (mut st, _) = listener.accept()?;
+            st.set_read_timeout(Some(READ_POLL))?;
+            let frame = read_frame(&mut st, 4096, None, Some(Duration::from_secs(10)))?;
+            let FrameRead::Frame { tag: t, payload } = frame else {
+                anyhow::bail!("no frame")
+            };
+            assert_eq!(t, tag::REGISTER);
+            write_frame(&mut st, tag::REGISTER, &payload)?;
+            wire::decode_register(&payload)
+        });
+        let stop = AtomicBool::new(false);
+        register_with_coordinator(&reg, "worker-3:7979", &stop).unwrap();
+        assert_eq!(ack.join().unwrap().unwrap(), "worker-3:7979");
     }
 
     #[test]

@@ -4,8 +4,10 @@
 //! run for the same `MethodSpec` (with grams computed on either side of
 //! the wire), a dropped or silent worker's layers are rerouted (within
 //! the heartbeat grace, not the idle timeout) and the run still
-//! completes, the persistent pool reuses connections across blocks, and
-//! the status endpoint reports per-worker attribution.
+//! completes, the persistent pool reuses connections across blocks,
+//! membership can churn mid-run (workers killed, replacements joining
+//! through the REGISTER handshake) without perturbing a bit, and the
+//! status endpoint reports per-worker attribution.
 
 use alps::config::{AlpsConfig, ModelConfig, SparsityTarget};
 use alps::coordinator::{ShardedConfig, ShardedEngine};
@@ -489,6 +491,107 @@ fn native_checkpoint_resumes_on_sharded_engine_bit_identically() {
             "tensor '{name}' differs after native->sharded resume"
         );
     }
+}
+
+/// The dynamic-membership acceptance criterion: both seed workers are
+/// killed mid-run and a fresh worker joins through the REGISTER
+/// handshake — the run completes bit-identically to native, every
+/// post-churn layer lands on the replacement, and the status board
+/// records the full join/leave history.
+#[test]
+fn killed_workers_and_mid_run_registration_stay_bit_identical() {
+    use alps::pruning::register_with_coordinator;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    let target = SparsityTarget::Unstructured(0.6);
+    let spec = MethodSpec::Wanda;
+    let spawn_worker = || {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let worker = Arc::new(Worker::new(WorkerConfig::default()));
+        let w = worker.clone();
+        let serve = std::thread::spawn(move || {
+            let _ = w.serve(listener);
+        });
+        (addr, worker, serve)
+    };
+
+    let (addr_a, worker_a, serve_a) = spawn_worker();
+    let (addr_b, worker_b, serve_b) = spawn_worker();
+    let mut engine = ShardedEngine::with_config(
+        spec.clone(),
+        vec![addr_a.clone(), addr_b.clone()],
+        quick_cfg(),
+    )
+    .unwrap();
+    let board = Arc::new(StatusBoard::new());
+    engine.set_status_board(board.clone());
+    let reg = engine.listen_for_registrations("127.0.0.1:0").unwrap();
+
+    // block 1 runs on the seed fleet
+    let jobs1 = random_problems(6, 81);
+    let r1 = engine.solve_block(&jobs1, target).unwrap();
+    assert!((worker_a.layers_solved() + worker_b.layers_solved()) >= jobs1.len());
+
+    // replacement C joins mid-run through the REGISTER handshake, then
+    // both seed workers die: their parked connections go dead and every
+    // redial is refused, so the pool must write them off and hand the
+    // whole next block to C
+    let (addr_c, worker_c, _serve_c) = spawn_worker();
+    let stop = AtomicBool::new(false);
+    register_with_coordinator(&reg, &addr_c, &stop).unwrap();
+    worker_a.request_shutdown();
+    worker_b.request_shutdown();
+    // join the serve threads: the kill must be complete (listeners
+    // closed, parked connections dropped) before the next block, so no
+    // straggler solve can land on a dying seed worker
+    serve_a.join().unwrap();
+    serve_b.join().unwrap();
+
+    let jobs2 = random_problems(6, 82);
+    let r2 = engine.solve_block(&jobs2, target).unwrap();
+
+    let n1 = NativeEngine::new(spec.clone()).solve_block(&jobs1, target).unwrap();
+    let n2 = NativeEngine::new(spec).solve_block(&jobs2, target).unwrap();
+    for (i, (r, l)) in r1.iter().zip(&n1).enumerate() {
+        assert_eq!(r.w, l.w, "pre-churn layer {i} not bit-identical");
+    }
+    for (i, (r, l)) in r2.iter().zip(&n2).enumerate() {
+        assert_eq!(r.w, l.w, "post-churn layer {i} not bit-identical");
+        assert_eq!(r.worker.as_deref(), Some(addr_c.as_str()), "layer {i}");
+    }
+    assert_eq!(worker_c.layers_solved(), jobs2.len());
+
+    // the board saw the whole membership history: three joins (two seed,
+    // one registered), two permanent departures, one survivor
+    let st = board.snapshot();
+    let joins: Vec<&str> = st
+        .fleet_events
+        .iter()
+        .filter(|(_, ev, _)| ev == "join")
+        .map(|(_, _, w)| w.as_str())
+        .collect();
+    let leaves: Vec<&str> = st
+        .fleet_events
+        .iter()
+        .filter(|(_, ev, _)| ev == "leave")
+        .map(|(_, _, w)| w.as_str())
+        .collect();
+    assert!(joins.contains(&addr_a.as_str()), "{joins:?}");
+    assert!(joins.contains(&addr_b.as_str()), "{joins:?}");
+    assert!(joins.contains(&addr_c.as_str()), "{joins:?}");
+    assert!(leaves.contains(&addr_a.as_str()), "{leaves:?}");
+    assert!(leaves.contains(&addr_b.as_str()), "{leaves:?}");
+    assert_eq!(st.fleet, 1, "only the registered replacement remains");
+    assert!(
+        st.fleet_series.iter().any(|&(_, n)| n == 3),
+        "series never saw the 3-member fleet: {:?}",
+        st.fleet_series
+    );
+
+    engine.close();
+    worker_c.request_shutdown();
 }
 
 /// The status endpoint serves a live snapshot of a sharded run with
